@@ -1,0 +1,104 @@
+//! End-to-end reproduction driver — the workload that proves all layers
+//! compose (DESIGN.md §3, EXPERIMENTS.md records a reference run).
+//!
+//! Pipeline, per dataset row:
+//!   1. generate the synthetic dataset (data substrate, L3),
+//!   2. resolve ground truth (exact engine sweep),
+//!   3. run corrSH / Med-dit / RAND / exact over many seeded trials
+//!      (bandit layer over the native engine),
+//!   4. verify the PJRT path: the same corrSH trial over the AOT
+//!      Pallas/JAX artifacts must return the identical medoid with the
+//!      identical pull count (L1+L2+runtime+coordinator compose),
+//!   5. print the paper-shaped summary (error prob, pulls/arm, wall).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_repro
+//! ```
+
+use std::sync::Arc;
+
+use corrsh::bandits::{CorrSh, MedoidAlgorithm};
+use corrsh::config::RunConfig;
+use corrsh::data::synth::Kind;
+use corrsh::distance::Metric;
+use corrsh::engine::{NativeEngine, PjrtEngine, PullEngine};
+use corrsh::experiments::{runner, table1};
+use corrsh::runtime::Runtime;
+use corrsh::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let scale: usize = std::env::var("E2E_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+    let trials: usize = std::env::var("E2E_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(25);
+    println!("e2e reproduction driver (scale 1/{scale}, {trials} trials/point)\n");
+
+    // ---- steps 1-3 + 5: the Table-1 matrix over the native engine ---------
+    let rows = table1::run(scale, trials, 0)?;
+
+    // ---- step 4: PJRT parity on a dense row --------------------------------
+    println!("\n[PJRT parity] corrSH over the AOT Pallas/JAX artifacts (mnist row, d=784)");
+    match Runtime::open("artifacts") {
+        Err(e) => {
+            println!("  SKIPPED: {e:#} — run `make artifacts` first");
+        }
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            let cfg = RunConfig::preset("mnist")?.scaled_down(scale);
+            assert_eq!(cfg.dataset_kind, Kind::Mnist);
+            let data = runner::build_data(&cfg);
+            let pjrt = PjrtEngine::new(data.clone(), Metric::L2, rt.clone())?;
+            pjrt.warmup()?;
+            let native = NativeEngine::with_threads(data.clone(), Metric::L2, 1);
+
+            let algo = CorrSh::with_pulls_per_arm(48.0);
+            let t0 = std::time::Instant::now();
+            let res_pjrt = algo.run(&pjrt, &mut Rng::seeded(123));
+            let t_pjrt = t0.elapsed();
+            let t0 = std::time::Instant::now();
+            let res_native = algo.run(&native, &mut Rng::seeded(123));
+            let t_native = t0.elapsed();
+
+            println!(
+                "  platform={} compiled_buckets={} compile_time={:.2}s",
+                pjrt.runtime().platform(),
+                pjrt.runtime().cached_count(),
+                pjrt.runtime().compile_ns.get() as f64 / 1e9,
+            );
+            println!(
+                "  native: medoid={} pulls={} wall={:.3}s",
+                res_native.best,
+                res_native.pulls,
+                t_native.as_secs_f64()
+            );
+            println!(
+                "  pjrt:   medoid={} pulls={} wall={:.3}s",
+                res_pjrt.best,
+                res_pjrt.pulls,
+                t_pjrt.as_secs_f64()
+            );
+            anyhow::ensure!(
+                res_pjrt.best == res_native.best && res_pjrt.pulls == res_native.pulls,
+                "PJRT and native paths diverged!"
+            );
+            println!("  parity ✓ — all three layers compose");
+        }
+    }
+
+    // ---- headline check: the paper's ordering holds -------------------------
+    println!("\n[headline] per-row pull reduction vs exact computation:");
+    for r in &rows {
+        let corr = r.cells.iter().find(|c| c.algo.starts_with("corrSH"));
+        if let Some(c) = corr {
+            let exact_pulls = r.n as f64; // exact = n pulls/arm
+            println!(
+                "  {:<12} corrSH {:>7.1} pulls/arm vs exact {:>9.0} → {:>7.0}x reduction (err {:.1}%)",
+                r.dataset,
+                c.pulls_per_arm,
+                exact_pulls,
+                exact_pulls / c.pulls_per_arm.max(1e-9),
+                c.error_pct
+            );
+        }
+    }
+    println!("\ne2e driver complete ✓ (see results/*.csv and EXPERIMENTS.md)");
+    Ok(())
+}

@@ -1,0 +1,164 @@
+"""AOT compile path: lower the L2 chunk graph to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path.  For every (metric, arm-bucket A, ref-bucket R, dim d) in the
+manifest this jits ``model.chunk_sums_entry(metric)`` with static shapes,
+lowers to stablehlo, converts to an XlaComputation and dumps **HLO text**:
+
+    artifacts/chunk_sums_<metric>_a<A>_r<R>_d<d>.hlo.txt
+
+Why text and not ``lowered.compile()`` / serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the rust ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest is the single source of truth shared with the rust runtime: it
+is also written to ``artifacts/manifest.json`` with the bucket list, input
+order and dtype contract, which ``rust/src/runtime`` reads at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# ---------------------------------------------------------------------------
+# Default bucket manifest.
+#
+# Arm buckets x ref buckets define the job shapes the rust batch planner can
+# pick from; dims cover the synthetic datasets (test=256, mnist-like=784,
+# rnaseq-like=2048).  Keep the cross product lean: every entry costs a
+# trace+lower at build time and a compile at rust startup (lazily, on first
+# use).  The planner only needs a ladder, not a lattice: big buckets for the
+# early rounds, one small bucket for the tail.
+# ---------------------------------------------------------------------------
+DEFAULT_METRICS = ("l1", "l2", "cosine")
+DEFAULT_AR_BUCKETS = ((64, 16), (64, 64), (256, 64), (256, 256), (1024, 256))
+DEFAULT_DIMS = (256, 784, 2048)
+
+
+def artifact_name(metric: str, a: int, r: int, d: int) -> str:
+    return f"chunk_sums_{metric}_a{a}_r{r}_d{d}"
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(metric: str, a: int, r: int, d: int) -> str:
+    entry = model.chunk_sums_entry(metric)
+    args = (
+        jax.ShapeDtypeStruct((a, d), jnp.float32),   # x_arms
+        jax.ShapeDtypeStruct((r, d), jnp.float32),   # y_refs
+        jax.ShapeDtypeStruct((r,), jnp.float32),     # mask
+    )
+    return to_hlo_text(jax.jit(entry).lower(*args))
+
+
+def build(out_dir: str, metrics, ar_buckets, dims, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    t0 = time.time()
+    n_built = n_cached = 0
+    for metric in metrics:
+        for (a, r) in ar_buckets:
+            for d in dims:
+                name = artifact_name(metric, a, r, d)
+                path = os.path.join(out_dir, name + ".hlo.txt")
+                if force or not os.path.exists(path):
+                    text = lower_one(metric, a, r, d)
+                    with open(path, "w") as f:
+                        f.write(text)
+                    n_built += 1
+                else:
+                    n_cached += 1
+                with open(path, "rb") as f:
+                    digest = hashlib.sha256(f.read()).hexdigest()[:16]
+                entries.append({
+                    "name": name,
+                    "file": name + ".hlo.txt",
+                    "metric": metric,
+                    "arms": a,
+                    "refs": r,
+                    "dim": d,
+                    "sha256_16": digest,
+                })
+    manifest = {
+        "version": 1,
+        "entry": "chunk_sums",
+        # Input order/dtypes the rust runtime must honour.
+        "inputs": [
+            {"name": "x_arms", "shape": ["arms", "dim"], "dtype": "f32"},
+            {"name": "y_refs", "shape": ["refs", "dim"], "dtype": "f32"},
+            {"name": "mask", "shape": ["refs"], "dtype": "f32"},
+        ],
+        "output": {"shape": ["arms"], "dtype": "f32", "tuple": True},
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    dt = time.time() - t0
+    print(f"aot: {n_built} built, {n_cached} cached, "
+          f"{len(entries)} artifacts in {out_dir} ({dt:.1f}s)", file=sys.stderr)
+    return manifest
+
+
+def parse_buckets(spec: str):
+    """Parse 'a64r16,a256r64' into ((64,16),(256,64))."""
+    out = []
+    for part in spec.split(","):
+        a_part, r_part = part.strip().lstrip("a").split("r")
+        out.append((int(a_part), int(r_part)))
+    return tuple(out)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts",
+                   help="output dir (or path ending in .hlo.txt for single)")
+    p.add_argument("--metrics", default=",".join(DEFAULT_METRICS))
+    p.add_argument("--buckets", default=None,
+                   help="e.g. 'a64r16,a256r64' (default: built-in ladder)")
+    p.add_argument("--dims", default=",".join(str(d) for d in DEFAULT_DIMS))
+    p.add_argument("--force", action="store_true", help="rebuild even if cached")
+    args = p.parse_args()
+
+    out_dir = args.out
+    # Makefile passes .../model.hlo.txt as a stamp target; treat its parent
+    # as the artifact dir and also write the stamp.
+    stamp = None
+    if out_dir.endswith(".hlo.txt"):
+        stamp = out_dir
+        out_dir = os.path.dirname(out_dir) or "."
+
+    metrics = tuple(m.strip() for m in args.metrics.split(",") if m.strip())
+    buckets = parse_buckets(args.buckets) if args.buckets else DEFAULT_AR_BUCKETS
+    dims = tuple(int(d) for d in args.dims.split(","))
+    manifest = build(out_dir, metrics, buckets, dims, force=args.force)
+
+    if stamp:
+        # Stamp file doubles as a tiny smoke artifact: the first entry's text.
+        first = manifest["artifacts"][0]
+        with open(os.path.join(out_dir, first["file"])) as f:
+            text = f.read()
+        with open(stamp, "w") as f:
+            f.write(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+# L1: Pallas kernels for the batched-distance pull hot-spot + jnp oracle.
+from . import ref  # noqa: F401
+from .distances import (  # noqa: F401
+    DEFAULT_TA,
+    DEFAULT_TK,
+    DEFAULT_TR,
+    METRICS,
+    normalize_rows,
+    pairwise_distances,
+    pairwise_raw,
+)

@@ -1,0 +1,179 @@
+"""L1: Pallas tiled pairwise-distance kernels.
+
+The pull hot-spot of Correlated Sequential Halving is the batched distance
+evaluation ``D[a, r] = d(X[a, :], Y[r, :])`` between an arm tile and the
+round's shared reference tile.  These kernels tile the computation over
+(arm-tile TA, ref-tile TR, feature-tile TK) with an f32 accumulator that
+lives across the feature grid axis — the Pallas/TPU shape of the schedule a
+GPU paper would express with threadblocks (see DESIGN.md §6).
+
+TPU mapping notes (the kernels run here under ``interpret=True`` on CPU —
+Mosaic custom-calls cannot execute on the CPU PJRT plugin — but are written
+for the TPU memory hierarchy):
+
+* ``l2`` and ``cosine`` route the inner reduction through ``jnp.dot`` so a
+  real TPU lowering hits the 128x128 MXU systolic array
+  (``||x-y||^2 = ||x||^2 + ||y||^2 - 2 x.y``).
+* ``l1`` has no matmul factorization; it loops over the ref tile rows with a
+  vectorized VPU body, keeping the (TA, TK) operand resident in VMEM.
+* BlockSpecs stage HBM->VMEM; the (TA, TR) accumulator is the kernel output
+  block, zero-initialised on the first feature step.  Default tiles
+  (TA, TR, TK) = (64, 64, 512): VMEM footprint = (64+64)*512*4 inputs +
+  64*64*4 acc ~= 278 KiB, far under 16 MiB, leaving headroom for double
+  buffering by the Mosaic pipeliner.
+
+Raw kernel outputs (accumulated over feature tiles):
+
+* l1     -> sum_k |x_k - y_k|                  (the distance itself)
+* l2     -> sum_k (x_k - y_k)^2                (squared; sqrt applied in L2)
+* cosine -> sum_k x_k * y_k                    (dot; 1 - dot on unit rows in L2)
+
+``pairwise_raw`` wraps the kernels with pad-to-tile-multiple handling so the
+hypothesis test sweep can hit arbitrary shapes; ``make artifacts`` only ever
+lowers bucket shapes that divide the tiles exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+METRICS = ("l1", "l2", "cosine")
+
+# Default tile sizes (see module docstring for the VMEM accounting).
+DEFAULT_TA = 64
+DEFAULT_TR = 64
+DEFAULT_TK = 512
+
+
+def _tiles(n_arms: int, n_refs: int, dim: int,
+           ta: int | None, tr: int | None, tk: int | None) -> Tuple[int, int, int]:
+    """Clamp default tiles to the problem size (small test shapes)."""
+    ta = min(ta or DEFAULT_TA, n_arms)
+    tr = min(tr or DEFAULT_TR, n_refs)
+    tk = min(tk or DEFAULT_TK, dim)
+    return ta, tr, tk
+
+
+def _l1_kernel(x_ref, y_ref, o_ref):
+    """o[a, r] += sum_k |x[a, k] - y[r, k]|, accumulated over the k grid axis.
+
+    The ref tile is walked row-by-row with a fori_loop so the intermediate is
+    (TA, TK) — never the (TA, TR, TK) broadcast cube, which would blow VMEM.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # (TA, TK)
+    y = y_ref[...]  # (TR, TK)
+
+    def body(r, acc):
+        # (TA,) column of partial distances for reference row r.
+        col = jnp.sum(jnp.abs(x - y[r, :][None, :]), axis=1)
+        return acc.at[:, r].add(col)
+
+    o_ref[...] = jax.lax.fori_loop(0, y.shape[0], body, o_ref[...])
+
+
+def _l2sq_kernel(x_ref, y_ref, o_ref):
+    """o[a, r] += sum_k (x - y)^2 via the matmul factorization (MXU path)."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    y = y_ref[...]
+    xsq = jnp.sum(x * x, axis=1)[:, None]          # (TA, 1)
+    ysq = jnp.sum(y * y, axis=1)[None, :]          # (1, TR)
+    xy = jnp.dot(x, y.T, preferred_element_type=jnp.float32)  # (TA, TR) on MXU
+    o_ref[...] += xsq + ysq - 2.0 * xy
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    """o[a, r] += x[a, :] . y[r, :]  (cosine similarity on pre-normalized rows)."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...].T,
+                          preferred_element_type=jnp.float32)
+
+
+_KERNELS = {"l1": _l1_kernel, "l2": _l2sq_kernel, "cosine": _dot_kernel}
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "ta", "tr", "tk"))
+def pairwise_raw(x: jax.Array, y: jax.Array, metric: str,
+                 ta: int | None = None, tr: int | None = None,
+                 tk: int | None = None) -> jax.Array:
+    """Raw accumulated pairwise quantity (see module docstring) of shape (A, R).
+
+    Pads A/R/K up to tile multiples (zero padding), runs the Pallas kernel,
+    slices back.  Zero-padded features contribute 0 under all three raw
+    reductions, so padding is exact.
+    """
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}; expected one of {METRICS}")
+    if x.ndim != 2 or y.ndim != 2 or x.shape[1] != y.shape[1]:
+        raise ValueError(f"shape mismatch: x {x.shape}, y {y.shape}")
+
+    n_arms, dim = x.shape
+    n_refs = y.shape[0]
+    t_a, t_r, t_k = _tiles(n_arms, n_refs, dim, ta, tr, tk)
+
+    pad_a = (-n_arms) % t_a
+    pad_r = (-n_refs) % t_r
+    pad_k = (-dim) % t_k
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pad_a), (0, pad_k)))
+    yp = jnp.pad(y.astype(jnp.float32), ((0, pad_r), (0, pad_k)))
+    pa, pk = xp.shape
+    pr = yp.shape[0]
+
+    grid = (pa // t_a, pr // t_r, pk // t_k)
+    out = pl.pallas_call(
+        _KERNELS[metric],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t_a, t_k), lambda a, r, k: (a, k)),
+            pl.BlockSpec((t_r, t_k), lambda a, r, k: (r, k)),
+        ],
+        out_specs=pl.BlockSpec((t_a, t_r), lambda a, r, k: (a, r)),
+        out_shape=jax.ShapeDtypeStruct((pa, pr), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(xp, yp)
+    return out[:n_arms, :n_refs]
+
+
+def normalize_rows(x: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Unit-normalize rows for cosine distance; zero rows stay zero."""
+    norms = jnp.sqrt(jnp.sum(x * x, axis=1, keepdims=True))
+    return x / jnp.maximum(norms, eps)
+
+
+def pairwise_distances(x: jax.Array, y: jax.Array, metric: str,
+                       ta: int | None = None, tr: int | None = None,
+                       tk: int | None = None) -> jax.Array:
+    """Finished pairwise distances (A, R) for any supported metric.
+
+    l1: raw. l2: sqrt(max(raw, 0)) — raw can be -eps from cancellation.
+    cosine: 1 - <x_hat, y_hat> (zero rows get distance 1 to everything).
+    """
+    if metric == "cosine":
+        raw = pairwise_raw(normalize_rows(x), normalize_rows(y), metric,
+                           ta=ta, tr=tr, tk=tk)
+        return 1.0 - raw
+    raw = pairwise_raw(x, y, metric, ta=ta, tr=tr, tk=tk)
+    if metric == "l2":
+        return jnp.sqrt(jnp.maximum(raw, 0.0))
+    return raw

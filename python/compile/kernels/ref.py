@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracle for the Pallas distance kernels.
+
+No Pallas, no tiling, no padding: the straightforward O(A*R*d) definition of
+each metric.  Every kernel and the L2 model graph are asserted against these
+in python/tests/ (hypothesis sweeps shapes and values)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l1(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise l1 distances: out[a, r] = sum_k |x[a,k] - y[r,k]|."""
+    return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+
+def l2(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise euclidean distances."""
+    d = x[:, None, :] - y[None, :, :]
+    return jnp.sqrt(jnp.sum(d * d, axis=-1))
+
+
+def cosine(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise cosine distances: 1 - <x,y>/(|x||y|); zero rows -> distance 1."""
+    eps = 1e-12
+    xn = x / jnp.maximum(jnp.linalg.norm(x, axis=1, keepdims=True), eps)
+    yn = y / jnp.maximum(jnp.linalg.norm(y, axis=1, keepdims=True), eps)
+    return 1.0 - xn @ yn.T
+
+
+METRIC_FNS = {"l1": l1, "l2": l2, "cosine": cosine}
+
+
+def pairwise(x: jnp.ndarray, y: jnp.ndarray, metric: str) -> jnp.ndarray:
+    return METRIC_FNS[metric](x, y)
+
+
+def chunk_sums(x_arms: jnp.ndarray, y_refs: jnp.ndarray, mask: jnp.ndarray,
+               metric: str) -> jnp.ndarray:
+    """Oracle for the L2 model entrypoint: masked per-arm distance sums."""
+    d = pairwise(x_arms, y_refs, metric)
+    return d @ mask.astype(d.dtype)

@@ -1,0 +1,66 @@
+"""L2: the JAX compute graph the rust coordinator executes per batch-plan job.
+
+One entrypoint, ``chunk_sums``: given an arm tile ``x_arms (A, d)``, the
+round's shared reference tile ``y_refs (R, d)`` and a ``mask (R,)`` marking
+which reference rows are real (vs bucket padding), return the per-arm partial
+centrality sums
+
+    sums[a] = sum_r mask[r] * d(x_arms[a], y_refs[r])            shape (A,)
+
+The pairwise distances come from the L1 Pallas kernels
+(``kernels.distances``), so the whole thing lowers into a single HLO module:
+Pallas tiles (interpret=True -> plain HLO) + the masked reduction, which XLA
+fuses.  The rust coordinator accumulates these partial sums into arm state
+across jobs; padded *arm* rows are simply discarded on readback (padding
+semantics are exact — see pairwise_raw docstring).
+
+Cosine note: rows are normalized inside the graph so the rust side feeds raw
+feature rows for every metric.  Padded zero rows normalize to zero -> cosine
+distance 1 -> harmless, masked or discarded.
+
+AOT contract (aot.py): for each (metric, A, R, d) bucket this function is
+jitted and lowered with static shapes; artifact name
+``chunk_sums_<metric>_a<A>_r<R>_d<d>.hlo.txt``.  Inputs in order:
+(x_arms f32[A,d], y_refs f32[R,d], mask f32[R]).  Output: 1-tuple of
+f32[A] (lowered with return_tuple=True; rust unwraps with to_tuple1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import distances as K
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "ta", "tr", "tk"))
+def chunk_sums(x_arms: jax.Array, y_refs: jax.Array, mask: jax.Array,
+               metric: str, ta: int | None = None, tr: int | None = None,
+               tk: int | None = None) -> jax.Array:
+    """Masked per-arm partial centrality sums for one batch-plan job."""
+    mask = mask.astype(jnp.float32)
+    if metric == "cosine":
+        raw = K.pairwise_raw(K.normalize_rows(x_arms), K.normalize_rows(y_refs),
+                             "cosine", ta=ta, tr=tr, tk=tk)
+        dists = 1.0 - raw
+    elif metric == "l2":
+        raw = K.pairwise_raw(x_arms, y_refs, "l2", ta=ta, tr=tr, tk=tk)
+        dists = jnp.sqrt(jnp.maximum(raw, 0.0))
+    elif metric == "l1":
+        dists = K.pairwise_raw(x_arms, y_refs, "l1", ta=ta, tr=tr, tk=tk)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    # Masked reduction over refs; XLA fuses this with the kernel epilogue.
+    return dists @ mask
+
+
+def chunk_sums_entry(metric: str):
+    """Positional-only wrapper with the metric baked in, for AOT lowering."""
+
+    def entry(x_arms, y_refs, mask):
+        return (chunk_sums(x_arms, y_refs, mask, metric),)
+
+    entry.__name__ = f"chunk_sums_{metric}"
+    return entry

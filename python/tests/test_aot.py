@@ -1,0 +1,64 @@
+"""AOT path: HLO text artifacts well-formed, manifest contract, caching."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+def test_artifact_name_roundtrip():
+    assert aot.artifact_name("l1", 64, 16, 256) == "chunk_sums_l1_a64_r16_d256"
+
+
+def test_parse_buckets():
+    assert aot.parse_buckets("a64r16,a256r64") == ((64, 16), (256, 64))
+
+
+def test_lower_one_emits_hlo_text():
+    text = aot.lower_one("l2", 8, 4, 32)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # the entry layout must match the manifest contract
+    assert "f32[8,32]" in text and "f32[4,32]" in text and "f32[4]" in text
+    assert "f32[8]" in text  # output
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2", "cosine"])
+def test_lower_each_metric(metric):
+    text = aot.lower_one(metric, 8, 4, 16)
+    assert text.startswith("HloModule")
+
+
+def test_build_manifest_and_cache(tmp_path):
+    out = str(tmp_path)
+    m1 = aot.build(out, ("l1",), ((8, 4),), (16,))
+    assert len(m1["artifacts"]) == 1
+    entry = m1["artifacts"][0]
+    path = os.path.join(out, entry["file"])
+    assert os.path.exists(path)
+    mtime = os.path.getmtime(path)
+
+    # Second build must hit the cache (no rewrite).
+    m2 = aot.build(out, ("l1",), ((8, 4),), (16,))
+    assert os.path.getmtime(path) == mtime
+    assert m2["artifacts"][0]["sha256_16"] == entry["sha256_16"]
+
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["entry"] == "chunk_sums"
+    assert [i["name"] for i in manifest["inputs"]] == ["x_arms", "y_refs", "mask"]
+    assert manifest["output"]["tuple"] is True
+
+
+def test_build_force_rebuilds(tmp_path):
+    out = str(tmp_path)
+    aot.build(out, ("l2",), ((8, 4),), (16,))
+    path = os.path.join(out, "chunk_sums_l2_a8_r4_d16.hlo.txt")
+    with open(path, "w") as f:
+        f.write("corrupted")
+    m = aot.build(out, ("l2",), ((8, 4),), (16,), force=True)
+    with open(path) as f:
+        assert f.read().startswith("HloModule")
+    assert m["artifacts"][0]["sha256_16"] != "corrupted"

@@ -1,0 +1,144 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 Pallas layer.
+
+Hypothesis sweeps shapes (including non-tile-divisible and degenerate ones),
+value scales and tile overrides; every case asserts the Pallas kernels agree
+with the pure-jnp oracle in ref.py."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import distances as K
+from compile.kernels import ref
+
+METRICS = list(K.METRICS)
+RNG = np.random.default_rng(1234)
+
+
+def _rand(shape, scale=1.0, rng=RNG):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+def _assert_close(metric, got, want, scale=1.0):
+    # l1 sums ~d terms; tolerance scales with magnitude of the result.
+    atol = 1e-4 * max(1.0, scale) * (1.0 if metric != "l1" else 10.0)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape exactness on tile-aligned shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("shape", [(64, 16, 512), (64, 64, 256), (128, 64, 1024)])
+def test_tile_aligned(metric, shape):
+    a, r, d = shape
+    x, y = _rand((a, d)), _rand((r, d))
+    got = np.asarray(K.pairwise_distances(jnp.array(x), jnp.array(y), metric))
+    want = np.asarray(ref.pairwise(jnp.array(x), jnp.array(y), metric))
+    _assert_close(metric, got, want)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep: arbitrary shapes exercise the pad/slice wrapper
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    a=st.integers(1, 90),
+    r=st.integers(1, 90),
+    d=st.integers(1, 600),
+    metric=st.sampled_from(METRICS),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_shape_sweep(a, r, d, metric, scale, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand((a, d), scale, rng)
+    y = _rand((r, d), scale, rng)
+    got = np.asarray(K.pairwise_distances(jnp.array(x), jnp.array(y), metric))
+    want = np.asarray(ref.pairwise(jnp.array(x), jnp.array(y), metric))
+    assert got.shape == (a, r)
+    # normalize out the scale so tolerances are scale-free
+    denom = max(np.abs(want).max(), 1e-6)
+    np.testing.assert_allclose(got / denom, want / denom, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    metric=st.sampled_from(METRICS),
+    ta=st.sampled_from([8, 32, 64]),
+    tr=st.sampled_from([8, 16, 64]),
+    tk=st.sampled_from([32, 128, 512]),
+)
+def test_tile_override_invariance(metric, ta, tr, tk):
+    """Result must not depend on the tiling schedule."""
+    x, y = _rand((70, 300)), _rand((50, 300))
+    base = np.asarray(K.pairwise_distances(jnp.array(x), jnp.array(y), metric))
+    tiled = np.asarray(
+        K.pairwise_distances(jnp.array(x), jnp.array(y), metric, ta=ta, tr=tr, tk=tk))
+    np.testing.assert_allclose(tiled, base, rtol=2e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Metric properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_self_distance_zero(metric):
+    x = _rand((20, 64))
+    d = np.asarray(K.pairwise_distances(jnp.array(x), jnp.array(x), metric))
+    # l2 uses the matmul factorization ||x||^2+||y||^2-2x.y, whose diagonal is
+    # cancellation-limited: |raw err| ~ eps*||x||^2, sqrt amplifies to ~eps^.5*||x||.
+    atol = 0.05 if metric == "l2" else 2e-3
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=atol)
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2"])
+def test_symmetry(metric):
+    x, y = _rand((17, 100)), _rand((23, 100))
+    dxy = np.asarray(K.pairwise_distances(jnp.array(x), jnp.array(y), metric))
+    dyx = np.asarray(K.pairwise_distances(jnp.array(y), jnp.array(x), metric))
+    np.testing.assert_allclose(dxy, dyx.T, rtol=1e-5, atol=1e-4)
+
+
+def test_cosine_range_and_scale_invariance():
+    x, y = np.abs(_rand((10, 50))), np.abs(_rand((12, 50)))
+    d1 = np.asarray(K.pairwise_distances(jnp.array(x), jnp.array(y), "cosine"))
+    d2 = np.asarray(K.pairwise_distances(jnp.array(x * 7.5), jnp.array(y * 0.3), "cosine"))
+    np.testing.assert_allclose(d1, d2, rtol=1e-4, atol=1e-5)
+    assert (d1 > -1e-5).all() and (d1 < 2 + 1e-5).all()
+
+
+def test_cosine_zero_row():
+    x = _rand((4, 32))
+    x[2] = 0.0
+    y = _rand((5, 32))
+    d = np.asarray(K.pairwise_distances(jnp.array(x), jnp.array(y), "cosine"))
+    np.testing.assert_allclose(d[2], 1.0, atol=1e-6)  # zero row -> distance 1
+
+
+def test_l1_exact_hand_values():
+    x = jnp.array([[0.0, 0.0], [1.0, 2.0]])
+    y = jnp.array([[1.0, 1.0], [-1.0, 0.5]])
+    d = np.asarray(K.pairwise_distances(x, y, "l1"))
+    np.testing.assert_allclose(d, [[2.0, 1.5], [1.0, 3.5]], atol=1e-6)
+
+
+def test_l2_exact_hand_values():
+    x = jnp.array([[0.0, 0.0]])
+    y = jnp.array([[3.0, 4.0]])
+    d = np.asarray(K.pairwise_distances(x, y, "l2"))
+    np.testing.assert_allclose(d, [[5.0]], atol=1e-6)
+
+
+def test_unknown_metric_raises():
+    x = jnp.zeros((2, 3))
+    with pytest.raises(ValueError):
+        K.pairwise_raw(x, x, "chebyshev")
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        K.pairwise_raw(jnp.zeros((2, 3)), jnp.zeros((2, 4)), "l1")

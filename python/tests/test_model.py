@@ -1,0 +1,98 @@
+"""L2 model graph: masked chunk sums vs oracle, padding semantics, AOT contract."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+METRICS = ("l1", "l2", "cosine")
+
+
+def _rand(rng, shape, scale=1.0):
+    return (rng.normal(size=shape) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_chunk_sums_vs_oracle(metric):
+    rng = np.random.default_rng(7)
+    x, y = _rand(rng, (64, 256)), _rand(rng, (16, 256))
+    mask = rng.integers(0, 2, size=16).astype(np.float32)
+    got = np.asarray(model.chunk_sums(jnp.array(x), jnp.array(y), jnp.array(mask), metric))
+    want = np.asarray(ref.chunk_sums(jnp.array(x), jnp.array(y), jnp.array(mask), metric))
+    denom = max(np.abs(want).max(), 1.0)
+    np.testing.assert_allclose(got / denom, want / denom, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a=st.integers(1, 70),
+    r=st.integers(1, 40),
+    d=st.integers(2, 300),
+    metric=st.sampled_from(METRICS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_sums_sweep(a, r, d, metric, seed):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, (a, d)), _rand(rng, (r, d))
+    mask = rng.integers(0, 2, size=r).astype(np.float32)
+    got = np.asarray(model.chunk_sums(jnp.array(x), jnp.array(y), jnp.array(mask), metric))
+    want = np.asarray(ref.chunk_sums(jnp.array(x), jnp.array(y), jnp.array(mask), metric))
+    assert got.shape == (a,)
+    denom = max(np.abs(want).max(), 1e-6)
+    np.testing.assert_allclose(got / denom, want / denom, rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_ref_padding_is_exact(metric):
+    """Zero-padded, mask=0 reference rows must not change the sums at all.
+
+    This is the exact contract the rust bucket planner relies on: a job with
+    r_real refs padded up to the R bucket gives identical sums.
+    """
+    rng = np.random.default_rng(11)
+    x = _rand(rng, (32, 128))
+    y_real = _rand(rng, (10, 128))
+    base = np.asarray(model.chunk_sums(
+        jnp.array(x), jnp.array(y_real), jnp.ones(10, jnp.float32), metric))
+
+    y_pad = np.zeros((16, 128), np.float32)
+    y_pad[:10] = y_real
+    mask = np.zeros(16, np.float32)
+    mask[:10] = 1.0
+    padded = np.asarray(model.chunk_sums(
+        jnp.array(x), jnp.array(y_pad), jnp.array(mask), metric))
+    np.testing.assert_allclose(padded, base, rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_arm_padding_rows_discardable(metric):
+    """Padded arm rows change nothing for the real arms (rust discards them)."""
+    rng = np.random.default_rng(13)
+    x_real = _rand(rng, (12, 64))
+    y = _rand(rng, (8, 64))
+    mask = np.ones(8, np.float32)
+    base = np.asarray(model.chunk_sums(jnp.array(x_real), jnp.array(y), jnp.array(mask), metric))
+
+    x_pad = np.zeros((16, 64), np.float32)
+    x_pad[:12] = x_real
+    padded = np.asarray(model.chunk_sums(jnp.array(x_pad), jnp.array(y), jnp.array(mask), metric))
+    np.testing.assert_allclose(padded[:12], base, rtol=1e-6, atol=1e-5)
+
+
+def test_mask_all_zero_gives_zero():
+    rng = np.random.default_rng(17)
+    x, y = _rand(rng, (8, 32)), _rand(rng, (4, 32))
+    out = np.asarray(model.chunk_sums(
+        jnp.array(x), jnp.array(y), jnp.zeros(4, jnp.float32), "l1"))
+    np.testing.assert_allclose(out, 0.0, atol=1e-7)
+
+
+def test_entry_returns_tuple():
+    entry = model.chunk_sums_entry("l2")
+    rng = np.random.default_rng(19)
+    out = entry(jnp.array(_rand(rng, (4, 16))), jnp.array(_rand(rng, (4, 16))),
+                jnp.ones(4, jnp.float32))
+    assert isinstance(out, tuple) and len(out) == 1 and out[0].shape == (4,)

@@ -1,0 +1,46 @@
+"""Cross-language interchange: numpy must read the .npy files the rust
+`corrsh gen` CLI writes (util::npy), and the values must be a valid dataset.
+
+Skipped when the release binary hasn't been built yet."""
+
+import os
+import subprocess
+
+import numpy as np
+import pytest
+
+BIN = os.path.join(os.path.dirname(__file__), "..", "..", "target", "release", "corrsh")
+
+
+@pytest.mark.skipif(not os.path.exists(BIN), reason="cargo build --release first")
+@pytest.mark.parametrize("kind,n,dim", [("mnist", 12, 64), ("gaussian", 8, 16)])
+def test_rust_npy_readable_by_numpy(tmp_path, kind, n, dim):
+    out = tmp_path / f"{kind}.npy"
+    subprocess.run(
+        [BIN, "gen", "--kind", kind, "--n", str(n), "--dim", str(dim),
+         "--seed", "3", "--out", str(out)],
+        check=True,
+        capture_output=True,
+    )
+    arr = np.load(out)
+    assert arr.shape == (n, dim)
+    assert arr.dtype == np.float32
+    assert np.isfinite(arr).all()
+    if kind == "mnist":
+        assert arr.min() >= 0.0 and arr.max() <= 1.0
+        assert arr.sum() > 0  # ring images are not blank
+
+
+@pytest.mark.skipif(not os.path.exists(BIN), reason="cargo build --release first")
+def test_rust_gen_deterministic(tmp_path):
+    outs = []
+    for name in ["a.npy", "b.npy"]:
+        p = tmp_path / name
+        subprocess.run(
+            [BIN, "gen", "--kind", "gaussian", "--n", "6", "--dim", "8",
+             "--seed", "11", "--out", str(p)],
+            check=True,
+            capture_output=True,
+        )
+        outs.append(np.load(p))
+    np.testing.assert_array_equal(outs[0], outs[1])

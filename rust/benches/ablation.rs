@@ -1,0 +1,72 @@
+//! E8 — ablation bench: correlated vs uncorrelated Sequential Halving at
+//! identical budgets (the isolated value of the paper's correlation trick),
+//! plus Fig 2/3/4 statistics (the analysis artifacts).
+
+use corrsh::config::RunConfig;
+use corrsh::experiments::figures;
+use corrsh::util::bench::Bencher;
+
+fn main() {
+    let scale: usize = std::env::var("CORRSH_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    let trials: usize = std::env::var("CORRSH_BENCH_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let mut b = Bencher::new();
+    b.group(&format!("ablation + analysis (scale 1/{scale})"));
+
+    // corrSH vs uncorrelated SH
+    let cfg = RunConfig::preset("rnaseq20k").unwrap().scaled_down(scale);
+    let budgets = [2.0, 8.0, 32.0];
+    let mut pts = Vec::new();
+    b.bench("corr_vs_uncorr/sweep", || {
+        pts = figures::ablation_corr_vs_uncorr(&cfg, &budgets, trials, 0).unwrap();
+        pts.len()
+    });
+    for p in &pts {
+        b.record_metric(
+            &format!("corr_vs_uncorr/{}@{:.0}ppa", p.algo, p.pulls_per_arm),
+            p.error_rate,
+            "err",
+        );
+    }
+
+    // fig2 toy
+    let demo = figures::fig2_toy_demo(20_000, 0);
+    b.record_metric("fig2/p_flip_independent", demo.p_flip_independent, "prob");
+    b.record_metric("fig2/p_flip_correlated", demo.p_flip_correlated, "prob");
+
+    // fig3 histograms
+    let rows = figures::fig3_difference_histograms(&cfg, 10_000, 0).unwrap();
+    for r in &rows {
+        b.record_metric(&format!("fig3/{}/rho", r.arm_kind), r.rho, "rho");
+        b.record_metric(
+            &format!("fig3/{}/p_neg_ind", r.arm_kind),
+            r.p_neg_independent,
+            "prob",
+        );
+        b.record_metric(
+            &format!("fig3/{}/p_neg_corr", r.arm_kind),
+            r.p_neg_correlated,
+            "prob",
+        );
+    }
+
+    // fig4 hardness
+    for preset in ["rnaseq20k", "mnist"] {
+        let cfg = RunConfig::preset(preset).unwrap().scaled_down(scale);
+        let out = figures::fig4_delta_vs_rho(&cfg, 0).unwrap();
+        b.record_metric(&format!("fig4/{preset}/gain_H2_over_H2tilde"), out.gain_ratio, "x");
+    }
+
+    // fig6 distance-to-medoid histograms (count only; csv is the artifact)
+    for preset in ["rnaseq20k", "mnist"] {
+        let cfg = RunConfig::preset(preset).unwrap().scaled_down(scale);
+        let h = figures::fig6_distance_to_medoid(&cfg, 0).unwrap();
+        b.record_metric(&format!("fig6/{preset}/points"), h.count as f64, "pts");
+    }
+    b.write_jsonl();
+}

@@ -1,0 +1,41 @@
+//! E10 — end-to-end corrSH wall-clock bench (the §Perf headline): one full
+//! Correlated Sequential Halving run per iteration on each dataset
+//! geometry, native engine, default thread count — the number EXPERIMENTS.md
+//! §Perf tracks before/after optimization.
+
+use corrsh::bandits::{CorrSh, MedoidAlgorithm};
+use corrsh::config::RunConfig;
+use corrsh::experiments::runner;
+use corrsh::util::bench::Bencher;
+use corrsh::util::rng::Rng;
+
+fn main() {
+    let scale: usize = std::env::var("CORRSH_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20);
+    let mut b = Bencher::new();
+    b.group(&format!("e2e corrSH (scale 1/{scale}, native engine)"));
+
+    for preset in ["rnaseq20k", "netflix20k", "mnist"] {
+        let cfg = RunConfig::preset(preset).unwrap().scaled_down(scale);
+        let data = runner::build_data(&cfg);
+        let n = data.n();
+        let engine = corrsh::engine::NativeEngine::with_threads(
+            data.clone(),
+            cfg.metric,
+            corrsh::util::threads::default_threads(),
+        );
+        let mut seed = 0u64;
+        let mut pulls = 0u64;
+        b.bench_items(&format!("{preset}/n={n}/corrsh@24ppa"), n as u64, || {
+            let mut rng = Rng::seeded(seed);
+            seed += 1;
+            let res = CorrSh::with_pulls_per_arm(24.0).run(&engine, &mut rng);
+            pulls = res.pulls;
+            res.best
+        });
+        b.record_metric(&format!("{preset}/pulls_per_arm"), pulls as f64 / n as f64, "pulls/arm");
+    }
+    b.write_jsonl();
+}

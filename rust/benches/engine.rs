@@ -1,0 +1,108 @@
+//! E9 — pull-engine micro-benchmarks: native vs PJRT batched throughput,
+//! bucket-size sweep, dense vs sparse distance kernels. This is the roofline
+//! evidence for EXPERIMENTS.md §Perf.
+
+use std::sync::Arc;
+
+use corrsh::data::synth::{mnist, netflix, rnaseq, SynthConfig};
+use corrsh::distance::Metric;
+use corrsh::engine::{NativeEngine, PjrtEngine, PullEngine};
+use corrsh::runtime::Runtime;
+use corrsh::util::bench::Bencher;
+use corrsh::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Rng::seeded(0);
+
+    // ---- dense scalar kernels -------------------------------------------------
+    b.group("distance kernels (d=784 dense)");
+    let data = Arc::new(mnist::generate(&SynthConfig { n: 2_048, dim: 784, seed: 1, ..Default::default() }));
+    for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+        let e = NativeEngine::with_threads(data.clone(), metric, 1);
+        let mut i = 0usize;
+        b.bench_items(&format!("single_pull/{metric}"), 1, || {
+            i = (i + 1) % 2_000;
+            e.pull(i, (i * 7 + 13) % 2_000)
+        });
+    }
+
+    // ---- sparse kernels ---------------------------------------------------------
+    b.group("distance kernels (sparse CSR)");
+    let sp = Arc::new(netflix::generate(&SynthConfig {
+        n: 4_096,
+        dim: 8_192,
+        seed: 2,
+        density: 0.002,
+        ..Default::default()
+    }));
+    let e = NativeEngine::with_threads(sp.clone(), Metric::Cosine, 1);
+    let mut i = 0usize;
+    b.bench_items("single_pull/cosine_csr", 1, || {
+        i = (i + 1) % 4_000;
+        e.pull(i, (i * 11 + 5) % 4_000)
+    });
+
+    // ---- native batched block throughput (the corrSH round shape) -------------
+    b.group("pull_block (native, 1024 arms x 256 refs, d=784)");
+    let arms: Vec<usize> = (0..1024).collect();
+    let refs: Vec<usize> = rng.sample_without_replacement(2_048, 256);
+    let mut out = vec![0f32; arms.len()];
+    for threads in [1, corrsh::util::threads::default_threads()] {
+        let e = NativeEngine::with_threads(data.clone(), Metric::L2, threads);
+        b.bench_items(&format!("l2/threads={threads}"), (arms.len() * refs.len()) as u64, || {
+            e.pull_block(&arms, &refs, &mut out);
+            out[0]
+        });
+    }
+
+    // ---- rnaseq sparse block (the real Table-1 row shape) ----------------------
+    b.group("pull_block (native CSR l1, 1024x256, d=2048)");
+    let rs = Arc::new(rnaseq::generate(&SynthConfig {
+        n: 2_048,
+        dim: 2_048,
+        seed: 3,
+        ..Default::default()
+    }));
+    for threads in [1, corrsh::util::threads::default_threads()] {
+        let e = NativeEngine::with_threads(rs.clone(), Metric::L1, threads);
+        b.bench_items(&format!("l1_csr/threads={threads}"), (arms.len() * refs.len()) as u64, || {
+            e.pull_block(&arms, &refs, &mut out);
+            out[0]
+        });
+    }
+
+    // ---- PJRT path --------------------------------------------------------------
+    match Runtime::open("artifacts") {
+        Err(e) => println!("(pjrt benches skipped: {e:#})"),
+        Ok(rt) => {
+            let rt = Arc::new(rt);
+            b.group("pull_block (pjrt AOT artifacts, d=784)");
+            for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+                let e = PjrtEngine::new(data.clone(), metric, rt.clone()).unwrap();
+                e.warmup().unwrap();
+                b.bench_items(
+                    &format!("{metric}/1024x256"),
+                    (arms.len() * refs.len()) as u64,
+                    || {
+                        e.pull_block(&arms, &refs, &mut out);
+                        out[0]
+                    },
+                );
+            }
+            // bucket-size sweep: how much does padding waste at small rounds?
+            b.group("pjrt bucket sweep (l2, d=784)");
+            let e = PjrtEngine::new(data.clone(), Metric::L2, rt.clone()).unwrap();
+            for (na, nr) in [(64, 16), (256, 64), (1024, 256), (100, 37)] {
+                let a: Vec<usize> = (0..na).collect();
+                let r: Vec<usize> = (0..nr).collect();
+                let mut o = vec![0f32; na];
+                b.bench_items(&format!("{na}x{nr}"), (na * nr) as u64, || {
+                    e.pull_block(&a, &r, &mut o);
+                    o[0]
+                });
+            }
+        }
+    }
+    b.write_jsonl();
+}

@@ -1,0 +1,45 @@
+//! E2/E6 — Figs 1 & 5 regeneration bench: error-probability-vs-budget
+//! sweeps for corrSH / Med-dit / RAND on each figure's dataset. The bench
+//! reports the error rate at each budget (the figure's y-axis series) plus
+//! the wall time of one full sweep.
+
+use corrsh::config::RunConfig;
+use corrsh::experiments::figures;
+use corrsh::util::bench::Bencher;
+
+fn main() {
+    let scale: usize = std::env::var("CORRSH_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    let trials: usize = std::env::var("CORRSH_BENCH_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    let budgets = [2.0, 8.0, 32.0];
+    let mut b = Bencher::new();
+    b.group(&format!("fig1+fig5 sweeps (scale 1/{scale}, {trials} trials)"));
+
+    for (figure, preset) in [
+        ("fig1", "rnaseq20k"),
+        ("fig1", "netflix100k"),
+        ("fig5", "netflix20k"),
+        ("fig5", "rnaseq100k"),
+        ("fig5", "mnist"),
+    ] {
+        let cfg = RunConfig::preset(preset).unwrap().scaled_down(scale);
+        let mut pts = Vec::new();
+        b.bench(&format!("{figure}/{preset}/sweep"), || {
+            pts = figures::error_vs_budget(&cfg, &budgets, trials, 0).unwrap();
+            pts.len()
+        });
+        for p in &pts {
+            b.record_metric(
+                &format!("{figure}/{preset}/{}@{:.0}ppa", p.algo, p.pulls_per_arm),
+                p.error_rate,
+                "err",
+            );
+        }
+    }
+    b.write_jsonl();
+}

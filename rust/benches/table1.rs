@@ -1,0 +1,60 @@
+//! E1 — Table 1 regeneration bench: times every algorithm on every (scaled)
+//! dataset row and records pulls/arm + error, the two quantities the paper
+//! tabulates. `CORRSH_BENCH_SCALE` (default 50) divides each preset's n.
+
+use corrsh::config::RunConfig;
+use corrsh::experiments::{runner, table1};
+use corrsh::util::bench::Bencher;
+
+fn main() {
+    let scale: usize = std::env::var("CORRSH_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(50);
+    let mut b = Bencher::new();
+    b.group(&format!("table1 (scale 1/{scale})"));
+
+    for preset in ["rnaseq20k", "netflix20k", "mnist"] {
+        let cfg = RunConfig::preset(preset).unwrap().scaled_down(scale);
+        let data = runner::build_data(&cfg);
+        let n = data.n();
+        let truth = runner::ground_truth(&data, cfg.metric, 20_000);
+
+        for (label, algo) in [
+            ("corrsh", corrsh::config::AlgoConfig::CorrSh { pulls_per_arm: 24.0 }),
+            ("meddit", corrsh::config::AlgoConfig::Meddit { delta: 0.0, cap: 0 }),
+            ("rand1000", corrsh::config::AlgoConfig::Rand { refs_per_arm: 1000 }),
+            ("exact", corrsh::config::AlgoConfig::Exact),
+        ] {
+            let engine = corrsh::engine::NativeEngine::with_threads(
+                data.clone(),
+                cfg.metric,
+                corrsh::util::threads::default_threads(),
+            );
+            let mut seed = 0u64;
+            let mut last_pulls = 0u64;
+            let mut errs = 0usize;
+            let mut runs = 0usize;
+            b.bench(&format!("{preset}/{label}"), || {
+                let mut rng = corrsh::util::rng::Rng::seeded(seed);
+                seed += 1;
+                let res = algo.build(n).run(&engine, &mut rng);
+                last_pulls = res.pulls;
+                errs += (res.best != truth) as usize;
+                runs += 1;
+                res.best
+            });
+            b.record_metric(
+                &format!("{preset}/{label}/pulls_per_arm"),
+                last_pulls as f64 / n as f64,
+                "pulls/arm",
+            );
+            b.record_metric(
+                &format!("{preset}/{label}/error_rate"),
+                errs as f64 / runs.max(1) as f64,
+                "frac",
+            );
+        }
+    }
+    b.write_jsonl();
+}

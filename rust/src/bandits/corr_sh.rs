@@ -1,0 +1,250 @@
+//! **Correlated Sequential Halving** — Algorithm 1 of the paper, verbatim
+//! semantics.
+//!
+//! The single algorithmic change vs classical Sequential Halving [7] is line
+//! 3: each round draws ONE reference set `J_r` (uniform, without
+//! replacement) shared by every surviving arm, so the estimator differences
+//! `θ̂_1 − θ̂_i` are built from *correlated* samples and concentrate at rate
+//! `ρ_i σ` instead of `σ` (Theorem 2.1). The round loop:
+//!
+//! ```text
+//! S_0 = [n]
+//! for r = 0 .. ⌈log₂ n⌉ − 1:
+//!     t_r = clamp(⌊T / (|S_r| ⌈log₂ n⌉)⌋, 1, n)
+//!     J_r ~ Unif([n] choose t_r)                  # shared — the correlation
+//!     θ̂_i = (1/t_r) Σ_{j∈J_r} d(x_i, x_j)   ∀ i ∈ S_r
+//!     if t_r = n: return argmin θ̂              # exact ⇒ zero uncertainty
+//!     S_{r+1} = the ⌈|S_r|/2⌉ arms with smallest θ̂
+//! return the arm in S_{⌈log₂ n⌉}
+//! ```
+//!
+//! The pull workload of each round goes through `PullEngine::pull_block`
+//! (one correlated batch), which the PJRT engine tiles into AOT bucket jobs
+//! via the coordinator's batch planner.
+
+use std::time::Instant;
+
+use crate::bandits::{MedoidAlgorithm, MedoidResult, RoundLog};
+use crate::coordinator::{rounds, BudgetLedger};
+use crate::engine::PullEngine;
+use crate::util::rng::Rng;
+
+/// Budget specification: the paper sweeps pulls/arm on its x-axes.
+#[derive(Clone, Copy, Debug)]
+pub enum Budget {
+    /// Total distance computations T.
+    Total(u64),
+    /// x pulls per arm: T = x·n.
+    PerArm(f64),
+}
+
+impl Budget {
+    pub fn total(&self, n: usize) -> u64 {
+        match *self {
+            Budget::Total(t) => t,
+            Budget::PerArm(x) => (x * n as f64).ceil() as u64,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CorrSh {
+    pub budget: Budget,
+}
+
+impl CorrSh {
+    pub fn new(budget: Budget) -> Self {
+        CorrSh { budget }
+    }
+
+    pub fn with_total_pulls(t: u64) -> Self {
+        CorrSh::new(Budget::Total(t))
+    }
+
+    pub fn with_pulls_per_arm(x: f64) -> Self {
+        CorrSh::new(Budget::PerArm(x))
+    }
+}
+
+impl MedoidAlgorithm for CorrSh {
+    fn name(&self) -> &'static str {
+        "corrsh"
+    }
+
+    fn run(&self, engine: &dyn PullEngine, rng: &mut Rng) -> MedoidResult {
+        let start = Instant::now();
+        let n = engine.n();
+        if n <= 1 {
+            return MedoidResult {
+                best: 0,
+                pulls: 0,
+                wall: start.elapsed(),
+                rounds: vec![],
+                estimates: vec![(0, 0.0)],
+            };
+        }
+        let total = self.budget.total(n);
+        let mut ledger = BudgetLedger::new(total, n);
+        let mut survivors: Vec<usize> = (0..n).collect();
+        let mut round_logs = Vec::new();
+        let mut sums = vec![0f32; n];
+        let mut last_estimates: Vec<(usize, f64)> = Vec::new();
+
+        for r in 0..rounds::ceil_log2(n) {
+            let t = rounds::t_r(total, survivors.len(), n);
+            let pulls = (survivors.len() * t) as u64;
+            ledger
+                .charge_round(r, pulls)
+                .expect("halving schedule exceeded its own budget (bug)");
+
+            // Line 3: ONE shared reference set for the whole round.
+            let refs = rng.sample_without_replacement(n, t);
+
+            let out = &mut sums[..survivors.len()];
+            engine.pull_block(&survivors, &refs, out);
+
+            round_logs.push(RoundLog { r, survivors: survivors.len(), t, pulls });
+            last_estimates = survivors
+                .iter()
+                .zip(out.iter())
+                .map(|(&i, &s)| (i, s as f64 / t as f64))
+                .collect();
+
+            if t == n {
+                // Exact centralities: output the argmin immediately.
+                let k = crate::bandits::argmin(last_estimates.iter().map(|&(_, v)| v));
+                return MedoidResult {
+                    best: last_estimates[k].0,
+                    pulls: ledger.spent(),
+                    wall: start.elapsed(),
+                    rounds: round_logs,
+                    estimates: last_estimates,
+                };
+            }
+
+            // Keep the ⌈|S_r|/2⌉ arms with smallest θ̂.
+            let keep = survivors.len().div_ceil(2);
+            let mut order: Vec<usize> = (0..survivors.len()).collect();
+            order.sort_unstable_by(|&a, &b| {
+                out[a].partial_cmp(&out[b]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            survivors = order[..keep].iter().map(|&k| survivors[k]).collect();
+            if survivors.len() <= 1 {
+                break;
+            }
+        }
+
+        MedoidResult {
+            best: survivors[0],
+            pulls: ledger.spent(),
+            wall: start.elapsed(),
+            rounds: round_logs,
+            estimates: last_estimates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian, rnaseq, SynthConfig};
+    use crate::distance::Metric;
+    use crate::engine::{CountingEngine, NativeEngine};
+    use crate::util::testing;
+
+    fn planted_engine(n: usize, seed: u64) -> CountingEngine<NativeEngine> {
+        let data = gaussian::generate(&SynthConfig {
+            n,
+            dim: 16,
+            seed,
+            outlier_frac: 0.05,
+            ..Default::default()
+        });
+        CountingEngine::new(NativeEngine::new(data, Metric::L2))
+    }
+
+    #[test]
+    fn finds_planted_medoid_with_modest_budget() {
+        let engine = planted_engine(512, 3);
+        let mut hits = 0;
+        for trial in 0..20 {
+            let mut rng = Rng::seeded(trial);
+            let res = CorrSh::with_pulls_per_arm(32.0).run(&engine, &mut rng);
+            hits += (res.best == 0) as usize;
+        }
+        assert!(hits >= 19, "corrSH hit rate {hits}/20 too low");
+    }
+
+    #[test]
+    fn respects_budget_property() {
+        testing::check(
+            "corrsh-budget",
+            16, // engine construction is expensive; fewer cases
+            |rng| {
+                let n = rng.range(8, 400);
+                let per_arm = rng.range(1, 50) as f64;
+                (n, per_arm, rng.next_u64())
+            },
+            |&(n, per_arm, seed), prng| {
+                let engine = planted_engine(n, seed);
+                let res = CorrSh::with_pulls_per_arm(per_arm).run(&engine, prng);
+                // budget + the t_r>=1 clamp slack (see BudgetLedger::new)
+                let cap = (per_arm * n as f64).ceil() as u64 + 2 * n as u64 + 64;
+                if res.pulls > cap {
+                    return Err(format!("pulls {} > cap {cap}", res.pulls));
+                }
+                if res.pulls != engine.pulls() {
+                    return Err("ledger vs engine counter mismatch".into());
+                }
+                engine.reset();
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn round_structure_halves() {
+        let engine = planted_engine(300, 4);
+        let mut rng = Rng::seeded(9);
+        let res = CorrSh::with_pulls_per_arm(8.0).run(&engine, &mut rng);
+        for w in res.rounds.windows(2) {
+            assert_eq!(w[1].survivors, w[0].survivors.div_ceil(2));
+        }
+        assert_eq!(res.rounds[0].survivors, 300);
+    }
+
+    #[test]
+    fn huge_budget_exact_exit_is_perfect() {
+        // t_0 = n ⇒ the answer equals the exact medoid every time
+        let engine = planted_engine(128, 5);
+        let mut rng = Rng::seeded(0);
+        let res = CorrSh::with_pulls_per_arm(10_000.0).run(&engine, &mut rng);
+        assert_eq!(res.rounds.len(), 1);
+        assert_eq!(res.rounds[0].t, 128);
+        assert_eq!(res.best, 0);
+    }
+
+    #[test]
+    fn works_on_sparse_l1() {
+        let data = rnaseq::generate(&SynthConfig { n: 300, dim: 256, seed: 6, ..Default::default() });
+        let engine = CountingEngine::new(NativeEngine::new(data, Metric::L1));
+        // ground truth by exact sweep
+        let truth = crate::bandits::Exact::new().run(&engine, &mut Rng::seeded(0)).best;
+        let mut hits = 0;
+        for trial in 0..10 {
+            let mut rng = Rng::seeded(100 + trial);
+            if CorrSh::with_pulls_per_arm(64.0).run(&engine, &mut rng).best == truth {
+                hits += 1;
+            }
+        }
+        assert!(hits >= 9, "sparse l1 hit rate {hits}/10");
+    }
+
+    #[test]
+    fn n_leq_1_trivial() {
+        let engine = planted_engine(1, 7);
+        let res = CorrSh::with_pulls_per_arm(5.0).run(&engine, &mut Rng::seeded(0));
+        assert_eq!(res.best, 0);
+        assert_eq!(res.pulls, 0);
+    }
+}

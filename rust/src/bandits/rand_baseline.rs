@@ -1,0 +1,114 @@
+//! RAND [2] — the non-adaptive baseline.
+//!
+//! Draw one uniform reference subset of size m (without replacement) and
+//! score **every** arm against all of it; return the empirical argmin. The
+//! paper runs it at m = 1000 pulls/arm (Table 1 & figures). Note RAND is
+//! incidentally "correlated" in the paper's sense (same references for all
+//! arms) — what it lacks is *adaptivity*; corrSH beats it by concentrating
+//! budget on the surviving arms.
+
+use std::time::Instant;
+
+use crate::bandits::{argmin, MedoidAlgorithm, MedoidResult};
+use crate::engine::PullEngine;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RandBaseline {
+    /// References per arm (m). Clamped to n.
+    pub refs_per_arm: usize,
+}
+
+impl RandBaseline {
+    pub fn new(refs_per_arm: usize) -> Self {
+        RandBaseline { refs_per_arm }
+    }
+}
+
+impl MedoidAlgorithm for RandBaseline {
+    fn name(&self) -> &'static str {
+        "rand"
+    }
+
+    fn run(&self, engine: &dyn PullEngine, rng: &mut Rng) -> MedoidResult {
+        let start = Instant::now();
+        let n = engine.n();
+        if n <= 1 {
+            return MedoidResult {
+                best: 0,
+                pulls: 0,
+                wall: start.elapsed(),
+                rounds: vec![],
+                estimates: vec![(0, 0.0)],
+            };
+        }
+        let m = self.refs_per_arm.clamp(1, n);
+        let refs = rng.sample_without_replacement(n, m);
+        let arms: Vec<usize> = (0..n).collect();
+        let mut sums = vec![0f32; n];
+        engine.pull_block(&arms, &refs, &mut sums);
+        let estimates: Vec<(usize, f64)> =
+            arms.iter().map(|&i| (i, sums[i] as f64 / m as f64)).collect();
+        let best = argmin(estimates.iter().map(|&(_, v)| v));
+        MedoidResult {
+            best,
+            pulls: (n * m) as u64,
+            wall: start.elapsed(),
+            rounds: vec![],
+            estimates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian, SynthConfig};
+    use crate::distance::Metric;
+    use crate::engine::{CountingEngine, NativeEngine};
+
+    fn engine(n: usize) -> CountingEngine<NativeEngine> {
+        let data = gaussian::generate(&SynthConfig {
+            n,
+            dim: 16,
+            seed: 31,
+            outlier_frac: 0.05,
+            ..Default::default()
+        });
+        CountingEngine::new(NativeEngine::new(data, Metric::L2))
+    }
+
+    #[test]
+    fn full_budget_equals_exact() {
+        let e = engine(100);
+        // m = n: every arm scored against everyone → exact medoid
+        let res = RandBaseline::new(100).run(&e, &mut Rng::seeded(0));
+        assert_eq!(res.best, 0);
+        assert_eq!(res.pulls, 100 * 100);
+    }
+
+    #[test]
+    fn pull_count_is_n_times_m() {
+        let e = engine(150);
+        let res = RandBaseline::new(40).run(&e, &mut Rng::seeded(1));
+        assert_eq!(res.pulls, 150 * 40);
+        assert_eq!(res.pulls, e.pulls());
+    }
+
+    #[test]
+    fn m_clamped_to_n() {
+        let e = engine(50);
+        let res = RandBaseline::new(5_000).run(&e, &mut Rng::seeded(2));
+        assert_eq!(res.pulls, 50 * 50);
+    }
+
+    #[test]
+    fn reasonable_accuracy_at_modest_m() {
+        let e = engine(300);
+        let mut hits = 0;
+        for t in 0..10 {
+            hits += (RandBaseline::new(60).run(&e, &mut Rng::seeded(t)).best == 0) as usize;
+        }
+        assert!(hits >= 8, "RAND hit rate {hits}/10 at m=60");
+    }
+}

@@ -1,0 +1,313 @@
+//! Config system: dataset / engine / algorithm / experiment settings,
+//! loadable from JSON files with CLI overrides, plus the named presets that
+//! mirror the paper's five Table-1 rows.
+//!
+//! JSON (not TOML) because the build is offline and the in-tree parser
+//! (`util::json`) already exists for the AOT manifest. Example:
+//!
+//! ```json
+//! {
+//!   "dataset": {"kind": "rnaseq", "n": 20000, "dim": 2048, "seed": 0},
+//!   "metric": "l1",
+//!   "engine": "native",
+//!   "algo": {"name": "corrsh", "pulls_per_arm": 24.0}
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::data::synth::{Kind, SynthConfig};
+use crate::distance::Metric;
+use crate::util::json::{self, Value};
+
+/// Which engine executes pulls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Vectorized rust sweeps (dense + CSR).
+    Native,
+    /// AOT Pallas/JAX artifacts through PJRT (dense dims in the manifest).
+    Pjrt,
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(EngineKind::Native),
+            "pjrt" | "xla" => Ok(EngineKind::Pjrt),
+            other => anyhow::bail!("unknown engine {other:?} (want native|pjrt)"),
+        }
+    }
+}
+
+/// Algorithm selection + parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoConfig {
+    CorrSh { pulls_per_arm: f64 },
+    SeqHalving { pulls_per_arm: f64 },
+    Meddit { delta: f64, cap: u64 },
+    Rand { refs_per_arm: usize },
+    TopRank { phase1_refs: usize },
+    Exact,
+}
+
+impl AlgoConfig {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoConfig::CorrSh { .. } => "corrsh",
+            AlgoConfig::SeqHalving { .. } => "seq-halving",
+            AlgoConfig::Meddit { .. } => "meddit",
+            AlgoConfig::Rand { .. } => "rand",
+            AlgoConfig::TopRank { .. } => "toprank",
+            AlgoConfig::Exact => "exact",
+        }
+    }
+
+    /// Instantiate the algorithm object.
+    pub fn build(&self, n: usize) -> Box<dyn crate::bandits::MedoidAlgorithm> {
+        use crate::bandits::*;
+        match *self {
+            AlgoConfig::CorrSh { pulls_per_arm } => {
+                Box::new(CorrSh::with_pulls_per_arm(pulls_per_arm))
+            }
+            AlgoConfig::SeqHalving { pulls_per_arm } => {
+                Box::new(SeqHalving::with_pulls_per_arm(pulls_per_arm))
+            }
+            AlgoConfig::Meddit { delta, cap } => {
+                let d = if delta > 0.0 { delta } else { 1.0 / n as f64 };
+                Box::new(Meddit::new(d).with_budget_cap(cap))
+            }
+            AlgoConfig::Rand { refs_per_arm } => Box::new(RandBaseline::new(refs_per_arm)),
+            AlgoConfig::TopRank { phase1_refs } => Box::new(TopRank::new(phase1_refs)),
+            AlgoConfig::Exact => Box::new(Exact::new()),
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let name = v.get("name").as_str().context("algo.name missing")?;
+        let f = |k: &str, d: f64| v.get(k).as_f64().unwrap_or(d);
+        Ok(match name {
+            "corrsh" => AlgoConfig::CorrSh { pulls_per_arm: f("pulls_per_arm", 24.0) },
+            "seq-halving" | "sh" => {
+                AlgoConfig::SeqHalving { pulls_per_arm: f("pulls_per_arm", 24.0) }
+            }
+            "meddit" => AlgoConfig::Meddit {
+                delta: f("delta", 0.0),
+                cap: f("cap", 0.0) as u64,
+            },
+            "rand" => AlgoConfig::Rand { refs_per_arm: f("refs_per_arm", 1000.0) as usize },
+            "toprank" => AlgoConfig::TopRank { phase1_refs: f("phase1_refs", 1000.0) as usize },
+            "exact" => AlgoConfig::Exact,
+            other => anyhow::bail!("unknown algorithm {other:?}"),
+        })
+    }
+}
+
+/// A full run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset_kind: Kind,
+    pub synth: SynthConfig,
+    pub metric: Metric,
+    pub engine: EngineKind,
+    pub algo: AlgoConfig,
+    /// Artifact directory for the PJRT engine.
+    pub artifacts_dir: String,
+    pub trials: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset_kind: Kind::Gaussian,
+            synth: SynthConfig::default(),
+            metric: Metric::L2,
+            engine: EngineKind::Native,
+            algo: AlgoConfig::CorrSh { pulls_per_arm: 24.0 },
+            artifacts_dir: "artifacts".to_string(),
+            trials: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_json_value(v: &Value) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        let ds = v.get("dataset");
+        if !matches!(ds, Value::Null) {
+            if let Some(kind) = ds.get("kind").as_str() {
+                cfg.dataset_kind = kind.parse()?;
+                cfg.metric = cfg.dataset_kind.default_metric();
+            }
+            if let Some(n) = ds.get("n").as_usize() {
+                cfg.synth.n = n;
+            }
+            if let Some(d) = ds.get("dim").as_usize() {
+                cfg.synth.dim = d;
+            }
+            if let Some(s) = ds.get("seed").as_f64() {
+                cfg.synth.seed = s as u64;
+            }
+            if let Some(c) = ds.get("clusters").as_usize() {
+                cfg.synth.clusters = c;
+            }
+            if let Some(x) = ds.get("density").as_f64() {
+                cfg.synth.density = x;
+            }
+            if let Some(x) = ds.get("outlier_frac").as_f64() {
+                cfg.synth.outlier_frac = x;
+            }
+        }
+        if let Some(m) = v.get("metric").as_str() {
+            cfg.metric = m.parse()?;
+        }
+        if let Some(e) = v.get("engine").as_str() {
+            cfg.engine = e.parse()?;
+        }
+        if let Some(dir) = v.get("artifacts_dir").as_str() {
+            cfg.artifacts_dir = dir.to_string();
+        }
+        if let Some(t) = v.get("trials").as_usize() {
+            cfg.trials = t;
+        }
+        let algo = v.get("algo");
+        if !matches!(algo, Value::Null) {
+            cfg.algo = AlgoConfig::from_json(algo)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("read config {:?}", path.as_ref()))?;
+        let v = json::parse(&text).context("parse config json")?;
+        Self::from_json_value(&v)
+    }
+
+    /// Named presets mirroring the paper's Table-1 rows (scaled dims — see
+    /// DESIGN.md §7; pass `--paper-scale` to the CLI for the full dims).
+    pub fn preset(name: &str) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        match name {
+            "rnaseq20k" => {
+                cfg.dataset_kind = Kind::RnaSeq;
+                cfg.synth = SynthConfig { n: 20_000, dim: 2_048, ..Default::default() };
+                cfg.metric = Metric::L1;
+            }
+            "rnaseq100k" => {
+                cfg.dataset_kind = Kind::RnaSeq;
+                cfg.synth = SynthConfig { n: 109_140, dim: 2_048, ..Default::default() };
+                cfg.metric = Metric::L1;
+            }
+            "netflix20k" => {
+                cfg.dataset_kind = Kind::Netflix;
+                cfg.synth = SynthConfig {
+                    n: 20_000,
+                    dim: 17_769,
+                    density: 0.0021,
+                    ..Default::default()
+                };
+                cfg.metric = Metric::Cosine;
+            }
+            "netflix100k" => {
+                cfg.dataset_kind = Kind::Netflix;
+                cfg.synth = SynthConfig {
+                    n: 100_000,
+                    dim: 17_769,
+                    density: 0.0021,
+                    ..Default::default()
+                };
+                cfg.metric = Metric::Cosine;
+            }
+            "mnist" => {
+                cfg.dataset_kind = Kind::Mnist;
+                cfg.synth = SynthConfig { n: 6_424, dim: 784, ..Default::default() };
+                cfg.metric = Metric::L2;
+            }
+            "toy" => {
+                cfg.dataset_kind = Kind::Gaussian;
+                cfg.synth = SynthConfig { n: 1_000, dim: 16, ..Default::default() };
+                cfg.metric = Metric::L2;
+            }
+            other => anyhow::bail!(
+                "unknown preset {other:?} (want rnaseq20k|rnaseq100k|netflix20k|netflix100k|mnist|toy)"
+            ),
+        }
+        Ok(cfg)
+    }
+
+    /// Shrink a preset to a quick-run size (for tests and smoke runs):
+    /// divides n by `factor`, keeping geometry knobs.
+    pub fn scaled_down(mut self, factor: usize) -> Self {
+        self.synth.n = (self.synth.n / factor).max(64);
+        self.synth.dim = self.synth.dim.min(2_048);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let v = json::parse(
+            r#"{"dataset": {"kind": "rnaseq", "n": 500, "dim": 128, "seed": 7},
+                "engine": "native", "trials": 3,
+                "algo": {"name": "corrsh", "pulls_per_arm": 12.5}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json_value(&v).unwrap();
+        assert_eq!(cfg.dataset_kind, Kind::RnaSeq);
+        assert_eq!(cfg.synth.n, 500);
+        assert_eq!(cfg.metric, Metric::L1); // dataset default
+        assert_eq!(cfg.trials, 3);
+        assert_eq!(cfg.algo, AlgoConfig::CorrSh { pulls_per_arm: 12.5 });
+    }
+
+    #[test]
+    fn metric_override_wins() {
+        let v = json::parse(r#"{"dataset": {"kind": "rnaseq"}, "metric": "l2"}"#).unwrap();
+        let cfg = RunConfig::from_json_value(&v).unwrap();
+        assert_eq!(cfg.metric, Metric::L2);
+    }
+
+    #[test]
+    fn presets_match_paper_shapes() {
+        let t1 = RunConfig::preset("rnaseq20k").unwrap();
+        assert_eq!(t1.synth.n, 20_000);
+        assert_eq!(t1.metric, Metric::L1);
+        let t3 = RunConfig::preset("netflix20k").unwrap();
+        assert_eq!(t3.synth.dim, 17_769);
+        assert_eq!(t3.metric, Metric::Cosine);
+        let t5 = RunConfig::preset("mnist").unwrap();
+        assert_eq!((t5.synth.n, t5.synth.dim), (6_424, 784));
+        assert!(RunConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn all_algos_parse_and_build() {
+        for (spec, name) in [
+            (r#"{"name": "corrsh"}"#, "corrsh"),
+            (r#"{"name": "sh"}"#, "seq-halving"),
+            (r#"{"name": "meddit", "delta": 0.01}"#, "meddit"),
+            (r#"{"name": "rand", "refs_per_arm": 10}"#, "rand"),
+            (r#"{"name": "toprank"}"#, "toprank"),
+            (r#"{"name": "exact"}"#, "exact"),
+        ] {
+            let v = json::parse(spec).unwrap();
+            let algo = AlgoConfig::from_json(&v).unwrap();
+            assert_eq!(algo.name(), name);
+            let _ = algo.build(100);
+        }
+    }
+
+    #[test]
+    fn scaled_down_keeps_floor() {
+        let cfg = RunConfig::preset("rnaseq20k").unwrap().scaled_down(1000);
+        assert_eq!(cfg.synth.n, 64);
+    }
+}

@@ -1,0 +1,109 @@
+//! Fixed-budget pull accounting.
+//!
+//! Algorithm 1 is *fixed budget*: given T total distance computations it
+//! never exceeds T (plus the ≤1-pull-per-arm clamp slack). The ledger is the
+//! single authority on what has been spent; the experiment harness asserts
+//! its invariants after every trial.
+
+/// Tracks pulls against a fixed budget.
+#[derive(Clone, Debug)]
+pub struct BudgetLedger {
+    budget: u64,
+    /// Extra allowance from the `t_r ≥ 1` clamp: a starved round still pays
+    /// |S_r| pulls, so across all rounds the overshoot is bounded by
+    /// Σ_r ⌈|S_r|⌉ ≤ 2n + ⌈log₂ n⌉ (ceil-halving).
+    slack: u64,
+    spent: u64,
+    rounds: Vec<(usize, u64)>,
+}
+
+impl BudgetLedger {
+    pub fn new(budget: u64, n: usize) -> Self {
+        let slack = 2 * n as u64 + crate::coordinator::rounds::ceil_log2(n) as u64 + 1;
+        BudgetLedger { budget, slack, spent: 0, rounds: Vec::new() }
+    }
+
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    pub fn spent(&self) -> u64 {
+        self.spent
+    }
+
+    pub fn remaining(&self) -> u64 {
+        (self.budget + self.slack).saturating_sub(self.spent)
+    }
+
+    /// Charge a round's pulls. Panics (debug) / errors if the hard cap
+    /// (budget + slack) would be breached — a scheduling bug, not a runtime
+    /// condition.
+    pub fn charge_round(&mut self, round: usize, pulls: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.spent + pulls <= self.budget + self.slack,
+            "round {round} would overspend: spent {} + {pulls} > budget {} + slack {}",
+            self.spent,
+            self.budget,
+            self.slack
+        );
+        self.spent += pulls;
+        self.rounds.push((round, pulls));
+        Ok(())
+    }
+
+    /// Per-round history (round index, pulls).
+    pub fn history(&self) -> &[(usize, u64)] {
+        &self.rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::rounds::halving_rounds;
+    use crate::util::testing;
+
+    #[test]
+    fn charges_accumulate() {
+        let mut l = BudgetLedger::new(100, 10);
+        l.charge_round(0, 40).unwrap();
+        l.charge_round(1, 30).unwrap();
+        assert_eq!(l.spent(), 70);
+        // slack(n=10) = 2*10 + ceil_log2(10) + 1 = 25
+        assert_eq!(l.remaining(), 100 + 25 - 70);
+        assert_eq!(l.history(), &[(0, 40), (1, 30)]);
+    }
+
+    #[test]
+    fn overspend_rejected() {
+        // slack(n=5) = 10 + 3 + 1 = 14 -> hard cap 114
+        let mut l = BudgetLedger::new(100, 5);
+        assert!(l.charge_round(0, 115).is_err());
+        assert!(l.charge_round(0, 114).is_ok());
+        assert!(l.charge_round(1, 1).is_err());
+    }
+
+    #[test]
+    fn halving_schedule_always_fits_ledger() {
+        // The schedule and the ledger must agree for every (n, T): this is
+        // the paper's "at most T distance computations" claim.
+        testing::check(
+            "ledger-fits-schedule",
+            testing::default_cases(),
+            |rng| {
+                let n = rng.range(2, 20_000);
+                let budget = rng.range(1, 200) as u64 * n as u64;
+                (n, budget)
+            },
+            |&(n, budget), _| {
+                let mut ledger = BudgetLedger::new(budget, n);
+                for round in halving_rounds(n, budget) {
+                    ledger
+                        .charge_round(round.r, round.pulls)
+                        .map_err(|e| format!("{e}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,23 @@
+//! L3 coordination: the paper's contribution lives here.
+//!
+//! * [`planner`] — the batch planner that tiles a round's `|S_r| × t_r`
+//!   pull workload into bucket-shaped jobs matching the AOT artifacts
+//!   (pad + mask semantics, exact-coverage invariant).
+//! * [`ledger`] — fixed-budget accounting: Algorithm 1's per-round
+//!   `t_r = clamp(⌊T / (|S_r|⌈log₂n⌉)⌋, 1, n)` and the guarantee that the
+//!   total never exceeds `T` plus the ≤1-pull-per-arm initialization slack.
+//! * [`rounds`] — the halving schedule `|S_{r+1}| = ⌈|S_r|/2⌉` with the
+//!   early-exit rule when `t_r = n` (exact centrality ⇒ zero uncertainty).
+//!
+//! The Correlated Sequential Halving *algorithm* (`bandits::corr_sh`) is a
+//! thin loop over these pieces plus an engine; the correlation itself is the
+//! planner guaranteeing every arm in a round is scored against the **same**
+//! reference set `J_r`.
+
+pub mod ledger;
+pub mod planner;
+pub mod rounds;
+
+pub use ledger::BudgetLedger;
+pub use planner::{BatchPlanner, Job};
+pub use rounds::{halving_rounds, RoundPlan};

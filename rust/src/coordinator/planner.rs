@@ -1,0 +1,245 @@
+//! Batch planner: tile a round's `arms × refs` pull workload into jobs
+//! shaped like the available AOT buckets.
+//!
+//! The PJRT artifacts have *static* shapes (A, R). A round with `|S_r|`
+//! surviving arms and `t_r` references becomes a grid of jobs: arms are cut
+//! into runs of ≤A, refs into runs of ≤R, and short tails are zero-padded
+//! (padded refs are masked out inside the HLO; padded arm outputs are
+//! discarded on readback — semantics pinned by `python/tests/test_model.py`
+//! and re-verified end-to-end in `rust/tests/pjrt_parity.rs`).
+//!
+//! Bucket choice: for each axis pick the smallest bucket ≥ the remaining
+//! run, else the largest bucket (repeating). That minimizes padded waste on
+//! tails while using the big MXU-shaped tiles for the bulk.
+//!
+//! Invariant (property-tested): every (arm, ref) pair is covered by exactly
+//! one job, and every job's shape is an available bucket.
+
+/// One PJRT job: `arm_span` and `ref_span` index into the round's arm/ref
+/// lists; the job runs on bucket `(bucket_arms, bucket_refs)` with padding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Job {
+    pub arm_start: usize,
+    pub arm_len: usize,
+    pub ref_start: usize,
+    pub ref_len: usize,
+    pub bucket_arms: usize,
+    pub bucket_refs: usize,
+}
+
+impl Job {
+    /// Padded-waste ratio of this job (0 = perfectly full).
+    pub fn waste(&self) -> f64 {
+        1.0 - (self.arm_len * self.ref_len) as f64
+            / (self.bucket_arms * self.bucket_refs) as f64
+    }
+}
+
+/// Plans jobs against a fixed bucket ladder.
+#[derive(Clone, Debug)]
+pub struct BatchPlanner {
+    /// Available (arms, refs) bucket shapes, sorted ascending.
+    buckets: Vec<(usize, usize)>,
+    arm_sizes: Vec<usize>,
+    ref_sizes: Vec<usize>,
+}
+
+impl BatchPlanner {
+    /// `buckets`: the (A, R) shapes present in the artifact manifest for the
+    /// relevant (metric, dim).
+    pub fn new(mut buckets: Vec<(usize, usize)>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!buckets.is_empty(), "no buckets available");
+        buckets.sort_unstable();
+        buckets.dedup();
+        let mut arm_sizes: Vec<usize> = buckets.iter().map(|b| b.0).collect();
+        arm_sizes.sort_unstable();
+        arm_sizes.dedup();
+        let mut ref_sizes: Vec<usize> = buckets.iter().map(|b| b.1).collect();
+        ref_sizes.sort_unstable();
+        ref_sizes.dedup();
+        Ok(BatchPlanner { buckets, arm_sizes, ref_sizes })
+    }
+
+    /// Split `len` into runs using `sizes` (ascending): largest size for the
+    /// bulk, smallest size ≥ tail for the tail.
+    fn cut(sizes: &[usize], len: usize) -> Vec<(usize, usize, usize)> {
+        // (start, len, chosen_size)
+        let mut out = Vec::new();
+        let largest = *sizes.last().unwrap();
+        let mut pos = 0;
+        while pos < len {
+            let rest = len - pos;
+            let size = if rest >= largest {
+                largest
+            } else {
+                *sizes.iter().find(|&&s| s >= rest).unwrap_or(&largest)
+            };
+            let take = size.min(rest);
+            out.push((pos, take, size));
+            pos += take;
+        }
+        out
+    }
+
+    /// Check a (bucket_arm, bucket_ref) combination exists; if not, fall
+    /// back to the smallest bucket whose arm size matches and refs fit, else
+    /// the largest overall.
+    fn resolve(&self, a: usize, r: usize) -> (usize, usize) {
+        if self.buckets.binary_search(&(a, r)).is_ok() {
+            return (a, r);
+        }
+        // prefer same arm bucket with the smallest refs >= r
+        if let Some(&(ba, br)) = self
+            .buckets
+            .iter()
+            .filter(|&&(ba, br)| ba == a && br >= r)
+            .min_by_key(|&&(_, br)| br)
+        {
+            return (ba, br);
+        }
+        // any bucket that fits both
+        if let Some(&b) = self
+            .buckets
+            .iter()
+            .filter(|&&(ba, br)| ba >= a && br >= r)
+            .min_by_key(|&&(ba, br)| ba * br)
+        {
+            return b;
+        }
+        *self.buckets.last().unwrap()
+    }
+
+    /// Plan the full job grid for `n_arms × n_refs`.
+    pub fn plan(&self, n_arms: usize, n_refs: usize) -> Vec<Job> {
+        if n_arms == 0 || n_refs == 0 {
+            return Vec::new();
+        }
+        let arm_runs = Self::cut(&self.arm_sizes, n_arms);
+        let ref_runs = Self::cut(&self.ref_sizes, n_refs);
+        let mut jobs = Vec::with_capacity(arm_runs.len() * ref_runs.len());
+        for &(astart, alen, asize) in &arm_runs {
+            for &(rstart, rlen, rsize) in &ref_runs {
+                let (ba, br) = self.resolve(asize, rsize);
+                debug_assert!(ba >= alen && br >= rlen);
+                jobs.push(Job {
+                    arm_start: astart,
+                    arm_len: alen,
+                    ref_start: rstart,
+                    ref_len: rlen,
+                    bucket_arms: ba,
+                    bucket_refs: br,
+                });
+            }
+        }
+        jobs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing;
+
+    fn ladder() -> Vec<(usize, usize)> {
+        vec![(64, 16), (64, 64), (256, 64), (256, 256), (1024, 256)]
+    }
+
+    #[test]
+    fn small_round_single_job() {
+        let p = BatchPlanner::new(ladder()).unwrap();
+        let jobs = p.plan(10, 5);
+        assert_eq!(jobs.len(), 1);
+        let j = &jobs[0];
+        assert_eq!((j.arm_len, j.ref_len), (10, 5));
+        assert_eq!((j.bucket_arms, j.bucket_refs), (64, 16));
+    }
+
+    #[test]
+    fn bulk_uses_biggest_bucket() {
+        let p = BatchPlanner::new(ladder()).unwrap();
+        let jobs = p.plan(4096, 512);
+        // bulk jobs should be 1024x256
+        let bulk = jobs.iter().filter(|j| j.bucket_arms == 1024 && j.bucket_refs == 256).count();
+        assert_eq!(bulk, 8, "{jobs:?}");
+    }
+
+    #[test]
+    fn coverage_exact_property() {
+        testing::check(
+            "planner-coverage",
+            testing::default_cases(),
+            |rng| {
+                let n_arms = rng.range(1, 3000);
+                let n_refs = rng.range(1, 700);
+                (n_arms, n_refs)
+            },
+            |&(n_arms, n_refs), _| {
+                let p = BatchPlanner::new(ladder()).unwrap();
+                let jobs = p.plan(n_arms, n_refs);
+                // exact cover: counts per (arm, ref) cell must all be 1.
+                // use a coarse check (interval partition per axis) to stay O(n)
+                let mut arm_cov = vec![0u32; n_arms];
+                let mut ref_marks: Vec<(usize, usize)> = jobs
+                    .iter()
+                    .map(|j| (j.ref_start, j.ref_len))
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .into_iter()
+                    .collect();
+                ref_marks.sort_unstable();
+                // ref runs must partition [0, n_refs)
+                let mut pos = 0;
+                for (s, l) in &ref_marks {
+                    if *s != pos {
+                        return Err(format!("ref gap/overlap at {pos} (next run {s})"));
+                    }
+                    pos = s + l;
+                }
+                if pos != n_refs {
+                    return Err(format!("ref cover ends at {pos} != {n_refs}"));
+                }
+                // each arm must be covered once per ref-run
+                let ref_runs = ref_marks.len();
+                for j in &jobs {
+                    for a in j.arm_start..j.arm_start + j.arm_len {
+                        arm_cov[a] += 1;
+                    }
+                    if j.arm_len > j.bucket_arms || j.ref_len > j.bucket_refs {
+                        return Err(format!("job exceeds bucket: {j:?}"));
+                    }
+                    if !ladder().contains(&(j.bucket_arms, j.bucket_refs)) {
+                        return Err(format!("job uses unknown bucket: {j:?}"));
+                    }
+                }
+                if arm_cov.iter().any(|&c| c as usize != ref_runs) {
+                    return Err("arm not covered exactly once per ref-run".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn waste_bounded_on_bulk() {
+        let p = BatchPlanner::new(ladder()).unwrap();
+        // a full-size round: waste only on the tail jobs
+        let jobs = p.plan(2048, 256);
+        let total_cells: usize = jobs.iter().map(|j| j.bucket_arms * j.bucket_refs).sum();
+        let useful = 2048 * 256;
+        assert!(
+            (total_cells as f64) < useful as f64 * 1.05,
+            "padding waste too high: {total_cells} vs {useful}"
+        );
+    }
+
+    #[test]
+    fn empty_plan() {
+        let p = BatchPlanner::new(ladder()).unwrap();
+        assert!(p.plan(0, 10).is_empty());
+        assert!(p.plan(10, 0).is_empty());
+    }
+
+    #[test]
+    fn no_buckets_is_error() {
+        assert!(BatchPlanner::new(vec![]).is_err());
+    }
+}

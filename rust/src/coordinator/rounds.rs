@@ -1,0 +1,178 @@
+//! The halving schedule of Algorithm 1.
+//!
+//! Round r keeps `⌈|S_r|/2⌉` arms and draws `t_r` shared references:
+//!
+//! ```text
+//! t_r = clamp(⌊ T / (|S_r| · ⌈log₂ n⌉) ⌋, 1, n)
+//! ```
+//!
+//! If `t_r = n` the round's estimates are *exact* centralities, so the
+//! algorithm outputs the argmin immediately (paper line 5-6). These
+//! functions are pure so the schedule is testable and the experiment
+//! harness can predict pull counts without running anything.
+
+/// `⌈log₂ n⌉` as used by Algorithm 1 (n = 1 ⇒ 0 rounds).
+pub fn ceil_log2(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        usize::BITS as usize - (n - 1).leading_zeros() as usize
+    }
+}
+
+/// One planned round.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundPlan {
+    pub r: usize,
+    /// |S_r| — surviving arms entering the round.
+    pub survivors: usize,
+    /// t_r — shared references drawn this round.
+    pub t: usize,
+    /// survivors × t pulls charged this round.
+    pub pulls: u64,
+    /// true ⇒ estimates are exact and the algorithm stops here.
+    pub exact_exit: bool,
+}
+
+/// t_r for a given budget/survivor count (Algorithm 1 line 3).
+pub fn t_r(total_budget: u64, survivors: usize, n: usize) -> usize {
+    let log = ceil_log2(n).max(1);
+    let t = (total_budget / (survivors as u64 * log as u64)) as usize;
+    t.clamp(1, n)
+}
+
+/// The complete (deterministic) halving schedule for (n, T).
+pub fn halving_rounds(n: usize, total_budget: u64) -> Vec<RoundPlan> {
+    let mut out = Vec::new();
+    if n <= 1 {
+        return out;
+    }
+    let mut survivors = n;
+    for r in 0..ceil_log2(n) {
+        let t = t_r(total_budget, survivors, n);
+        let exact_exit = t == n;
+        out.push(RoundPlan {
+            r,
+            survivors,
+            t,
+            pulls: survivors as u64 * t as u64,
+            exact_exit,
+        });
+        if exact_exit || survivors <= 1 {
+            break;
+        }
+        survivors = survivors.div_ceil(2);
+    }
+    out
+}
+
+/// Total pulls the schedule will consume.
+pub fn planned_pulls(n: usize, total_budget: u64) -> u64 {
+    halving_rounds(n, total_budget).iter().map(|r| r.pulls).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing;
+
+    #[test]
+    fn ceil_log2_exact() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(1024), 10);
+        assert_eq!(ceil_log2(1025), 11);
+    }
+
+    #[test]
+    fn halving_survivor_counts() {
+        // n = 10: 10 -> 5 -> 3 -> 2 (ceil halving), ceil(log2 10) = 4 rounds
+        let rounds = halving_rounds(10, 10_000_000); // huge budget -> t=n, exits round 0
+        assert!(rounds[0].exact_exit);
+
+        let rounds = halving_rounds(10, 40); // t_0 = 40/(10*4) = 1
+        let sizes: Vec<usize> = rounds.iter().map(|r| r.survivors).collect();
+        assert_eq!(sizes, vec![10, 5, 3, 2]);
+    }
+
+    #[test]
+    fn exact_exit_when_t_reaches_n() {
+        // big budget relative to survivors: t_r caps at n and exits
+        let rounds = halving_rounds(16, 16 * 4 * 16); // t_0 = 16 = n
+        assert_eq!(rounds.len(), 1);
+        assert!(rounds[0].exact_exit);
+    }
+
+    #[test]
+    fn budget_respected_property() {
+        // Theorem accounting: sum of round pulls <= T + n (init slack of
+        // 1 pull/arm when floor() hits 0 and we clamp to t=1).
+        testing::check(
+            "halving-budget",
+            testing::default_cases(),
+            |rng| {
+                let n = rng.range(2, 5_000);
+                let per_arm = rng.range(1, 64) as u64;
+                (n, per_arm * n as u64)
+            },
+            |&(n, budget), _| {
+                let total = planned_pulls(n, budget);
+                // t_r >= 1 clamp: a starved round still pays |S_r| pulls,
+                // so the overshoot is bounded by sum of the halving sizes.
+                let slack = 2 * n as u64 + ceil_log2(n) as u64 + 1;
+                if total <= budget + slack {
+                    Ok(())
+                } else {
+                    Err(format!("pulls {total} > budget {budget} + slack {slack}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn rounds_monotone_and_terminating() {
+        testing::check(
+            "halving-shape",
+            testing::default_cases(),
+            |rng| {
+                let n = rng.range(2, 100_000);
+                let budget = rng.range(1, 100) as u64 * n as u64;
+                (n, budget)
+            },
+            |&(n, budget), _| {
+                let rounds = halving_rounds(n, budget);
+                if rounds.is_empty() {
+                    return Err("no rounds for n >= 2".into());
+                }
+                for w in rounds.windows(2) {
+                    if w[1].survivors != w[0].survivors.div_ceil(2) {
+                        return Err(format!(
+                            "survivors {} -> {} is not ceil-halving",
+                            w[0].survivors, w[1].survivors
+                        ));
+                    }
+                    if w[0].exact_exit {
+                        return Err("rounds continued past exact exit".into());
+                    }
+                }
+                let last = rounds.last().unwrap();
+                if !(last.exact_exit
+                    || rounds.len() == ceil_log2(n)
+                    || last.survivors <= 1)
+                {
+                    return Err("schedule ended early without exit condition".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn t_r_clamps() {
+        assert_eq!(t_r(0, 10, 100), 1); // floor 0 -> clamp 1
+        assert_eq!(t_r(u64::MAX / 2, 2, 100), 100); // huge -> clamp n
+    }
+}

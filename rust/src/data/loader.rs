@@ -1,0 +1,118 @@
+//! Dataset loaders: `.npy` dense matrices and a simple CSR triplet format,
+//! so real datasets (when available) drop in for the synthetic generators.
+//!
+//! CSR text format (one header line, then one line per nonzero):
+//! ```text
+//! csr <n> <dim>
+//! <row> <col> <value>
+//! ...
+//! ```
+
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Data, DenseData, SparseData};
+use crate::util::npy;
+
+/// Load a dataset by extension: `.npy` (dense) or `.csr` (sparse triplets).
+pub fn load(path: impl AsRef<Path>) -> Result<Data> {
+    let p = path.as_ref();
+    match p.extension().and_then(|e| e.to_str()) {
+        Some("npy") => {
+            let m = npy::read(p)?;
+            Ok(Data::Dense(DenseData::new(m.rows, m.cols, m.data)))
+        }
+        Some("csr") => load_csr(p),
+        other => bail!("unsupported dataset extension {other:?} (want .npy or .csr)"),
+    }
+}
+
+fn load_csr(path: &Path) -> Result<Data> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines.next().context("empty csr file")??;
+    let mut it = header.split_whitespace();
+    if it.next() != Some("csr") {
+        bail!("bad csr header (want `csr <n> <dim>`)");
+    }
+    let n: usize = it.next().context("missing n")?.parse()?;
+    let dim: usize = it.next().context("missing dim")?.parse()?;
+
+    let mut rows: Vec<Vec<(u32, f32)>> = vec![Vec::new(); n];
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let r: usize = it.next().context("missing row")?.parse()
+            .with_context(|| format!("line {}", lineno + 2))?;
+        let c: u32 = it.next().context("missing col")?.parse()?;
+        let v: f32 = it.next().context("missing value")?.parse()?;
+        if r >= n || c as usize >= dim {
+            bail!("entry ({r},{c}) out of bounds for {n}x{dim} at line {}", lineno + 2);
+        }
+        rows[r].push((c, v));
+    }
+    Ok(Data::Sparse(SparseData::from_rows(n, dim, rows)))
+}
+
+/// Save a dense dataset as `.npy` (interchange with the python layer).
+pub fn save_dense_npy(path: impl AsRef<Path>, d: &DenseData) -> Result<()> {
+    npy::write(path, &npy::Matrix::new(d.n, d.dim, d.data.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("corrsh-loader-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn npy_roundtrip_through_loader() {
+        let d = DenseData::new(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let p = tmp("x.npy");
+        save_dense_npy(&p, &d).unwrap();
+        match load(&p).unwrap() {
+            Data::Dense(back) => {
+                assert_eq!(back.data, d.data);
+                assert_eq!((back.n, back.dim), (2, 3));
+            }
+            _ => panic!("expected dense"),
+        }
+    }
+
+    #[test]
+    fn csr_text_roundtrip() {
+        let p = tmp("x.csr");
+        std::fs::write(&p, "csr 3 5\n0 1 2.5\n0 4 -1\n2 0 7\n# comment\n\n").unwrap();
+        match load(&p).unwrap() {
+            Data::Sparse(s) => {
+                assert_eq!((s.n, s.dim), (3, 5));
+                assert_eq!(s.row(0).indices, &[1, 4]);
+                assert_eq!(s.row(1).nnz(), 0);
+                assert_eq!(s.row(2).values, &[7.0]);
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn csr_bounds_checked() {
+        let p = tmp("bad.csr");
+        std::fs::write(&p, "csr 2 2\n5 0 1.0\n").unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn unknown_extension_rejected() {
+        assert!(load("data.parquet").is_err());
+    }
+}

@@ -1,0 +1,188 @@
+//! Dataset substrate: dense matrices, CSR sparse matrices, loaders and the
+//! synthetic generators standing in for the paper's datasets (DESIGN.md §7).
+
+pub mod loader;
+pub mod sparse;
+pub mod synth;
+
+pub use sparse::SparseData;
+
+use crate::distance::{Metric, SparseRow};
+
+/// Dense row-major f32 dataset.
+#[derive(Clone, Debug)]
+pub struct DenseData {
+    pub n: usize,
+    pub dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl DenseData {
+    pub fn new(n: usize, dim: usize, data: Vec<f32>) -> Self {
+        assert_eq!(n * dim, data.len(), "dense data length mismatch");
+        DenseData { n, dim, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+/// A dataset: points living in a common space with per-row access.
+///
+/// Both storage layouts serve every metric; the engines pick the fastest
+/// path (sparse merge-walks vs dense vectorized sweeps) per representation.
+#[derive(Clone, Debug)]
+pub enum Data {
+    Dense(DenseData),
+    Sparse(SparseData),
+}
+
+impl Data {
+    pub fn n(&self) -> usize {
+        match self {
+            Data::Dense(d) => d.n,
+            Data::Sparse(s) => s.n,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Data::Dense(d) => d.dim,
+            Data::Sparse(s) => s.dim,
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Data::Sparse(_))
+    }
+
+    /// Euclidean norms of every row (precomputed once for cosine).
+    pub fn norms(&self) -> Vec<f32> {
+        match self {
+            Data::Dense(d) => (0..d.n).map(|i| crate::distance::dense::norm(d.row(i))).collect(),
+            Data::Sparse(s) => (0..s.n).map(|i| s.row(i).norm()).collect(),
+        }
+    }
+
+    /// Distance between rows `i` and `j` (cosine uses `norms` if given).
+    #[inline]
+    pub fn distance(&self, metric: Metric, i: usize, j: usize, norms: Option<&[f32]>) -> f32 {
+        let (ni, nj) = match norms {
+            Some(ns) => (ns[i], ns[j]),
+            None => (f32::NAN, f32::NAN),
+        };
+        match self {
+            Data::Dense(d) => metric.dense(d.row(i), d.row(j), ni, nj),
+            Data::Sparse(s) => metric.sparse(s.row(i), s.row(j), ni, nj),
+        }
+    }
+
+    /// Copy row `i` into `out` as a dense vector (gather for the PJRT path).
+    pub fn densify_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim());
+        match self {
+            Data::Dense(d) => out.copy_from_slice(d.row(i)),
+            Data::Sparse(s) => {
+                out.fill(0.0);
+                let r: SparseRow<'_> = s.row(i);
+                for (&c, &v) in r.indices.iter().zip(r.values) {
+                    out[c as usize] = v;
+                }
+            }
+        }
+    }
+
+    /// Materialize the whole dataset densely (small datasets / tests only).
+    pub fn to_dense(&self) -> DenseData {
+        match self {
+            Data::Dense(d) => d.clone(),
+            Data::Sparse(s) => {
+                let mut data = vec![0f32; s.n * s.dim];
+                for i in 0..s.n {
+                    let r = s.row(i);
+                    let row = &mut data[i * s.dim..(i + 1) * s.dim];
+                    for (&c, &v) in r.indices.iter().zip(r.values) {
+                        row[c as usize] = v;
+                    }
+                }
+                DenseData::new(s.n, s.dim, data)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_dense() -> Data {
+        Data::Dense(DenseData::new(3, 2, vec![0.0, 0.0, 3.0, 4.0, 1.0, 1.0]))
+    }
+
+    #[test]
+    fn dense_rows_and_distance() {
+        let d = toy_dense();
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.dim(), 2);
+        assert_eq!(d.distance(Metric::L2, 0, 1, None), 5.0);
+        assert_eq!(d.distance(Metric::L1, 0, 2, None), 2.0);
+    }
+
+    #[test]
+    fn norms_match_rows() {
+        let d = toy_dense();
+        let ns = d.norms();
+        assert_eq!(ns[1], 5.0);
+        // cosine with precomputed norms == on-the-fly
+        let with = d.distance(Metric::Cosine, 1, 2, Some(&ns));
+        let without = d.distance(Metric::Cosine, 1, 2, None);
+        assert!((with - without).abs() < 1e-7);
+    }
+
+    #[test]
+    fn sparse_dense_distance_agree() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seeded(30);
+        let s = synth::netflix::generate(&synth::SynthConfig {
+            n: 40,
+            dim: 100,
+            seed: 5,
+            ..Default::default()
+        });
+        let sp = match &s {
+            Data::Sparse(sp) => sp.clone(),
+            _ => panic!("netflix generator must be sparse"),
+        };
+        let dense = Data::Dense(s.to_dense());
+        let norms_s = s.norms();
+        let norms_d = dense.norms();
+        for _ in 0..50 {
+            let i = rng.below(40);
+            let j = rng.below(40);
+            for m in Metric::ALL {
+                let a = s.distance(m, i, j, Some(&norms_s));
+                let b = dense.distance(m, i, j, Some(&norms_d));
+                assert!((a - b).abs() < 1e-4, "{m} mismatch at ({i},{j}): {a} vs {b}");
+            }
+        }
+        assert_eq!(sp.n, 40);
+    }
+
+    #[test]
+    fn densify_row_roundtrip() {
+        let s = synth::rnaseq::generate(&synth::SynthConfig {
+            n: 10,
+            dim: 50,
+            seed: 1,
+            ..Default::default()
+        });
+        let dense = s.to_dense();
+        let mut buf = vec![0f32; 50];
+        for i in 0..10 {
+            s.densify_row_into(i, &mut buf);
+            assert_eq!(buf, dense.row(i), "row {i}");
+        }
+    }
+}

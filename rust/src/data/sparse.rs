@@ -1,0 +1,113 @@
+//! CSR sparse matrix: the storage for the Netflix-like (0.2% dense) and
+//! large RNA-Seq-like workloads.
+
+use crate::distance::SparseRow;
+
+#[derive(Clone, Debug)]
+pub struct SparseData {
+    pub n: usize,
+    pub dim: usize,
+    /// `indptr[i]..indptr[i+1]` delimits row i; len n+1.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseData {
+    /// Validating constructor: indptr monotone, indices in range + sorted.
+    pub fn new(
+        n: usize,
+        dim: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(indptr.len() == n + 1, "indptr len {} != n+1", indptr.len());
+        anyhow::ensure!(indptr[0] == 0, "indptr[0] != 0");
+        anyhow::ensure!(*indptr.last().unwrap() == indices.len(), "indptr tail mismatch");
+        anyhow::ensure!(indices.len() == values.len(), "indices/values mismatch");
+        for i in 0..n {
+            anyhow::ensure!(indptr[i] <= indptr[i + 1], "indptr not monotone at {i}");
+            let row = &indices[indptr[i]..indptr[i + 1]];
+            for w in row.windows(2) {
+                anyhow::ensure!(w[0] < w[1], "row {i} indices not strictly sorted");
+            }
+            if let Some(&last) = row.last() {
+                anyhow::ensure!((last as usize) < dim, "row {i} index {last} >= dim {dim}");
+            }
+        }
+        Ok(SparseData { n, dim, indptr, indices, values })
+    }
+
+    /// Build from per-row (index, value) lists (sorts each row).
+    pub fn from_rows(n: usize, dim: usize, rows: Vec<Vec<(u32, f32)>>) -> Self {
+        assert_eq!(rows.len(), n);
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for mut row in rows {
+            row.sort_unstable_by_key(|&(i, _)| i);
+            row.dedup_by_key(|&mut (i, _)| i);
+            for (i, v) in row {
+                debug_assert!((i as usize) < dim);
+                indices.push(i);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        SparseData { n, dim, indptr, indices, values }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseRow<'_> {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        SparseRow { indices: &self.indices[lo..hi], values: &self.values[lo..hi] }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Fraction of nonzero entries.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n as f64 * self.dim as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rows_sorts_and_indexes() {
+        let s = SparseData::from_rows(
+            2,
+            10,
+            vec![vec![(5, 1.0), (2, 2.0)], vec![]],
+        );
+        assert_eq!(s.row(0).indices, &[2, 5]);
+        assert_eq!(s.row(0).values, &[2.0, 1.0]);
+        assert_eq!(s.row(1).nnz(), 0);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn validation_catches_corruption() {
+        // bad indptr tail
+        assert!(SparseData::new(1, 4, vec![0, 2], vec![1], vec![1.0]).is_err());
+        // unsorted row
+        assert!(SparseData::new(1, 4, vec![0, 2], vec![3, 1], vec![1.0, 1.0]).is_err());
+        // index out of range
+        assert!(SparseData::new(1, 4, vec![0, 1], vec![9], vec![1.0]).is_err());
+        // good
+        assert!(SparseData::new(1, 4, vec![0, 2], vec![1, 3], vec![1.0, 1.0]).is_ok());
+    }
+
+    #[test]
+    fn density() {
+        let s = SparseData::from_rows(2, 10, vec![vec![(0, 1.0)], vec![(1, 1.0)]]);
+        assert!((s.density() - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,74 @@
+//! Gaussian mixture toy data — the Fig. 2 intuition dataset and the
+//! planted-medoid workload the integration tests use.
+//!
+//! A dominant isotropic cluster at the origin (its center-most point is the
+//! medoid with overwhelming probability) plus `outlier_frac` periphery
+//! points at large radius: exactly the "reference point on the periphery"
+//! situation the paper's Fig. 2a draws.
+
+use crate::data::{Data, DenseData};
+use crate::util::rng::Rng;
+
+use super::SynthConfig;
+
+pub fn generate(cfg: &SynthConfig) -> Data {
+    let mut rng = Rng::seeded(cfg.seed ^ 0x6A05_51AA);
+    let n = cfg.n;
+    let dim = cfg.dim;
+    let mut data = vec![0f32; n * dim];
+
+    // point 0 is planted exactly at the origin -> it is the medoid of the
+    // core cluster (and of the dataset, for small outlier_frac)
+    for i in 1..n {
+        let row = &mut data[i * dim..(i + 1) * dim];
+        if rng.chance(cfg.outlier_frac) {
+            // periphery: radius ~ 8x core scale in a random direction
+            let scale = 6.0 + rng.power_law(2.0).min(10.0);
+            for v in row.iter_mut() {
+                *v = (rng.gaussian() * scale) as f32;
+            }
+        } else {
+            for v in row.iter_mut() {
+                *v = rng.gaussian() as f32;
+            }
+        }
+    }
+    Data::Dense(DenseData::new(n, dim, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    #[test]
+    fn origin_point_is_central() {
+        let cfg = SynthConfig { n: 300, dim: 16, seed: 8, outlier_frac: 0.05, ..Default::default() };
+        let d = generate(&cfg);
+        // exact θ_i sweep; arm 0 must be the argmin (planted medoid)
+        let n = d.n();
+        let theta = |i: usize| -> f64 {
+            (0..n).map(|j| d.distance(Metric::L2, i, j, None) as f64).sum::<f64>() / n as f64
+        };
+        let t0 = theta(0);
+        let mut best = (0, t0);
+        for i in 1..n {
+            let t = theta(i);
+            if t < best.1 {
+                best = (i, t);
+            }
+        }
+        assert_eq!(best.0, 0, "planted medoid lost: θ_0={t0:.4}, θ_{}={:.4}", best.0, best.1);
+    }
+
+    #[test]
+    fn has_periphery() {
+        let cfg = SynthConfig { n: 500, dim: 8, seed: 9, outlier_frac: 0.1, ..Default::default() };
+        let d = generate(&cfg);
+        let norms: Vec<f32> = (0..d.n())
+            .map(|i| d.distance(Metric::L2, 0, i, None))
+            .collect();
+        let far = norms.iter().filter(|&&r| r > 10.0).count();
+        assert!(far > 10, "expected periphery points, got {far}");
+    }
+}

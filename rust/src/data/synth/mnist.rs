@@ -1,0 +1,125 @@
+//! Synthetic MNIST-zeros: dense 28×28-style ring images under ℓ₂.
+//!
+//! The paper's smallest dataset (6,424 images of handwritten '0', d = 784)
+//! is the regime where exact computation is cheap and corrSH's advantage
+//! narrows (Table 1 row 5: 47.9 pulls/arm). The relevant geometry: one
+//! visual cluster (all zeros), smooth variation (stroke width, ellipse
+//! shape, translation), dense vectors in [0,1].
+//!
+//! Construction: each image is an elliptical annulus with per-image center
+//! jitter, radii, rotation, stroke width and intensity, rendered with a
+//! soft (gaussian-profile) edge + pixel noise. `dim` must be a perfect
+//! square (784 = 28² by default) — other values render on the nearest
+//! square grid and pad/truncate.
+
+use crate::data::{Data, DenseData};
+use crate::util::rng::Rng;
+
+use super::SynthConfig;
+
+pub fn generate(cfg: &SynthConfig) -> Data {
+    let mut rng = Rng::seeded(cfg.seed ^ 0x3141_5926);
+    let n = cfg.n;
+    let dim = cfg.dim;
+    let side = (dim as f64).sqrt().round() as usize;
+    let side = side.max(4);
+
+    let mut data = vec![0f32; n * dim];
+    for img in 0..n {
+        // per-image shape parameters
+        let cx = side as f64 / 2.0 + rng.gaussian() * side as f64 * 0.04;
+        let cy = side as f64 / 2.0 + rng.gaussian() * side as f64 * 0.04;
+        let r0 = side as f64 * (0.28 + rng.f64() * 0.08); // mean radius
+        let ecc = 0.75 + rng.f64() * 0.5; // x/y radius ratio
+        let theta = rng.gaussian() * 0.3; // rotation
+        let stroke = side as f64 * (0.06 + rng.f64() * 0.05);
+        let intensity = 0.75 + rng.f64() * 0.25;
+        let outlier = rng.chance(cfg.outlier_frac);
+        let noise = if outlier { 0.18 } else { 0.05 };
+
+        let (sin_t, cos_t) = theta.sin_cos();
+        let row = &mut data[img * dim..(img + 1) * dim];
+        for py in 0..side {
+            for px in 0..side {
+                let idx = py * side + px;
+                if idx >= dim {
+                    continue;
+                }
+                // rotate into the ellipse frame
+                let dx = px as f64 + 0.5 - cx;
+                let dy = py as f64 + 0.5 - cy;
+                let ex = (dx * cos_t + dy * sin_t) / ecc;
+                let ey = -dx * sin_t + dy * cos_t;
+                let r = (ex * ex + ey * ey).sqrt();
+                // soft annulus: gaussian profile around radius r0
+                let z = (r - r0) / stroke;
+                let v = intensity * (-0.5 * z * z).exp();
+                let v = v + rng.gaussian() * noise;
+                row[idx] = v.clamp(0.0, 1.0) as f32;
+            }
+        }
+    }
+    Data::Dense(DenseData::new(n, dim, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    fn gen(n: usize) -> Data {
+        generate(&SynthConfig { n, dim: 784, seed: 6, ..Default::default() })
+    }
+
+    #[test]
+    fn pixels_in_unit_interval() {
+        let d = gen(50);
+        if let Data::Dense(dd) = &d {
+            assert!(dd.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        } else {
+            panic!("mnist must be dense");
+        }
+    }
+
+    #[test]
+    fn images_have_ring_mass() {
+        // ring images: substantial nonzero mass, but far from full
+        let d = gen(20);
+        if let Data::Dense(dd) = &d {
+            for i in 0..dd.n {
+                let mass: f32 = dd.row(i).iter().sum();
+                let lit = dd.row(i).iter().filter(|&&v| v > 0.3).count();
+                assert!(mass > 10.0, "image {i} empty (mass {mass})");
+                assert!(
+                    lit > 30 && lit < 784 * 3 / 4,
+                    "image {i} not ring-like ({lit} bright pixels)"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_cluster_geometry() {
+        // all zeros look alike: max pairwise l2 well below the d=784 diameter
+        let d = gen(60);
+        let mut rng = crate::util::rng::Rng::seeded(3);
+        let mut vals = Vec::new();
+        for _ in 0..300 {
+            let (i, j) = (rng.below(60), rng.below(60));
+            if i != j {
+                vals.push(d.distance(Metric::L2, i, j, None));
+            }
+        }
+        let max = vals.iter().cloned().fold(f32::MIN, f32::max);
+        let min = vals.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(max < 28.0, "zeros too spread: {max}"); // sqrt(784)=28 is all-on vs all-off
+        assert!(min > 0.0, "duplicate images");
+    }
+
+    #[test]
+    fn nonsquare_dim_still_works() {
+        let d = generate(&SynthConfig { n: 5, dim: 100, seed: 1, ..Default::default() });
+        assert_eq!(d.dim(), 100);
+        assert_eq!(d.n(), 5);
+    }
+}

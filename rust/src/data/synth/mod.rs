@@ -1,0 +1,135 @@
+//! Synthetic dataset generators standing in for the paper's evaluation data
+//! (10x RNA-Seq, Netflix-prize, MNIST zeros — see DESIGN.md §7 for the
+//! substitution rationale). Each generator is deterministic in
+//! `SynthConfig::seed` and matched to the *statistical geometry* that drives
+//! Correlated Sequential Halving: a dense core with a unique medoid, a
+//! heavy-tailed periphery, and difference-variances (ρ_i) that shrink with
+//! Δ_i.
+
+pub mod gaussian;
+pub mod mnist;
+pub mod netflix;
+pub mod rnaseq;
+
+use crate::data::Data;
+
+/// Common generator knobs. Defaults give quick-test sizes; the experiment
+/// configs scale `n`/`dim` up to the paper's shapes.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    /// Number of points (cells / users / images).
+    pub n: usize,
+    /// Ambient dimension (genes / movies / pixels).
+    pub dim: usize,
+    /// RNG seed; trials vary this 0..999 as in the paper §3.1.
+    pub seed: u64,
+    /// Number of latent clusters (where applicable).
+    pub clusters: usize,
+    /// Target density for sparse generators.
+    pub density: f64,
+    /// Fraction of periphery/outlier points.
+    pub outlier_frac: f64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n: 1_000,
+            dim: 256,
+            seed: 0,
+            clusters: 8,
+            density: 0.002,
+            outlier_frac: 0.05,
+        }
+    }
+}
+
+/// Named dataset kinds the launcher/config system exposes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    RnaSeq,
+    Netflix,
+    Mnist,
+    Gaussian,
+}
+
+impl Kind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::RnaSeq => "rnaseq",
+            Kind::Netflix => "netflix",
+            Kind::Mnist => "mnist",
+            Kind::Gaussian => "gaussian",
+        }
+    }
+
+    /// The metric the paper pairs with this dataset.
+    pub fn default_metric(&self) -> crate::distance::Metric {
+        use crate::distance::Metric;
+        match self {
+            Kind::RnaSeq => Metric::L1,
+            Kind::Netflix => Metric::Cosine,
+            Kind::Mnist => Metric::L2,
+            Kind::Gaussian => Metric::L2,
+        }
+    }
+
+    pub fn generate(&self, cfg: &SynthConfig) -> Data {
+        match self {
+            Kind::RnaSeq => rnaseq::generate(cfg),
+            Kind::Netflix => netflix::generate(cfg),
+            Kind::Mnist => mnist::generate(cfg),
+            Kind::Gaussian => gaussian::generate(cfg),
+        }
+    }
+}
+
+impl std::str::FromStr for Kind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "rnaseq" | "rna" | "rna-seq" => Ok(Kind::RnaSeq),
+            "netflix" => Ok(Kind::Netflix),
+            "mnist" | "mnist-zeros" => Ok(Kind::Mnist),
+            "gaussian" | "toy" => Ok(Kind::Gaussian),
+            other => anyhow::bail!("unknown dataset kind {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_parse() {
+        for k in [Kind::RnaSeq, Kind::Netflix, Kind::Mnist, Kind::Gaussian] {
+            assert_eq!(k.name().parse::<Kind>().unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn generators_deterministic_by_seed() {
+        let cfg = SynthConfig { n: 50, dim: 64, seed: 9, ..Default::default() };
+        for k in [Kind::RnaSeq, Kind::Netflix, Kind::Mnist, Kind::Gaussian] {
+            let a = k.generate(&cfg);
+            let b = k.generate(&cfg);
+            assert_eq!(a.n(), b.n());
+            // deep determinism: distances agree
+            for (i, j) in [(0, 1), (3, 40), (20, 7)] {
+                let m = k.default_metric();
+                assert_eq!(
+                    a.distance(m, i, j, None),
+                    b.distance(m, i, j, None),
+                    "{} not deterministic",
+                    k.name()
+                );
+            }
+            let c = k.generate(&SynthConfig { seed: 10, ..cfg.clone() });
+            let diff = a.distance(k.default_metric(), 0, 1, None)
+                - c.distance(k.default_metric(), 0, 1, None);
+            assert!(diff.abs() > 0.0 || a.n() < 2, "{} ignores seed", k.name());
+        }
+    }
+}

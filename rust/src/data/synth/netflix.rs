@@ -1,0 +1,163 @@
+//! Synthetic Netflix-prize-like ratings: very sparse CSR under cosine.
+//!
+//! The real dataset: ~480k users × ~17.8k movies, 0.21% dense, ratings 1–5.
+//! The paper subsamples users (20k / 100k) and clusters them with cosine
+//! distance. The geometry corrSH sees: distances driven by *support overlap*
+//! (popularity power-law means most co-ratings happen on blockbusters) plus
+//! a latent taste alignment — so ρ_i decays slower than on RNA-Seq and
+//! corrSH needs ~15–19 pulls/arm instead of ~2 (Table 1 rows 3–4).
+//!
+//! Construction: movie popularity ~ Zipf(α); user activity ~ power law
+//! around `density · dim`; user/movie latent factors in R^f; rating =
+//! clamp(round(3 + u·v + noise), 1, 5); support drawn popularity-weighted
+//! without replacement.
+
+use crate::data::{Data, SparseData};
+use crate::util::rng::Rng;
+
+use super::SynthConfig;
+
+pub fn generate(cfg: &SynthConfig) -> Data {
+    let mut rng = Rng::seeded(cfg.seed ^ 0x0E7F_11F5);
+    let n = cfg.n;
+    let dim = cfg.dim;
+    let f = 8usize; // latent factor dimension
+
+    // movie popularity weights: Zipf-ish over a shuffled order
+    let mut pop: Vec<f64> = (1..=dim).map(|r| 1.0 / (r as f64).powf(0.9)).collect();
+    rng.shuffle(&mut pop);
+    // cumulative table for weighted sampling
+    let mut cum: Vec<f64> = Vec::with_capacity(dim);
+    let mut acc = 0.0;
+    for &w in &pop {
+        acc += w;
+        cum.push(acc);
+    }
+    let total_w = acc;
+
+    // latent factors; a handful of taste archetypes + user jitter keeps a
+    // dense core of "mainstream" users (unique medoid)
+    let k = cfg.clusters.max(1);
+    let archetypes: Vec<Vec<f64>> =
+        (0..k).map(|_| (0..f).map(|_| rng.gaussian() * 0.5).collect()).collect();
+    let movie_f: Vec<Vec<f64>> =
+        (0..dim).map(|_| (0..f).map(|_| rng.gaussian() * 0.5).collect()).collect();
+
+    let target_nnz = (cfg.density.max(1e-5) * dim as f64).max(2.0);
+
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        // mainstream cluster is big (core), others smaller
+        let a = if rng.chance(0.5) { 0 } else { rng.below(k) };
+        let u: Vec<f64> = archetypes[a]
+            .iter()
+            .map(|&x| x + rng.gaussian() * 0.3)
+            .collect();
+
+        // activity: power-law multiple of the target
+        let mult = rng.power_law(1.8).min(20.0);
+        let nnz = ((target_nnz * mult) as usize).clamp(1, dim);
+
+        // popularity-weighted support without replacement (rejection)
+        let mut seen = std::collections::HashSet::with_capacity(nnz * 2);
+        let mut support = Vec::with_capacity(nnz);
+        let mut guard = 0;
+        while support.len() < nnz && guard < nnz * 50 {
+            guard += 1;
+            let x = rng.f64() * total_w;
+            let m = cum.partition_point(|&c| c < x).min(dim - 1);
+            if seen.insert(m) {
+                support.push(m);
+            }
+        }
+        // fill any shortfall uniformly
+        while support.len() < nnz {
+            let m = rng.below(dim);
+            if seen.insert(m) {
+                support.push(m);
+            }
+        }
+        support.sort_unstable();
+
+        let row: Vec<(u32, f32)> = support
+            .into_iter()
+            .map(|m| {
+                let affinity: f64 =
+                    u.iter().zip(&movie_f[m]).map(|(a, b)| a * b).sum::<f64>();
+                let r = (3.0 + affinity * 2.0 + rng.gaussian() * 0.7).round();
+                (m as u32, r.clamp(1.0, 5.0) as f32)
+            })
+            .collect();
+        rows.push(row);
+    }
+
+    Data::Sparse(SparseData::from_rows(n, dim, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    fn gen(n: usize, dim: usize) -> Data {
+        generate(&SynthConfig { n, dim, seed: 4, density: 0.01, ..Default::default() })
+    }
+
+    #[test]
+    fn ratings_in_1_to_5() {
+        let d = gen(100, 500);
+        if let Data::Sparse(s) = &d {
+            assert!(s.values.iter().all(|&v| (1.0..=5.0).contains(&v)));
+        } else {
+            panic!("netflix must be sparse");
+        }
+    }
+
+    #[test]
+    fn density_near_target() {
+        let d = gen(400, 1000);
+        if let Data::Sparse(s) = &d {
+            // power-law activity inflates the mean; just require the right
+            // order of magnitude and actual sparsity
+            assert!(s.density() > 0.003 && s.density() < 0.1, "density {}", s.density());
+        }
+    }
+
+    #[test]
+    fn popularity_skew_exists() {
+        let d = gen(300, 400);
+        if let Data::Sparse(s) = &d {
+            let mut col_counts = vec![0usize; 400];
+            for &c in &s.indices {
+                col_counts[c as usize] += 1;
+            }
+            col_counts.sort_unstable_by(|a, b| b.cmp(a));
+            let top10: usize = col_counts[..40].iter().sum();
+            let total: usize = col_counts.iter().sum();
+            // top 10% of movies should take a disproportionate share (>25%)
+            assert!(
+                top10 as f64 > total as f64 * 0.25,
+                "no popularity skew: top10% = {top10}/{total}"
+            );
+        }
+    }
+
+    #[test]
+    fn cosine_distances_nontrivial() {
+        let d = gen(100, 500);
+        let norms = d.norms();
+        let mut rng = crate::util::rng::Rng::seeded(2);
+        let mut vals = Vec::new();
+        for _ in 0..200 {
+            let (i, j) = (rng.below(100), rng.below(100));
+            if i != j {
+                vals.push(d.distance(Metric::Cosine, i, j, Some(&norms)));
+            }
+        }
+        let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+        assert!((0.05..1.6).contains(&mean), "degenerate cosine geometry {mean}");
+        let spread = vals.iter().cloned().fold(f32::MIN, f32::max)
+            - vals.iter().cloned().fold(f32::MAX, f32::min);
+        assert!(spread > 0.05, "no spread {spread}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Synthetic single-cell RNA-Seq: sparse probability vectors under ℓ₁.
+//!
+//! Real scRNA-Seq expression profiles (the 10x mouse-brain dataset used in
+//! the paper) are normalized per cell to a probability distribution over
+//! ~28k genes, are ~90% zero, and cluster by cell type with a heavy-tailed
+//! periphery of stressed/doublet cells. What corrSH cares about is the
+//! resulting geometry of θ_i (a dense core → unique medoid, small Δ for many
+//! arms) and of ρ_i (differences concentrate because reference-point
+//! "remoteness" is shared across arms — the β_j confounder of Appendix B).
+//!
+//! Construction: K cluster centers, each a sparse log-normal expression
+//! profile over a cluster-specific subset of "expressed" genes (plus a
+//! shared housekeeping block so distances are not trivially bimodal); a cell
+//! = multiplicative log-normal jitter of its center, re-normalized to sum 1;
+//! `outlier_frac` of cells mix two random centers (doublets) or get heavy
+//! extra jitter (stress), forming the periphery Fig. 2 depicts.
+
+use crate::data::{Data, SparseData};
+use crate::util::rng::Rng;
+
+use super::SynthConfig;
+
+pub fn generate(cfg: &SynthConfig) -> Data {
+    let mut rng = Rng::seeded(cfg.seed ^ 0x5EED_51CE);
+    let n = cfg.n;
+    let dim = cfg.dim;
+    let k = cfg.clusters.max(1);
+
+    // per-cluster expressed-gene support: housekeeping block (first 10%)
+    // + cluster-specific block (~20% of the remainder)
+    let housekeeping = (dim / 10).max(1);
+    let specific = ((dim - housekeeping) / 5).max(1);
+
+    let mut center_support: Vec<Vec<u32>> = Vec::with_capacity(k);
+    let mut center_logexpr: Vec<Vec<f32>> = Vec::with_capacity(k);
+    for _ in 0..k {
+        let mut support: Vec<u32> = (0..housekeeping as u32).collect();
+        let extra = rng.sample_without_replacement(dim - housekeeping, specific);
+        support.extend(extra.into_iter().map(|g| (g + housekeeping) as u32));
+        support.sort_unstable();
+        // log-normal expression level per expressed gene
+        let logexpr: Vec<f32> =
+            (0..support.len()).map(|_| (rng.gaussian() * 1.2) as f32).collect();
+        center_support.push(support);
+        center_logexpr.push(logexpr);
+    }
+
+    // cluster sizes: one dominant cluster (the medoid's neighbourhood) so the
+    // dataset has a dense core, rest geometric-ish
+    let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = if rng.chance(0.45) { 0 } else { rng.below(k) };
+        let outlier = rng.chance(cfg.outlier_frac);
+
+        let (support, logexpr): (Vec<u32>, Vec<f32>) = if outlier && rng.chance(0.5) && k > 1 {
+            // doublet: union of two cluster profiles at half weight
+            let c2 = (c + 1 + rng.below(k - 1)) % k;
+            let mut merged: Vec<(u32, f32)> = Vec::new();
+            for (s, l) in [(c, 0.0f32), (c2, 0.0f32)] {
+                let _ = l;
+                for (&g, &e) in center_support[s].iter().zip(&center_logexpr[s]) {
+                    merged.push((g, e - 0.7));
+                }
+            }
+            merged.sort_unstable_by_key(|&(g, _)| g);
+            merged.dedup_by(|a, b| {
+                if a.0 == b.0 {
+                    b.1 = (a.1.exp() + b.1.exp()).ln();
+                    true
+                } else {
+                    false
+                }
+            });
+            merged.into_iter().unzip()
+        } else {
+            (center_support[c].clone(), center_logexpr[c].clone())
+        };
+
+        // per-cell multiplicative jitter; outliers get 3x the noise
+        let noise = if outlier { 1.8 } else { 0.6 };
+        let mut vals: Vec<f32> = logexpr
+            .iter()
+            .map(|&le| (le as f64 + rng.gaussian() * noise).exp() as f32)
+            .collect();
+        // drop-outs: zero a random ~30% of expressed genes (scRNA capture)
+        for v in vals.iter_mut() {
+            if rng.chance(0.3) {
+                *v = 0.0;
+            }
+        }
+        // normalize to a probability vector (paper: ℓ₁ on normalized counts)
+        let total: f32 = vals.iter().sum();
+        let row: Vec<(u32, f32)> = if total > 0.0 {
+            support
+                .iter()
+                .zip(&vals)
+                .filter(|(_, &v)| v > 0.0)
+                .map(|(&g, &v)| (g, v / total))
+                .collect()
+        } else {
+            vec![(support[0], 1.0)]
+        };
+        rows.push(row);
+    }
+
+    Data::Sparse(SparseData::from_rows(n, dim, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    fn small() -> Data {
+        generate(&SynthConfig { n: 200, dim: 256, seed: 3, ..Default::default() })
+    }
+
+    #[test]
+    fn rows_are_probability_vectors() {
+        let d = small();
+        let s = match &d {
+            Data::Sparse(s) => s,
+            _ => panic!("rnaseq must be sparse"),
+        };
+        for i in 0..s.n {
+            let sum: f32 = s.row(i).values.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "row {i} sums to {sum}");
+            assert!(s.row(i).values.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn l1_distances_in_range() {
+        // ℓ₁ between probability vectors is in [0, 2]
+        let d = small();
+        let mut rng = crate::util::rng::Rng::seeded(0);
+        for _ in 0..100 {
+            let (i, j) = (rng.below(200), rng.below(200));
+            let dist = d.distance(Metric::L1, i, j, None);
+            assert!((0.0..=2.0 + 1e-5).contains(&dist), "d({i},{j}) = {dist}");
+        }
+    }
+
+    #[test]
+    fn has_cluster_structure() {
+        // within-core distances must be smaller than cross-cluster on average
+        let d = small();
+        let mut rng = crate::util::rng::Rng::seeded(1);
+        let mut all = Vec::new();
+        for _ in 0..500 {
+            let (i, j) = (rng.below(200), rng.below(200));
+            if i != j {
+                all.push(d.distance(Metric::L1, i, j, None));
+            }
+        }
+        let mean = all.iter().sum::<f32>() / all.len() as f32;
+        let min = all.iter().cloned().fold(f32::MAX, f32::min);
+        // structure: some pairs much closer than the average pair
+        assert!(min < 0.5 * mean, "no cluster structure: min {min}, mean {mean}");
+    }
+
+    #[test]
+    fn is_actually_sparse() {
+        let d = small();
+        if let Data::Sparse(s) = &d {
+            assert!(s.density() < 0.35, "density {}", s.density());
+        }
+    }
+}

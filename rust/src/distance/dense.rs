@@ -1,0 +1,157 @@
+//! Dense-row distance kernels.
+//!
+//! Written as 4-lane unrolled loops over `f32` slices: LLVM auto-vectorizes
+//! these to AVX2 (verified in the §Perf pass via `perf annotate` — see
+//! EXPERIMENTS.md). Keeping four independent accumulators breaks the
+//! loop-carried dependence so the FMA ports stay busy.
+
+/// Σ |a_k − b_k|
+#[inline]
+pub fn l1_dense(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += (a[i] - b[i]).abs();
+        acc[1] += (a[i + 1] - b[i + 1]).abs();
+        acc[2] += (a[i + 2] - b[i + 2]).abs();
+        acc[3] += (a[i + 3] - b[i + 3]).abs();
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..a.len() {
+        s += (a[i] - b[i]).abs();
+    }
+    s
+}
+
+/// Σ (a_k − b_k)²  (no sqrt — callers that need the metric take sqrt once)
+#[inline]
+pub fn l2sq_dense(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        acc[0] += d0 * d0;
+        acc[1] += d1 * d1;
+        acc[2] += d2 * d2;
+        acc[3] += d3 * d3;
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// √Σ (a_k − b_k)²
+#[inline]
+pub fn l2_dense(a: &[f32], b: &[f32]) -> f32 {
+    l2sq_dense(a, b).sqrt()
+}
+
+/// Σ a_k b_k
+#[inline]
+pub fn dot_dense(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm of a row.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot_dense(a, a).sqrt()
+}
+
+/// Cosine distance `1 − <a,b>/(‖a‖‖b‖)` with precomputed norms.
+/// Zero rows (norm 0) get distance 1 to everything — same convention as the
+/// L1 Pallas kernel and python oracle.
+#[inline]
+pub fn cosine_dense(a: &[f32], b: &[f32], na: f32, nb: f32) -> f32 {
+    let denom = na * nb;
+    if denom <= 1e-24 {
+        return 1.0;
+    }
+    1.0 - dot_dense(a, b) / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_l1(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+    fn naive_l2(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+    }
+    fn naive_dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn hand_values() {
+        assert_eq!(l1_dense(&[0.0, 0.0], &[1.0, 1.0]), 2.0);
+        assert_eq!(l2_dense(&[0.0, 0.0], &[3.0, 4.0]), 5.0);
+        assert!((cosine_dense(&[1.0, 0.0], &[0.0, 1.0], 1.0, 1.0) - 1.0).abs() < 1e-7);
+        assert!(cosine_dense(&[1.0, 0.0], &[2.0, 0.0], 1.0, 2.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn matches_naive_over_random_lengths() {
+        let mut rng = Rng::seeded(10);
+        for _ in 0..200 {
+            let len = rng.below(130); // covers remainder-loop paths incl. 0
+            let a: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let scale = naive_l1(&a, &b).max(1.0);
+            assert!((l1_dense(&a, &b) - naive_l1(&a, &b)).abs() / scale < 1e-5);
+            assert!((l2_dense(&a, &b) - naive_l2(&a, &b)).abs() < 1e-4);
+            assert!((dot_dense(&a, &b) - naive_dot(&a, &b)).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn zero_row_cosine_is_one() {
+        let z = [0.0f32; 8];
+        let a = [1.0f32; 8];
+        assert_eq!(cosine_dense(&z, &a, 0.0, norm(&a)), 1.0);
+    }
+
+    #[test]
+    fn metric_axioms_dense() {
+        let mut rng = Rng::seeded(11);
+        for _ in 0..50 {
+            let d = 32;
+            let a: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let b: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            let c: Vec<f32> = (0..d).map(|_| rng.gaussian() as f32).collect();
+            // identity + symmetry
+            assert!(l1_dense(&a, &a) < 1e-6);
+            assert!((l1_dense(&a, &b) - l1_dense(&b, &a)).abs() < 1e-5);
+            // triangle inequality (l1, l2)
+            assert!(l1_dense(&a, &c) <= l1_dense(&a, &b) + l1_dense(&b, &c) + 1e-4);
+            assert!(l2_dense(&a, &c) <= l2_dense(&a, &b) + l2_dense(&b, &c) + 1e-4);
+        }
+    }
+}

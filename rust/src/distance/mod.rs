@@ -1,0 +1,111 @@
+//! Distance metrics over dense rows and sparse (CSR) rows.
+//!
+//! These are the scalar building blocks; the batched hot paths live in
+//! [`crate::engine`] (native SIMD-friendly sweeps) and in the L1 Pallas
+//! kernels (PJRT path). The paper's three evaluation metrics are implemented
+//! exactly: ℓ₁ (RNA-Seq), cosine (Netflix), ℓ₂ (MNIST).
+
+use std::fmt;
+use std::str::FromStr;
+
+pub mod dense;
+pub mod sparse;
+
+pub use dense::{cosine_dense, l1_dense, l2_dense};
+pub use sparse::{cosine_sparse, l1_sparse, l2_sparse, SparseRow};
+
+/// Distance metric. `Display`/`FromStr` use the python-layer names
+/// (`l1`, `l2`, `cosine`) so config files, artifact names and CLI agree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Metric {
+    L1,
+    L2,
+    Cosine,
+}
+
+impl Metric {
+    pub const ALL: [Metric; 3] = [Metric::L1, Metric::L2, Metric::Cosine];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Metric::L1 => "l1",
+            Metric::L2 => "l2",
+            Metric::Cosine => "cosine",
+        }
+    }
+
+    /// Dense distance between two equal-length rows.
+    ///
+    /// For cosine, `ni`/`nj` are the precomputed euclidean norms of the rows
+    /// (pass [`f32::NAN`] to compute on the fly).
+    #[inline]
+    pub fn dense(&self, a: &[f32], b: &[f32], ni: f32, nj: f32) -> f32 {
+        match self {
+            Metric::L1 => l1_dense(a, b),
+            Metric::L2 => l2_dense(a, b),
+            Metric::Cosine => {
+                let ni = if ni.is_nan() { dense::norm(a) } else { ni };
+                let nj = if nj.is_nan() { dense::norm(b) } else { nj };
+                cosine_dense(a, b, ni, nj)
+            }
+        }
+    }
+
+    /// Sparse distance between two CSR rows (see [`SparseRow`]).
+    /// As with [`Metric::dense`], pass [`f32::NAN`] norms to compute on the fly.
+    #[inline]
+    pub fn sparse(&self, a: SparseRow<'_>, b: SparseRow<'_>, ni: f32, nj: f32) -> f32 {
+        match self {
+            Metric::L1 => l1_sparse(a, b),
+            Metric::L2 => l2_sparse(a, b),
+            Metric::Cosine => {
+                let ni = if ni.is_nan() { a.norm() } else { ni };
+                let nj = if nj.is_nan() { b.norm() } else { nj };
+                cosine_sparse(a, b, ni, nj)
+            }
+        }
+    }
+}
+
+impl fmt::Display for Metric {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Metric {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "l1" | "manhattan" => Ok(Metric::L1),
+            "l2" | "euclidean" => Ok(Metric::L2),
+            "cosine" | "cos" => Ok(Metric::Cosine),
+            other => anyhow::bail!("unknown metric {other:?} (want l1|l2|cosine)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        for m in Metric::ALL {
+            assert_eq!(m.name().parse::<Metric>().unwrap(), m);
+        }
+        assert_eq!("euclidean".parse::<Metric>().unwrap(), Metric::L2);
+        assert!("chebyshev".parse::<Metric>().is_err());
+    }
+
+    #[test]
+    fn dense_dispatch_matches_direct() {
+        let a = [1.0f32, -2.0, 3.0];
+        let b = [0.5f32, 1.0, -1.0];
+        assert_eq!(Metric::L1.dense(&a, &b, f32::NAN, f32::NAN), l1_dense(&a, &b));
+        assert_eq!(Metric::L2.dense(&a, &b, f32::NAN, f32::NAN), l2_dense(&a, &b));
+        let c_direct = cosine_dense(&a, &b, dense::norm(&a), dense::norm(&b));
+        assert_eq!(Metric::Cosine.dense(&a, &b, f32::NAN, f32::NAN), c_direct);
+    }
+}

@@ -1,0 +1,160 @@
+//! Pull engines: the "arm pull" abstraction of the bandit reduction.
+//!
+//! A pull is one distance computation `d(x_i, x_j)` — the unit the paper
+//! counts on its x-axes. The bandit algorithms only see [`PullEngine`]; the
+//! concrete engines are:
+//!
+//! * [`NativeEngine`] — vectorized CPU sweeps over the dataset (dense or
+//!   CSR), thread-parallel over arms. The wall-clock workhorse and the
+//!   correctness oracle for the PJRT path.
+//! * [`crate::engine::pjrt::PjrtEngine`] — executes the AOT-compiled
+//!   L1/L2 artifacts through the PJRT runtime, batching (arm×ref) tiles
+//!   into bucket-shaped jobs (see `runtime/` and `coordinator/planner`).
+//! * [`CountingEngine`] — decorator adding atomic pull accounting.
+
+pub mod native;
+pub mod pjrt;
+
+pub use native::NativeEngine;
+pub use pjrt::PjrtEngine;
+
+use crate::distance::Metric;
+use crate::metrics::Counter;
+
+/// Batched access to distances against a common dataset.
+///
+/// `pull_block` is the hot path: `out[k] = Σ_{j ∈ refs} d(x_arms[k], x_j)`.
+/// Engines may compute the pulls in any order but must include every
+/// (arm, ref) pair exactly once — the correlation property of Algorithm 1
+/// comes from the *caller* passing the same `refs` for all arms.
+///
+/// Deliberately NOT `Sync`: the PJRT engine wraps a single-threaded PJRT
+/// client handle (the `xla` crate's client is `Rc`-based). Parallel trial
+/// runners bound on `PullEngine + Sync` generically and use the native
+/// engine, which is `Sync`.
+pub trait PullEngine {
+    fn n(&self) -> usize;
+    fn dim(&self) -> usize;
+    fn metric(&self) -> Metric;
+
+    /// One distance computation.
+    fn pull(&self, arm: usize, reference: usize) -> f32;
+
+    /// Sum of distances from each arm to all of `refs`. Default: scalar loop.
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        assert_eq!(arms.len(), out.len());
+        for (k, &a) in arms.iter().enumerate() {
+            out[k] = refs.iter().map(|&r| self.pull(a, r)).sum();
+        }
+    }
+
+    /// Full distance rows (for the stats engine / Figs 3-4-6):
+    /// `out[k*refs.len() + j] = d(arms[k], refs[j])`.
+    fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        assert_eq!(arms.len() * refs.len(), out.len());
+        for (k, &a) in arms.iter().enumerate() {
+            for (j, &r) in refs.iter().enumerate() {
+                out[k * refs.len() + j] = self.pull(a, r);
+            }
+        }
+    }
+}
+
+/// Decorator counting every pull that flows through.
+pub struct CountingEngine<E: PullEngine> {
+    inner: E,
+    counter: Counter,
+}
+
+impl<E: PullEngine> CountingEngine<E> {
+    pub fn new(inner: E) -> Self {
+        CountingEngine { inner, counter: Counter::new() }
+    }
+
+    pub fn pulls(&self) -> u64 {
+        self.counter.get()
+    }
+
+    pub fn reset(&self) {
+        self.counter.reset();
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: PullEngine> PullEngine for CountingEngine<E> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+    fn metric(&self) -> Metric {
+        self.inner.metric()
+    }
+
+    fn pull(&self, arm: usize, reference: usize) -> f32 {
+        self.counter.add(1);
+        self.inner.pull(arm, reference)
+    }
+
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        self.counter.add((arms.len() * refs.len()) as u64);
+        self.inner.pull_block(arms, refs, out);
+    }
+
+    fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        self.counter.add((arms.len() * refs.len()) as u64);
+        self.inner.pull_matrix(arms, refs, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian, SynthConfig};
+
+    #[test]
+    fn counting_wrapper_counts_everything() {
+        let data = gaussian::generate(&SynthConfig { n: 30, dim: 8, seed: 0, ..Default::default() });
+        let e = CountingEngine::new(NativeEngine::new(data, Metric::L2));
+        assert_eq!(e.pulls(), 0);
+        let _ = e.pull(0, 1);
+        assert_eq!(e.pulls(), 1);
+        let mut out = vec![0f32; 4];
+        e.pull_block(&[0, 1, 2, 3], &[5, 6, 7], &mut out);
+        assert_eq!(e.pulls(), 1 + 12);
+        let mut m = vec![0f32; 6];
+        e.pull_matrix(&[0, 1], &[3, 4, 5], &mut m);
+        assert_eq!(e.pulls(), 1 + 12 + 6);
+        e.reset();
+        assert_eq!(e.pulls(), 0);
+    }
+
+    #[test]
+    fn default_block_matches_pulls() {
+        struct Toy;
+        impl PullEngine for Toy {
+            fn n(&self) -> usize {
+                10
+            }
+            fn dim(&self) -> usize {
+                1
+            }
+            fn metric(&self) -> Metric {
+                Metric::L1
+            }
+            fn pull(&self, a: usize, r: usize) -> f32 {
+                (a * 100 + r) as f32
+            }
+        }
+        let mut out = vec![0f32; 2];
+        Toy.pull_block(&[1, 2], &[3, 4], &mut out);
+        assert_eq!(out, vec![103.0 + 104.0, 203.0 + 204.0]);
+        let mut m = vec![0f32; 4];
+        Toy.pull_matrix(&[1, 2], &[3, 4], &mut m);
+        assert_eq!(m, vec![103.0, 104.0, 203.0, 204.0]);
+    }
+}

@@ -1,0 +1,331 @@
+//! Native CPU pull engine: vectorized dense sweeps / CSR merge-walks,
+//! thread-parallel over arms.
+//!
+//! This is both the wall-clock workhorse for the sparse workloads (which the
+//! dense PJRT artifacts don't cover) and the correctness oracle the PJRT
+//! engine is integration-tested against.
+
+use std::sync::Arc;
+
+use crate::data::{Data, SparseData};
+use crate::distance::Metric;
+use crate::engine::PullEngine;
+use crate::util::threads;
+
+pub struct NativeEngine {
+    data: Arc<Data>,
+    metric: Metric,
+    /// Precomputed row norms (cosine only).
+    norms: Option<Arc<Vec<f32>>>,
+    /// Precomputed per-row Σ|v| (sparse ℓ₁) or Σv² (sparse ℓ₂) — lets the
+    /// block hot path visit only the *arm's* support against a densified
+    /// reference row (see `sparse_block`).
+    row_reduction: Option<Arc<Vec<f32>>>,
+    threads: usize,
+}
+
+impl NativeEngine {
+    pub fn new(data: Data, metric: Metric) -> Self {
+        Self::with_threads(Arc::new(data), metric, threads::default_threads())
+    }
+
+    pub fn with_threads(data: Arc<Data>, metric: Metric, threads: usize) -> Self {
+        let norms = match metric {
+            Metric::Cosine => Some(Arc::new(data.norms())),
+            _ => None,
+        };
+        let row_reduction = match (&*data, metric) {
+            (Data::Sparse(s), Metric::L1) => Some(Arc::new(
+                (0..s.n).map(|i| s.row(i).abs_sum()).collect::<Vec<f32>>(),
+            )),
+            (Data::Sparse(s), Metric::L2) => Some(Arc::new(
+                (0..s.n)
+                    .map(|i| s.row(i).values.iter().map(|v| v * v).sum())
+                    .collect::<Vec<f32>>(),
+            )),
+            _ => None,
+        };
+        NativeEngine { data, metric, norms, row_reduction, threads }
+    }
+
+    pub fn data(&self) -> &Arc<Data> {
+        &self.data
+    }
+
+    #[inline]
+    fn dist(&self, i: usize, j: usize) -> f32 {
+        self.data
+            .distance(self.metric, i, j, self.norms.as_ref().map(|n| n.as_slice()))
+    }
+
+    /// Sparse block fast path (§Perf optimization #1, EXPERIMENTS.md):
+    /// the correlated round structure scores *every* arm against the same
+    /// reference set, so each reference row is densified once into an
+    /// O(d) scratch and each pull becomes a branchless walk over only the
+    /// arm's support — O(nnz_arm) with L1-resident random access, instead
+    /// of the O(nnz_a + nnz_b) branchy merge-walk:
+    ///
+    /// ```text
+    /// l1(a,y)  = Σ_{k∈supp(a)} (|a_k−y_k| − |y_k|) + Σ|y|
+    /// l2²(a,y) = Σ_{k∈supp(a)} ((a_k−y_k)² − y_k²) + Σy²
+    /// cos(a,y) = 1 − (Σ_{k∈supp(a)} a_k·y_k) / (‖a‖‖y‖)
+    /// ```
+    fn sparse_block(&self, s: &SparseData, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        let dim = s.dim;
+        let work = arms.len() * refs.len();
+        let threads = if work < 4096 { 1 } else { self.threads };
+        let chunk = arms.len().div_ceil(threads.max(1)).max(1);
+        let metric = self.metric;
+        let norms = self.norms.as_deref().map(|v| v.as_slice());
+        let redux = self.row_reduction.as_deref().map(|v| v.as_slice());
+
+        threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
+            let mut scratch = vec![0f32; dim];
+            let mut acc = vec![0f64; slot.len()];
+            for &j in refs {
+                let y = s.row(j);
+                for (&c, &v) in y.indices.iter().zip(y.values) {
+                    scratch[c as usize] = v;
+                }
+                match metric {
+                    Metric::L1 => {
+                        let y_abs = redux.unwrap()[j] as f64;
+                        for (k, a) in acc.iter_mut().enumerate() {
+                            let row = s.row(arms[start + k]);
+                            let mut corr = 0f32;
+                            for (&c, &av) in row.indices.iter().zip(row.values) {
+                                let yv = scratch[c as usize];
+                                corr += (av - yv).abs() - yv.abs();
+                            }
+                            *a += corr as f64 + y_abs;
+                        }
+                    }
+                    Metric::L2 => {
+                        let y_sq = redux.unwrap()[j] as f64;
+                        for (k, a) in acc.iter_mut().enumerate() {
+                            let row = s.row(arms[start + k]);
+                            let mut corr = 0f32;
+                            for (&c, &av) in row.indices.iter().zip(row.values) {
+                                let yv = scratch[c as usize];
+                                let d = av - yv;
+                                corr += d * d - yv * yv;
+                            }
+                            *a += (corr as f64 + y_sq).max(0.0).sqrt();
+                        }
+                    }
+                    Metric::Cosine => {
+                        let ny = norms.unwrap()[j];
+                        for (k, a) in acc.iter_mut().enumerate() {
+                            let arm = arms[start + k];
+                            let row = s.row(arm);
+                            let mut dot = 0f32;
+                            for (&c, &av) in row.indices.iter().zip(row.values) {
+                                dot += av * scratch[c as usize];
+                            }
+                            let denom = norms.unwrap()[arm] * ny;
+                            *a += if denom <= 1e-24 { 1.0 } else { (1.0 - dot / denom) as f64 };
+                        }
+                    }
+                }
+                // un-densify (touch only y's support)
+                for &c in y.indices {
+                    scratch[c as usize] = 0.0;
+                }
+            }
+            for (o, &a) in slot.iter_mut().zip(&acc) {
+                *o = a as f32;
+            }
+        });
+    }
+}
+
+impl PullEngine for NativeEngine {
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    #[inline]
+    fn pull(&self, arm: usize, reference: usize) -> f32 {
+        self.dist(arm, reference)
+    }
+
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        assert_eq!(arms.len(), out.len());
+        // Sparse data takes the densified-reference fast path (~12x on the
+        // RNA-Seq geometry — see EXPERIMENTS.md §Perf). Densifying a
+        // reference costs O(d), amortized over the arms that read it: only
+        // worth it when several arms share the refs (which is exactly the
+        // correlated-round shape).
+        if let Data::Sparse(s) = &*self.data {
+            if arms.len() >= 4 {
+                return self.sparse_block(s, arms, refs, out);
+            }
+        }
+        // Dense: parallel over arms, refs swept innermost so rows stay
+        // cache-resident.
+        let work = arms.len() * refs.len();
+        let threads = if work < 4096 { 1 } else { self.threads };
+        let chunk = arms.len().div_ceil(threads.max(1) * 4).max(1);
+        threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
+            for (off, o) in slot.iter_mut().enumerate() {
+                let a = arms[start + off];
+                let mut acc = 0f64; // f64 accumulator: t_r can reach n
+                for &r in refs {
+                    acc += self.dist(a, r) as f64;
+                }
+                *o = acc as f32;
+            }
+        });
+    }
+
+    fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        assert_eq!(arms.len() * refs.len(), out.len());
+        let m = refs.len();
+        // Same densified-reference trick as sparse_block, writing elements
+        // instead of accumulating (stats-engine hot path, §Perf).
+        if let (Data::Sparse(s), true) = (&*self.data, arms.len() >= 4) {
+            let dim = s.dim;
+            let metric = self.metric;
+            let norms = self.norms.as_deref().map(|v| v.as_slice());
+            let redux = self.row_reduction.as_deref().map(|v| v.as_slice());
+            let threads = if out.len() < 4096 { 1 } else { self.threads };
+            let chunk = (arms.len().div_ceil(threads.max(1)).max(1)) * m;
+            threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
+                debug_assert_eq!(start % m, 0);
+                let arm0 = start / m;
+                let n_arms = slot.len() / m;
+                let mut scratch = vec![0f32; dim];
+                for (j, &r) in refs.iter().enumerate() {
+                    let y = s.row(r);
+                    for (&c, &v) in y.indices.iter().zip(y.values) {
+                        scratch[c as usize] = v;
+                    }
+                    for k in 0..n_arms {
+                        let arm = arms[arm0 + k];
+                        let row = s.row(arm);
+                        let mut corr = 0f32;
+                        let d = match metric {
+                            Metric::L1 => {
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    let yv = scratch[c as usize];
+                                    corr += (av - yv).abs() - yv.abs();
+                                }
+                                corr + redux.unwrap()[r]
+                            }
+                            Metric::L2 => {
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    let yv = scratch[c as usize];
+                                    let dd = av - yv;
+                                    corr += dd * dd - yv * yv;
+                                }
+                                (corr + redux.unwrap()[r]).max(0.0).sqrt()
+                            }
+                            Metric::Cosine => {
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    corr += av * scratch[c as usize];
+                                }
+                                let denom = norms.unwrap()[arm] * norms.unwrap()[r];
+                                if denom <= 1e-24 {
+                                    1.0
+                                } else {
+                                    1.0 - corr / denom
+                                }
+                            }
+                        };
+                        slot[k * m + j] = d;
+                    }
+                    for &c in y.indices {
+                        scratch[c as usize] = 0.0;
+                    }
+                }
+            });
+            return;
+        }
+        let threads = if out.len() < 4096 { 1 } else { self.threads };
+        threads::parallel_chunks_mut(out, m, threads, |start, row| {
+            let a = arms[start / m];
+            for (j, o) in row.iter_mut().enumerate() {
+                *o = self.dist(a, refs[j]);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{netflix, rnaseq, SynthConfig};
+    use crate::util::rng::Rng;
+
+    fn engines() -> Vec<(&'static str, NativeEngine)> {
+        let cfg = SynthConfig { n: 120, dim: 200, seed: 2, density: 0.05, ..Default::default() };
+        vec![
+            ("rnaseq-l1", NativeEngine::new(rnaseq::generate(&cfg), Metric::L1)),
+            ("netflix-cos", NativeEngine::new(netflix::generate(&cfg), Metric::Cosine)),
+        ]
+    }
+
+    #[test]
+    fn block_equals_sum_of_pulls() {
+        let mut rng = Rng::seeded(40);
+        for (name, e) in engines() {
+            let arms: Vec<usize> = (0..e.n()).filter(|_| rng.chance(0.3)).collect();
+            let refs = rng.sample_without_replacement(e.n(), 17);
+            let mut out = vec![0f32; arms.len()];
+            e.pull_block(&arms, &refs, &mut out);
+            for (k, &a) in arms.iter().enumerate() {
+                let want: f32 = refs.iter().map(|&r| e.pull(a, r)).sum();
+                assert!(
+                    (out[k] - want).abs() < 1e-3 * want.abs().max(1.0),
+                    "{name}: arm {a}: {} vs {want}",
+                    out[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matrix_matches_pulls() {
+        for (name, e) in engines() {
+            // both the <4-arm scalar path and the densified fast path
+            for arms in [vec![0usize, 5, 11], (0..40).collect::<Vec<_>>()] {
+                let refs = [3usize, 9, 40, 77];
+                let mut m = vec![0f32; arms.len() * refs.len()];
+                e.pull_matrix(&arms, &refs, &mut m);
+                for (k, &a) in arms.iter().enumerate() {
+                    for (j, &r) in refs.iter().enumerate() {
+                        let want = e.pull(a, r);
+                        assert!(
+                            (m[k * refs.len() + j] - want).abs() < 1e-4 * want.abs().max(1.0),
+                            "{name} ({a},{r}): {} vs {want}",
+                            m[k * refs.len() + j]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let cfg = SynthConfig { n: 400, dim: 64, seed: 3, ..Default::default() };
+        let data = Arc::new(crate::data::synth::mnist::generate(&cfg));
+        let serial = NativeEngine::with_threads(data.clone(), Metric::L2, 1);
+        let parallel = NativeEngine::with_threads(data, Metric::L2, 8);
+        let arms: Vec<usize> = (0..400).collect();
+        let refs: Vec<usize> = (0..100).collect();
+        let mut a = vec![0f32; 400];
+        let mut b = vec![0f32; 400];
+        serial.pull_block(&arms, &refs, &mut a);
+        parallel.pull_block(&arms, &refs, &mut b);
+        assert_eq!(a, b);
+    }
+}

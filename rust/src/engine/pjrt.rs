@@ -1,0 +1,183 @@
+//! PJRT-backed pull engine: runs the batched pull hot path through the
+//! AOT-compiled Pallas/JAX artifacts (L1+L2), via the bucket batch planner.
+//!
+//! `pull_block` gathers the arm/ref rows into zero-padded bucket-shaped host
+//! buffers, executes `chunk_sums` per job, and accumulates the per-arm
+//! partial sums. Padded reference rows are masked inside the HLO; padded arm
+//! rows are discarded on readback (contract pinned by
+//! `python/tests/test_model.py::test_ref_padding_is_exact`).
+//!
+//! Single `pull`s (used by the stats engine, not the algorithms' hot path)
+//! take the scalar native path — a distance computation is the same
+//! quantity on either engine; integration tests assert exact agreement.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::BatchPlanner;
+use crate::data::Data;
+use crate::distance::Metric;
+use crate::engine::PullEngine;
+use crate::runtime::Runtime;
+
+pub struct PjrtEngine {
+    data: Arc<Data>,
+    metric: Metric,
+    runtime: Arc<Runtime>,
+    planner: BatchPlanner,
+    norms: Option<Arc<Vec<f32>>>,
+}
+
+impl PjrtEngine {
+    /// Fails fast if the manifest has no buckets for (metric, dim).
+    pub fn new(data: Arc<Data>, metric: Metric, runtime: Arc<Runtime>) -> Result<Self> {
+        let dim = data.dim();
+        let buckets = runtime.manifest().buckets(metric, dim);
+        let planner = BatchPlanner::new(buckets).with_context(|| {
+            format!(
+                "no artifacts for metric={metric} dim={dim}; available dims: {:?} (re-run \
+                 `make artifacts` with --dims {dim})",
+                runtime.manifest().dims(metric)
+            )
+        })?;
+        let norms = match metric {
+            Metric::Cosine => Some(Arc::new(data.norms())),
+            _ => None,
+        };
+        Ok(PjrtEngine { data, metric, runtime, planner, norms })
+    }
+
+    pub fn runtime(&self) -> &Arc<Runtime> {
+        &self.runtime
+    }
+
+    /// Pre-compile every bucket this engine can use (otherwise compilation
+    /// happens lazily on first use and pollutes latency measurements).
+    pub fn warmup(&self) -> Result<()> {
+        for (a, r) in self.runtime.manifest().buckets(self.metric, self.data.dim()) {
+            self.runtime.executable(self.metric, a, r, self.data.dim())?;
+        }
+        Ok(())
+    }
+}
+
+impl PullEngine for PjrtEngine {
+    fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    fn dim(&self) -> usize {
+        self.data.dim()
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn pull(&self, arm: usize, reference: usize) -> f32 {
+        self.data
+            .distance(self.metric, arm, reference, self.norms.as_ref().map(|n| n.as_slice()))
+    }
+
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        assert_eq!(arms.len(), out.len());
+        out.fill(0.0);
+        let dim = self.data.dim();
+        let jobs = self.planner.plan(arms.len(), refs.len());
+        // Host-side gather buffers, reused across jobs (sized to the largest
+        // bucket in the plan).
+        let max_a = jobs.iter().map(|j| j.bucket_arms).max().unwrap_or(0);
+        let max_r = jobs.iter().map(|j| j.bucket_refs).max().unwrap_or(0);
+        let mut xbuf = vec![0f32; max_a * dim];
+        let mut ybuf = vec![0f32; max_r * dim];
+        let mut mask = vec![0f32; max_r];
+
+        for job in &jobs {
+            let exe = self
+                .runtime
+                .executable(self.metric, job.bucket_arms, job.bucket_refs, dim)
+                .expect("planner produced a bucket missing from the manifest");
+
+            let xs = &mut xbuf[..job.bucket_arms * dim];
+            xs.fill(0.0);
+            for (k, &a) in arms[job.arm_start..job.arm_start + job.arm_len].iter().enumerate() {
+                self.data.densify_row_into(a, &mut xs[k * dim..(k + 1) * dim]);
+            }
+            let ys = &mut ybuf[..job.bucket_refs * dim];
+            ys.fill(0.0);
+            let ms = &mut mask[..job.bucket_refs];
+            ms.fill(0.0);
+            for (k, &r) in refs[job.ref_start..job.ref_start + job.ref_len].iter().enumerate() {
+                self.data.densify_row_into(r, &mut ys[k * dim..(k + 1) * dim]);
+                ms[k] = 1.0;
+            }
+
+            let sums = exe.run(xs, ys, ms).expect("pjrt chunk_sums execution failed");
+            for k in 0..job.arm_len {
+                out[job.arm_start + k] += sums[k];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{mnist, SynthConfig};
+    use crate::engine::NativeEngine;
+    use crate::util::rng::Rng;
+
+    fn runtime() -> Option<Arc<Runtime>> {
+        let p = std::path::Path::new("artifacts");
+        if !p.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return None;
+        }
+        Some(Arc::new(Runtime::open(p).unwrap()))
+    }
+
+    #[test]
+    fn pjrt_block_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let data = Arc::new(mnist::generate(&SynthConfig {
+            n: 300,
+            dim: 784,
+            seed: 12,
+            ..Default::default()
+        }));
+        let mut rng = Rng::seeded(0);
+        for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+            let pjrt = PjrtEngine::new(data.clone(), metric, rt.clone()).unwrap();
+            let native = NativeEngine::with_threads(data.clone(), metric, 1);
+            let arms: Vec<usize> = rng.sample_without_replacement(300, 100);
+            let refs: Vec<usize> = rng.sample_without_replacement(300, 37);
+            let mut got = vec![0f32; arms.len()];
+            let mut want = vec![0f32; arms.len()];
+            pjrt.pull_block(&arms, &refs, &mut got);
+            native.pull_block(&arms, &refs, &mut want);
+            for k in 0..arms.len() {
+                let tol = want[k].abs().max(1.0) * 2e-4;
+                assert!(
+                    (got[k] - want[k]).abs() < tol,
+                    "{metric} arm {}: pjrt {} vs native {}",
+                    arms[k],
+                    got[k],
+                    want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn missing_dim_fails_fast() {
+        let Some(rt) = runtime() else { return };
+        let data = Arc::new(mnist::generate(&SynthConfig {
+            n: 10,
+            dim: 100, // no artifacts for dim=100
+            seed: 1,
+            ..Default::default()
+        }));
+        assert!(PjrtEngine::new(data, Metric::L2, rt).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Experiment harness: regenerates every table and figure in the paper's
+//! evaluation (DESIGN.md §3 maps experiment ids E1–E10 to these functions).
+//!
+//! * [`runner`] — dataset/engine construction from [`RunConfig`], parallel
+//!   seeded trials, ground-truth resolution (exact sweep, or most-frequent
+//!   corrSH answer for the 100k configs, as in paper §3.1).
+//! * [`table1`] — Table 1: wall-clock + pulls/arm for every algorithm on
+//!   every dataset row.
+//! * [`figures`] — Figs 1 & 5 (error-prob vs budget sweeps), Fig 2 (toy
+//!   correlation demo), Fig 3 (difference histograms), Fig 4 (1/Δ vs 1/ρ +
+//!   H₂/H̃₂), Fig 6 (distance-to-medoid histograms), plus the corrSH-vs-SH
+//!   ablation (E8).
+//!
+//! Every emitter returns its rows *and* writes CSV into `results/` so the
+//! artifacts are diffable; EXPERIMENTS.md records one reference run.
+
+pub mod figures;
+pub mod runner;
+pub mod table1;
+
+pub use runner::{ground_truth, run_trials, Summary, TrialOutcome};
+
+use std::path::{Path, PathBuf};
+
+/// Results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let p = Path::new("results").to_path_buf();
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Write a CSV artifact and echo its path.
+pub fn write_csv(name: &str, content: &str) -> PathBuf {
+    let path = results_dir().join(name);
+    if let Err(e) = std::fs::write(&path, content) {
+        eprintln!("warn: could not write {path:?}: {e}");
+    }
+    path
+}

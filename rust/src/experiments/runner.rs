@@ -1,0 +1,191 @@
+//! Trial runner: seeded, parallel, ledger-checked.
+//!
+//! Mirrors the paper's protocol (§3.1): every point is the average of many
+//! trials where "the only variable across trials was the random seed,
+//! varied 0–999 for reproducibility".
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::bandits::{CorrSh, MedoidAlgorithm};
+use crate::config::{EngineKind, RunConfig};
+use crate::data::Data;
+use crate::distance::Metric;
+use crate::engine::{NativeEngine, PjrtEngine, PullEngine};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+use crate::util::threads;
+
+/// One trial's outcome.
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    pub seed: u64,
+    pub best: usize,
+    pub pulls: u64,
+    pub wall: Duration,
+}
+
+/// Aggregate over trials.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    pub trials: usize,
+    pub error_rate: f64,
+    pub mean_pulls_per_arm: f64,
+    pub mean_wall: Duration,
+    pub total_wall: Duration,
+}
+
+pub fn summarize(outcomes: &[TrialOutcome], truth: usize, n: usize) -> Summary {
+    let trials = outcomes.len().max(1);
+    let errors = outcomes.iter().filter(|o| o.best != truth).count();
+    let pulls: f64 = outcomes.iter().map(|o| o.pulls as f64).sum::<f64>() / trials as f64;
+    let total: Duration = outcomes.iter().map(|o| o.wall).sum();
+    Summary {
+        trials: outcomes.len(),
+        error_rate: errors as f64 / trials as f64,
+        mean_pulls_per_arm: pulls / n as f64,
+        mean_wall: total / trials as u32,
+        total_wall: total,
+    }
+}
+
+/// Build the dataset once (generators are deterministic in the config seed).
+pub fn build_data(cfg: &RunConfig) -> Arc<Data> {
+    Arc::new(cfg.dataset_kind.generate(&cfg.synth))
+}
+
+/// Run `trials` seeded trials of `make_algo()` on `data`, parallel across
+/// trials (each trial gets a single-threaded engine so pull accounting and
+/// wall-clock are per-trial honest).
+pub fn run_trials(
+    make_algo: &(dyn Fn() -> Box<dyn MedoidAlgorithm> + Sync),
+    data: &Arc<Data>,
+    metric: Metric,
+    trials: usize,
+    base_seed: u64,
+) -> Vec<TrialOutcome> {
+    let workers = threads::default_threads();
+    threads::parallel_map(trials, workers, |t| {
+        let engine = NativeEngine::with_threads(data.clone(), metric, 1);
+        let mut rng = Rng::seeded(base_seed + t as u64);
+        let algo = make_algo();
+        let res = algo.run(&engine, &mut rng);
+        TrialOutcome { seed: base_seed + t as u64, best: res.best, pulls: res.pulls, wall: res.wall }
+    })
+}
+
+/// Run trials on a specific (possibly PJRT) engine, serially.
+pub fn run_trials_on_engine(
+    make_algo: &dyn Fn() -> Box<dyn MedoidAlgorithm>,
+    engine: &dyn PullEngine,
+    trials: usize,
+    base_seed: u64,
+) -> Vec<TrialOutcome> {
+    (0..trials)
+        .map(|t| {
+            let mut rng = Rng::seeded(base_seed + t as u64);
+            let res = make_algo().run(engine, &mut rng);
+            TrialOutcome {
+                seed: base_seed + t as u64,
+                best: res.best,
+                pulls: res.pulls,
+                wall: res.wall,
+            }
+        })
+        .collect()
+}
+
+/// Ground truth: exact sweep when affordable, else the paper's §3.1
+/// procedure — the most frequently returned point of high-budget corrSH.
+pub fn ground_truth(data: &Arc<Data>, metric: Metric, exact_limit: usize) -> usize {
+    let n = data.n();
+    if n <= exact_limit {
+        let engine = NativeEngine::with_threads(data.clone(), metric, threads::default_threads());
+        return crate::bandits::argmin(
+            crate::bandits::exact::exact_thetas(&engine).into_iter(),
+        );
+    }
+    // most-frequent corrSH answer across 15 generous-budget trials
+    let outcomes = run_trials(
+        &|| Box::new(CorrSh::with_pulls_per_arm(64.0)) as Box<dyn MedoidAlgorithm>,
+        data,
+        metric,
+        15,
+        7_000_000,
+    );
+    let mut counts = std::collections::HashMap::new();
+    for o in &outcomes {
+        *counts.entry(o.best).or_insert(0usize) += 1;
+    }
+    counts.into_iter().max_by_key(|&(_, c)| c).map(|(i, _)| i).unwrap_or(0)
+}
+
+/// Build an engine per the config (PJRT requires artifacts for the dim).
+pub fn build_engine(cfg: &RunConfig, data: &Arc<Data>) -> Result<Box<dyn PullEngine>> {
+    Ok(match cfg.engine {
+        EngineKind::Native => Box::new(NativeEngine::with_threads(
+            data.clone(),
+            cfg.metric,
+            threads::default_threads(),
+        )),
+        EngineKind::Pjrt => {
+            let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+            let e = PjrtEngine::new(data.clone(), cfg.metric, rt)?;
+            e.warmup()?;
+            Box::new(e)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AlgoConfig;
+    use crate::data::synth::{Kind, SynthConfig};
+
+    fn toy_cfg() -> RunConfig {
+        RunConfig {
+            dataset_kind: Kind::Gaussian,
+            synth: SynthConfig { n: 200, dim: 12, seed: 5, outlier_frac: 0.05, ..Default::default() },
+            metric: Metric::L2,
+            algo: AlgoConfig::CorrSh { pulls_per_arm: 32.0 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn trials_deterministic_by_seed() {
+        let cfg = toy_cfg();
+        let data = build_data(&cfg);
+        let mk = || cfg.algo.build(200);
+        let a = run_trials(&mk, &data, cfg.metric, 4, 100);
+        let b = run_trials(&mk, &data, cfg.metric, 4, 100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.best, y.best);
+            assert_eq!(x.pulls, y.pulls);
+        }
+    }
+
+    #[test]
+    fn ground_truth_is_planted_medoid() {
+        let cfg = toy_cfg();
+        let data = build_data(&cfg);
+        assert_eq!(ground_truth(&data, cfg.metric, 20_000), 0);
+        // the sampling path must agree on an easy instance
+        assert_eq!(ground_truth(&data, cfg.metric, 10), 0);
+    }
+
+    #[test]
+    fn summary_math() {
+        let outs = vec![
+            TrialOutcome { seed: 0, best: 0, pulls: 100, wall: Duration::from_millis(10) },
+            TrialOutcome { seed: 1, best: 3, pulls: 300, wall: Duration::from_millis(30) },
+        ];
+        let s = summarize(&outs, 0, 100);
+        assert_eq!(s.error_rate, 0.5);
+        assert!((s.mean_pulls_per_arm - 2.0).abs() < 1e-12);
+        assert_eq!(s.mean_wall, Duration::from_millis(20));
+    }
+}

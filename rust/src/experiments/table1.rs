@@ -1,0 +1,179 @@
+//! Table 1 — "Algorithm performance": wall-clock seconds and pulls/arm for
+//! corrSH, Med-dit, RAND and exact computation on each dataset row, with
+//! final percent error noted when nonzero (the paper's exact layout).
+//!
+//! Paper rows: RNA-Seq 20k/100k (ℓ₁), Netflix 20k/100k (cosine), MNIST
+//! zeros (ℓ₂). The harness accepts a scale divisor so CI can run the full
+//! matrix in minutes; the reference full-scale run is recorded in
+//! EXPERIMENTS.md (shape comparison, not absolute numbers — different
+//! testbed + synthetic data, DESIGN.md §7).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::bandits::MedoidAlgorithm;
+use crate::config::{AlgoConfig, RunConfig};
+use crate::experiments::{runner, write_csv};
+
+/// One table cell group: an algorithm's summary on one dataset.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub algo: String,
+    pub time_s: f64,
+    pub pulls_per_arm: f64,
+    pub error_pct: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub dataset: String,
+    pub n: usize,
+    pub dim: usize,
+    pub metric: String,
+    pub cells: Vec<Cell>,
+}
+
+/// The per-dataset algorithm lineup of Table 1.
+/// corrSH budgets are the operating points for *our synthetic geometry*
+/// (DESIGN.md §7): the paper reports 2.1–2.4 pulls/arm on the real RNA-Seq
+/// data, whose Δ/ρ structure is more benign than our generator's
+/// dropout-heavy rows — the sweep figures (fig1/fig5) show the full
+/// error-vs-budget tradeoff either way.
+fn lineup(dataset: &str, trials_are_cheap: bool) -> Vec<(&'static str, AlgoConfig)> {
+    let corr_budget = match dataset {
+        d if d.starts_with("rnaseq") => 40.0, // paper: 2.1-2.4 on real data
+        d if d.starts_with("netflix") => 32.0, // paper: 15-18.5
+        _ => 64.0,                            // mnist: 47.9
+    };
+    let mut v = vec![
+        ("corrSH", AlgoConfig::CorrSh { pulls_per_arm: corr_budget }),
+        // cap Med-dit at 500 pulls/arm — the top of the paper's observed
+        // operating range (420 on RNA-Seq 100k); uncapped near-ties can
+        // grind toward n², which is the UCB-overhead effect the paper
+        // itself complains about (resolved per-row in run_row, n-dependent)
+        ("Meddit", AlgoConfig::Meddit { delta: 0.0, cap: 0 }),
+        ("Rand", AlgoConfig::Rand { refs_per_arm: 1000 }),
+    ];
+    if trials_are_cheap {
+        v.push(("Exact Comp.", AlgoConfig::Exact));
+    }
+    v
+}
+
+/// Run the full table. `scale` divides every preset's n (1 = paper scale).
+pub fn run(scale: usize, trials: usize, seed: u64) -> Result<Vec<Row>> {
+    let presets = ["rnaseq20k", "rnaseq100k", "netflix20k", "netflix100k", "mnist"];
+    let mut rows = Vec::new();
+    for preset in presets {
+        let cfg = RunConfig::preset(preset)?.scaled_down(scale.max(1));
+        rows.push(run_row(preset, &cfg, trials, seed)?);
+    }
+    emit(&rows);
+    Ok(rows)
+}
+
+/// Run one dataset row.
+pub fn run_row(name: &str, cfg: &RunConfig, trials: usize, seed: u64) -> Result<Row> {
+    let data = runner::build_data(cfg);
+    let n = data.n();
+    // exact ground truth is affordable up to ~20k points on this substrate
+    let truth = runner::ground_truth(&data, cfg.metric, 20_000);
+
+    let exact_ok = n <= 20_000;
+    let mut cells = Vec::new();
+    for (label, mut algo) in lineup(name, exact_ok) {
+        if let AlgoConfig::Meddit { cap, .. } = &mut algo {
+            *cap = 500 * n as u64;
+        }
+        let algo = Arc::new(algo);
+        let algo2 = algo.clone();
+        let mk = move || -> Box<dyn MedoidAlgorithm> { algo2.build(n) };
+        // exact is deterministic: one trial is enough
+        let t = if matches!(*algo, AlgoConfig::Exact) { 1 } else { trials };
+        let outcomes = runner::run_trials(&mk, &data, cfg.metric, t, seed);
+        let s = runner::summarize(&outcomes, truth, n);
+        cells.push(Cell {
+            algo: label.to_string(),
+            time_s: s.mean_wall.as_secs_f64(),
+            pulls_per_arm: s.mean_pulls_per_arm,
+            error_pct: s.error_rate * 100.0,
+        });
+    }
+    Ok(Row {
+        dataset: name.to_string(),
+        n,
+        dim: data.dim(),
+        metric: cfg.metric.name().to_string(),
+        cells,
+    })
+}
+
+/// Pretty-print in the paper's layout + CSV artifact.
+pub fn emit(rows: &[Row]) {
+    let mut csv = String::from("dataset,n,dim,metric,algo,time_s,pulls_per_arm,error_pct\n");
+    println!("\nTable 1: Algorithm performance (time = mean seconds/trial; % error if nonzero)");
+    println!("{:-<100}", "");
+    println!(
+        "{:<16} {:>9} {:>7}  {:<8} | {:>22} {:>22} {:>22} {:>16}",
+        "dataset", "n", "d", "metric", "corrSH", "Meddit", "Rand", "Exact"
+    );
+    for r in rows {
+        let fmt_cell = |c: Option<&Cell>| match c {
+            None => format!("{:>22}", "-"),
+            Some(c) => {
+                let err = if c.error_pct > 0.0 {
+                    format!(" ({:.1}%)", c.error_pct)
+                } else {
+                    String::new()
+                };
+                format!("{:>9.2}s {:>6.1}p{err:<6}", c.time_s, c.pulls_per_arm)
+            }
+        };
+        let get = |name: &str| r.cells.iter().find(|c| c.algo.starts_with(name));
+        println!(
+            "{:<16} {:>9} {:>7}  {:<8} | {} {} {} {}",
+            r.dataset,
+            r.n,
+            r.dim,
+            r.metric,
+            fmt_cell(get("corrSH")),
+            fmt_cell(get("Meddit")),
+            fmt_cell(get("Rand")),
+            fmt_cell(get("Exact")),
+        );
+        for c in &r.cells {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{:.6},{:.4},{:.3}\n",
+                r.dataset, r.n, r.dim, r.metric, c.algo, c.time_s, c.pulls_per_arm, c.error_pct
+            ));
+        }
+    }
+    let path = write_csv("table1.csv", &csv);
+    println!("\n[csv] {}", path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_row_runs_and_orders_algorithms() {
+        // heavily scaled-down rnaseq row: corrSH must use far fewer pulls
+        // than RAND and exact
+        let cfg = RunConfig::preset("rnaseq20k").unwrap().scaled_down(100);
+        let row = run_row("rnaseq20k", &cfg, 3, 0).unwrap();
+        let get = |name: &str| {
+            row.cells
+                .iter()
+                .find(|c| c.algo.starts_with(name))
+                .unwrap_or_else(|| panic!("{name} cell missing"))
+        };
+        let corr = get("corrSH");
+        let rand = get("Rand");
+        let exact = get("Exact");
+        assert!(corr.pulls_per_arm < rand.pulls_per_arm);
+        assert!(rand.pulls_per_arm <= exact.pulls_per_arm + 1e-9);
+        assert_eq!(exact.error_pct, 0.0);
+    }
+}

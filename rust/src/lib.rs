@@ -1,0 +1,51 @@
+//! # corrsh — Ultra Fast Medoid Identification via Correlated Sequential Halving
+//!
+//! A production-shaped reproduction of Baharav & Tse, *Ultra Fast Medoid
+//! Identification via Correlated Sequential Halving* (NeurIPS 2019), built as
+//! a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1/L2 (build time, Python)** — Pallas tiled distance kernels and the
+//!   masked chunk-centrality JAX graph, AOT-lowered to HLO-text artifacts
+//!   (`make artifacts`, see `python/compile/`).
+//! * **L3 (this crate)** — the coordinator: the Correlated Sequential
+//!   Halving round scheduler (the paper's contribution), every baseline it
+//!   is evaluated against (Med-dit/UCB, RAND, TOPRANK, exact, uncorrelated
+//!   sequential halving), the data substrates, the PJRT runtime that
+//!   executes the artifacts, the statistics engine behind the paper's
+//!   figures, and the experiment harness that regenerates every table and
+//!   figure. Python never runs on the request path.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use corrsh::data::synth::{rnaseq, SynthConfig};
+//! use corrsh::distance::Metric;
+//! use corrsh::engine::{CountingEngine, NativeEngine};
+//! use corrsh::bandits::{corr_sh::CorrSh, MedoidAlgorithm};
+//! use corrsh::util::rng::Rng;
+//!
+//! let data = rnaseq::generate(&SynthConfig { n: 2_000, dim: 256, seed: 7, ..Default::default() });
+//! let engine = CountingEngine::new(NativeEngine::new(data, Metric::L1));
+//! let mut rng = Rng::seeded(0);
+//! let res = CorrSh::with_pulls_per_arm(24.0).run(&engine, &mut rng);
+//! println!("medoid = {} after {} pulls", res.best, res.pulls);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `DESIGN.md` for the complete
+//! system inventory and per-experiment index.
+
+pub mod bandits;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod distance;
+pub mod engine;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod stats;
+pub mod util;
+
+/// Crate-wide result type (anyhow is in the offline dependency closure).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,291 @@
+//! `corrsh` — launcher for the Correlated Sequential Halving framework.
+//!
+//! ```text
+//! corrsh medoid  --preset rnaseq20k --scale 20 --algo corrsh --budget 24 [--engine pjrt]
+//! corrsh repro   --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation [--scale N --trials T]
+//! corrsh stats   --preset mnist --scale 8
+//! corrsh serve   --addr 127.0.0.1:7878
+//! corrsh gen     --kind rnaseq --n 2000 --dim 256 --out data.npy
+//! ```
+
+use anyhow::{Context, Result};
+
+use corrsh::config::{AlgoConfig, RunConfig};
+use corrsh::data::synth::Kind;
+use corrsh::experiments::{figures, runner, table1};
+use corrsh::server;
+use corrsh::util::cli::Args;
+use corrsh::util::rng::Rng;
+
+const USAGE: &str = "corrsh <medoid|repro|stats|serve|gen> [flags]
+  medoid: --preset P | --config file.json [--scale N] [--algo A] [--budget X]
+          [--engine native|pjrt] [--seed S] [--trials T]
+  repro:  --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation|all
+          [--scale N] [--trials T] [--seed S]
+  stats:  --preset P [--scale N] [--seed S]
+  serve:  [--addr HOST:PORT] [--preload P]
+  gen:    --kind K --n N --dim D [--seed S] --out FILE.npy";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let cmd = args.command.clone().unwrap_or_default();
+    let result = match cmd.as_str() {
+        "medoid" => cmd_medoid(&args),
+        "repro" => cmd_repro(&args),
+        "stats" => cmd_stats(&args),
+        "serve" => cmd_serve(&args),
+        "gen" => cmd_gen(&args),
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Shared flags → RunConfig.
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = if let Some(path) = args.str_opt("config") {
+        RunConfig::from_json_file(path)?
+    } else {
+        let preset = args.str_or("preset", "toy");
+        RunConfig::preset(&preset)?
+    };
+    let scale: usize = args.parse_or("scale", 1)?;
+    if scale > 1 {
+        cfg = cfg.scaled_down(scale);
+    }
+    if let Some(n) = args.parse_opt::<usize>("n")? {
+        cfg.synth.n = n;
+    }
+    if let Some(d) = args.parse_opt::<usize>("dim")? {
+        cfg.synth.dim = d;
+    }
+    if let Some(s) = args.parse_opt::<u64>("data-seed")? {
+        cfg.synth.seed = s;
+    }
+    if let Some(m) = args.str_opt("metric") {
+        cfg.metric = m.parse()?;
+    }
+    if let Some(e) = args.str_opt("engine") {
+        cfg.engine = e.parse()?;
+    }
+    if let Some(dir) = args.str_opt("artifacts") {
+        cfg.artifacts_dir = dir.to_string();
+    }
+    if let Some(algo) = args.str_opt("algo") {
+        let budget: f64 = args.parse_or("budget", 24.0)?;
+        cfg.algo = match algo {
+            "corrsh" => AlgoConfig::CorrSh { pulls_per_arm: budget },
+            "sh" | "seq-halving" => AlgoConfig::SeqHalving { pulls_per_arm: budget },
+            "meddit" => AlgoConfig::Meddit { delta: 0.0, cap: 0 },
+            "rand" => AlgoConfig::Rand { refs_per_arm: budget as usize },
+            "toprank" => AlgoConfig::TopRank { phase1_refs: budget as usize },
+            "exact" => AlgoConfig::Exact,
+            other => anyhow::bail!("unknown algo {other:?}"),
+        };
+    } else {
+        let _ = args.parse_or("budget", 24.0)?; // consume if present
+    }
+    cfg.trials = args.parse_or("trials", cfg.trials)?;
+    Ok(cfg)
+}
+
+fn cmd_medoid(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    args.finish()?;
+
+    eprintln!(
+        "dataset={} n={} dim={} metric={} engine={:?} algo={}",
+        cfg.dataset_kind.name(),
+        cfg.synth.n,
+        cfg.synth.dim,
+        cfg.metric,
+        cfg.engine,
+        cfg.algo.name()
+    );
+    let t0 = std::time::Instant::now();
+    let data = runner::build_data(&cfg);
+    eprintln!("generated dataset in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let engine = runner::build_engine(&cfg, &data)?;
+    for t in 0..cfg.trials.max(1) {
+        let mut rng = Rng::seeded(seed + t as u64);
+        let algo = cfg.algo.build(data.n());
+        let res = algo.run(engine.as_ref(), &mut rng);
+        println!(
+            "trial {t}: medoid={} pulls={} ({:.2}/arm) wall={:.3}s rounds={}",
+            res.best,
+            res.pulls,
+            res.pulls as f64 / data.n() as f64,
+            res.wall.as_secs_f64(),
+            res.rounds.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let exp = args.str_or("exp", "all");
+    let scale: usize = args.parse_or("scale", 20)?;
+    let trials: usize = args.parse_or("trials", 20)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    args.finish()?;
+
+    let budgets_small: Vec<f64> = vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0];
+    let run_sweep = |name: &str, preset: &str| -> Result<()> {
+        let cfg = RunConfig::preset(preset)?.scaled_down(scale);
+        let pts = figures::error_vs_budget(&cfg, &budgets_small, trials, seed)?;
+        figures::emit_sweep(name, &pts);
+        Ok(())
+    };
+
+    match exp.as_str() {
+        "table1" => {
+            table1::run(scale, trials, seed)?;
+        }
+        "fig1" => {
+            run_sweep("fig1_rnaseq20k", "rnaseq20k")?;
+            run_sweep("fig1_netflix100k", "netflix100k")?;
+        }
+        "fig2" => {
+            let d = figures::fig2_toy_demo(20_000, seed);
+            println!(
+                "fig2 (toy): P[mid point beats medoid after 1 sample] independent={:.4} correlated={:.4}",
+                d.p_flip_independent, d.p_flip_correlated
+            );
+        }
+        "fig3" => {
+            let cfg = RunConfig::preset("rnaseq20k")?.scaled_down(scale);
+            for row in figures::fig3_difference_histograms(&cfg, 20_000, seed)? {
+                println!(
+                    "fig3 {:<14} σ={:.4} ρ={:.3} std_ind={:.4} P(neg): ind={:.4} corr={:.4}",
+                    row.arm_kind,
+                    row.sigma,
+                    row.rho,
+                    row.std_independent,
+                    row.p_neg_independent,
+                    row.p_neg_correlated
+                );
+            }
+        }
+        "fig4" => {
+            for preset in ["rnaseq20k", "mnist"] {
+                let cfg = RunConfig::preset(preset)?.scaled_down(scale);
+                let out = figures::fig4_delta_vs_rho(&cfg, seed)?;
+                println!(
+                    "fig4 {preset}: H2={:.4e} H̃2={:.4e} gain H2/H̃2={:.2} ({} arms)",
+                    out.h2, out.h2_tilde, out.gain_ratio, out.rows
+                );
+            }
+        }
+        "fig5" => {
+            run_sweep("fig5_netflix20k", "netflix20k")?;
+            run_sweep("fig5_rnaseq100k", "rnaseq100k")?;
+            run_sweep("fig5_mnist", "mnist")?;
+        }
+        "fig6" => {
+            for preset in ["rnaseq20k", "mnist"] {
+                let cfg = RunConfig::preset(preset)?.scaled_down(scale);
+                figures::fig6_distance_to_medoid(&cfg, seed)?;
+            }
+        }
+        "ablation" => {
+            let cfg = RunConfig::preset("rnaseq20k")?.scaled_down(scale);
+            let pts = figures::ablation_corr_vs_uncorr(&cfg, &budgets_small, trials, seed)?;
+            figures::emit_sweep("ablation_corr_vs_uncorr", &pts);
+        }
+        "all" => {
+            for e in ["table1", "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablation"] {
+                println!("\n=== repro {e} ===");
+                let sub = Args::parse(
+                    [
+                        "repro".to_string(),
+                        format!("--exp={e}"),
+                        format!("--scale={scale}"),
+                        format!("--trials={trials}"),
+                        format!("--seed={seed}"),
+                    ]
+                    .into_iter(),
+                )?;
+                cmd_repro(&sub)?;
+            }
+        }
+        other => anyhow::bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    args.finish()?;
+    let data = runner::build_data(&cfg);
+    let engine = corrsh::engine::NativeEngine::with_threads(
+        data.clone(),
+        cfg.metric,
+        corrsh::util::threads::default_threads(),
+    );
+    let mut rng = Rng::seeded(seed);
+    let st = corrsh::stats::instance_stats(&engine, 512.min(data.n()), &mut rng);
+    println!(
+        "n={} medoid={} σ={:.5} H2={:.4e} H̃2={:.4e} gain={:.2}",
+        data.n(),
+        st.medoid,
+        st.sigma,
+        st.h2,
+        st.h2_tilde,
+        st.gain_ratio()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let preload = args.str_opt("preload").map(str::to_string);
+    args.finish()?;
+    let state = server::State::new();
+    if let Some(preset) = preload {
+        let cfg = RunConfig::preset(&preset)?.scaled_down(20);
+        let req = corrsh::util::json::parse(&format!(
+            r#"{{"op":"register","name":"{preset}","kind":"{}","n":{},"dim":{},"seed":{}}}"#,
+            cfg.dataset_kind.name(),
+            cfg.synth.n,
+            cfg.synth.dim,
+            cfg.synth.seed
+        ))?;
+        let resp = state.handle(&req);
+        eprintln!("preloaded: {resp}");
+    }
+    server::serve(state, &addr)
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let kind: Kind = args.str_required("kind")?.parse()?;
+    let n: usize = args.parse_or("n", 1000)?;
+    let dim: usize = args.parse_or("dim", 256)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let out = args.str_required("out")?;
+    args.finish()?;
+    let cfg = corrsh::data::synth::SynthConfig { n, dim, seed, ..Default::default() };
+    let data = kind.generate(&cfg);
+    let dense = data.to_dense();
+    corrsh::data::loader::save_dense_npy(&out, &dense)
+        .with_context(|| format!("write {out}"))?;
+    eprintln!("wrote {} ({}x{})", out, dense.n, dense.dim);
+    Ok(())
+}

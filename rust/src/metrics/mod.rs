@@ -1,0 +1,144 @@
+//! Lightweight runtime metrics: atomic counters + wall-clock timers.
+//!
+//! The paper's two evaluation axes are exactly these: **# pulls** (distance
+//! computations) and **wall-clock time**. Every engine wraps its pulls in a
+//! [`Counter`]; the experiment harness snapshots them per trial.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Scope timer: `let _t = Timer::start(&cell);` adds elapsed ns on drop.
+pub struct Timer<'a> {
+    start: Instant,
+    sink: &'a Counter,
+}
+
+impl<'a> Timer<'a> {
+    pub fn start(sink: &'a Counter) -> Self {
+        Timer { start: Instant::now(), sink }
+    }
+}
+
+impl Drop for Timer<'_> {
+    fn drop(&mut self) {
+        self.sink.add(self.start.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Aggregated per-run metrics snapshot.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub pulls: u64,
+    pub wall: Duration,
+}
+
+impl Snapshot {
+    pub fn pulls_per_arm(&self, n: usize) -> f64 {
+        self.pulls as f64 / n.max(1) as f64
+    }
+}
+
+/// Simple streaming mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent_adds() {
+        let c = Counter::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..10_000 {
+                        c.add(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn timer_accumulates() {
+        let c = Counter::new();
+        {
+            let _t = Timer::start(&c);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(c.get() >= 1_000_000, "timer recorded {}ns", c.get());
+    }
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // sample variance of the classic dataset = 32/7
+        assert!((w.variance() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pulls_per_arm() {
+        let s = Snapshot { pulls: 2000, wall: Duration::ZERO };
+        assert_eq!(s.pulls_per_arm(1000), 2.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! `artifacts/manifest.json` — the build-time contract between
+//! `python/compile/aot.py` and the rust runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::distance::Metric;
+use crate::util::json;
+
+/// One AOT-compiled bucket: `chunk_sums_<metric>_a<A>_r<R>_d<d>.hlo.txt`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub metric: Metric,
+    pub arms: usize,
+    pub refs: usize,
+    pub dim: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} (run `make artifacts`)"))?;
+        let v = json::parse(&text).context("parse manifest.json")?;
+        anyhow::ensure!(
+            v.get("version").as_usize() == Some(1),
+            "unsupported manifest version {:?}",
+            v.get("version")
+        );
+        anyhow::ensure!(
+            v.get("entry").as_str() == Some("chunk_sums"),
+            "unexpected entry point {:?}",
+            v.get("entry")
+        );
+        let arts = v
+            .get("artifacts")
+            .as_array()
+            .context("manifest missing artifacts[]")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for (i, a) in arts.iter().enumerate() {
+            let get_n = |k: &str| {
+                a.get(k).as_usize().with_context(|| format!("artifact[{i}].{k} missing"))
+            };
+            let spec = ArtifactSpec {
+                name: a.get("name").as_str().context("artifact name")?.to_string(),
+                file: a.get("file").as_str().context("artifact file")?.to_string(),
+                metric: a.get("metric").as_str().context("artifact metric")?.parse()?,
+                arms: get_n("arms")?,
+                refs: get_n("refs")?,
+                dim: get_n("dim")?,
+            };
+            anyhow::ensure!(
+                dir.join(&spec.file).exists(),
+                "artifact file {:?} listed in manifest but missing on disk",
+                spec.file
+            );
+            artifacts.push(spec);
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Exact bucket lookup.
+    pub fn find(&self, metric: Metric, arms: usize, refs: usize, dim: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.metric == metric && a.arms == arms && a.refs == refs && a.dim == dim)
+    }
+
+    /// All buckets available for (metric, dim), sorted by (arms, refs)
+    /// ascending — the planner's ladder.
+    pub fn buckets(&self, metric: Metric, dim: usize) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.metric == metric && a.dim == dim)
+            .map(|a| (a.arms, a.refs))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Dims with at least one bucket for `metric`.
+    pub fn dims(&self, metric: Metric) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.metric == metric)
+            .map(|a| a.dim)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str, files: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+        for f in files {
+            std::fs::write(dir.join(f), "HloModule fake").unwrap();
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("corrsh-manifest-tests").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const GOOD: &str = r#"{"version":1,"entry":"chunk_sums","inputs":[],
+        "output":{"tuple":true},
+        "artifacts":[
+         {"name":"chunk_sums_l1_a64_r16_d256","file":"a.hlo.txt","metric":"l1","arms":64,"refs":16,"dim":256},
+         {"name":"chunk_sums_l1_a256_r64_d256","file":"b.hlo.txt","metric":"l1","arms":256,"refs":64,"dim":256},
+         {"name":"chunk_sums_l2_a64_r16_d784","file":"c.hlo.txt","metric":"l2","arms":64,"refs":16,"dim":784}
+        ]}"#;
+
+    #[test]
+    fn loads_and_indexes() {
+        let d = tmpdir("good");
+        write_manifest(&d, GOOD, &["a.hlo.txt", "b.hlo.txt", "c.hlo.txt"]);
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert!(m.find(Metric::L1, 64, 16, 256).is_some());
+        assert!(m.find(Metric::L1, 64, 16, 784).is_none());
+        assert_eq!(m.buckets(Metric::L1, 256), vec![(64, 16), (256, 64)]);
+        assert_eq!(m.dims(Metric::L2), vec![784]);
+    }
+
+    #[test]
+    fn missing_file_on_disk_rejected() {
+        let d = tmpdir("missing");
+        write_manifest(&d, GOOD, &["a.hlo.txt", "b.hlo.txt"]); // c missing
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let d = tmpdir("ver");
+        write_manifest(&d, r#"{"version":2,"entry":"chunk_sums","artifacts":[]}"#, &[]);
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn absent_dir_errors_helpfully() {
+        let err = Manifest::load("/definitely/not/a/dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT runtime: load the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py`, compile them on the CPU PJRT client, cache the
+//! executables, and run bucket-shaped chunk-sum jobs from the rust hot path.
+//!
+//! Contract with the python layer (see `artifacts/manifest.json`):
+//! one artifact per (metric, arm-bucket A, ref-bucket R, dim d), entry point
+//! `chunk_sums(x_arms f32[A,d], y_refs f32[R,d], mask f32[R]) -> (f32[A],)`
+//! lowered with `return_tuple=True` (unwrapped here with `to_tuple1`).
+//!
+//! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; `HloModuleProto::
+//! from_text_file` reassigns ids and round-trips cleanly.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, Manifest};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::distance::Metric;
+use crate::metrics::Counter;
+
+/// A compiled chunk-sums executable for one bucket shape.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute one job. Inputs must already be padded to the bucket shape:
+    /// `x_arms` is `A*d` floats, `y_refs` is `R*d`, `mask` is `R` (1.0 for
+    /// real reference rows, 0.0 for padding). Returns the `A` per-arm sums
+    /// (padded arm rows produce garbage sums the caller discards).
+    pub fn run(&self, x_arms: &[f32], y_refs: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
+        let (a, r, d) = (self.spec.arms, self.spec.refs, self.spec.dim);
+        anyhow::ensure!(x_arms.len() == a * d, "x_arms len {} != {}", x_arms.len(), a * d);
+        anyhow::ensure!(y_refs.len() == r * d, "y_refs len {} != {}", y_refs.len(), r * d);
+        anyhow::ensure!(mask.len() == r, "mask len {} != {}", mask.len(), r);
+
+        let lx = lit_f32(x_arms, &[a, d])?;
+        let ly = lit_f32(y_refs, &[r, d])?;
+        let lm = lit_f32(mask, &[r])?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lx, ly, lm])
+            .context("pjrt execute")?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1().context("unwrap 1-tuple output")?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// The artifact registry: PJRT client + lazily compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    /// Cumulative compile time (ns) — surfaced in metrics/EXPERIMENTS.
+    pub compile_ns: Counter,
+}
+
+impl Runtime {
+    /// Open the artifact directory (must contain `manifest.json`).
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            compile_ns: Counter::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling + caching on first use) the executable for an exact
+    /// bucket shape.
+    pub fn executable(
+        &self,
+        metric: Metric,
+        arms: usize,
+        refs: usize,
+        dim: usize,
+    ) -> Result<Arc<Executable>> {
+        let spec = self
+            .manifest
+            .find(metric, arms, refs, dim)
+            .with_context(|| {
+                format!("no artifact for {metric} a{arms} r{refs} d{dim} (run `make artifacts`)")
+            })?
+            .clone();
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&spec.name) {
+            return Ok(exe.clone());
+        }
+        let t = crate::metrics::Timer::start(&self.compile_ns);
+        let path = self.manifest.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {}", spec.name))?;
+        drop(t);
+        let arc = Arc::new(Executable { spec: spec.clone(), exe });
+        cache.insert(spec.name.clone(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        // tests run from the crate root; skip silently if artifacts absent
+        let p = std::path::Path::new("artifacts");
+        p.join("manifest.json").exists().then(|| p.to_path_buf())
+    }
+
+    #[test]
+    fn compile_and_run_smallest_bucket() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let rt = Runtime::open(dir).unwrap();
+        let exe = rt.executable(Metric::L1, 64, 16, 256).unwrap();
+        // x rows: constant rows i -> distance |i - j| * d
+        let d = 256;
+        let mut x = vec![0f32; 64 * d];
+        for i in 0..64 {
+            x[i * d..(i + 1) * d].fill(i as f32);
+        }
+        let mut y = vec![0f32; 16 * d];
+        for j in 0..16 {
+            y[j * d..(j + 1) * d].fill(j as f32);
+        }
+        let mask = vec![1f32; 16];
+        let sums = exe.run(&x, &y, &mask).unwrap();
+        // l1(x_i, y_j) = |i-j| * 256; sum over j=0..15
+        for i in 0..64usize {
+            let want: f32 = (0..16).map(|j| (i as f32 - j as f32).abs() * 256.0).sum();
+            assert!(
+                (sums[i] - want).abs() < want.max(1.0) * 1e-5,
+                "arm {i}: {} vs {want}",
+                sums[i]
+            );
+        }
+        // cache hit
+        let again = rt.executable(Metric::L1, 64, 16, 256).unwrap();
+        assert!(Arc::ptr_eq(&exe, &again));
+        assert_eq!(rt.cached_count(), 1);
+    }
+
+    #[test]
+    fn mask_zeroes_padding() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::open(dir).unwrap();
+        let exe = rt.executable(Metric::L2, 64, 16, 256).unwrap();
+        let d = 256;
+        let x = vec![1f32; 64 * d];
+        let mut y = vec![0f32; 16 * d];
+        // only first 3 refs real: each at per-coord diff 1 -> distance sqrt(d)
+        for j in 3..16 {
+            y[j * d..(j + 1) * d].fill(123.0); // junk that the mask must hide
+        }
+        let mut mask = vec![0f32; 16];
+        mask[..3].fill(1.0);
+        let sums = exe.run(&x, &y, &mask).unwrap();
+        let want = 3.0 * (d as f32).sqrt();
+        for i in 0..64 {
+            assert!((sums[i] - want).abs() < 1e-2, "arm {i}: {} vs {want}", sums[i]);
+        }
+    }
+
+    #[test]
+    fn missing_bucket_is_error() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::open(dir).unwrap();
+        assert!(rt.executable(Metric::L1, 3, 3, 3).is_err());
+    }
+}

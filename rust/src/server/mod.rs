@@ -1,0 +1,309 @@
+//! Medoid service: a small deployable front-end for the library.
+//!
+//! Line-delimited JSON over TCP (std::net threads; tokio is outside the
+//! offline dependency closure). Datasets are registered once (generated or
+//! loaded), engines + ground work are cached, and each request runs a
+//! medoid query with its own seed/budget:
+//!
+//! ```text
+//! → {"op":"register","name":"cells","kind":"rnaseq","n":2000,"dim":256,"seed":1}
+//! ← {"ok":true,"name":"cells","n":2000}
+//! → {"op":"medoid","dataset":"cells","algo":"corrsh","pulls_per_arm":24,"seed":7}
+//! ← {"ok":true,"medoid":412,"pulls":52000,"wall_ms":8.3}
+//! → {"op":"stats","dataset":"cells"}         # Δ/ρ/H₂ summary
+//! → {"op":"list"}                            # registered datasets
+//! → {"op":"ping"}
+//! ```
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::bandits::MedoidAlgorithm;
+use crate::config::AlgoConfig;
+use crate::data::synth::{Kind, SynthConfig};
+use crate::data::Data;
+use crate::distance::Metric;
+use crate::engine::NativeEngine;
+use crate::util::json::{self, Value};
+use crate::util::rng::Rng;
+
+struct Entry {
+    data: Arc<Data>,
+    metric: Metric,
+}
+
+/// Shared server state: the dataset registry + request counters.
+pub struct State {
+    datasets: Mutex<HashMap<String, Arc<Entry>>>,
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+}
+
+impl Default for State {
+    fn default() -> Self {
+        State {
+            datasets: Mutex::new(HashMap::new()),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        }
+    }
+}
+
+impl State {
+    pub fn new() -> Arc<Self> {
+        Arc::new(State::default())
+    }
+
+    fn get(&self, name: &str) -> Result<Arc<Entry>> {
+        self.datasets
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .with_context(|| format!("dataset {name:?} not registered"))
+    }
+
+    /// Handle one request object → response object. Pure (no I/O), so the
+    /// protocol is unit-testable without sockets.
+    pub fn handle(&self, req: &Value) -> Value {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        match self.dispatch(req) {
+            Ok(v) => v,
+            Err(e) => {
+                self.errors.fetch_add(1, Ordering::Relaxed);
+                Value::from_pairs(vec![
+                    ("ok", false.into()),
+                    ("error", format!("{e:#}").into()),
+                ])
+            }
+        }
+    }
+
+    fn dispatch(&self, req: &Value) -> Result<Value> {
+        match req.get("op").as_str().context("missing op")? {
+            "ping" => Ok(Value::from_pairs(vec![("ok", true.into()), ("pong", true.into())])),
+            "list" => {
+                let names: Vec<Value> = self
+                    .datasets
+                    .lock()
+                    .unwrap()
+                    .keys()
+                    .map(|k| Value::Str(k.clone()))
+                    .collect();
+                Ok(Value::from_pairs(vec![
+                    ("ok", true.into()),
+                    ("datasets", Value::Array(names)),
+                ]))
+            }
+            "register" => {
+                let name = req.get("name").as_str().context("missing name")?.to_string();
+                let kind: Kind = req.get("kind").as_str().context("missing kind")?.parse()?;
+                let cfg = SynthConfig {
+                    n: req.get("n").as_usize().unwrap_or(1000),
+                    dim: req.get("dim").as_usize().unwrap_or(256),
+                    seed: req.get("seed").as_f64().unwrap_or(0.0) as u64,
+                    ..Default::default()
+                };
+                let metric = match req.get("metric").as_str() {
+                    Some(m) => m.parse()?,
+                    None => kind.default_metric(),
+                };
+                let data = Arc::new(kind.generate(&cfg));
+                let n = data.n();
+                self.datasets
+                    .lock()
+                    .unwrap()
+                    .insert(name.clone(), Arc::new(Entry { data, metric }));
+                Ok(Value::from_pairs(vec![
+                    ("ok", true.into()),
+                    ("name", name.into()),
+                    ("n", n.into()),
+                ]))
+            }
+            "medoid" => {
+                let entry = self.get(req.get("dataset").as_str().context("missing dataset")?)?;
+                let algo = build_algo(req, entry.data.n())?;
+                let seed = req.get("seed").as_f64().unwrap_or(0.0) as u64;
+                let engine = NativeEngine::with_threads(
+                    entry.data.clone(),
+                    entry.metric,
+                    crate::util::threads::default_threads(),
+                );
+                let mut rng = Rng::seeded(seed);
+                let res = algo.run(&engine, &mut rng);
+                Ok(Value::from_pairs(vec![
+                    ("ok", true.into()),
+                    ("medoid", res.best.into()),
+                    ("pulls", res.pulls.into()),
+                    ("wall_ms", (res.wall.as_secs_f64() * 1e3).into()),
+                    ("algo", algo.name().into()),
+                ]))
+            }
+            "stats" => {
+                let entry = self.get(req.get("dataset").as_str().context("missing dataset")?)?;
+                let engine = NativeEngine::with_threads(
+                    entry.data.clone(),
+                    entry.metric,
+                    crate::util::threads::default_threads(),
+                );
+                let mut rng = Rng::seeded(0);
+                let st = crate::stats::instance_stats(
+                    &engine,
+                    256.min(entry.data.n()),
+                    &mut rng,
+                );
+                Ok(Value::from_pairs(vec![
+                    ("ok", true.into()),
+                    ("medoid", st.medoid.into()),
+                    ("sigma", st.sigma.into()),
+                    ("h2", st.h2.into()),
+                    ("h2_tilde", st.h2_tilde.into()),
+                    ("gain_ratio", st.gain_ratio().into()),
+                ]))
+            }
+            other => anyhow::bail!("unknown op {other:?}"),
+        }
+    }
+}
+
+fn build_algo(req: &Value, n: usize) -> Result<Box<dyn MedoidAlgorithm>> {
+    let name = req.get("algo").as_str().unwrap_or("corrsh");
+    let cfg = match name {
+        "corrsh" => AlgoConfig::CorrSh {
+            pulls_per_arm: req.get("pulls_per_arm").as_f64().unwrap_or(24.0),
+        },
+        "meddit" => AlgoConfig::Meddit {
+            delta: req.get("delta").as_f64().unwrap_or(0.0),
+            cap: req.get("cap").as_f64().unwrap_or(0.0) as u64,
+        },
+        "rand" => AlgoConfig::Rand {
+            refs_per_arm: req.get("refs_per_arm").as_usize().unwrap_or(1000),
+        },
+        "exact" => AlgoConfig::Exact,
+        other => anyhow::bail!("unknown algo {other:?}"),
+    };
+    Ok(cfg.build(n))
+}
+
+fn client_loop(state: Arc<State>, stream: TcpStream) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match json::parse(&line) {
+            Ok(req) => state.handle(&req),
+            Err(e) => Value::from_pairs(vec![
+                ("ok", false.into()),
+                ("error", format!("bad json: {e}").into()),
+            ]),
+        };
+        let mut out = json::to_string(&resp);
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).is_err() {
+            break;
+        }
+    }
+    let _ = peer;
+}
+
+/// Serve forever on `addr` (e.g. "127.0.0.1:7878"). One thread per client.
+pub fn serve(state: Arc<State>, addr: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+    eprintln!("corrsh-serve listening on {}", listener.local_addr()?);
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                let st = state.clone();
+                std::thread::spawn(move || client_loop(st, s));
+            }
+            Err(e) => eprintln!("accept error: {e}"),
+        }
+    }
+    Ok(())
+}
+
+/// Bind to an ephemeral port and serve in a background thread (tests/demo).
+pub fn serve_background(state: Arc<State>) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    std::thread::spawn(move || {
+        for stream in listener.incoming().flatten() {
+            let st = state.clone();
+            std::thread::spawn(move || client_loop(st, stream));
+        }
+    });
+    Ok(addr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(s: &str) -> Value {
+        json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn protocol_register_and_query() {
+        let state = State::new();
+        let r = state.handle(&req(
+            r#"{"op":"register","name":"toy","kind":"gaussian","n":200,"dim":8,"seed":4}"#,
+        ));
+        assert_eq!(r.get("ok").as_bool(), Some(true));
+        assert_eq!(r.get("n").as_usize(), Some(200));
+
+        let r = state.handle(&req(
+            r#"{"op":"medoid","dataset":"toy","algo":"corrsh","pulls_per_arm":48,"seed":1}"#,
+        ));
+        assert_eq!(r.get("ok").as_bool(), Some(true));
+        assert_eq!(r.get("medoid").as_usize(), Some(0), "planted medoid");
+        assert!(r.get("pulls").as_f64().unwrap() > 0.0);
+
+        let r = state.handle(&req(r#"{"op":"list"}"#));
+        assert_eq!(r.get("datasets").idx(0).as_str(), Some("toy"));
+    }
+
+    #[test]
+    fn protocol_errors_are_reported() {
+        let state = State::new();
+        let r = state.handle(&req(r#"{"op":"medoid","dataset":"nope"}"#));
+        assert_eq!(r.get("ok").as_bool(), Some(false));
+        assert!(r.get("error").as_str().unwrap().contains("not registered"));
+        let r = state.handle(&req(r#"{"op":"frobnicate"}"#));
+        assert_eq!(r.get("ok").as_bool(), Some(false));
+        assert_eq!(state.errors.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let state = State::new();
+        state.handle(&req(
+            r#"{"op":"register","name":"t","kind":"gaussian","n":100,"dim":4,"seed":0}"#,
+        ));
+        let addr = serve_background(state).unwrap();
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all(b"{\"op\":\"ping\"}\n{\"op\":\"medoid\",\"dataset\":\"t\",\"seed\":3}\n")
+            .unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"));
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true));
+        assert_eq!(resp.get("medoid").as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,124 @@
+//! Fixed-bin histogram for the figure emitters (Figs 3 and 6 are
+//! histograms; the harness prints them as CSV rows + ASCII sparklines).
+
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub bins: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub count: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0, count: 0 }
+    }
+
+    /// Build from data with automatic range (±0.5% margin).
+    pub fn auto(data: &[f64], nbins: usize) -> Self {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for &x in data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        if !lo.is_finite() || hi <= lo {
+            lo = 0.0;
+            hi = 1.0;
+        }
+        let margin = (hi - lo) * 0.005 + 1e-12;
+        let mut h = Histogram::new(lo - margin, hi + margin, nbins);
+        for &x in data {
+            h.push(x);
+        }
+        h
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.count += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let k = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            let last = self.bins.len() - 1;
+            self.bins[k.min(last)] += 1;
+        }
+    }
+
+    pub fn bin_center(&self, k: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        self.lo + (k as f64 + 0.5) * w
+    }
+
+    /// CSV rows: `bin_center,count,frequency`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("bin_center,count,frequency\n");
+        for (k, &c) in self.bins.iter().enumerate() {
+            s.push_str(&format!(
+                "{:.6},{},{:.6}\n",
+                self.bin_center(k),
+                c,
+                c as f64 / self.count.max(1) as f64
+            ));
+        }
+        s
+    }
+
+    /// Compact ASCII rendering for terminal reports.
+    pub fn sparkline(&self) -> String {
+        const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+        let max = self.bins.iter().copied().max().unwrap_or(0).max(1);
+        self.bins
+            .iter()
+            .map(|&c| GLYPHS[(c * 7 / max) as usize])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_and_edges() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for x in [0.0, 0.5, 9.99, 5.0, -1.0, 10.0, 100.0] {
+            h.push(x);
+        }
+        assert_eq!(h.bins[0], 2); // 0.0, 0.5
+        assert_eq!(h.bins[9], 1); // 9.99
+        assert_eq!(h.bins[5], 1); // 5.0
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.count, 7);
+    }
+
+    #[test]
+    fn auto_covers_all_points() {
+        let data: Vec<f64> = (0..1000).map(|i| (i as f64).sin() * 3.0).collect();
+        let h = Histogram::auto(&data, 32);
+        assert_eq!(h.underflow + h.overflow, 0);
+        assert_eq!(h.bins.iter().sum::<u64>(), 1000);
+    }
+
+    #[test]
+    fn csv_has_all_bins() {
+        let h = Histogram::auto(&[1.0, 2.0, 3.0], 4);
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 5); // header + 4 bins
+    }
+
+    #[test]
+    fn degenerate_data_ok() {
+        let h = Histogram::auto(&[], 4);
+        assert_eq!(h.count, 0);
+        let h2 = Histogram::auto(&[5.0, 5.0], 4);
+        assert_eq!(h2.count, 2);
+        assert!(!h2.sparkline().is_empty());
+    }
+}

@@ -1,0 +1,222 @@
+//! Micro-benchmark harness (criterion is outside the offline closure).
+//!
+//! `cargo bench` runs the `[[bench]]` binaries with `harness = false`; each
+//! uses this module: warmup, timed iterations until a wall-clock budget,
+//! mean / median / p10 / p90, optional throughput, and machine-readable JSON
+//! lines appended to `target/bench_results.jsonl` so EXPERIMENTS.md entries
+//! are regenerable.
+
+use std::time::{Duration, Instant};
+
+use crate::util::json::Value;
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    /// Optional items/sec (set via [`Bencher::throughput`]).
+    pub throughput: Option<f64>,
+}
+
+pub struct Bencher {
+    /// Max wall-clock budget for one benchmark (default 3s, env
+    /// `CORRSH_BENCH_SECS` overrides).
+    budget: Duration,
+    warmup: Duration,
+    min_iters: usize,
+    results: Vec<Stats>,
+    group: String,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        let secs = std::env::var("CORRSH_BENCH_SECS")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .unwrap_or(3.0);
+        Bencher {
+            budget: Duration::from_secs_f64(secs),
+            warmup: Duration::from_secs_f64((secs / 10.0).min(0.5)),
+            min_iters: 5,
+            results: Vec::new(),
+            group: String::new(),
+        }
+    }
+
+    pub fn group(&mut self, name: &str) -> &mut Self {
+        self.group = name.to_string();
+        println!("\n== {name} ==");
+        self
+    }
+
+    /// Benchmark `f`, which performs one logical iteration and returns a
+    /// value (kept opaque to stop the optimizer from deleting the work).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &mut Self {
+        self.bench_with_throughput(name, None, |_| f())
+    }
+
+    /// Benchmark with a known per-iteration item count (reports items/sec).
+    pub fn bench_items<T>(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: impl FnMut() -> T,
+    ) -> &mut Self {
+        self.bench_with_throughput(name, Some(items), |_| f())
+    }
+
+    fn bench_with_throughput<T>(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        mut f: impl FnMut(usize) -> T,
+    ) -> &mut Self {
+        // Warmup
+        let w0 = Instant::now();
+        let mut iters_hint = 0usize;
+        while w0.elapsed() < self.warmup || iters_hint < 1 {
+            std::hint::black_box(f(iters_hint));
+            iters_hint += 1;
+        }
+        // Timed
+        let mut samples: Vec<Duration> = Vec::new();
+        let t0 = Instant::now();
+        let mut i = 0usize;
+        while (t0.elapsed() < self.budget && samples.len() < 10_000) || samples.len() < self.min_iters
+        {
+            let s = Instant::now();
+            std::hint::black_box(f(i));
+            samples.push(s.elapsed());
+            i += 1;
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let median = samples[n / 2];
+        let p10 = samples[n / 10];
+        let p90 = samples[(n * 9) / 10];
+        let throughput = items.map(|it| it as f64 / mean.as_secs_f64());
+        let full = if self.group.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}/{}", self.group, name)
+        };
+        let stats = Stats { name: full.clone(), iters: n, mean, median, p10, p90, throughput };
+        match throughput {
+            Some(tp) => println!(
+                "{full:<52} time: [{} {} {}]  thrpt: {:.3e} items/s ({} iters)",
+                fmt_dur(p10),
+                fmt_dur(median),
+                fmt_dur(p90),
+                tp,
+                n
+            ),
+            None => println!(
+                "{full:<52} time: [{} {} {}] ({} iters)",
+                fmt_dur(p10),
+                fmt_dur(median),
+                fmt_dur(p90),
+                n
+            ),
+        }
+        self.results.push(stats);
+        self
+    }
+
+    /// Record a pre-measured scalar (e.g. pulls/arm from an experiment run)
+    /// so it lands in the JSONL alongside timings.
+    pub fn record_metric(&mut self, name: &str, value: f64, unit: &str) -> &mut Self {
+        let full = if self.group.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}/{}", self.group, name)
+        };
+        println!("{full:<52} {value:.4} {unit}");
+        self.results.push(Stats {
+            name: format!("{full} [{unit}]"),
+            iters: 1,
+            mean: Duration::from_secs_f64(value.max(0.0)),
+            median: Duration::ZERO,
+            p10: Duration::ZERO,
+            p90: Duration::ZERO,
+            throughput: Some(value),
+        });
+        self
+    }
+
+    /// Append all results to `target/bench_results.jsonl`.
+    pub fn write_jsonl(&self) {
+        let path = std::path::Path::new("target").join("bench_results.jsonl");
+        let _ = std::fs::create_dir_all("target");
+        let mut lines = String::new();
+        for s in &self.results {
+            let v = Value::from_pairs(vec![
+                ("name", s.name.as_str().into()),
+                ("iters", s.iters.into()),
+                ("mean_s", s.mean.as_secs_f64().into()),
+                ("median_s", s.median.as_secs_f64().into()),
+                ("p10_s", s.p10.as_secs_f64().into()),
+                ("p90_s", s.p90.as_secs_f64().into()),
+                (
+                    "throughput",
+                    s.throughput.map(Value::from).unwrap_or(Value::Null),
+                ),
+            ]);
+            lines.push_str(&crate::util::json::to_string(&v));
+            lines.push('\n');
+        }
+        use std::io::Write;
+        if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            let _ = f.write_all(lines.as_bytes());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        std::env::set_var("CORRSH_BENCH_SECS", "0.05");
+        let mut b = Bencher::new();
+        b.group("unit").bench("noop", || 1 + 1);
+        b.bench_items("sum", 1000, || (0..1000u64).sum::<u64>());
+        assert_eq!(b.results.len(), 2);
+        assert!(b.results[0].iters >= 5);
+        assert!(b.results[1].throughput.unwrap() > 0.0);
+        std::env::remove_var("CORRSH_BENCH_SECS");
+    }
+
+    #[test]
+    fn fmt_dur_scales() {
+        assert!(fmt_dur(Duration::from_nanos(12)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(12)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(12)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

@@ -1,0 +1,180 @@
+//! Launcher flag parsing: `corrsh <command> [--flag value] [--switch]`.
+//!
+//! Hand-rolled (clap is outside the offline closure). Flags accept
+//! `--key value` and `--key=value`; unknown flags are an error so typos
+//! fail fast.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// flags consumed by accessors — for unknown-flag detection
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for flag --{0}")]
+    MissingValue(String),
+    #[error("unknown flag(s): {0}")]
+    Unknown(String),
+    #[error("invalid value for --{flag}: {value:?} ({why})")]
+    Invalid { flag: String, value: String, why: String },
+    #[error("missing required flag --{0}")]
+    MissingRequired(String),
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless next token is another flag -> switch
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(flag.to_string(), v);
+                        }
+                        _ => out.switches.push(flag.to_string()),
+                    }
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, CliError> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn str_required(&self, key: &str) -> Result<String, CliError> {
+        self.str_opt(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| CliError::MissingRequired(key.to_string()))
+    }
+
+    pub fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.str_opt(key) {
+            None => Ok(None),
+            Some(s) => s.parse::<T>().map(Some).map_err(|e| CliError::Invalid {
+                flag: key.to_string(),
+                value: s.to_string(),
+                why: e.to_string(),
+            }),
+        }
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.parse_opt(key)?.unwrap_or(default))
+    }
+
+    pub fn switch(&self, key: &str) -> bool {
+        self.seen.borrow_mut().insert(key.to_string());
+        self.switches.iter().any(|s| s == key)
+    }
+
+    /// Call after all accessors: errors if the user passed flags nothing read.
+    pub fn finish(&self) -> Result<(), CliError> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<String> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !seen.contains(*k))
+            .map(|k| format!("--{k}"))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(CliError::Unknown(unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn command_and_flags() {
+        let a = parse("medoid --dataset rnaseq --n 2000 --verbose");
+        assert_eq!(a.command.as_deref(), Some("medoid"));
+        assert_eq!(a.str_opt("dataset"), Some("rnaseq"));
+        assert_eq!(a.parse_or("n", 0usize).unwrap(), 2000);
+        assert!(a.switch("verbose"));
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("repro --exp=table1 --trials=50");
+        assert_eq!(a.str_opt("exp"), Some("table1"));
+        assert_eq!(a.parse_or("trials", 0u32).unwrap(), 50);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("stats --fast");
+        assert!(a.switch("fast"));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("medoid --typo 3");
+        let _ = a.str_opt("dataset");
+        assert!(matches!(a.finish(), Err(CliError::Unknown(_))));
+    }
+
+    #[test]
+    fn invalid_value() {
+        let a = parse("x --n abc");
+        assert!(matches!(
+            a.parse_opt::<usize>("n"),
+            Err(CliError::Invalid { .. })
+        ));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("load file1.npy file2.npy");
+        assert_eq!(a.positional, vec!["file1.npy", "file2.npy"]);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--key value` where value starts with '-' but not '--'
+        let a = parse("x --offset -3");
+        assert_eq!(a.parse_or("offset", 0i32).unwrap(), -3);
+    }
+}

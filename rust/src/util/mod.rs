@@ -1,0 +1,23 @@
+//! In-tree substrates (this build is offline: the only external crates are
+//! the `xla` PJRT bindings plus `anyhow`/`thiserror` from its closure).
+//!
+//! * [`rng`] — deterministic xoshiro256++ RNG with the sampling primitives
+//!   the bandit algorithms need (without-replacement draws, shuffles,
+//!   gaussians, power laws).
+//! * [`json`] — minimal JSON parser/writer for the AOT `manifest.json`,
+//!   config files, experiment outputs and the server protocol.
+//! * [`cli`] — flag parser for the launcher.
+//! * [`threads`] — scoped parallel-for used by the native pull engine.
+//! * [`bench`] — micro-benchmark harness (criterion-style reporting).
+//! * [`testing`] — property-test loop (randomized cases, seed reported on
+//!   failure) used across the crate's unit tests.
+//! * [`npy`] — NumPy `.npy` v1 reader/writer for dataset interchange with
+//!   the python layer.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod npy;
+pub mod rng;
+pub mod testing;
+pub mod threads;

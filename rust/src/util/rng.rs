@@ -1,0 +1,296 @@
+//! Deterministic RNG: xoshiro256++ seeded via splitmix64.
+//!
+//! Every randomized component in the crate (generators, bandit algorithms,
+//! experiment trials) takes one of these explicitly — trials are reproduced
+//! by seed, mirroring the paper's §3.1 "the only variable across trials was
+//! the random seed, varied across 0–999".
+
+/// xoshiro256++ — fast, high-quality, 256-bit state.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the last Box-Muller draw.
+    gauss_spare: Option<f64>,
+}
+
+#[inline]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+/// splitmix64 — used to expand a u64 seed into the xoshiro state.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Deterministic RNG from a 64-bit seed.
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    /// Independent child stream (for per-trial / per-worker RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let mut sm = self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, gauss_spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = rotl(s[0].wrapping_add(s[3]), 23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = rotl(s[3], 45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> [0,1)
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box-Muller (with spare caching).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        // u in (0,1] to avoid ln(0)
+        let u = 1.0 - self.f64();
+        let v = self.f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * v;
+        self.gauss_spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Exponential with rate 1.
+    #[inline]
+    pub fn exponential(&mut self) -> f64 {
+        -(1.0 - self.f64()).ln()
+    }
+
+    /// Pareto-ish power law: returns x >= 1 with P(X > x) = x^-alpha.
+    #[inline]
+    pub fn power_law(&mut self, alpha: f64) -> f64 {
+        (1.0 - self.f64()).powf(-1.0 / alpha)
+    }
+
+    /// Bernoulli.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices drawn uniformly **without replacement** from
+    /// `[0, n)` — the correlated reference draw of Algorithm 1 line 3.
+    ///
+    /// Floyd's algorithm: O(k) expected time, O(k) space, order then
+    /// shuffled so the result is an exchangeable uniform sample.
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_without_replacement: k={k} > n={n}");
+        if k == n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            return all;
+        }
+        let mut chosen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            if chosen.insert(t) {
+                out.push(t);
+            } else {
+                chosen.insert(j);
+                out.push(j);
+            }
+        }
+        self.shuffle(&mut out);
+        out
+    }
+
+    /// `k` indices drawn uniformly **with replacement** from `[0, n)` —
+    /// the independent-sampling baselines (Med-dit, uncorrelated SH).
+    pub fn sample_with_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        (0..k).map(|_| self.below(n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::seeded(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::seeded(1);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_coverage() {
+        let mut r = Rng::seeded(2);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            // each bin ~10k; 5 sigma ~ 480
+            assert!((9_400..10_600).contains(&c), "biased bin: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::seeded(3);
+        let n = 200_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = r.gaussian();
+            s += z;
+            s2 += z * z;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn swr_distinct_and_uniform() {
+        let mut r = Rng::seeded(4);
+        for _ in 0..200 {
+            let k = r.range(1, 50);
+            let n = k + r.below(100);
+            let s = r.sample_without_replacement(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "duplicates in {s:?}");
+            assert!(s.iter().all(|&i| i < n));
+        }
+        // marginal uniformity: each index appears with prob k/n
+        let (n, k, trials) = (20, 5, 40_000);
+        let mut counts = vec![0usize; n];
+        for _ in 0..trials {
+            for i in r.sample_without_replacement(n, k) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials * k / n; // 10_000
+        for &c in &counts {
+            assert!((c as i64 - expect as i64).abs() < 600, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn swr_full_population_is_permutation() {
+        let mut r = Rng::seeded(5);
+        let mut s = r.sample_without_replacement(10, 10);
+        s.sort_unstable();
+        assert_eq!(s, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seeded(6);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn power_law_tail() {
+        let mut r = Rng::seeded(7);
+        let n = 100_000;
+        let alpha = 2.0;
+        let frac_gt2 = (0..n).filter(|_| r.power_law(alpha) > 2.0).count() as f64 / n as f64;
+        // P(X>2) = 2^-2 = 0.25
+        assert!((frac_gt2 - 0.25).abs() < 0.01, "{frac_gt2}");
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Rng::seeded(8);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

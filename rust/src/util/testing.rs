@@ -1,0 +1,97 @@
+//! Property-testing loop (proptest is outside the offline closure).
+//!
+//! [`check`] runs a property over many randomly generated cases; on failure
+//! it panics with the case's `Debug` and the per-case seed so the exact case
+//! is reproducible with [`replay`]. Used across the crate for the
+//! coordinator/batcher/state invariants DESIGN.md §8 calls out.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property: env `CORRSH_PROPTEST_CASES` or 128.
+pub fn default_cases() -> usize {
+    std::env::var("CORRSH_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` on `cases` random inputs drawn by `gen`.
+///
+/// `gen` receives a per-case seeded RNG; `prop` returns `Err(reason)` to
+/// fail. Panics with case debug + seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T, &mut Rng) -> Result<(), String>,
+) {
+    let base_seed: u64 = std::env::var("CORRSH_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut grng = Rng::seeded(seed);
+        let input = gen(&mut grng);
+        let mut prng = Rng::seeded(seed ^ 0xABCD);
+        if let Err(why) = prop(&input, &mut prng) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed:#x}):\n  \
+                 input: {input:?}\n  reason: {why}\n  \
+                 replay: CORRSH_PROPTEST_SEED={base_seed} (case {case})"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debug helper).
+pub fn replay<T: std::fmt::Debug>(
+    seed: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T, &mut Rng) -> Result<(), String>,
+) -> Result<(), String> {
+    let mut grng = Rng::seeded(seed);
+    let input = gen(&mut grng);
+    let mut prng = Rng::seeded(seed ^ 0xABCD);
+    prop(&input, &mut prng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 64, |r| (r.below(1000), r.below(1000)), |&(a, b), _| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_case() {
+        check("always-fails", 8, |r| r.below(10), |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn replay_reproduces() {
+        // find a failing seed then confirm replay fails identically
+        let gen = |r: &mut Rng| r.below(100);
+        let prop = |x: &usize, _: &mut Rng| if *x % 2 == 0 { Err("even".into()) } else { Ok(()) };
+        let mut failing = None;
+        for case in 0..64u64 {
+            let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+            if replay(seed, gen, prop).is_err() {
+                failing = Some(seed);
+                break;
+            }
+        }
+        let seed = failing.expect("some even draw in 64 cases");
+        assert!(replay(seed, gen, prop).is_err());
+        assert!(replay(seed, gen, prop).is_err(), "replay must be deterministic");
+    }
+}

@@ -1,0 +1,134 @@
+//! Scoped data-parallelism for the native pull engine and the experiment
+//! harness (no rayon in the offline closure; `std::thread::scope` is all we
+//! need — the workloads are large, regular chunks).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `CORRSH_THREADS` env override, else the
+/// available parallelism, else 4.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("CORRSH_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(chunk_start, chunk)` over mutable chunks of `out`, where chunk `c`
+/// covers `out[c*chunk_size .. ]`. Work is pre-split (regular chunks), which
+/// is the right shape for the dense distance sweeps.
+pub fn parallel_chunks_mut<T: Send, F>(out: &mut [T], chunk_size: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if threads <= 1 || out.len() <= chunk_size {
+        for (c, chunk) in out.chunks_mut(chunk_size).enumerate() {
+            f(c * chunk_size, chunk);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let chunks: Vec<(usize, &mut [T])> = {
+        let mut v = Vec::new();
+        let mut start = 0;
+        let mut rest = out;
+        while !rest.is_empty() {
+            let take = chunk_size.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            v.push((start, head));
+            start += take;
+            rest = tail;
+        }
+        v
+    };
+    // Work-stealing over the chunk list via an atomic cursor.
+    let slots: Vec<_> = chunks.into_iter().map(parking_cell::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(slots.len()) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                if let Some((start, chunk)) = parking_cell::take(&slots[i]) {
+                    f(start, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Tiny cell wrapper so chunks can be handed to exactly one worker.
+mod parking_cell {
+    use std::sync::Mutex;
+
+    pub type Cell<T> = Mutex<Option<T>>;
+
+    pub fn new<T>(v: T) -> Cell<T> {
+        Mutex::new(Some(v))
+    }
+
+    pub fn take<T>(c: &Cell<T>) -> Option<T> {
+        c.lock().unwrap().take()
+    }
+}
+
+/// Map `f` over `0..n` in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    parallel_chunks_mut(&mut out, 1.max(n / (threads * 4).max(1)), threads, |start, chunk| {
+        for (off, slot) in chunk.iter_mut().enumerate() {
+            *slot = Some(f(start + off));
+        }
+    });
+    out.into_iter().map(|x| x.expect("parallel_map slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let mut data = vec![0u32; 10_007];
+        parallel_chunks_mut(&mut data, 64, 8, |start, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x += (start + i) as u32 + 1;
+            }
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32 + 1, "slot {i} touched {x} times");
+        }
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let mut data = vec![0u8; 100];
+        parallel_chunks_mut(&mut data, 7, 1, |_, chunk| {
+            for x in chunk {
+                *x += 1;
+            }
+        });
+        assert!(data.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(1000, 8, |i| i * i);
+        for (i, &x) in out.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let mut data: Vec<u8> = vec![];
+        parallel_chunks_mut(&mut data, 4, 4, |_, _| panic!("no chunks expected"));
+        assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+}

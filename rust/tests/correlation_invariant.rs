@@ -1,0 +1,129 @@
+//! The paper's defining invariant, verified mechanically: **within every
+//! round of Correlated Sequential Halving, all surviving arms are scored
+//! against the SAME reference set J_r** (Algorithm 1 line 3) — drawn
+//! without replacement — while the uncorrelated ablation must NOT share
+//! references across arms. An instrumented engine records every
+//! (arms, refs) batch it serves.
+
+use std::sync::Mutex;
+
+use corrsh::bandits::{CorrSh, MedoidAlgorithm, RandBaseline, SeqHalving};
+use corrsh::distance::Metric;
+use corrsh::engine::PullEngine;
+use corrsh::util::rng::Rng;
+
+/// Deterministic fake dataset: d(i, j) = |i − j| mod 97 (cheap, asymmetric
+/// θ profile, no ties at the top for the sizes used here).
+struct RecordingEngine {
+    n: usize,
+    batches: Mutex<Vec<(Vec<usize>, Vec<usize>)>>,
+}
+
+impl RecordingEngine {
+    fn new(n: usize) -> Self {
+        RecordingEngine { n, batches: Mutex::new(Vec::new()) }
+    }
+
+    fn batches(&self) -> Vec<(Vec<usize>, Vec<usize>)> {
+        self.batches.lock().unwrap().clone()
+    }
+}
+
+impl PullEngine for RecordingEngine {
+    fn n(&self) -> usize {
+        self.n
+    }
+    fn dim(&self) -> usize {
+        1
+    }
+    fn metric(&self) -> Metric {
+        Metric::L1
+    }
+    fn pull(&self, a: usize, r: usize) -> f32 {
+        self.batches.lock().unwrap().push((vec![a], vec![r]));
+        ((a as i64 - r as i64).unsigned_abs() % 97) as f32 + a as f32 * 1e-3
+    }
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        self.batches.lock().unwrap().push((arms.to_vec(), refs.to_vec()));
+        for (k, &a) in arms.iter().enumerate() {
+            out[k] = refs
+                .iter()
+                .map(|&r| ((a as i64 - r as i64).unsigned_abs() % 97) as f32 + a as f32 * 1e-3)
+                .sum();
+        }
+    }
+}
+
+#[test]
+fn corrsh_shares_one_reference_set_per_round() {
+    for n in [17, 64, 300, 1000] {
+        let engine = RecordingEngine::new(n);
+        let res = CorrSh::with_pulls_per_arm(8.0).run(&engine, &mut Rng::seeded(n as u64));
+        let batches = engine.batches();
+        // one batch per round, arms = full survivor set
+        assert_eq!(batches.len(), res.rounds.len(), "n={n}: one pull_block per round");
+        let mut prev_survivors = n;
+        for (round, (arms, refs)) in res.rounds.iter().zip(&batches) {
+            assert_eq!(arms.len(), round.survivors, "n={n} r={}", round.r);
+            assert_eq!(refs.len(), round.t, "n={n} r={}", round.r);
+            assert!(arms.len() <= prev_survivors);
+            prev_survivors = arms.len();
+            // THE correlation invariant: the round used a single shared J_r
+            // (a single batch serves every arm) drawn without replacement:
+            let mut sorted = refs.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), refs.len(), "n={n}: J_r has duplicates");
+            assert!(sorted.iter().all(|&r| r < n));
+        }
+        // survivor sets nest: arms of round r+1 ⊆ arms of round r
+        for w in batches.windows(2) {
+            let prev: std::collections::HashSet<_> = w[0].0.iter().collect();
+            assert!(
+                w[1].0.iter().all(|a| prev.contains(a)),
+                "n={n}: survivors are not a subset of the previous round"
+            );
+        }
+    }
+}
+
+#[test]
+fn uncorrelated_sh_draws_independent_references() {
+    let n = 256;
+    let engine = RecordingEngine::new(n);
+    let _ = SeqHalving::with_pulls_per_arm(8.0).run(&engine, &mut Rng::seeded(3));
+    let batches = engine.batches();
+    // every batch is single-arm (per-arm reference draws)
+    assert!(batches.iter().all(|(arms, _)| arms.len() == 1));
+    // round 0: n arms, each with its own reference multiset; they must not
+    // all be identical (that would be correlation)
+    let round0: Vec<&Vec<usize>> = batches.iter().take(n).map(|(_, r)| r).collect();
+    let all_same = round0.windows(2).all(|w| w[0] == w[1]);
+    assert!(!all_same, "uncorrelated SH reused one reference set — ablation is broken");
+}
+
+#[test]
+fn rand_is_correlated_but_not_adaptive() {
+    let n = 128;
+    let engine = RecordingEngine::new(n);
+    let _ = RandBaseline::new(20).run(&engine, &mut Rng::seeded(1));
+    let batches = engine.batches();
+    // single batch: every arm vs one shared reference set, no adaptivity
+    assert_eq!(batches.len(), 1);
+    assert_eq!(batches[0].0.len(), n);
+    assert_eq!(batches[0].1.len(), 20);
+}
+
+#[test]
+fn corrsh_budget_monotone_in_rounds() {
+    // more budget ⇒ same or more refs per round, never fewer rounds of
+    // useful work (exact-exit may shorten the schedule)
+    let n = 500;
+    let engine = RecordingEngine::new(n);
+    let small = CorrSh::with_pulls_per_arm(4.0).run(&engine, &mut Rng::seeded(9));
+    let big = CorrSh::with_pulls_per_arm(64.0).run(&engine, &mut Rng::seeded(9));
+    for (a, b) in small.rounds.iter().zip(&big.rounds) {
+        assert!(b.t >= a.t, "round {}: bigger budget drew fewer refs", a.r);
+    }
+    assert!(big.pulls > small.pulls);
+}

@@ -1,0 +1,188 @@
+//! Integration: end-to-end behaviour across the public API — planted-medoid
+//! recovery on every dataset geometry, the experiment harness, the service
+//! protocol over TCP, and the CLI binary itself.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::process::Command;
+use std::sync::Arc;
+
+use corrsh::bandits::{CorrSh, MedoidAlgorithm};
+use corrsh::config::{AlgoConfig, RunConfig};
+use corrsh::data::synth::{Kind, SynthConfig};
+use corrsh::engine::NativeEngine;
+use corrsh::experiments::{figures, runner};
+use corrsh::util::json;
+use corrsh::util::rng::Rng;
+
+/// corrSH at a healthy budget recovers the exact medoid on every dataset
+/// kind with its paper metric.
+#[test]
+fn corrsh_recovers_exact_medoid_on_every_geometry() {
+    for kind in [Kind::RnaSeq, Kind::Netflix, Kind::Mnist, Kind::Gaussian] {
+        let cfg = SynthConfig { n: 400, dim: 256, seed: 11, density: 0.02, ..Default::default() };
+        let data = Arc::new(kind.generate(&cfg));
+        let metric = kind.default_metric();
+        let truth = runner::ground_truth(&data, metric, 100_000);
+        let engine = NativeEngine::with_threads(data.clone(), metric, 2);
+        let mut hits = 0;
+        let trials = 10;
+        for t in 0..trials {
+            let res = CorrSh::with_pulls_per_arm(96.0).run(&engine, &mut Rng::seeded(t));
+            hits += (res.best == truth) as usize;
+        }
+        assert!(
+            hits >= trials as usize - 1,
+            "{}: corrSH hit {hits}/{trials} (truth {truth})",
+            kind.name()
+        );
+    }
+}
+
+/// The correlation ablation: at equal budget, corrSH must be at least as
+/// accurate as uncorrelated SH on clustered data (averaged over budgets).
+#[test]
+fn correlation_never_hurts_on_clustered_data() {
+    let cfg = RunConfig {
+        dataset_kind: Kind::RnaSeq,
+        synth: SynthConfig { n: 300, dim: 256, seed: 13, ..Default::default() },
+        metric: corrsh::distance::Metric::L1,
+        ..Default::default()
+    };
+    let pts = figures::ablation_corr_vs_uncorr(&cfg, &[4.0, 16.0], 12, 0).unwrap();
+    let err_sum = |name: &str| -> f64 {
+        pts.iter().filter(|p| p.algo == name).map(|p| p.error_rate).sum()
+    };
+    let corr = err_sum("corrsh");
+    let uncorr = err_sum("seq-halving");
+    assert!(
+        corr <= uncorr + 0.10,
+        "correlated SH ({corr:.3}) worse than uncorrelated ({uncorr:.3})"
+    );
+}
+
+/// Table-1 row at toy scale: the paper's ordering (corrSH ≪ Med-dit ≪ RAND ≤
+/// exact in pulls) must hold.
+#[test]
+fn table1_row_preserves_paper_ordering() {
+    let cfg = RunConfig {
+        dataset_kind: Kind::RnaSeq,
+        synth: SynthConfig { n: 250, dim: 256, seed: 17, ..Default::default() },
+        metric: corrsh::distance::Metric::L1,
+        ..Default::default()
+    };
+    let row = corrsh::experiments::table1::run_row("rnaseq-test", &cfg, 4, 0).unwrap();
+    let pulls = |name: &str| {
+        row.cells
+            .iter()
+            .find(|c| c.algo.starts_with(name))
+            .map(|c| c.pulls_per_arm)
+            .unwrap()
+    };
+    assert!(pulls("corrSH") < pulls("Meddit"), "corrSH not cheaper than Med-dit");
+    assert!(pulls("Meddit") <= pulls("Rand") + 1.0, "Med-dit not cheaper than RAND(1000)");
+    assert!(pulls("Rand") <= pulls("Exact") + 1e-9);
+}
+
+/// Service protocol over real TCP.
+#[test]
+fn server_tcp_medoid_query() {
+    let state = corrsh::server::State::new();
+    let addr = corrsh::server::serve_background(state).unwrap();
+    let mut sock = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(sock.try_clone().unwrap());
+    let mut rpc = |req: &str| -> json::Value {
+        sock.write_all(req.as_bytes()).unwrap();
+        sock.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        json::parse(line.trim()).unwrap()
+    };
+    let r = rpc(r#"{"op":"register","name":"g","kind":"gaussian","n":250,"dim":8,"seed":2}"#);
+    assert_eq!(r.get("ok").as_bool(), Some(true));
+    let r = rpc(r#"{"op":"medoid","dataset":"g","algo":"corrsh","pulls_per_arm":64,"seed":5}"#);
+    assert_eq!(r.get("medoid").as_usize(), Some(0), "planted medoid over TCP");
+}
+
+/// The CLI binary works end to end (medoid + stats + gen).
+#[test]
+fn cli_binary_smoke() {
+    let bin = env!("CARGO_BIN_EXE_corrsh");
+    let out = Command::new(bin)
+        .args(["medoid", "--preset", "toy", "--n", "300", "--dim", "8", "--algo", "corrsh",
+               "--budget", "64", "--trials", "2"])
+        .output()
+        .expect("run corrsh medoid");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("medoid=0"), "toy planted medoid not found: {stdout}");
+
+    let out = Command::new(bin)
+        .args(["stats", "--preset", "toy", "--n", "200", "--dim", "8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("H2"));
+
+    let dir = std::env::temp_dir().join("corrsh-cli-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let npy = dir.join("x.npy");
+    let out = Command::new(bin)
+        .args(["gen", "--kind", "mnist", "--n", "10", "--dim", "64", "--out"])
+        .arg(&npy)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let loaded = corrsh::data::loader::load(&npy).unwrap();
+    assert_eq!((loaded.n(), loaded.dim()), (10, 64));
+
+    // unknown flags must fail fast
+    let out = Command::new(bin).args(["medoid", "--tpyo", "1"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+/// Config file round-trip through the CLI.
+#[test]
+fn cli_config_file() {
+    let bin = env!("CARGO_BIN_EXE_corrsh");
+    let dir = std::env::temp_dir().join("corrsh-cli-cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("run.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{"dataset": {"kind": "gaussian", "n": 200, "dim": 8, "seed": 3},
+            "algo": {"name": "corrsh", "pulls_per_arm": 64}}"#,
+    )
+    .unwrap();
+    let out = Command::new(bin)
+        .args(["medoid", "--config"])
+        .arg(&cfg_path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("medoid=0"));
+}
+
+/// AlgoConfig::build produces runnable algorithms for all variants.
+#[test]
+fn every_algo_config_runs() {
+    let data = Arc::new(Kind::Gaussian.generate(&SynthConfig {
+        n: 120,
+        dim: 8,
+        seed: 23,
+        ..Default::default()
+    }));
+    let engine = NativeEngine::with_threads(data, corrsh::distance::Metric::L2, 1);
+    for algo in [
+        AlgoConfig::CorrSh { pulls_per_arm: 32.0 },
+        AlgoConfig::SeqHalving { pulls_per_arm: 32.0 },
+        AlgoConfig::Meddit { delta: 0.0, cap: 5_000 },
+        AlgoConfig::Rand { refs_per_arm: 60 },
+        AlgoConfig::TopRank { phase1_refs: 40 },
+        AlgoConfig::Exact,
+    ] {
+        let res = algo.build(120).run(&engine, &mut Rng::seeded(0));
+        assert!(res.best < 120, "{} returned junk", algo.name());
+        assert!(res.pulls > 0);
+    }
+}
