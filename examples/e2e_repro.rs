@@ -15,27 +15,21 @@
 //! make artifacts && cargo run --release --example e2e_repro
 //! ```
 
-use std::sync::Arc;
+use corrsh::experiments::table1;
 
-use corrsh::bandits::{CorrSh, MedoidAlgorithm};
-use corrsh::config::RunConfig;
-use corrsh::data::synth::Kind;
-use corrsh::distance::Metric;
-use corrsh::engine::{NativeEngine, PjrtEngine, PullEngine};
-use corrsh::experiments::{runner, table1};
-use corrsh::runtime::Runtime;
-use corrsh::util::rng::Rng;
+#[cfg(feature = "pjrt")]
+fn pjrt_parity(scale: usize) -> anyhow::Result<()> {
+    use std::sync::Arc;
 
-fn main() -> anyhow::Result<()> {
-    let scale: usize = std::env::var("E2E_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
-    let trials: usize = std::env::var("E2E_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(25);
-    println!("e2e reproduction driver (scale 1/{scale}, {trials} trials/point)\n");
+    use corrsh::bandits::{CorrSh, MedoidAlgorithm};
+    use corrsh::config::RunConfig;
+    use corrsh::data::synth::Kind;
+    use corrsh::distance::Metric;
+    use corrsh::engine::{NativeEngine, PjrtEngine};
+    use corrsh::experiments::runner;
+    use corrsh::runtime::Runtime;
+    use corrsh::util::rng::Rng;
 
-    // ---- steps 1-3 + 5: the Table-1 matrix over the native engine ---------
-    let rows = table1::run(scale, trials, 0)?;
-
-    // ---- step 4: PJRT parity on a dense row --------------------------------
-    println!("\n[PJRT parity] corrSH over the AOT Pallas/JAX artifacts (mnist row, d=784)");
     match Runtime::open("artifacts") {
         Err(e) => {
             println!("  SKIPPED: {e:#} — run `make artifacts` first");
@@ -82,6 +76,26 @@ fn main() -> anyhow::Result<()> {
             println!("  parity ✓ — all three layers compose");
         }
     }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_parity(_scale: usize) -> anyhow::Result<()> {
+    println!("  SKIPPED: built without the `pjrt` feature (cargo ... --features pjrt)");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale: usize = std::env::var("E2E_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
+    let trials: usize = std::env::var("E2E_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(25);
+    println!("e2e reproduction driver (scale 1/{scale}, {trials} trials/point)\n");
+
+    // ---- steps 1-3 + 5: the Table-1 matrix over the native engine ---------
+    let rows = table1::run(scale, trials, 0)?;
+
+    // ---- step 4: PJRT parity on a dense row --------------------------------
+    println!("\n[PJRT parity] corrSH over the AOT Pallas/JAX artifacts (mnist row, d=784)");
+    pjrt_parity(scale)?;
 
     // ---- headline check: the paper's ordering holds -------------------------
     println!("\n[headline] per-row pull reduction vs exact computation:");

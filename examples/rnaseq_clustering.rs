@@ -16,7 +16,6 @@ use std::sync::Arc;
 
 use corrsh::bandits::{CorrSh, MedoidAlgorithm};
 use corrsh::data::synth::{rnaseq, SynthConfig};
-use corrsh::data::Data;
 use corrsh::distance::Metric;
 use corrsh::engine::{NativeEngine, PullEngine};
 use corrsh::util::rng::Rng;
@@ -57,7 +56,11 @@ fn main() {
         clusters: k,
         ..Default::default()
     }));
-    let engine = NativeEngine::with_threads(data.clone(), Metric::L1, 0usize.max(corrsh::util::threads::default_threads()));
+    let engine = NativeEngine::with_threads(
+        data.clone(),
+        Metric::L1,
+        corrsh::util::threads::default_threads(),
+    );
     let mut rng = Rng::seeded(99);
 
     // init: random distinct medoids
@@ -120,5 +123,4 @@ fn main() {
     println!(
         "(for scale: one exact medoid pass per cluster per iteration would cost ≳{naive} pulls)"
     );
-    let _ = Data::n; // silence unused-import-style lints on some toolchains
 }

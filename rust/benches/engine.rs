@@ -6,8 +6,7 @@ use std::sync::Arc;
 
 use corrsh::data::synth::{mnist, netflix, rnaseq, SynthConfig};
 use corrsh::distance::Metric;
-use corrsh::engine::{NativeEngine, PjrtEngine, PullEngine};
-use corrsh::runtime::Runtime;
+use corrsh::engine::{NativeEngine, PullEngine};
 use corrsh::util::bench::Bencher;
 use corrsh::util::rng::Rng;
 
@@ -17,7 +16,12 @@ fn main() {
 
     // ---- dense scalar kernels -------------------------------------------------
     b.group("distance kernels (d=784 dense)");
-    let data = Arc::new(mnist::generate(&SynthConfig { n: 2_048, dim: 784, seed: 1, ..Default::default() }));
+    let data = Arc::new(mnist::generate(&SynthConfig {
+        n: 2_048,
+        dim: 784,
+        seed: 1,
+        ..Default::default()
+    }));
     for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
         let e = NativeEngine::with_threads(data.clone(), metric, 1);
         let mut i = 0usize;
@@ -73,36 +77,46 @@ fn main() {
     }
 
     // ---- PJRT path --------------------------------------------------------------
-    match Runtime::open("artifacts") {
-        Err(e) => println!("(pjrt benches skipped: {e:#})"),
-        Ok(rt) => {
-            let rt = Arc::new(rt);
-            b.group("pull_block (pjrt AOT artifacts, d=784)");
-            for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
-                let e = PjrtEngine::new(data.clone(), metric, rt.clone()).unwrap();
-                e.warmup().unwrap();
-                b.bench_items(
-                    &format!("{metric}/1024x256"),
-                    (arms.len() * refs.len()) as u64,
-                    || {
-                        e.pull_block(&arms, &refs, &mut out);
-                        out[0]
-                    },
-                );
-            }
-            // bucket-size sweep: how much does padding waste at small rounds?
-            b.group("pjrt bucket sweep (l2, d=784)");
-            let e = PjrtEngine::new(data.clone(), Metric::L2, rt.clone()).unwrap();
-            for (na, nr) in [(64, 16), (256, 64), (1024, 256), (100, 37)] {
-                let a: Vec<usize> = (0..na).collect();
-                let r: Vec<usize> = (0..nr).collect();
-                let mut o = vec![0f32; na];
-                b.bench_items(&format!("{na}x{nr}"), (na * nr) as u64, || {
-                    e.pull_block(&a, &r, &mut o);
-                    o[0]
-                });
+    #[cfg(feature = "pjrt")]
+    {
+        use corrsh::engine::PjrtEngine;
+        use corrsh::runtime::Runtime;
+        match Runtime::open("artifacts") {
+            Err(e) => println!("(pjrt benches skipped: {e:#})"),
+            Ok(rt) => {
+                let rt = Arc::new(rt);
+                b.group("pull_block (pjrt AOT artifacts, d=784)");
+                for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+                    let e = PjrtEngine::new(data.clone(), metric, rt.clone()).unwrap();
+                    e.warmup().unwrap();
+                    b.bench_items(
+                        &format!("{metric}/1024x256"),
+                        (arms.len() * refs.len()) as u64,
+                        || {
+                            e.pull_block(&arms, &refs, &mut out);
+                            out[0]
+                        },
+                    );
+                }
+                // bucket-size sweep: how much does padding waste at small rounds?
+                b.group("pjrt bucket sweep (l2, d=784)");
+                let e = PjrtEngine::new(data.clone(), Metric::L2, rt.clone()).unwrap();
+                for (na, nr) in [(64, 16), (256, 64), (1024, 256), (100, 37)] {
+                    let a: Vec<usize> = (0..na).collect();
+                    let r: Vec<usize> = (0..nr).collect();
+                    let mut o = vec![0f32; na];
+                    b.bench_items(&format!("{na}x{nr}"), (na * nr) as u64, || {
+                        e.pull_block(&a, &r, &mut o);
+                        o[0]
+                    });
+                }
             }
         }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("(pjrt benches skipped: built without the `pjrt` feature)");
+
     b.write_jsonl();
+    // Machine-readable perf baseline for trajectory tracking across PRs.
+    b.write_bench_json("engine");
 }

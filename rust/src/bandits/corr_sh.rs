@@ -226,7 +226,8 @@ mod tests {
 
     #[test]
     fn works_on_sparse_l1() {
-        let data = rnaseq::generate(&SynthConfig { n: 300, dim: 256, seed: 6, ..Default::default() });
+        let data =
+            rnaseq::generate(&SynthConfig { n: 300, dim: 256, seed: 6, ..Default::default() });
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L1));
         // ground truth by exact sweep
         let truth = crate::bandits::Exact::new().run(&engine, &mut Rng::seeded(0)).best;

@@ -84,7 +84,8 @@ mod tests {
 
     #[test]
     fn matches_naive_double_loop() {
-        let data = gaussian::generate(&SynthConfig { n: 60, dim: 8, seed: 41, ..Default::default() });
+        let data =
+            gaussian::generate(&SynthConfig { n: 60, dim: 8, seed: 41, ..Default::default() });
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         let res = Exact::new().run(&engine, &mut Rng::seeded(0));
         // naive recomputation
@@ -107,7 +108,8 @@ mod tests {
 
     #[test]
     fn block_size_does_not_change_answer() {
-        let data = gaussian::generate(&SynthConfig { n: 97, dim: 8, seed: 42, ..Default::default() });
+        let data =
+            gaussian::generate(&SynthConfig { n: 97, dim: 8, seed: 42, ..Default::default() });
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         let a = Exact { block: 7 }.run(&engine, &mut Rng::seeded(0));
         let b = Exact { block: 1024 }.run(&engine, &mut Rng::seeded(0));

@@ -123,9 +123,12 @@ impl MedoidAlgorithm for Meddit {
         while pulls < cap {
             // candidate arm order by LCB
             let mut order: Vec<usize> = (0..n).collect();
+            let lcb_of = |arm: &Arm| {
+                arm.mean - if arm.exact { 0.0 } else { radius(arm.count, sigma) }
+            };
             order.sort_unstable_by(|&a, &b| {
-                let la = arms[a].mean - if arms[a].exact { 0.0 } else { radius(arms[a].count, sigma) };
-                let lb = arms[b].mean - if arms[b].exact { 0.0 } else { radius(arms[b].count, sigma) };
+                let la = lcb_of(&arms[a]);
+                let lb = lcb_of(&arms[b]);
                 la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
             });
 
@@ -256,6 +259,6 @@ mod tests {
         let e = engine(100);
         let res = Meddit::new(0.01).with_budget_cap(1_000).run(&e, &mut Rng::seeded(1));
         // may overshoot by at most one batch step
-        assert!(res.pulls <= 1_000 + (16 * 8) as u64 + 100, "pulls {}", res.pulls);
+        assert!(res.pulls <= 1_000 + 16 * 8 + 100, "pulls {}", res.pulls);
     }
 }

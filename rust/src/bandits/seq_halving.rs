@@ -111,7 +111,8 @@ mod tests {
 
     #[test]
     fn same_schedule_as_corrsh() {
-        let data = gaussian::generate(&SynthConfig { n: 200, dim: 8, seed: 1, ..Default::default() });
+        let data =
+            gaussian::generate(&SynthConfig { n: 200, dim: 8, seed: 1, ..Default::default() });
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         let a = SeqHalving::with_pulls_per_arm(16.0).run(&engine, &mut Rng::seeded(0));
         let b = crate::bandits::CorrSh::with_pulls_per_arm(16.0).run(&engine, &mut Rng::seeded(0));

@@ -100,7 +100,7 @@ mod tests {
                 for round in halving_rounds(n, budget) {
                     ledger
                         .charge_round(round.r, round.pulls)
-                        .map_err(|e| format!("{e}"))?;
+                        .map_err(|e| e.to_string())?;
                 }
                 Ok(())
             },

@@ -43,7 +43,13 @@ mod tests {
 
     #[test]
     fn origin_point_is_central() {
-        let cfg = SynthConfig { n: 300, dim: 16, seed: 8, outlier_frac: 0.05, ..Default::default() };
+        let cfg = SynthConfig {
+            n: 300,
+            dim: 16,
+            seed: 8,
+            outlier_frac: 0.05,
+            ..Default::default()
+        };
         let d = generate(&cfg);
         // exact θ_i sweep; arm 0 must be the argmin (planted medoid)
         let n = d.n();

@@ -131,6 +131,50 @@ mod tests {
         }
     }
 
+    /// The 4-lane unrolled kernels have a scalar remainder loop; pin the
+    /// `len % 4 != 0` tail path explicitly for every metric against a naive
+    /// scalar reference (the random-length test above covers it
+    /// statistically, this covers it deterministically).
+    #[test]
+    fn tail_lengths_match_naive_all_metrics() {
+        let mut rng = Rng::seeded(12);
+        // 0..=9 hits every remainder class twice; 127/129 exercise a long
+        // body plus a 3-lane / 1-lane tail.
+        let lens: Vec<usize> = (0..=9).chain([127, 129]).collect();
+        for len in lens {
+            let a: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.gaussian() as f32).collect();
+
+            let l1 = naive_l1(&a, &b);
+            assert!(
+                (l1_dense(&a, &b) - l1).abs() <= l1.abs().max(1.0) * 1e-5,
+                "l1 len {len}: {} vs {l1}",
+                l1_dense(&a, &b)
+            );
+
+            let l2 = naive_l2(&a, &b);
+            assert!(
+                (l2_dense(&a, &b) - l2).abs() <= l2.abs().max(1.0) * 1e-5,
+                "l2 len {len}: {} vs {l2}",
+                l2_dense(&a, &b)
+            );
+
+            let dot = naive_dot(&a, &b);
+            assert!(
+                (dot_dense(&a, &b) - dot).abs() <= dot.abs().max(1.0) * 1e-4,
+                "dot len {len}: {} vs {dot}",
+                dot_dense(&a, &b)
+            );
+
+            // cosine via the kernel norms must match a fully naive version
+            let (na, nb) = (norm(&a), norm(&b));
+            let cos = cosine_dense(&a, &b, na, nb);
+            let denom = naive_dot(&a, &a).sqrt() * naive_dot(&b, &b).sqrt();
+            let want = if denom <= 1e-24 { 1.0 } else { 1.0 - dot / denom };
+            assert!((cos - want).abs() < 1e-4, "cosine len {len}: {cos} vs {want}");
+        }
+    }
+
     #[test]
     fn zero_row_cosine_is_one() {
         let z = [0.0f32; 8];

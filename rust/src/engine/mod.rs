@@ -7,15 +7,17 @@
 //! * [`NativeEngine`] — vectorized CPU sweeps over the dataset (dense or
 //!   CSR), thread-parallel over arms. The wall-clock workhorse and the
 //!   correctness oracle for the PJRT path.
-//! * [`crate::engine::pjrt::PjrtEngine`] — executes the AOT-compiled
-//!   L1/L2 artifacts through the PJRT runtime, batching (arm×ref) tiles
-//!   into bucket-shaped jobs (see `runtime/` and `coordinator/planner`).
+//! * `PjrtEngine` (feature `pjrt`) — executes the AOT-compiled L1/L2
+//!   artifacts through the PJRT runtime, batching (arm×ref) tiles into
+//!   bucket-shaped jobs (see `runtime/` and `coordinator/planner`).
 //! * [`CountingEngine`] — decorator adding atomic pull accounting.
 
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use native::NativeEngine;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
 
 use crate::distance::Metric;
@@ -118,7 +120,8 @@ mod tests {
 
     #[test]
     fn counting_wrapper_counts_everything() {
-        let data = gaussian::generate(&SynthConfig { n: 30, dim: 8, seed: 0, ..Default::default() });
+        let data =
+            gaussian::generate(&SynthConfig { n: 30, dim: 8, seed: 0, ..Default::default() });
         let e = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         assert_eq!(e.pulls(), 0);
         let _ = e.pull(0, 1);

@@ -50,7 +50,8 @@ pub fn error_vs_budget(
     for &x in budgets {
         // corrSH: behaviour depends on the input budget (paper: solid dots)
         let mk = move || -> Box<dyn MedoidAlgorithm> { Box::new(CorrSh::with_pulls_per_arm(x)) };
-        let s = runner::summarize(&runner::run_trials(&mk, &data, cfg.metric, trials, seed), truth, n);
+        let outs = runner::run_trials(&mk, &data, cfg.metric, trials, seed);
+        let s = runner::summarize(&outs, truth, n);
         points.push(SweepPoint {
             algo: "corrsh".into(),
             pulls_per_arm: s.mean_pulls_per_arm,
@@ -61,7 +62,8 @@ pub fn error_vs_budget(
         // RAND at m = x refs/arm
         let m = (x.ceil() as usize).clamp(1, n);
         let mk = move || -> Box<dyn MedoidAlgorithm> { Box::new(RandBaseline::new(m)) };
-        let s = runner::summarize(&runner::run_trials(&mk, &data, cfg.metric, trials, seed), truth, n);
+        let outs = runner::run_trials(&mk, &data, cfg.metric, trials, seed);
+        let s = runner::summarize(&outs, truth, n);
         points.push(SweepPoint {
             algo: "rand".into(),
             pulls_per_arm: s.mean_pulls_per_arm,
@@ -74,7 +76,8 @@ pub fn error_vs_budget(
         let mk = move || -> Box<dyn MedoidAlgorithm> {
             Box::new(Meddit::new(1.0 / n as f64).with_budget_cap(cap))
         };
-        let s = runner::summarize(&runner::run_trials(&mk, &data, cfg.metric, trials, seed), truth, n);
+        let outs = runner::run_trials(&mk, &data, cfg.metric, trials, seed);
+        let s = runner::summarize(&outs, truth, n);
         points.push(SweepPoint {
             algo: "meddit".into(),
             pulls_per_arm: s.mean_pulls_per_arm,
@@ -201,7 +204,11 @@ pub fn fig3_difference_histograms(
     seed: u64,
 ) -> Result<Vec<Fig3Output>> {
     let data = runner::build_data(cfg);
-    let engine = NativeEngine::with_threads(data.clone(), cfg.metric, crate::util::threads::default_threads());
+    let engine = NativeEngine::with_threads(
+        data.clone(),
+        cfg.metric,
+        crate::util::threads::default_threads(),
+    );
     let mut rng = Rng::seeded(seed);
     let st = stats::instance_stats(&engine, 512.min(data.n()), &mut rng);
 

@@ -13,8 +13,7 @@ use crate::bandits::{CorrSh, MedoidAlgorithm};
 use crate::config::{EngineKind, RunConfig};
 use crate::data::Data;
 use crate::distance::Metric;
-use crate::engine::{NativeEngine, PjrtEngine, PullEngine};
-use crate::runtime::Runtime;
+use crate::engine::{NativeEngine, PullEngine};
 use crate::util::rng::Rng;
 use crate::util::threads;
 
@@ -72,7 +71,12 @@ pub fn run_trials(
         let mut rng = Rng::seeded(base_seed + t as u64);
         let algo = make_algo();
         let res = algo.run(&engine, &mut rng);
-        TrialOutcome { seed: base_seed + t as u64, best: res.best, pulls: res.pulls, wall: res.wall }
+        TrialOutcome {
+            seed: base_seed + t as u64,
+            best: res.best,
+            pulls: res.pulls,
+            wall: res.wall,
+        }
     })
 }
 
@@ -122,7 +126,8 @@ pub fn ground_truth(data: &Arc<Data>, metric: Metric, exact_limit: usize) -> usi
     counts.into_iter().max_by_key(|&(_, c)| c).map(|(i, _)| i).unwrap_or(0)
 }
 
-/// Build an engine per the config (PJRT requires artifacts for the dim).
+/// Build an engine per the config (PJRT requires artifacts for the dim and
+/// a build with the `pjrt` feature).
 pub fn build_engine(cfg: &RunConfig, data: &Arc<Data>) -> Result<Box<dyn PullEngine>> {
     Ok(match cfg.engine {
         EngineKind::Native => Box::new(NativeEngine::with_threads(
@@ -130,13 +135,25 @@ pub fn build_engine(cfg: &RunConfig, data: &Arc<Data>) -> Result<Box<dyn PullEng
             cfg.metric,
             threads::default_threads(),
         )),
-        EngineKind::Pjrt => {
-            let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
-            let e = PjrtEngine::new(data.clone(), cfg.metric, rt)?;
-            e.warmup()?;
-            Box::new(e)
-        }
+        EngineKind::Pjrt => build_pjrt_engine(cfg, data)?,
     })
+}
+
+#[cfg(feature = "pjrt")]
+fn build_pjrt_engine(cfg: &RunConfig, data: &Arc<Data>) -> Result<Box<dyn PullEngine>> {
+    let rt = Arc::new(crate::runtime::Runtime::open(&cfg.artifacts_dir)?);
+    let e = crate::engine::PjrtEngine::new(data.clone(), cfg.metric, rt)?;
+    e.warmup()?;
+    Ok(Box::new(e))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt_engine(_cfg: &RunConfig, _data: &Arc<Data>) -> Result<Box<dyn PullEngine>> {
+    anyhow::bail!(
+        "engine `pjrt` requires a build with the `pjrt` cargo feature \
+         (cargo run --features pjrt ...); this binary was built with the \
+         default pure-Rust engine set"
+    )
 }
 
 #[cfg(test)]
@@ -148,7 +165,13 @@ mod tests {
     fn toy_cfg() -> RunConfig {
         RunConfig {
             dataset_kind: Kind::Gaussian,
-            synth: SynthConfig { n: 200, dim: 12, seed: 5, outlier_frac: 0.05, ..Default::default() },
+            synth: SynthConfig {
+                n: 200,
+                dim: 12,
+                seed: 5,
+                outlier_frac: 0.05,
+                ..Default::default()
+            },
             metric: Metric::L2,
             algo: AlgoConfig::CorrSh { pulls_per_arm: 32.0 },
             ..Default::default()

@@ -33,6 +33,15 @@
 //!
 //! See `examples/` for end-to-end drivers and `DESIGN.md` for the complete
 //! system inventory and per-experiment index.
+//!
+//! ## Features
+//!
+//! * `default` — pure-Rust, fully offline: the native engine, every
+//!   algorithm, the experiment harness and the server.
+//! * `pjrt` — additionally compiles the XLA/PJRT runtime path
+//!   ([`runtime`], `engine::pjrt`). Executing artifacts requires linking
+//!   real PJRT bindings in place of the in-tree stub backend
+//!   (`runtime::xla`); see `README.md` for the build matrix.
 
 pub mod bandits;
 pub mod config;
@@ -42,6 +51,7 @@ pub mod distance;
 pub mod engine;
 pub mod experiments;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
 pub mod stats;

@@ -70,7 +70,13 @@ impl Manifest {
     }
 
     /// Exact bucket lookup.
-    pub fn find(&self, metric: Metric, arms: usize, refs: usize, dim: usize) -> Option<&ArtifactSpec> {
+    pub fn find(
+        &self,
+        metric: Metric,
+        arms: usize,
+        refs: usize,
+        dim: usize,
+    ) -> Option<&ArtifactSpec> {
         self.artifacts
             .iter()
             .find(|a| a.metric == metric && a.arms == arms && a.refs == refs && a.dim == dim)

@@ -10,8 +10,13 @@
 //! HLO *text* is the interchange format: jax ≥ 0.5 emits protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; `HloModuleProto::
 //! from_text_file` reassigns ids and round-trips cleanly.
+//!
+//! This module is compiled only with the `pjrt` cargo feature. The offline
+//! build links the in-tree [`xla`] stub backend; every layer above the raw
+//! client (manifest, planner, engine wiring) is real and tested.
 
 pub mod manifest;
+pub mod xla;
 
 pub use manifest::{ArtifactSpec, Manifest};
 

@@ -38,20 +38,11 @@ struct Entry {
 }
 
 /// Shared server state: the dataset registry + request counters.
+#[derive(Default)]
 pub struct State {
     datasets: Mutex<HashMap<String, Arc<Entry>>>,
     pub requests: AtomicU64,
     pub errors: AtomicU64,
-}
-
-impl Default for State {
-    fn default() -> Self {
-        State {
-            datasets: Mutex::new(HashMap::new()),
-            requests: AtomicU64::new(0),
-            errors: AtomicU64::new(0),
-        }
-    }
 }
 
 impl State {

@@ -105,7 +105,8 @@ impl Bencher {
         let mut samples: Vec<Duration> = Vec::new();
         let t0 = Instant::now();
         let mut i = 0usize;
-        while (t0.elapsed() < self.budget && samples.len() < 10_000) || samples.len() < self.min_iters
+        while (t0.elapsed() < self.budget && samples.len() < 10_000)
+            || samples.len() < self.min_iters
         {
             let s = Instant::now();
             std::hint::black_box(f(i));
@@ -168,30 +169,56 @@ impl Bencher {
         self
     }
 
+    fn stats_value(s: &Stats) -> Value {
+        Value::from_pairs(vec![
+            ("name", s.name.as_str().into()),
+            ("iters", s.iters.into()),
+            ("mean_s", s.mean.as_secs_f64().into()),
+            ("median_s", s.median.as_secs_f64().into()),
+            ("p10_s", s.p10.as_secs_f64().into()),
+            ("p90_s", s.p90.as_secs_f64().into()),
+            (
+                "throughput",
+                s.throughput.map(Value::from).unwrap_or(Value::Null),
+            ),
+        ])
+    }
+
     /// Append all results to `target/bench_results.jsonl`.
     pub fn write_jsonl(&self) {
         let path = std::path::Path::new("target").join("bench_results.jsonl");
         let _ = std::fs::create_dir_all("target");
         let mut lines = String::new();
         for s in &self.results {
-            let v = Value::from_pairs(vec![
-                ("name", s.name.as_str().into()),
-                ("iters", s.iters.into()),
-                ("mean_s", s.mean.as_secs_f64().into()),
-                ("median_s", s.median.as_secs_f64().into()),
-                ("p10_s", s.p10.as_secs_f64().into()),
-                ("p90_s", s.p90.as_secs_f64().into()),
-                (
-                    "throughput",
-                    s.throughput.map(Value::from).unwrap_or(Value::Null),
-                ),
-            ]);
-            lines.push_str(&crate::util::json::to_string(&v));
+            lines.push_str(&crate::util::json::to_string(&Self::stats_value(s)));
             lines.push('\n');
         }
         use std::io::Write;
         if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
             let _ = f.write_all(lines.as_bytes());
+        }
+    }
+
+    /// Write a machine-readable summary of this run to `BENCH_<tag>.json` in
+    /// the working directory (the package root under `cargo bench`).
+    ///
+    /// One file per bench binary, overwritten on each run: the perf-baseline
+    /// artifact CI uploads so perf-focused PRs have a trajectory to compare
+    /// against. Schema: `{"bench", "schema_version", "results": [Stats...]}`
+    /// with durations in seconds (see [`Stats`]).
+    pub fn write_bench_json(&self, tag: &str) {
+        let doc = Value::from_pairs(vec![
+            ("bench", tag.into()),
+            ("schema_version", 1usize.into()),
+            (
+                "results",
+                Value::Array(self.results.iter().map(Self::stats_value).collect()),
+            ),
+        ]);
+        let path = format!("BENCH_{tag}.json");
+        match std::fs::write(&path, crate::util::json::to_string(&doc) + "\n") {
+            Ok(()) => println!("[bench json] {path}"),
+            Err(e) => eprintln!("warn: could not write {path}: {e}"),
         }
     }
 }
@@ -210,6 +237,27 @@ mod tests {
         assert!(b.results[0].iters >= 5);
         assert!(b.results[1].throughput.unwrap() > 0.0);
         std::env::remove_var("CORRSH_BENCH_SECS");
+    }
+
+    #[test]
+    fn bench_json_schema() {
+        let s = Stats {
+            name: "group/case".into(),
+            iters: 3,
+            mean: Duration::from_millis(2),
+            median: Duration::from_millis(2),
+            p10: Duration::from_millis(1),
+            p90: Duration::from_millis(3),
+            throughput: Some(10.0),
+        };
+        let v = Bencher::stats_value(&s);
+        assert_eq!(v.get("name").as_str(), Some("group/case"));
+        assert_eq!(v.get("iters").as_usize(), Some(3));
+        assert!((v.get("mean_s").as_f64().unwrap() - 0.002).abs() < 1e-12);
+        assert_eq!(v.get("throughput").as_f64(), Some(10.0));
+        // serialized form round-trips through the in-tree parser
+        let text = crate::util::json::to_string(&v);
+        assert_eq!(crate::util::json::parse(&text).unwrap(), v);
     }
 
     #[test]

@@ -245,12 +245,12 @@ impl<'a> Parser<'a> {
                     Some(b'u') => {
                         let mut code = 0u32;
                         for _ in 0..4 {
-                            let c = self.bump().ok_or(ParseError {
+                            let c = self.bump().ok_or_else(|| ParseError {
                                 pos: self.pos,
                                 msg: "truncated \\u".into(),
                             })?;
                             code = code * 16
-                                + (c as char).to_digit(16).ok_or(ParseError {
+                                + (c as char).to_digit(16).ok_or_else(|| ParseError {
                                     pos: self.pos,
                                     msg: "bad hex in \\u".into(),
                                 })?;
@@ -343,9 +343,9 @@ fn write_value(v: &Value, out: &mut String) {
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Value::Num(x) => {
             if x.fract() == 0.0 && x.abs() < 9e15 {
-                out.push_str(&format!("{}", *x as i64));
+                out.push_str(&(*x as i64).to_string());
             } else {
-                out.push_str(&format!("{x}"));
+                out.push_str(&x.to_string());
             }
         }
         Value::Str(s) => escape(s, out),
@@ -463,8 +463,12 @@ mod tests {
                 0 => Value::Null,
                 1 => Value::Bool(rng.chance(0.5)),
                 2 => Value::Num((rng.f64() * 2e6).round() / 64.0 - 1e4),
-                3 => Value::Str((0..rng.below(12)).map(|_| char::from(32 + rng.below(94) as u8)).collect()),
-                4 => Value::Array((0..rng.below(5)).map(|_| random_value(rng, depth - 1)).collect()),
+                3 => Value::Str(
+                    (0..rng.below(12)).map(|_| char::from(32 + rng.below(94) as u8)).collect(),
+                ),
+                4 => {
+                    Value::Array((0..rng.below(5)).map(|_| random_value(rng, depth - 1)).collect())
+                }
                 _ => Value::Object(
                     (0..rng.below(5))
                         .map(|i| (format!("k{i}"), random_value(rng, depth - 1)))

@@ -1,5 +1,6 @@
 //! In-tree substrates (this build is offline: the only external crates are
-//! the `xla` PJRT bindings plus `anyhow`/`thiserror` from its closure).
+//! `anyhow` and `thiserror`; even the feature-gated PJRT path compiles
+//! against an in-tree stub backend rather than pulling `xla` bindings).
 //!
 //! * [`rng`] — deterministic xoshiro256++ RNG with the sampling primitives
 //!   the bandit algorithms need (without-replacement draws, shuffles,

@@ -94,13 +94,19 @@ pub fn read(path: impl AsRef<Path>) -> Result<Matrix> {
             if raw.len() < count * 4 {
                 bail!("npy truncated: want {} bytes, have {}", count * 4, raw.len());
             }
-            raw.chunks_exact(4).take(count).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+            raw.chunks_exact(4)
+                .take(count)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
         }
         "<f8" => {
             if raw.len() < count * 8 {
                 bail!("npy truncated");
             }
-            raw.chunks_exact(8).take(count).map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32).collect()
+            raw.chunks_exact(8)
+                .take(count)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+                .collect()
         }
         other => bail!("npy dtype {other} unsupported (want <f4 or <f8)"),
     };

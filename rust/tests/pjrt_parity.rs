@@ -4,6 +4,11 @@
 //! L1 (Pallas) + L2 (JAX graph) + runtime + coordinator.
 //!
 //! Skips (with a note) when `artifacts/` is absent; `make artifacts` first.
+//!
+//! Built only with the `pjrt` cargo feature (see `required-features` in
+//! Cargo.toml); the default offline build compiles it out entirely.
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::Arc;
 
