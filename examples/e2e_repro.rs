@@ -18,7 +18,7 @@
 use corrsh::experiments::table1;
 
 #[cfg(feature = "pjrt")]
-fn pjrt_parity(scale: usize) -> anyhow::Result<()> {
+fn pjrt_parity(scale: usize) -> corrsh::Result<()> {
     use std::sync::Arc;
 
     use corrsh::bandits::{CorrSh, MedoidAlgorithm};
@@ -69,7 +69,7 @@ fn pjrt_parity(scale: usize) -> anyhow::Result<()> {
                 res_pjrt.pulls,
                 t_pjrt.as_secs_f64()
             );
-            anyhow::ensure!(
+            corrsh::ensure!(
                 res_pjrt.best == res_native.best && res_pjrt.pulls == res_native.pulls,
                 "PJRT and native paths diverged!"
             );
@@ -80,12 +80,12 @@ fn pjrt_parity(scale: usize) -> anyhow::Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn pjrt_parity(_scale: usize) -> anyhow::Result<()> {
+fn pjrt_parity(_scale: usize) -> corrsh::Result<()> {
     println!("  SKIPPED: built without the `pjrt` feature (cargo ... --features pjrt)");
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> corrsh::Result<()> {
     let scale: usize = std::env::var("E2E_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(10);
     let trials: usize = std::env::var("E2E_TRIALS").ok().and_then(|s| s.parse().ok()).unwrap_or(25);
     println!("e2e reproduction driver (scale 1/{scale}, {trials} trials/point)\n");

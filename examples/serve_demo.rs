@@ -1,6 +1,7 @@
 //! Medoid-service demo: boots the TCP server on an ephemeral port,
-//! registers a dataset, and issues a few client queries over the
-//! line-delimited JSON protocol.
+//! registers a dataset, and walks the line-delimited JSON protocol —
+//! including the PR-2 ops: `medoid_batch`, `metrics` (watch the engine
+//! session cache go from miss to hit), `unregister`, and `shutdown`.
 //!
 //! ```bash
 //! cargo run --release --example serve_demo
@@ -37,7 +38,8 @@ fn main() {
     );
     assert_eq!(r.get("ok").as_bool(), Some(true));
 
-    // three medoid queries with different algorithms / budgets
+    // Three medoid queries with different algorithms / budgets. The first
+    // pays the one-time engine preparation; the rest hit the session cache.
     for req in [
         r#"{"op":"medoid","dataset":"cells","algo":"corrsh","pulls_per_arm":16,"seed":7}"#,
         r#"{"op":"medoid","dataset":"cells","algo":"corrsh","pulls_per_arm":64,"seed":7}"#,
@@ -47,11 +49,31 @@ fn main() {
         assert_eq!(r.get("ok").as_bool(), Some(true), "query failed: {r}");
     }
 
+    // A whole seed sweep in one request, answered against the same cached
+    // session.
+    let r = rpc(
+        &mut sock,
+        &mut reader,
+        r#"{"op":"medoid_batch","dataset":"cells","pulls_per_arm":24,"seeds":[0,1,2,3,4,5,6,7]}"#,
+    );
+    assert_eq!(r.get("jobs").as_usize(), Some(8));
+
     let r = rpc(&mut sock, &mut reader, r#"{"op":"stats","dataset":"cells"}"#);
     println!(
         "\ninstance hardness: H2/H̃2 gain = {:.2}",
         r.get("gain_ratio").as_f64().unwrap_or(f64::NAN)
     );
+
+    let m = rpc(&mut sock, &mut reader, r#"{"op":"metrics"}"#);
+    println!(
+        "\nengine cache: {} hits / {} misses (preparation paid once); queue depth {}",
+        m.get("engine_cache").get("hits").as_u64().unwrap_or(0),
+        m.get("engine_cache").get("misses").as_u64().unwrap_or(0),
+        m.get("executor").get("queue_depth").as_u64().unwrap_or(0),
+    );
+
+    rpc(&mut sock, &mut reader, r#"{"op":"unregister","name":"cells"}"#);
+    rpc(&mut sock, &mut reader, r#"{"op":"shutdown"}"#);
     println!(
         "requests served: {}",
         state.requests.load(std::sync::atomic::Ordering::Relaxed)

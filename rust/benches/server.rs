@@ -1,0 +1,101 @@
+//! E11 — server-throughput bench (the PR-2 headline): protocol-level
+//! medoid queries per second through `State::handle`, cold-engine vs
+//! cached-engine, plus the executor path end to end. Emits
+//! `BENCH_server.json` (schema_version 1) as a CI perf artifact next to
+//! `BENCH_engine.json`.
+//!
+//! "Cold" re-registers the dataset before every query, which invalidates
+//! the session cache and forces the O(n·d) preparation pass — the cost
+//! every query paid before PR 2. "Cached" is the server's steady state.
+
+use corrsh::server::{Executor, State};
+use corrsh::util::bench::Bencher;
+use corrsh::util::json;
+
+fn req(s: &str) -> json::Value {
+    json::parse(s).unwrap()
+}
+
+fn main() {
+    let n: usize = std::env::var("CORRSH_BENCH_SERVER_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2000);
+    let register = format!(
+        r#"{{"op":"register","name":"bench","kind":"rnaseq","n":{n},"dim":256,"seed":1}}"#
+    );
+    let medoid = r#"{"op":"medoid","dataset":"bench","algo":"corrsh","pulls_per_arm":16,"seed":7}"#;
+
+    let mut b = Bencher::new();
+    b.group(&format!("server medoid queries (rnaseq n={n}, corrsh@16ppa)"));
+
+    // Cold: drop the cached session between queries so every query pays
+    // the O(n·d) preparation pass — but NOT dataset regeneration, which
+    // the cache does not amortize and would overstate the speedup.
+    {
+        let state = State::new();
+        let r = state.handle(&req(&register));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        let q = req(medoid);
+        b.bench_items("cold-engine", 1, || {
+            state.engine_cache().invalidate("bench");
+            let r = state.handle(&q);
+            assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+            r.get("medoid").as_usize()
+        });
+        let m = state.handle(&req(r#"{"op":"metrics"}"#));
+        b.record_metric(
+            "cold/engine_preparations",
+            m.get("engine_cache").get("misses").as_u64().unwrap_or(0) as f64,
+            "preparations",
+        );
+    }
+
+    // Cached: register once, query many times against the shared session.
+    {
+        let state = State::new();
+        let r = state.handle(&req(&register));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        let q = req(medoid);
+        b.bench_items("cached-engine", 1, || {
+            let r = state.handle(&q);
+            assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+            r.get("medoid").as_usize()
+        });
+        let m = state.handle(&req(r#"{"op":"metrics"}"#));
+        b.record_metric(
+            "cached/engine_preparations",
+            m.get("engine_cache").get("misses").as_u64().unwrap_or(0) as f64,
+            "preparations",
+        );
+    }
+
+    // Executor path: the same cached query through the bounded queue (what
+    // a TCP client exercises, minus the socket).
+    {
+        let state = State::new();
+        let r = state.handle(&req(&register));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        let exec = Executor::new(state, 0, 256);
+        let q = req(medoid);
+        b.bench_items("cached-engine-via-executor", 1, || {
+            let r = exec.submit(q.clone());
+            assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+            r.get("medoid").as_usize()
+        });
+        // Batch amortization: 16 seeds per request.
+        let batch = req(
+            r#"{"op":"medoid_batch","dataset":"bench","pulls_per_arm":16,
+                "seed":0,"count":16}"#,
+        );
+        b.bench_items("medoid_batch-16-seeds", 16, || {
+            let r = exec.submit(batch.clone());
+            assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+            r.get("jobs").as_usize()
+        });
+        exec.shutdown();
+    }
+
+    b.write_jsonl();
+    b.write_bench_json("server");
+}

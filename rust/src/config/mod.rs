@@ -16,7 +16,7 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::data::synth::{Kind, SynthConfig};
 use crate::distance::Metric;
@@ -32,13 +32,13 @@ pub enum EngineKind {
 }
 
 impl std::str::FromStr for EngineKind {
-    type Err = anyhow::Error;
+    type Err = crate::util::error::Error;
 
     fn from_str(s: &str) -> Result<Self> {
         match s.to_ascii_lowercase().as_str() {
             "native" => Ok(EngineKind::Native),
             "pjrt" | "xla" => Ok(EngineKind::Pjrt),
-            other => anyhow::bail!("unknown engine {other:?} (want native|pjrt)"),
+            other => crate::bail!("unknown engine {other:?} (want native|pjrt)"),
         }
     }
 }
@@ -101,8 +101,48 @@ impl AlgoConfig {
             "rand" => AlgoConfig::Rand { refs_per_arm: f("refs_per_arm", 1000.0) as usize },
             "toprank" => AlgoConfig::TopRank { phase1_refs: f("phase1_refs", 1000.0) as usize },
             "exact" => AlgoConfig::Exact,
-            other => anyhow::bail!("unknown algorithm {other:?}"),
+            other => crate::bail!("unknown algorithm {other:?}"),
         })
+    }
+}
+
+/// Server runtime shape: the `serve` command and `server::Executor`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerConfig {
+    pub addr: String,
+    /// Executor worker threads (0 → `threads::default_threads()`).
+    pub workers: usize,
+    /// Bounded request-queue capacity; submitters block (backpressure)
+    /// once it is full.
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7878".to_string(), workers: 0, queue_cap: 256 }
+    }
+}
+
+impl ServerConfig {
+    /// Parse from the optional `"server"` object of a config file:
+    /// `{"server": {"addr": "0.0.0.0:7878", "workers": 8, "queue_cap": 512}}`.
+    pub fn from_json_value(v: &Value) -> Result<Self> {
+        let mut cfg = ServerConfig::default();
+        let s = v.get("server");
+        if matches!(s, Value::Null) {
+            return Ok(cfg);
+        }
+        if let Some(addr) = s.get("addr").as_str() {
+            cfg.addr = addr.to_string();
+        }
+        if let Some(w) = s.get("workers").as_usize() {
+            cfg.workers = w;
+        }
+        if let Some(c) = s.get("queue_cap").as_usize() {
+            crate::ensure!(c >= 1, "server.queue_cap must be >= 1");
+            cfg.queue_cap = c;
+        }
+        Ok(cfg)
     }
 }
 
@@ -232,7 +272,7 @@ impl RunConfig {
                 cfg.synth = SynthConfig { n: 1_000, dim: 16, ..Default::default() };
                 cfg.metric = Metric::L2;
             }
-            other => anyhow::bail!(
+            other => crate::bail!(
                 "unknown preset {other:?} (want rnaseq20k|rnaseq100k|netflix20k|netflix100k|mnist|toy)"
             ),
         }
@@ -303,6 +343,22 @@ mod tests {
             assert_eq!(algo.name(), name);
             let _ = algo.build(100);
         }
+    }
+
+    #[test]
+    fn server_config_parses_and_defaults() {
+        let cfg = ServerConfig::from_json_value(&json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg, ServerConfig::default());
+        let v = json::parse(
+            r#"{"server": {"addr": "0.0.0.0:9000", "workers": 8, "queue_cap": 512}}"#,
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_json_value(&v).unwrap();
+        assert_eq!(cfg.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.workers, 8);
+        assert_eq!(cfg.queue_cap, 512);
+        let bad = json::parse(r#"{"server": {"queue_cap": 0}}"#).unwrap();
+        assert!(ServerConfig::from_json_value(&bad).is_err());
     }
 
     #[test]

@@ -38,8 +38,8 @@ impl BudgetLedger {
     /// Charge a round's pulls. Panics (debug) / errors if the hard cap
     /// (budget + slack) would be breached — a scheduling bug, not a runtime
     /// condition.
-    pub fn charge_round(&mut self, round: usize, pulls: u64) -> anyhow::Result<()> {
-        anyhow::ensure!(
+    pub fn charge_round(&mut self, round: usize, pulls: u64) -> crate::Result<()> {
+        crate::ensure!(
             self.spent + pulls <= self.budget + self.slack,
             "round {round} would overspend: spent {} + {pulls} > budget {} + slack {}",
             self.spent,

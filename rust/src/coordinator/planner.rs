@@ -47,8 +47,8 @@ pub struct BatchPlanner {
 impl BatchPlanner {
     /// `buckets`: the (A, R) shapes present in the artifact manifest for the
     /// relevant (metric, dim).
-    pub fn new(mut buckets: Vec<(usize, usize)>) -> anyhow::Result<Self> {
-        anyhow::ensure!(!buckets.is_empty(), "no buckets available");
+    pub fn new(mut buckets: Vec<(usize, usize)>) -> crate::Result<Self> {
+        crate::ensure!(!buckets.is_empty(), "no buckets available");
         buckets.sort_unstable();
         buckets.dedup();
         let mut arm_sizes: Vec<usize> = buckets.iter().map(|b| b.0).collect();

@@ -11,7 +11,8 @@
 use std::io::{BufRead, BufReader};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 use crate::data::{Data, DenseData, SparseData};
 use crate::util::npy;

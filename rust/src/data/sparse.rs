@@ -22,19 +22,19 @@ impl SparseData {
         indptr: Vec<usize>,
         indices: Vec<u32>,
         values: Vec<f32>,
-    ) -> anyhow::Result<Self> {
-        anyhow::ensure!(indptr.len() == n + 1, "indptr len {} != n+1", indptr.len());
-        anyhow::ensure!(indptr[0] == 0, "indptr[0] != 0");
-        anyhow::ensure!(*indptr.last().unwrap() == indices.len(), "indptr tail mismatch");
-        anyhow::ensure!(indices.len() == values.len(), "indices/values mismatch");
+    ) -> crate::Result<Self> {
+        crate::ensure!(indptr.len() == n + 1, "indptr len {} != n+1", indptr.len());
+        crate::ensure!(indptr[0] == 0, "indptr[0] != 0");
+        crate::ensure!(*indptr.last().unwrap() == indices.len(), "indptr tail mismatch");
+        crate::ensure!(indices.len() == values.len(), "indices/values mismatch");
         for i in 0..n {
-            anyhow::ensure!(indptr[i] <= indptr[i + 1], "indptr not monotone at {i}");
+            crate::ensure!(indptr[i] <= indptr[i + 1], "indptr not monotone at {i}");
             let row = &indices[indptr[i]..indptr[i + 1]];
             for w in row.windows(2) {
-                anyhow::ensure!(w[0] < w[1], "row {i} indices not strictly sorted");
+                crate::ensure!(w[0] < w[1], "row {i} indices not strictly sorted");
             }
             if let Some(&last) = row.last() {
-                anyhow::ensure!((last as usize) < dim, "row {i} index {last} >= dim {dim}");
+                crate::ensure!((last as usize) < dim, "row {i} index {last} >= dim {dim}");
             }
         }
         Ok(SparseData { n, dim, indptr, indices, values })

@@ -85,7 +85,7 @@ impl Kind {
 }
 
 impl std::str::FromStr for Kind {
-    type Err = anyhow::Error;
+    type Err = crate::util::error::Error;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
@@ -93,7 +93,7 @@ impl std::str::FromStr for Kind {
             "netflix" => Ok(Kind::Netflix),
             "mnist" | "mnist-zeros" => Ok(Kind::Mnist),
             "gaussian" | "toy" => Ok(Kind::Gaussian),
-            other => anyhow::bail!("unknown dataset kind {other:?}"),
+            other => crate::bail!("unknown dataset kind {other:?}"),
         }
     }
 }

@@ -74,14 +74,14 @@ impl fmt::Display for Metric {
 }
 
 impl FromStr for Metric {
-    type Err = anyhow::Error;
+    type Err = crate::util::error::Error;
 
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.to_ascii_lowercase().as_str() {
             "l1" | "manhattan" => Ok(Metric::L1),
             "l2" | "euclidean" => Ok(Metric::L2),
             "cosine" | "cos" => Ok(Metric::Cosine),
-            other => anyhow::bail!("unknown metric {other:?} (want l1|l2|cosine)"),
+            other => crate::bail!("unknown metric {other:?} (want l1|l2|cosine)"),
         }
     }
 }

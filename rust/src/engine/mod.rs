@@ -5,18 +5,25 @@
 //! concrete engines are:
 //!
 //! * [`NativeEngine`] — vectorized CPU sweeps over the dataset (dense or
-//!   CSR), thread-parallel over arms. The wall-clock workhorse and the
-//!   correctness oracle for the PJRT path.
+//!   CSR), thread-parallel over arms via the persistent worker pool. The
+//!   wall-clock workhorse and the correctness oracle for the PJRT path.
+//!   Construction is split: [`PreparedEngine`] holds the O(n·d)
+//!   precomputations (norms, row-reductions) as a shareable session, and
+//!   [`NativeEngine::from_prepared`] wraps one for free.
+//! * [`EngineCache`] — keyed `(dataset, metric) → Arc<PreparedEngine>`
+//!   cache so repeated queries (the server's steady state) prepare once.
 //! * `PjrtEngine` (feature `pjrt`) — executes the AOT-compiled L1/L2
 //!   artifacts through the PJRT runtime, batching (arm×ref) tiles into
 //!   bucket-shaped jobs (see `runtime/` and `coordinator/planner`).
 //! * [`CountingEngine`] — decorator adding atomic pull accounting.
 
+pub mod cache;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-pub use native::NativeEngine;
+pub use cache::EngineCache;
+pub use native::{NativeEngine, PreparedEngine};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
 

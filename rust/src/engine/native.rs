@@ -12,7 +12,13 @@ use crate::distance::Metric;
 use crate::engine::PullEngine;
 use crate::util::threads;
 
-pub struct NativeEngine {
+/// The amortizable half of a native engine: the dataset plus every
+/// precomputation the pull hot paths read (cosine norms, sparse
+/// row-reductions). Preparing costs O(n·d); cloning the `Arc` is free —
+/// the engine cache ([`crate::engine::EngineCache`]) and the trial runner
+/// share one `PreparedEngine` across many queries/trials so repeated
+/// queries pay preparation exactly once.
+pub struct PreparedEngine {
     data: Arc<Data>,
     metric: Metric,
     /// Precomputed row norms (cosine only).
@@ -21,15 +27,11 @@ pub struct NativeEngine {
     /// block hot path visit only the *arm's* support against a densified
     /// reference row (see `sparse_block`).
     row_reduction: Option<Arc<Vec<f32>>>,
-    threads: usize,
 }
 
-impl NativeEngine {
-    pub fn new(data: Data, metric: Metric) -> Self {
-        Self::with_threads(Arc::new(data), metric, threads::default_threads())
-    }
-
-    pub fn with_threads(data: Arc<Data>, metric: Metric, threads: usize) -> Self {
+impl PreparedEngine {
+    /// Run the O(n·d) preparation pass (norms / row-reductions).
+    pub fn prepare(data: Arc<Data>, metric: Metric) -> Self {
         let norms = match metric {
             Metric::Cosine => Some(Arc::new(data.norms())),
             _ => None,
@@ -45,17 +47,51 @@ impl NativeEngine {
             )),
             _ => None,
         };
-        NativeEngine { data, metric, norms, row_reduction, threads }
+        PreparedEngine { data, metric, norms, row_reduction }
     }
 
     pub fn data(&self) -> &Arc<Data> {
         &self.data
     }
 
+    pub fn metric(&self) -> Metric {
+        self.metric
+    }
+}
+
+pub struct NativeEngine {
+    prepared: Arc<PreparedEngine>,
+    threads: usize,
+}
+
+impl NativeEngine {
+    pub fn new(data: Data, metric: Metric) -> Self {
+        Self::with_threads(Arc::new(data), metric, threads::default_threads())
+    }
+
+    pub fn with_threads(data: Arc<Data>, metric: Metric, threads: usize) -> Self {
+        Self::from_prepared(Arc::new(PreparedEngine::prepare(data, metric)), threads)
+    }
+
+    /// Wrap an already-prepared session — zero preparation cost. This is
+    /// the cached-engine fast path the server uses on every query after
+    /// the first.
+    pub fn from_prepared(prepared: Arc<PreparedEngine>, threads: usize) -> Self {
+        NativeEngine { prepared, threads }
+    }
+
+    pub fn data(&self) -> &Arc<Data> {
+        &self.prepared.data
+    }
+
+    pub fn prepared(&self) -> &Arc<PreparedEngine> {
+        &self.prepared
+    }
+
     #[inline]
     fn dist(&self, i: usize, j: usize) -> f32 {
-        self.data
-            .distance(self.metric, i, j, self.norms.as_ref().map(|n| n.as_slice()))
+        let p = &*self.prepared;
+        p.data.distance(p.metric, i, j, p.norms.as_ref().map(|n| n.as_slice()))
     }
 
     /// Sparse block fast path (§Perf optimization #1, EXPERIMENTS.md):
@@ -75,9 +111,9 @@ impl NativeEngine {
         let work = arms.len() * refs.len();
         let threads = if work < 4096 { 1 } else { self.threads };
         let chunk = arms.len().div_ceil(threads.max(1)).max(1);
-        let metric = self.metric;
-        let norms = self.norms.as_deref().map(|v| v.as_slice());
-        let redux = self.row_reduction.as_deref().map(|v| v.as_slice());
+        let metric = self.prepared.metric;
+        let norms = self.prepared.norms.as_deref().map(|v| v.as_slice());
+        let redux = self.prepared.row_reduction.as_deref().map(|v| v.as_slice());
 
         threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
             let mut scratch = vec![0f32; dim];
@@ -141,15 +177,15 @@ impl NativeEngine {
 
 impl PullEngine for NativeEngine {
     fn n(&self) -> usize {
-        self.data.n()
+        self.prepared.data.n()
     }
 
     fn dim(&self) -> usize {
-        self.data.dim()
+        self.prepared.data.dim()
     }
 
     fn metric(&self) -> Metric {
-        self.metric
+        self.prepared.metric
     }
 
     #[inline]
@@ -164,7 +200,7 @@ impl PullEngine for NativeEngine {
         // reference costs O(d), amortized over the arms that read it: only
         // worth it when several arms share the refs (which is exactly the
         // correlated-round shape).
-        if let Data::Sparse(s) = &*self.data {
+        if let Data::Sparse(s) = &*self.prepared.data {
             if arms.len() >= 4 {
                 return self.sparse_block(s, arms, refs, out);
             }
@@ -191,11 +227,11 @@ impl PullEngine for NativeEngine {
         let m = refs.len();
         // Same densified-reference trick as sparse_block, writing elements
         // instead of accumulating (stats-engine hot path, §Perf).
-        if let (Data::Sparse(s), true) = (&*self.data, arms.len() >= 4) {
+        if let (Data::Sparse(s), true) = (&*self.prepared.data, arms.len() >= 4) {
             let dim = s.dim;
-            let metric = self.metric;
-            let norms = self.norms.as_deref().map(|v| v.as_slice());
-            let redux = self.row_reduction.as_deref().map(|v| v.as_slice());
+            let metric = self.prepared.metric;
+            let norms = self.prepared.norms.as_deref().map(|v| v.as_slice());
+            let redux = self.prepared.row_reduction.as_deref().map(|v| v.as_slice());
             let threads = if out.len() < 4096 { 1 } else { self.threads };
             let chunk = (arms.len().div_ceil(threads.max(1)).max(1)) * m;
             threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
@@ -312,6 +348,26 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn prepared_engine_is_shareable() {
+        let cfg = SynthConfig { n: 90, dim: 64, seed: 9, density: 0.08, ..Default::default() };
+        let data = Arc::new(netflix::generate(&cfg));
+        let prepared = Arc::new(PreparedEngine::prepare(data.clone(), Metric::Cosine));
+        // Two engines over one preparation must agree with a from-scratch
+        // build (same norms, same distances).
+        let a = NativeEngine::from_prepared(prepared.clone(), 1);
+        let b = NativeEngine::from_prepared(prepared.clone(), 4);
+        let fresh = NativeEngine::with_threads(data, Metric::Cosine, 1);
+        assert_eq!(prepared.metric(), Metric::Cosine);
+        assert_eq!(prepared.data().n(), 90);
+        for (i, j) in [(0usize, 1usize), (5, 44), (89, 3)] {
+            assert_eq!(a.pull(i, j), fresh.pull(i, j));
+            assert_eq!(b.pull(i, j), fresh.pull(i, j));
+        }
+        // The Arc really is shared, not re-prepared per engine.
+        assert!(Arc::ptr_eq(a.prepared(), b.prepared()));
     }
 
     #[test]

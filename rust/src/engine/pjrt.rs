@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::coordinator::BatchPlanner;
 use crate::data::Data;

@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use crate::Result;
 
 use crate::bandits::{CorrSh, MedoidAlgorithm, Meddit, RandBaseline, SeqHalving};
 use crate::config::RunConfig;

@@ -7,13 +7,13 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
+use crate::Result;
 
 use crate::bandits::{CorrSh, MedoidAlgorithm};
 use crate::config::{EngineKind, RunConfig};
 use crate::data::Data;
 use crate::distance::Metric;
-use crate::engine::{NativeEngine, PullEngine};
+use crate::engine::{NativeEngine, PreparedEngine, PullEngine};
 use crate::util::rng::Rng;
 use crate::util::threads;
 
@@ -66,8 +66,11 @@ pub fn run_trials(
     base_seed: u64,
 ) -> Vec<TrialOutcome> {
     let workers = threads::default_threads();
+    // One shared preparation (norms / row-reductions) for the whole trial
+    // batch; per-trial engines used to redo the O(n·d) pass each.
+    let prepared = Arc::new(PreparedEngine::prepare(data.clone(), metric));
     threads::parallel_map(trials, workers, |t| {
-        let engine = NativeEngine::with_threads(data.clone(), metric, 1);
+        let engine = NativeEngine::from_prepared(prepared.clone(), 1);
         let mut rng = Rng::seeded(base_seed + t as u64);
         let algo = make_algo();
         let res = algo.run(&engine, &mut rng);
@@ -149,7 +152,7 @@ fn build_pjrt_engine(cfg: &RunConfig, data: &Arc<Data>) -> Result<Box<dyn PullEn
 
 #[cfg(not(feature = "pjrt"))]
 fn build_pjrt_engine(_cfg: &RunConfig, _data: &Arc<Data>) -> Result<Box<dyn PullEngine>> {
-    anyhow::bail!(
+    crate::bail!(
         "engine `pjrt` requires a build with the `pjrt` cargo feature \
          (cargo run --features pjrt ...); this binary was built with the \
          default pure-Rust engine set"

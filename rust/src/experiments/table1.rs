@@ -10,7 +10,7 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use crate::Result;
 
 use crate::bandits::MedoidAlgorithm;
 use crate::config::{AlgoConfig, RunConfig};

@@ -57,5 +57,8 @@ pub mod server;
 pub mod stats;
 pub mod util;
 
-/// Crate-wide result type (anyhow is in the offline dependency closure).
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result type (in-tree error chain — the crate has no external
+/// dependencies; see [`util::error`]).
+pub type Result<T> = util::error::Result<T>;
+
+pub use util::error::Error;

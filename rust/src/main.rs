@@ -8,7 +8,7 @@
 //! corrsh gen     --kind rnaseq --n 2000 --dim 256 --out data.npy
 //! ```
 
-use anyhow::{Context, Result};
+use corrsh::util::error::{Context, Result};
 
 use corrsh::config::{AlgoConfig, RunConfig};
 use corrsh::data::synth::Kind;
@@ -23,7 +23,7 @@ const USAGE: &str = "corrsh <medoid|repro|stats|serve|gen> [flags]
   repro:  --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation|all
           [--scale N] [--trials T] [--seed S]
   stats:  --preset P [--scale N] [--seed S]
-  serve:  [--addr HOST:PORT] [--preload P]
+  serve:  [--addr HOST:PORT] [--preload P] [--workers N] [--queue-cap N]
   gen:    --kind K --n N --dim D [--seed S] --out FILE.npy";
 
 fn main() {
@@ -95,7 +95,7 @@ fn load_config(args: &Args) -> Result<RunConfig> {
             "rand" => AlgoConfig::Rand { refs_per_arm: budget as usize },
             "toprank" => AlgoConfig::TopRank { phase1_refs: budget as usize },
             "exact" => AlgoConfig::Exact,
-            other => anyhow::bail!("unknown algo {other:?}"),
+            other => corrsh::bail!("unknown algo {other:?}"),
         };
     } else {
         let _ = args.parse_or("budget", 24.0)?; // consume if present
@@ -225,7 +225,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
                 cmd_repro(&sub)?;
             }
         }
-        other => anyhow::bail!("unknown experiment {other:?}"),
+        other => corrsh::bail!("unknown experiment {other:?}"),
     }
     Ok(())
 }
@@ -255,14 +255,21 @@ fn cmd_stats(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let defaults = corrsh::config::ServerConfig::default();
+    let server_cfg = corrsh::config::ServerConfig {
+        addr: args.str_or("addr", &defaults.addr),
+        workers: args.parse_or("workers", defaults.workers)?,
+        queue_cap: args.parse_or("queue-cap", defaults.queue_cap)?,
+    };
     let preload = args.str_opt("preload").map(str::to_string);
     args.finish()?;
     let state = server::State::new();
     if let Some(preset) = preload {
         let cfg = RunConfig::preset(&preset)?.scaled_down(20);
+        // prepare:true warms the engine-session cache before the first
+        // client query arrives.
         let req = corrsh::util::json::parse(&format!(
-            r#"{{"op":"register","name":"{preset}","kind":"{}","n":{},"dim":{},"seed":{}}}"#,
+            r#"{{"op":"register","name":"{preset}","kind":"{}","n":{},"dim":{},"seed":{},"prepare":true}}"#,
             cfg.dataset_kind.name(),
             cfg.synth.n,
             cfg.synth.dim,
@@ -271,7 +278,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let resp = state.handle(&req);
         eprintln!("preloaded: {resp}");
     }
-    server::serve(state, &addr)
+    server::serve_with(state, &server_cfg)
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {

@@ -31,6 +31,33 @@ impl Counter {
     }
 }
 
+/// Up/down gauge for instantaneous quantities (queue depth, in-flight
+/// requests). Saturates at zero on the way down rather than going negative,
+/// so a spurious extra `dec` can never make a depth read as 2⁶⁴-ish.
+#[derive(Debug, Default)]
+pub struct Gauge(std::sync::atomic::AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge(std::sync::atomic::AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(&self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed).max(0) as u64
+    }
+}
+
 /// Scope timer: `let _t = Timer::start(&cell);` adds elapsed ns on drop.
 pub struct Timer<'a> {
     start: Instant,
@@ -112,6 +139,19 @@ mod tests {
             }
         });
         assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn gauge_tracks_depth_and_floors_at_zero() {
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        assert_eq!(g.get(), 2);
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec(); // spurious extra dec
+        assert_eq!(g.get(), 0, "gauge must floor at zero");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::distance::Metric;
 use crate::util::json;
@@ -32,12 +32,12 @@ impl Manifest {
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("read {path:?} (run `make artifacts`)"))?;
         let v = json::parse(&text).context("parse manifest.json")?;
-        anyhow::ensure!(
+        crate::ensure!(
             v.get("version").as_usize() == Some(1),
             "unsupported manifest version {:?}",
             v.get("version")
         );
-        anyhow::ensure!(
+        crate::ensure!(
             v.get("entry").as_str() == Some("chunk_sums"),
             "unexpected entry point {:?}",
             v.get("entry")
@@ -59,7 +59,7 @@ impl Manifest {
                 refs: get_n("refs")?,
                 dim: get_n("dim")?,
             };
-            anyhow::ensure!(
+            crate::ensure!(
                 dir.join(&spec.file).exists(),
                 "artifact file {:?} listed in manifest but missing on disk",
                 spec.file

@@ -23,7 +23,7 @@ pub use manifest::{ArtifactSpec, Manifest};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use crate::distance::Metric;
 use crate::metrics::Counter;
@@ -41,9 +41,9 @@ impl Executable {
     /// (padded arm rows produce garbage sums the caller discards).
     pub fn run(&self, x_arms: &[f32], y_refs: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
         let (a, r, d) = (self.spec.arms, self.spec.refs, self.spec.dim);
-        anyhow::ensure!(x_arms.len() == a * d, "x_arms len {} != {}", x_arms.len(), a * d);
-        anyhow::ensure!(y_refs.len() == r * d, "y_refs len {} != {}", y_refs.len(), r * d);
-        anyhow::ensure!(mask.len() == r, "mask len {} != {}", mask.len(), r);
+        crate::ensure!(x_arms.len() == a * d, "x_arms len {} != {}", x_arms.len(), a * d);
+        crate::ensure!(y_refs.len() == r * d, "y_refs len {} != {}", y_refs.len(), r * d);
+        crate::ensure!(mask.len() == r, "mask len {} != {}", mask.len(), r);
 
         let lx = lit_f32(x_arms, &[a, d])?;
         let ly = lit_f32(y_refs, &[r, d])?;

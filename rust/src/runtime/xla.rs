@@ -10,7 +10,8 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 /// Uninhabited: values of the stub handle types cannot be constructed.
 #[derive(Debug, Clone, Copy)]

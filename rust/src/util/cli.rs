@@ -16,17 +16,28 @@ pub struct Args {
     seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for flag --{0}")]
     MissingValue(String),
-    #[error("unknown flag(s): {0}")]
     Unknown(String),
-    #[error("invalid value for --{flag}: {value:?} ({why})")]
     Invalid { flag: String, value: String, why: String },
-    #[error("missing required flag --{0}")]
     MissingRequired(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(flag) => write!(f, "missing value for flag --{flag}"),
+            CliError::Unknown(flags) => write!(f, "unknown flag(s): {flags}"),
+            CliError::Invalid { flag, value, why } => {
+                write!(f, "invalid value for --{flag}: {value:?} ({why})")
+            }
+            CliError::MissingRequired(flag) => write!(f, "missing required flag --{flag}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, CliError> {

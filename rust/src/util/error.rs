@@ -1,0 +1,208 @@
+//! In-tree error handling: a context-chaining error type with the familiar
+//! `Result` / `Context` / `bail!` / `ensure!` surface.
+//!
+//! PR 2 dropped the crate's last external dependencies (`anyhow`,
+//! `thiserror`) so the dependency closure is empty: `Cargo.lock` is exact by
+//! construction, offline builds never resolve against a registry, and the
+//! binary carries no code this repo doesn't own. The API mirrors the anyhow
+//! subset the codebase already used, so call sites read identically:
+//!
+//! ```
+//! use corrsh::util::error::{Context, Result};
+//!
+//! fn lookup(map: &std::collections::BTreeMap<String, u32>, k: &str) -> Result<u32> {
+//!     if k.is_empty() {
+//!         corrsh::bail!("empty key");
+//!     }
+//!     map.get(k).copied().with_context(|| format!("key {k:?} missing"))
+//! }
+//! ```
+
+use std::fmt;
+
+/// Chain-of-context error: outermost context first, root cause last.
+///
+/// Deliberately does **not** implement [`std::error::Error`] — exactly like
+/// `anyhow::Error`, that is what makes the blanket `From<E: Error>` impl
+/// coherent, so `?` converts any std-error type into this one.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message (the `bail!` entry point).
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context layer (consuming, like `anyhow`).
+    pub fn context(mut self, c: impl fmt::Display) -> Self {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// Context layers, outermost first; the last entry is the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+/// `{e}` prints the outermost message; `{e:#}` the whole chain joined with
+/// `": "` — the anyhow conventions the launcher and server already rely on.
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+/// Debug (what `unwrap()`/`main` print) shows the full chain.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+/// Any std error converts via `?`, flattening its `source()` chain.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Crate-wide result type; `E` defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to `Result`s and `Option`s (the `anyhow::Context` subset
+/// the crate uses).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Early-return with a formatted [`Error`] (in-tree `anyhow::bail!`).
+/// Accepts either a format literal plus arguments or any one `Display`
+/// expression.
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(, $arg:expr)* $(,)?) => {
+        return Err($crate::util::error::Error::msg(format!($msg $(, $arg)*)))
+    };
+    ($msg:expr) => {
+        return Err($crate::util::error::Error::msg($msg))
+    };
+}
+
+/// Check a condition, `bail!`ing with the message when it fails (in-tree
+/// `anyhow::ensure!`).
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/file").context("read config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = io_fail().unwrap_err().context("boot");
+        let layers: Vec<&str> = e.chain().collect();
+        assert_eq!(layers[0], "boot");
+        assert_eq!(layers[1], "read config");
+        assert!(layers.len() >= 3, "io root cause should be appended");
+    }
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(format!("{e:?}"), "outer: inner");
+        assert_eq!(e.root_cause(), "inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing field").unwrap_err();
+        assert_eq!(format!("{e}"), "missing field");
+        let some = Some(7u32).with_context(|| "unused").unwrap();
+        assert_eq!(some, 7);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                crate::bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert_eq!(format!("{}", f(3).unwrap_err()), "unlucky 3");
+        assert_eq!(format!("{}", f(12).unwrap_err()), "x too big: 12");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u64> {
+            Ok(s.parse::<u64>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(format!("{:#}", parse("nope").unwrap_err()).contains("invalid digit"));
+    }
+}

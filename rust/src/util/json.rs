@@ -34,6 +34,23 @@ impl Value {
             }
         })
     }
+    /// Lossless u64 view. JSON numbers are stored as f64, which is exact
+    /// for integers up to 2⁵³; anything larger (e.g. full-width RNG seeds)
+    /// should be sent as a decimal string (`"seed":"18446744073709551615"`),
+    /// which this accessor also accepts. Returns `None` for negative,
+    /// fractional, or non-exactly-representable numbers instead of silently
+    /// truncating the way `as_f64() as u64` did.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            // Integral f64s below 2⁶⁴ convert exactly (they carry ≤ 53
+            // significant bits by construction).
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < u64::MAX as f64 => {
+                Some(*x as u64)
+            }
+            Value::Str(s) => s.parse::<u64>().ok(),
+            _ => None,
+        }
+    }
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -115,12 +132,19 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -422,6 +446,22 @@ mod tests {
         let a = &v.get("artifacts").as_array().unwrap()[0];
         assert_eq!(a.get("arms").as_usize(), Some(64));
         assert_eq!(a.get("metric").as_str(), Some("l1"));
+    }
+
+    #[test]
+    fn as_u64_is_honest() {
+        assert_eq!(parse("7").unwrap().as_u64(), Some(7));
+        assert_eq!(parse("0").unwrap().as_u64(), Some(0));
+        // exact at the f64 integer limit
+        assert_eq!(parse("9007199254740992").unwrap().as_u64(), Some(1u64 << 53));
+        // negative / fractional / non-numeric are refused, not truncated
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(parse("true").unwrap().as_u64(), None);
+        // full-width seeds round-trip via the string form
+        let v = parse(r#""18446744073709551615""#).unwrap();
+        assert_eq!(v.as_u64(), Some(u64::MAX));
+        assert_eq!(parse(r#""not a number""#).unwrap().as_u64(), None);
     }
 
     #[test]

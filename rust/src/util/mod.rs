@@ -1,14 +1,19 @@
-//! In-tree substrates (this build is offline: the only external crates are
-//! `anyhow` and `thiserror`; even the feature-gated PJRT path compiles
-//! against an in-tree stub backend rather than pulling `xla` bindings).
+//! In-tree substrates (this build is offline and the dependency closure is
+//! **empty** — error handling, JSON, RNG, CLI and thread-pool all live
+//! here; even the feature-gated PJRT path compiles against an in-tree stub
+//! backend rather than pulling `xla` bindings).
 //!
+//! * [`error`] — context-chaining error type + `Result`/`Context` and the
+//!   crate-root `bail!`/`ensure!` macros (the former `anyhow` surface).
 //! * [`rng`] — deterministic xoshiro256++ RNG with the sampling primitives
 //!   the bandit algorithms need (without-replacement draws, shuffles,
 //!   gaussians, power laws).
 //! * [`json`] — minimal JSON parser/writer for the AOT `manifest.json`,
 //!   config files, experiment outputs and the server protocol.
 //! * [`cli`] — flag parser for the launcher.
-//! * [`threads`] — scoped parallel-for used by the native pull engine.
+//! * [`pool`] — persistent work-stealing worker pool (process-global).
+//! * [`threads`] — parallel-for shims over the pool, used by the native
+//!   pull engine and the trial runner.
 //! * [`bench`] — micro-benchmark harness (criterion-style reporting).
 //! * [`testing`] — property-test loop (randomized cases, seed reported on
 //!   failure) used across the crate's unit tests.
@@ -17,8 +22,10 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod npy;
+pub mod pool;
 pub mod rng;
 pub mod testing;
 pub mod threads;

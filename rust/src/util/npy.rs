@@ -5,7 +5,8 @@
 use std::io::{Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 const MAGIC: &[u8; 6] = b"\x93NUMPY";
 

@@ -1,0 +1,332 @@
+//! Persistent work-stealing worker pool.
+//!
+//! The native engine's `pull_block` runs once per halving round — ⌈log₂ n⌉
+//! times per medoid query — and under sustained traffic the old
+//! `std::thread::scope` implementation paid a full OS thread spawn + join
+//! per call. This pool keeps workers alive for the process lifetime and
+//! turns each parallel call into one queue push: the same chunk list /
+//! atomic-cursor work-stealing design as before, minus the per-call thread
+//! churn. `util::threads` keeps its public API as thin shims over
+//! [`global()`].
+//!
+//! Design invariants:
+//!
+//! * **The submitter always participates.** `run` drives the job with the
+//!   calling thread too, so a job completes even when every worker is busy
+//!   (or the pool has zero workers), and nested submission — an engine
+//!   `pull_block` inside a server executor job inside a `parallel_map` —
+//!   can never deadlock: the innermost submitter just executes its own
+//!   chunks serially in the worst case.
+//! * **Chunks run exactly once.** The atomic cursor dispenses each chunk
+//!   index to exactly one thread, so results are identical regardless of
+//!   worker count or interleaving (the determinism the
+//!   `parallel_matches_serial` tests pin down).
+//! * **Panics propagate.** A panicking chunk is caught on the worker,
+//!   recorded, and re-thrown on the submitting thread after the job drains;
+//!   the worker itself survives for the next job.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// One injected parallel call: `task(i)` executes chunk `i`.
+///
+/// `task` points at a closure on the submitting thread's stack with its
+/// lifetime erased; `run` does not return until every chunk has finished
+/// executing, which is what makes the erasure sound (workers never
+/// dereference `task` except inside a claimed chunk, and all claimed chunks
+/// complete before `run` returns).
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    n_chunks: usize,
+    /// Workers (beyond the submitter) allowed to join; joins happen under
+    /// the queue lock, so the cap is exact.
+    max_helpers: usize,
+    helpers: AtomicUsize,
+    cursor: AtomicUsize,
+    completed: AtomicUsize,
+    /// First panic payload observed while running a chunk.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `task` is only dereferenced while the submitting thread is blocked
+// in `WorkerPool::run` (see the struct docs); the pointee is `Sync`.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and execute chunks until the cursor is exhausted.
+    fn work(&self) {
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n_chunks {
+                break;
+            }
+            // SAFETY: see the struct-level invariant.
+            let task = unsafe { &*self.task };
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| task(i))) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n_chunks {
+                let mut done = self.done.lock().unwrap();
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.cursor.load(Ordering::Relaxed) >= self.n_chunks
+    }
+}
+
+struct QueueState {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    available: Condvar,
+}
+
+/// A fixed set of long-lived worker threads executing injected [`Job`]s.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent threads. Zero is valid: every `run` then
+    /// executes entirely on the submitting thread.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { jobs: VecDeque::new(), shutdown: false }),
+            available: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("corrsh-pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, workers: handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute `task(i)` for every `i in 0..n_chunks`, blocking until all
+    /// chunks have run. At most `max_threads` threads (submitter included)
+    /// touch the job. Panics from `task` are re-raised here.
+    pub fn run(&self, n_chunks: usize, max_threads: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        // SAFETY: lifetime erasure only — `run` blocks until every chunk
+        // has completed, so the reference cannot dangle while dereferenced.
+        // (A plain `as` cast cannot lengthen the trait-object lifetime
+        // bound, hence the transmute.)
+        #[allow(clippy::useless_transmute, clippy::transmutes_expressible_as_ptr_casts)]
+        let task: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(task)
+        };
+        let job = Arc::new(Job {
+            task,
+            n_chunks,
+            max_helpers: max_threads.saturating_sub(1).min(self.workers.len()),
+            helpers: AtomicUsize::new(0),
+            cursor: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        let advertised = job.max_helpers > 0 && n_chunks > 1;
+        if advertised {
+            self.shared.queue.lock().unwrap().jobs.push_back(job.clone());
+            self.shared.available.notify_all();
+        }
+        job.work();
+        // Wait for helpers still inside chunks they claimed.
+        {
+            let mut done = job.done.lock().unwrap();
+            while !*done {
+                done = job.done_cv.wait(done).unwrap();
+            }
+        }
+        if advertised {
+            // Drop the (now exhausted) job from the queue if no worker did.
+            let mut q = self.shared.queue.lock().unwrap();
+            q.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+        }
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+
+    /// Stop accepting work and join all workers. Idempotent; also runs on
+    /// drop. In-flight `run` calls still complete (their submitters drive
+    /// them to the end regardless of worker availability).
+    pub fn shutdown(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.available.notify_all();
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        if q.shutdown {
+            return;
+        }
+        // Discard stale fronts: exhausted jobs, or jobs at their helper cap.
+        while let Some(front) = q.jobs.front() {
+            let full = front.helpers.load(Ordering::Relaxed) >= front.max_helpers;
+            if front.exhausted() || full {
+                q.jobs.pop_front();
+            } else {
+                break;
+            }
+        }
+        match q.jobs.front().cloned() {
+            Some(job) => {
+                job.helpers.fetch_add(1, Ordering::Relaxed);
+                drop(q);
+                job.work();
+                q = shared.queue.lock().unwrap();
+            }
+            None => q = shared.available.wait(q).unwrap(),
+        }
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-global pool: `default_threads() - 1` workers (the submitting
+/// thread is the final participant), created on first use. `CORRSH_THREADS`
+/// therefore still bounds total parallelism exactly as before.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| {
+        WorkerPool::new(crate::util::threads::default_threads().saturating_sub(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = WorkerPool::new(3);
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), 8, &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn zero_worker_pool_degrades_to_serial() {
+        let pool = WorkerPool::new(0);
+        let sum = AtomicU64::new(0);
+        pool.run(100, 4, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_jobs() {
+        let pool = WorkerPool::new(2);
+        for round in 0..50u64 {
+            let acc = AtomicU64::new(0);
+            pool.run(17, 4, &|i| {
+                acc.fetch_add(round + i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(acc.load(Ordering::Relaxed), 17 * round + 136);
+        }
+    }
+
+    #[test]
+    fn nested_submission_does_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicU64::new(0);
+        pool.run(4, 4, &|_| {
+            // Submit a child job from inside a job (the engine-inside-
+            // executor shape). The submitter drives it even when all
+            // workers are busy with the outer job.
+            pool.run(8, 4, &|j| {
+                total.fetch_add(j as u64 + 1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 4 * 36);
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, 4, &|i| {
+                if i == 5 {
+                    panic!("chunk 5 exploded");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must reach the submitter");
+        // ...and the pool still works afterwards.
+        let ok = AtomicU64::new(0);
+        pool.run(8, 4, &|_| {
+            ok.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ok.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let mut pool = WorkerPool::new(3);
+        let acc = AtomicU64::new(0);
+        pool.run(32, 4, &|_| {
+            acc.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.shutdown();
+        assert_eq!(pool.workers(), 0);
+        // Post-shutdown runs still complete (on the submitter).
+        pool.run(8, 4, &|_| {
+            acc.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), 40);
+        pool.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn global_pool_exists_and_runs() {
+        let acc = AtomicU64::new(0);
+        global().run(64, 8, &|i| {
+            acc.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), 2016);
+    }
+}

@@ -1,8 +1,15 @@
-//! Scoped data-parallelism for the native pull engine and the experiment
-//! harness (no rayon in the offline closure; `std::thread::scope` is all we
-//! need — the workloads are large, regular chunks).
+//! Data-parallel helpers for the native pull engine and the experiment
+//! harness (no rayon in the offline closure).
+//!
+//! Since PR 2 these are thin shims over the persistent [`crate::util::pool`]
+//! worker pool: same chunk / atomic-cursor work-stealing semantics and the
+//! same signatures, but the hot `pull_block` path no longer spawns OS
+//! threads via `std::thread::scope` on every call — workers are long-lived
+//! and a parallel call is one queue push.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::util::pool;
 
 /// Number of worker threads to use: `CORRSH_THREADS` env override, else the
 /// available parallelism, else 4.
@@ -15,63 +22,34 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// A take-once cell handing each chunk to exactly one claimant.
+type Slot<'a, T> = Mutex<Option<(usize, &'a mut [T])>>;
+
 /// Run `f(chunk_start, chunk)` over mutable chunks of `out`, where chunk `c`
 /// covers `out[c*chunk_size .. ]`. Work is pre-split (regular chunks), which
-/// is the right shape for the dense distance sweeps.
+/// is the right shape for the dense distance sweeps. Each chunk is executed
+/// exactly once, so results do not depend on thread count or scheduling.
 pub fn parallel_chunks_mut<T: Send, F>(out: &mut [T], chunk_size: usize, threads: usize, f: F)
 where
     F: Fn(usize, &mut [T]) + Sync,
 {
+    let chunk_size = chunk_size.max(1);
     if threads <= 1 || out.len() <= chunk_size {
         for (c, chunk) in out.chunks_mut(chunk_size).enumerate() {
             f(c * chunk_size, chunk);
         }
         return;
     }
-    let next = AtomicUsize::new(0);
-    let chunks: Vec<(usize, &mut [T])> = {
-        let mut v = Vec::new();
-        let mut start = 0;
-        let mut rest = out;
-        while !rest.is_empty() {
-            let take = chunk_size.min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            v.push((start, head));
-            start += take;
-            rest = tail;
-        }
-        v
-    };
-    // Work-stealing over the chunk list via an atomic cursor.
-    let slots: Vec<_> = chunks.into_iter().map(parking_cell::new).collect();
-    std::thread::scope(|s| {
-        for _ in 0..threads.min(slots.len()) {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= slots.len() {
-                    break;
-                }
-                if let Some((start, chunk)) = parking_cell::take(&slots[i]) {
-                    f(start, chunk);
-                }
-            });
+    let slots: Vec<Slot<'_, T>> = out
+        .chunks_mut(chunk_size)
+        .enumerate()
+        .map(|(c, chunk)| Mutex::new(Some((c * chunk_size, chunk))))
+        .collect();
+    pool::global().run(slots.len(), threads, &|i| {
+        if let Some((start, chunk)) = slots[i].lock().unwrap().take() {
+            f(start, chunk);
         }
     });
-}
-
-/// Tiny cell wrapper so chunks can be handed to exactly one worker.
-mod parking_cell {
-    use std::sync::Mutex;
-
-    pub type Cell<T> = Mutex<Option<T>>;
-
-    pub fn new<T>(v: T) -> Cell<T> {
-        Mutex::new(Some(v))
-    }
-
-    pub fn take<T>(c: &Cell<T>) -> Option<T> {
-        c.lock().unwrap().take()
-    }
 }
 
 /// Map `f` over `0..n` in parallel, collecting results in index order.
@@ -130,5 +108,28 @@ mod tests {
         let mut data: Vec<u8> = vec![];
         parallel_chunks_mut(&mut data, 4, 4, |_, _| panic!("no chunks expected"));
         assert!(parallel_map(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn repeated_calls_reuse_the_pool() {
+        // The regression this PR exists for: many small parallel calls in a
+        // row (one per halving round per query) must keep working against
+        // the persistent pool without spawning per call.
+        for round in 0..100usize {
+            let out = parallel_map(64, 4, |i| i + round);
+            assert_eq!(out[63], 63 + round);
+        }
+    }
+
+    #[test]
+    fn nested_parallelism_completes() {
+        // engine pull_block inside an executor job inside parallel_map
+        let outer = parallel_map(4, 4, |i| {
+            let inner = parallel_map(32, 4, |j| j * i);
+            inner.iter().sum::<usize>()
+        });
+        for (i, &s) in outer.iter().enumerate() {
+            assert_eq!(s, 496 * i);
+        }
     }
 }
