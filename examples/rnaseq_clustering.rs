@@ -39,7 +39,7 @@ impl PullEngine for SubsetEngine<'_> {
     fn pull(&self, a: usize, r: usize) -> f32 {
         self.inner.pull(self.rows[a], self.rows[r])
     }
-    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         let arms: Vec<usize> = arms.iter().map(|&a| self.rows[a]).collect();
         let refs: Vec<usize> = refs.iter().map(|&r| self.rows[r]).collect();
         self.inner.pull_block(&arms, &refs, out);

@@ -51,7 +51,7 @@ fn main() {
     b.group("pull_block (native, 1024 arms x 256 refs, d=784)");
     let arms: Vec<usize> = (0..1024).collect();
     let refs: Vec<usize> = rng.sample_without_replacement(2_048, 256);
-    let mut out = vec![0f32; arms.len()];
+    let mut out = vec![0f64; arms.len()];
     for threads in [1, corrsh::util::threads::default_threads()] {
         let e = NativeEngine::with_threads(data.clone(), Metric::L2, threads);
         b.bench_items(&format!("l2/threads={threads}"), (arms.len() * refs.len()) as u64, || {
@@ -104,7 +104,7 @@ fn main() {
                 for (na, nr) in [(64, 16), (256, 64), (1024, 256), (100, 37)] {
                     let a: Vec<usize> = (0..na).collect();
                     let r: Vec<usize> = (0..nr).collect();
-                    let mut o = vec![0f32; na];
+                    let mut o = vec![0f64; na];
                     b.bench_items(&format!("{na}x{nr}"), (na * nr) as u64, || {
                         e.pull_block(&a, &r, &mut o);
                         o[0]

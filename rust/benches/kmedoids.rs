@@ -1,0 +1,77 @@
+//! E12 — k-medoids workload bench: BUILD-only vs full BUILD/SWAP/polish on
+//! a planted Gaussian mixture, plus the pull-budget fraction vs the exact
+//! k·n² BUILD sweep. Emits `BENCH_kmedoids.json` (schema_version 1) as a CI
+//! perf artifact next to `BENCH_engine.json` / `BENCH_server.json`.
+
+use std::sync::Arc;
+
+use corrsh::config::KMedoidsConfig;
+use corrsh::data::synth::{gaussian, SynthConfig};
+use corrsh::distance::Metric;
+use corrsh::engine::NativeEngine;
+use corrsh::kmedoids::{BanditKMedoids, ClusteringAlgorithm};
+use corrsh::util::bench::Bencher;
+use corrsh::util::rng::Rng;
+
+fn main() {
+    let n: usize = std::env::var("CORRSH_BENCH_KMEDOIDS_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1_000);
+    let k = 5usize;
+    let data = Arc::new(gaussian::generate_mixture(&SynthConfig {
+        n,
+        dim: 16,
+        seed: 1,
+        clusters: k,
+        ..Default::default()
+    }));
+    let engine = NativeEngine::with_threads(
+        data,
+        Metric::L2,
+        corrsh::util::threads::default_threads(),
+    );
+
+    let mut b = Bencher::new();
+    b.group(&format!("kmedoids (mixture n={n}, k={k}, d=16)"));
+
+    let build_only = KMedoidsConfig {
+        k,
+        max_swap_rounds: 0,
+        polish_pulls_per_arm: 0.0,
+        ..Default::default()
+    };
+    let mut seed = 0u64;
+    b.bench_items("build-only", n as u64, || {
+        seed += 1;
+        let res = BanditKMedoids::new(build_only.clone()).run(&engine, &mut Rng::seeded(seed));
+        res.medoids.len()
+    });
+
+    let full = KMedoidsConfig { k, ..Default::default() };
+    b.bench_items("build+swap+polish", n as u64, || {
+        seed += 1;
+        let res = BanditKMedoids::new(full.clone()).run(&engine, &mut Rng::seeded(seed));
+        res.medoids.len()
+    });
+
+    // Pull economics of one representative full run: fraction of the exact
+    // k·n² BUILD sweep, and planted-center recovery.
+    let res = BanditKMedoids::new(full).run(&engine, &mut Rng::seeded(7));
+    let exact_cost = (k * n * n) as f64;
+    b.record_metric("pulls/total", res.pulls() as f64, "pulls");
+    b.record_metric(
+        "pulls/fraction_of_exact_build",
+        res.pulls() as f64 / exact_cost,
+        "fraction",
+    );
+    b.record_metric(
+        "quality/planted_centers_recovered",
+        res.medoids.iter().filter(|&&m| m < k).count() as f64,
+        "centers",
+    );
+    b.record_metric("quality/mean_loss", res.loss, "distance");
+
+    b.write_jsonl();
+    b.write_bench_json("kmedoids");
+}

@@ -21,6 +21,20 @@
 //! The pull workload of each round goes through `PullEngine::pull_block`
 //! (one correlated batch), which the PJRT engine tiles into AOT bucket jobs
 //! via the coordinator's batch planner.
+//!
+//! The round loop itself is exposed as [`correlated_halving_argmin`], a
+//! generalized inner oracle over an arbitrary arm space scored against a
+//! reference universe: `CorrSh::run` is the `arms == refs == dataset`
+//! special case, and the k-medoids BUILD/SWAP phases
+//! ([`crate::kmedoids`]) reuse the same oracle with marginal-loss and
+//! swap-loss scores.
+//!
+//! Numerical policy (see DESIGN.md §9): round sums accumulate in `f64` end
+//! to end (`t · d(x_i, x_j)` overflows f32's 24-bit mantissa long before
+//! the paper's dataset scales), and all survivor selection orders with
+//! `f64::total_cmp` plus an arm-index tie-break, so a NaN distance (e.g.
+//! cosine on a zero-norm row) sorts *last* deterministically instead of
+//! corrupting the halving order.
 
 use std::time::Instant;
 
@@ -39,11 +53,143 @@ pub enum Budget {
 }
 
 impl Budget {
+    /// Total pull budget for an `n`-arm instance.
+    ///
+    /// `PerArm` is hardened against degenerate knobs: `x ≤ 0` and NaN clamp
+    /// to the floor of one pull per arm (`n`), and `x·n` beyond `u64::MAX`
+    /// (including `x = ∞`) saturates — the result is always in
+    /// `[n, u64::MAX]` instead of wrapping or silently returning 0.
     pub fn total(&self, n: usize) -> u64 {
         match *self {
             Budget::Total(t) => t,
-            Budget::PerArm(x) => (x * n as f64).ceil() as u64,
+            Budget::PerArm(x) => {
+                let floor = n.max(1) as u64;
+                if x.is_nan() || x <= 0.0 {
+                    return floor;
+                }
+                let t = (x * n as f64).ceil();
+                if t >= u64::MAX as f64 {
+                    u64::MAX
+                } else {
+                    (t as u64).max(floor)
+                }
+            }
         }
+    }
+}
+
+/// Outcome of one generalized correlated-halving run (arm indices are in
+/// `[0, n_arms)`; the caller owns any mapping to dataset rows or swap
+/// pairs).
+#[derive(Clone, Debug)]
+pub struct HalvingOutcome {
+    /// Winning arm index.
+    pub best: usize,
+    /// Pulls charged by the schedule ledger (`Σ_r |S_r|·t_r`).
+    pub pulls: u64,
+    pub rounds: Vec<RoundLog>,
+    /// Estimates for the arms still tracked at exit.
+    pub estimates: Vec<(usize, f64)>,
+    /// True when a round reached `t_r = n_refs` (exact scores ⇒ immediate
+    /// argmin exit).
+    pub exact_exit: bool,
+}
+
+/// Generalized Algorithm 1 inner loop: correlated sequential halving over
+/// `n_arms` arms scored against a reference universe of `n_refs` points.
+///
+/// `score_block(arms, refs, out)` must fill `out[k]` with the **sum** of
+/// arm `arms[k]`'s scores over `refs` (f64, accumulated however the caller
+/// likes — the engines accumulate in f64). It is called once per round with
+/// one shared reference draw, which is exactly the correlation property of
+/// the paper. The medoid problem is the special case
+/// `n_arms == n_refs == n` with `score = d(x_i, x_j)` ([`CorrSh::run`]);
+/// k-medoids BUILD/SWAP pass marginal-loss / swap-loss scores.
+///
+/// Selection is NaN-safe and fully deterministic: survivors are ordered by
+/// `f64::total_cmp` on the round sums with the arm index as tie-break, so
+/// duplicate points (bitwise-equal sums under a shared reference set) and
+/// NaN scores (sorted last) can never make the halving order depend on
+/// sort internals or thread count.
+pub fn correlated_halving_argmin(
+    n_arms: usize,
+    n_refs: usize,
+    total_budget: u64,
+    rng: &mut Rng,
+    score_block: &mut dyn FnMut(&[usize], &[usize], &mut [f64]),
+) -> HalvingOutcome {
+    assert!(n_refs >= 1, "correlated_halving_argmin: empty reference universe");
+    assert!(n_arms >= 1, "correlated_halving_argmin: empty arm space");
+    if n_arms == 1 {
+        return HalvingOutcome {
+            best: 0,
+            pulls: 0,
+            rounds: vec![],
+            estimates: vec![(0, 0.0)],
+            exact_exit: false,
+        };
+    }
+    let mut ledger = BudgetLedger::new(total_budget, n_arms);
+    let mut survivors: Vec<usize> = (0..n_arms).collect();
+    let mut round_logs = Vec::new();
+    let mut sums = vec![0f64; n_arms];
+    let mut last_estimates: Vec<(usize, f64)> = Vec::new();
+    let log_rounds = rounds::ceil_log2(n_arms);
+
+    for r in 0..log_rounds {
+        let t = rounds::t_r_capped(total_budget, survivors.len(), log_rounds, n_refs);
+        let pulls = (survivors.len() as u64) * (t as u64);
+        ledger
+            .charge_round(r, pulls)
+            .expect("halving schedule exceeded its own budget (bug)");
+
+        // Line 3: ONE shared reference set for the whole round.
+        let refs = rng.sample_without_replacement(n_refs, t);
+
+        let out = &mut sums[..survivors.len()];
+        score_block(&survivors, &refs, out);
+
+        round_logs.push(RoundLog { r, survivors: survivors.len(), t, pulls });
+        last_estimates = survivors
+            .iter()
+            .zip(out.iter())
+            .map(|(&i, &s)| (i, s / t as f64))
+            .collect();
+
+        if t == n_refs {
+            // Exact scores: output the argmin immediately.
+            let k = crate::bandits::argmin(last_estimates.iter().map(|&(_, v)| v));
+            return HalvingOutcome {
+                best: last_estimates[k].0,
+                pulls: ledger.spent(),
+                rounds: round_logs,
+                estimates: last_estimates,
+                exact_exit: true,
+            };
+        }
+
+        // Keep the ⌈|S_r|/2⌉ arms with smallest sums — total order, NaN of
+        // either sign last (`nan_last`: -NaN would otherwise sort *first*
+        // under total_cmp), arm index as the deterministic tie-break.
+        let keep = survivors.len().div_ceil(2);
+        let mut order: Vec<usize> = (0..survivors.len()).collect();
+        order.sort_unstable_by(|&a, &b| {
+            crate::bandits::nan_last(out[a])
+                .total_cmp(&crate::bandits::nan_last(out[b]))
+                .then_with(|| survivors[a].cmp(&survivors[b]))
+        });
+        survivors = order[..keep].iter().map(|&k| survivors[k]).collect();
+        if survivors.len() <= 1 {
+            break;
+        }
+    }
+
+    HalvingOutcome {
+        best: survivors[0],
+        pulls: ledger.spent(),
+        rounds: round_logs,
+        estimates: last_estimates,
+        exact_exit: false,
     }
 }
 
@@ -84,62 +230,15 @@ impl MedoidAlgorithm for CorrSh {
             };
         }
         let total = self.budget.total(n);
-        let mut ledger = BudgetLedger::new(total, n);
-        let mut survivors: Vec<usize> = (0..n).collect();
-        let mut round_logs = Vec::new();
-        let mut sums = vec![0f32; n];
-        let mut last_estimates: Vec<(usize, f64)> = Vec::new();
-
-        for r in 0..rounds::ceil_log2(n) {
-            let t = rounds::t_r(total, survivors.len(), n);
-            let pulls = (survivors.len() * t) as u64;
-            ledger
-                .charge_round(r, pulls)
-                .expect("halving schedule exceeded its own budget (bug)");
-
-            // Line 3: ONE shared reference set for the whole round.
-            let refs = rng.sample_without_replacement(n, t);
-
-            let out = &mut sums[..survivors.len()];
-            engine.pull_block(&survivors, &refs, out);
-
-            round_logs.push(RoundLog { r, survivors: survivors.len(), t, pulls });
-            last_estimates = survivors
-                .iter()
-                .zip(out.iter())
-                .map(|(&i, &s)| (i, s as f64 / t as f64))
-                .collect();
-
-            if t == n {
-                // Exact centralities: output the argmin immediately.
-                let k = crate::bandits::argmin(last_estimates.iter().map(|&(_, v)| v));
-                return MedoidResult {
-                    best: last_estimates[k].0,
-                    pulls: ledger.spent(),
-                    wall: start.elapsed(),
-                    rounds: round_logs,
-                    estimates: last_estimates,
-                };
-            }
-
-            // Keep the ⌈|S_r|/2⌉ arms with smallest θ̂.
-            let keep = survivors.len().div_ceil(2);
-            let mut order: Vec<usize> = (0..survivors.len()).collect();
-            order.sort_unstable_by(|&a, &b| {
-                out[a].partial_cmp(&out[b]).unwrap_or(std::cmp::Ordering::Equal)
-            });
-            survivors = order[..keep].iter().map(|&k| survivors[k]).collect();
-            if survivors.len() <= 1 {
-                break;
-            }
-        }
-
+        let outcome = correlated_halving_argmin(n, n, total, rng, &mut |arms, refs, out| {
+            engine.pull_block(arms, refs, out);
+        });
         MedoidResult {
-            best: survivors[0],
-            pulls: ledger.spent(),
+            best: outcome.best,
+            pulls: outcome.pulls,
             wall: start.elapsed(),
-            rounds: round_logs,
-            estimates: last_estimates,
+            rounds: outcome.rounds,
+            estimates: outcome.estimates,
         }
     }
 }
@@ -148,6 +247,7 @@ impl MedoidAlgorithm for CorrSh {
 mod tests {
     use super::*;
     use crate::data::synth::{gaussian, rnaseq, SynthConfig};
+    use crate::data::{Data, DenseData};
     use crate::distance::Metric;
     use crate::engine::{CountingEngine, NativeEngine};
     use crate::util::testing;
@@ -247,5 +347,123 @@ mod tests {
         let res = CorrSh::with_pulls_per_arm(5.0).run(&engine, &mut Rng::seeded(0));
         assert_eq!(res.best, 0);
         assert_eq!(res.pulls, 0);
+    }
+
+    #[test]
+    fn budget_per_arm_edge_cases_clamp() {
+        // x <= 0 and NaN clamp to one pull per arm.
+        assert_eq!(Budget::PerArm(0.0).total(100), 100);
+        assert_eq!(Budget::PerArm(-3.5).total(100), 100);
+        assert_eq!(Budget::PerArm(f64::NAN).total(100), 100);
+        // Non-finite / overflowing x·n saturates instead of wrapping to 0.
+        assert_eq!(Budget::PerArm(f64::INFINITY).total(100), u64::MAX);
+        assert_eq!(Budget::PerArm(1e18).total(1_000), u64::MAX);
+        // Sane values are unchanged (and never below the floor).
+        assert_eq!(Budget::PerArm(2.5).total(10), 25);
+        assert_eq!(Budget::PerArm(1e-9).total(10), 10);
+        assert_eq!(Budget::Total(7).total(100), 7);
+        // n = 0/1 degenerate instances keep a nonzero floor.
+        assert_eq!(Budget::PerArm(f64::NAN).total(0), 1);
+    }
+
+    #[test]
+    fn nan_poisoned_arm_sorts_last_and_is_never_selected() {
+        // A NaN distance (e.g. cosine on a zero-norm row) used to hit a
+        // NaN-unsafe unwrap_or(Equal) comparator and silently corrupt the
+        // halving order. With total_cmp the poisoned arm sorts last, is
+        // dropped in round 0, and the run stays deterministic.
+        let n = 64;
+        let dim = 4;
+        let mut rng = Rng::seeded(11);
+        let mut raw = vec![0f32; n * dim];
+        for v in raw.iter_mut().skip(dim) {
+            *v = rng.gaussian() as f32;
+        }
+        raw[7 * dim..8 * dim].fill(f32::NAN); // poison arm 7
+        let data = Data::Dense(DenseData::new(n, dim, raw));
+        let engine = NativeEngine::new(data, Metric::L2);
+
+        let a = CorrSh::with_pulls_per_arm(16.0).run(&engine, &mut Rng::seeded(3));
+        let b = CorrSh::with_pulls_per_arm(16.0).run(&engine, &mut Rng::seeded(3));
+        assert_ne!(a.best, 7, "NaN-poisoned arm won the halving");
+        assert_eq!(a.best, b.best, "NaN ordering made the run non-deterministic");
+        assert_eq!(a.pulls, b.pulls);
+        assert!(engine.nan_pulls() > 0, "NaN pulls were not counted");
+        // Exact exit also never reports the poisoned arm (argmin skips NaN).
+        let c = CorrSh::with_pulls_per_arm(1e6).run(&engine, &mut Rng::seeded(0));
+        assert_ne!(c.best, 7);
+    }
+
+    #[test]
+    fn large_magnitude_estimates_match_exact_sweep() {
+        // Precision regression: with t = n and distances ~1e7, the old f32
+        // round sums lost ~2^-24-relative precision per add (≫1e-6 after
+        // hundreds of refs). The f64 path must match a scalar f64 sweep to
+        // 1e-6 relative.
+        let n = 512;
+        let dim = 8;
+        let mut rng = Rng::seeded(21);
+        let raw: Vec<f32> = (0..n * dim).map(|_| (rng.gaussian() * 1e7) as f32).collect();
+        let data = Data::Dense(DenseData::new(n, dim, raw));
+        let engine = NativeEngine::new(data, Metric::L2);
+
+        // Huge budget forces the exact exit: estimates are full-sweep means.
+        let res = CorrSh::with_pulls_per_arm(1e9).run(&engine, &mut Rng::seeded(0));
+        assert_eq!(res.rounds[0].t, n);
+        assert_eq!(res.estimates.len(), n);
+        for &(i, est) in &res.estimates {
+            let mut acc = 0f64;
+            for j in 0..n {
+                acc += engine.pull(i, j) as f64;
+            }
+            let want = acc / n as f64;
+            let rel = (est - want).abs() / want.abs().max(1.0);
+            assert!(rel < 1e-6, "arm {i}: estimate {est} vs exact {want} (rel {rel:.3e})");
+        }
+    }
+
+    #[test]
+    fn generalized_oracle_handles_split_universes() {
+        // 10 arms scored against 40 refs: arm i's score of ref j is
+        // |i·4 − j|, so arm 5 (closest to the middle of the universe) wins.
+        let outcome = correlated_halving_argmin(
+            10,
+            40,
+            10 * 40 * 4,
+            &mut Rng::seeded(1),
+            &mut |arms, refs, out| {
+                for (k, &a) in arms.iter().enumerate() {
+                    out[k] = refs.iter().map(|&r| ((a * 4) as f64 - r as f64).abs()).sum();
+                }
+            },
+        );
+        assert!(outcome.exact_exit, "budget covers t = n_refs");
+        assert_eq!(outcome.best, 5);
+        assert!(outcome.rounds.iter().all(|r| r.t <= 40));
+    }
+
+    #[test]
+    fn negative_nan_scores_also_sort_last() {
+        // total_cmp alone orders -NaN *first*; the nan_last key must keep a
+        // sign-flipped poisoned arm from surviving the halving.
+        for budget in [32u64, 100_000] {
+            let outcome = correlated_halving_argmin(
+                8,
+                8,
+                budget,
+                &mut Rng::seeded(4),
+                &mut |arms, refs, out| {
+                    for (k, &a) in arms.iter().enumerate() {
+                        out[k] = if a == 2 {
+                            -f64::NAN
+                        } else {
+                            (a as f64 + 1.0) * refs.len() as f64
+                        };
+                    }
+                },
+            );
+            assert_ne!(outcome.best, 2, "-NaN arm won (budget {budget})");
+            assert_eq!(outcome.best, 0, "smallest finite score must win");
+        }
     }
 }

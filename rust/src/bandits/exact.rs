@@ -42,7 +42,7 @@ impl MedoidAlgorithm for Exact {
             };
         }
         let refs: Vec<usize> = (0..n).collect();
-        let mut sums = vec![0f32; n];
+        let mut sums = vec![0f64; n];
         let block = self.block.max(1);
         let mut estimates = Vec::with_capacity(n);
         for chunk_start in (0..n).step_by(block) {
@@ -51,7 +51,7 @@ impl MedoidAlgorithm for Exact {
             engine.pull_block(&arms, &refs, out);
         }
         for (i, &s) in sums.iter().enumerate() {
-            estimates.push((i, s as f64 / n as f64));
+            estimates.push((i, s / n as f64));
         }
         let best = argmin(estimates.iter().map(|&(_, v)| v));
         MedoidResult {

@@ -126,10 +126,12 @@ impl MedoidAlgorithm for Meddit {
             let lcb_of = |arm: &Arm| {
                 arm.mean - if arm.exact { 0.0 } else { radius(arm.count, sigma) }
             };
+            // NaN-safe total order (both NaN signs last) + arm index as
+            // deterministic tie-break.
             order.sort_unstable_by(|&a, &b| {
-                let la = lcb_of(&arms[a]);
-                let lb = lcb_of(&arms[b]);
-                la.partial_cmp(&lb).unwrap_or(std::cmp::Ordering::Equal)
+                let la = crate::bandits::nan_last(lcb_of(&arms[a]));
+                let lb = crate::bandits::nan_last(lcb_of(&arms[b]));
+                la.total_cmp(&lb).then_with(|| a.cmp(&b))
             });
 
             // stopping rule: best arm's UCB <= everyone else's LCB
@@ -160,18 +162,18 @@ impl MedoidAlgorithm for Meddit {
                 if arms[o].count + t >= n {
                     // promote to exact: full sweep (costs n pulls, as in [1])
                     let all: Vec<usize> = (0..n).collect();
-                    let mut out = [0f32];
+                    let mut out = [0f64];
                     engine.pull_block(&[arms[o].idx], &all, &mut out);
                     pulls += n as u64;
-                    arms[o].mean = out[0] as f64 / n as f64;
+                    arms[o].mean = out[0] / n as f64;
                     arms[o].count = n;
                     arms[o].exact = true;
                 } else {
                     let refs = rng.sample_with_replacement(n, t);
-                    let mut out = [0f32];
+                    let mut out = [0f64];
                     engine.pull_block(&[arms[o].idx], &refs, &mut out);
                     pulls += t as u64;
-                    let total = arms[o].mean * arms[o].count as f64 + out[0] as f64;
+                    let total = arms[o].mean * arms[o].count as f64 + out[0];
                     arms[o].count += t;
                     arms[o].mean = total / arms[o].count as f64;
                 }
@@ -184,9 +186,16 @@ impl MedoidAlgorithm for Meddit {
             }
         }
 
+        // (mean, idx) total order ⇒ the unique minimum is the *first* index
+        // among tied means, and NaN means (either sign) sort last instead
+        // of winning.
         let best = arms
             .iter()
-            .min_by(|a, b| a.mean.partial_cmp(&b.mean).unwrap_or(std::cmp::Ordering::Equal))
+            .min_by(|a, b| {
+                crate::bandits::nan_last(a.mean)
+                    .total_cmp(&crate::bandits::nan_last(b.mean))
+                    .then_with(|| a.idx.cmp(&b.idx))
+            })
             .map(|a| a.idx)
             .unwrap_or(0);
         MedoidResult {

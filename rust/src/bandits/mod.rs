@@ -65,16 +65,34 @@ pub trait MedoidAlgorithm {
 }
 
 /// Argmin over f64 (first index on ties), shared by every algorithm.
+///
+/// NaN-safe: candidates compare under `f64::total_cmp` and NaN values are
+/// skipped outright, so a poisoned estimate (NaN distance upstream) can
+/// never be reported as the medoid — regardless of NaN sign bits, which
+/// `total_cmp` alone would order *below* every number for -NaN.
 pub(crate) fn argmin(values: impl IntoIterator<Item = f64>) -> usize {
     let mut best = 0usize;
     let mut best_v = f64::INFINITY;
     for (i, v) in values.into_iter().enumerate() {
-        if v < best_v {
+        if !v.is_nan() && v.total_cmp(&best_v).is_lt() {
             best_v = v;
             best = i;
         }
     }
     best
+}
+
+/// Sort key mapping NaN of *either sign* to +∞, used by every selection
+/// sort. `total_cmp` alone orders -NaN *below* every number, which would
+/// let a sign-flipped NaN score win a smallest-first selection; routing
+/// keys through this helper guarantees poisoned scores sort last.
+#[inline]
+pub(crate) fn nan_last(x: f64) -> f64 {
+    if x.is_nan() {
+        f64::INFINITY
+    } else {
+        x
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +104,24 @@ mod tests {
         assert_eq!(argmin([3.0, 1.0, 1.0, 2.0]), 1);
         assert_eq!(argmin([f64::INFINITY]), 0);
         assert_eq!(argmin([]), 0);
+    }
+
+    #[test]
+    fn argmin_skips_nan() {
+        assert_eq!(argmin([f64::NAN, 2.0, 1.0]), 2);
+        assert_eq!(argmin([2.0, -f64::NAN, 1.0]), 2, "-NaN must not win");
+        assert_eq!(argmin([f64::NAN, f64::NAN]), 0, "all-NaN falls back to 0");
+        assert_eq!(argmin([1.0, f64::NEG_INFINITY]), 1, "-inf is a real value");
+    }
+
+    #[test]
+    fn nan_last_orders_both_nan_signs_after_everything() {
+        let mut xs = [1.0, -f64::NAN, f64::NEG_INFINITY, f64::NAN, 0.0];
+        xs.sort_unstable_by(|a, b| nan_last(*a).total_cmp(&nan_last(*b)));
+        assert_eq!(xs[0], f64::NEG_INFINITY);
+        assert_eq!(xs[1], 0.0);
+        assert_eq!(xs[2], 1.0);
+        assert!(xs[3].is_nan() && xs[4].is_nan(), "NaNs must sort last: {xs:?}");
     }
 
     /// Shared smoke check: every algorithm finds the planted medoid of an
@@ -106,7 +142,7 @@ mod tests {
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         let thetas = crate::bandits::exact::exact_thetas(&engine);
         let mut sorted = thetas.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let q10 = sorted[256 / 10];
         engine.reset();
 

@@ -45,10 +45,10 @@ impl MedoidAlgorithm for RandBaseline {
         let m = self.refs_per_arm.clamp(1, n);
         let refs = rng.sample_without_replacement(n, m);
         let arms: Vec<usize> = (0..n).collect();
-        let mut sums = vec![0f32; n];
+        let mut sums = vec![0f64; n];
         engine.pull_block(&arms, &refs, &mut sums);
         let estimates: Vec<(usize, f64)> =
-            arms.iter().map(|&i| (i, sums[i] as f64 / m as f64)).collect();
+            arms.iter().map(|&i| (i, sums[i] / m as f64)).collect();
         let best = argmin(estimates.iter().map(|&(_, v)| v));
         MedoidResult {
             best,

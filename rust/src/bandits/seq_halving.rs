@@ -63,10 +63,10 @@ impl MedoidAlgorithm for SeqHalving {
 
             // Independent reference draw PER ARM (with replacement) — the
             // direct bandit reduction the paper improves on.
-            let mut sums = vec![0f32; survivors.len()];
+            let mut sums = vec![0f64; survivors.len()];
             for (k, &arm) in survivors.iter().enumerate() {
                 let refs = rng.sample_with_replacement(n, t);
-                let mut out = [0f32];
+                let mut out = [0f64];
                 engine.pull_block(&[arm], &refs, &mut out);
                 sums[k] = out[0];
             }
@@ -75,7 +75,7 @@ impl MedoidAlgorithm for SeqHalving {
             estimates = survivors
                 .iter()
                 .zip(&sums)
-                .map(|(&i, &s)| (i, s as f64 / t as f64))
+                .map(|(&i, &s)| (i, s / t as f64))
                 .collect();
 
             // NOTE: t = n is *not* an exact exit here — references are drawn
@@ -83,8 +83,13 @@ impl MedoidAlgorithm for SeqHalving {
             // schedule still halves to a single survivor.
             let keep = survivors.len().div_ceil(2);
             let mut order: Vec<usize> = (0..survivors.len()).collect();
+            // Same NaN-safe total order (both NaN signs last) + index
+            // tie-break as corrSH, so the ablation differs from it ONLY in
+            // the reference draw.
             order.sort_unstable_by(|&a, &b| {
-                sums[a].partial_cmp(&sums[b]).unwrap_or(std::cmp::Ordering::Equal)
+                crate::bandits::nan_last(sums[a])
+                    .total_cmp(&crate::bandits::nan_last(sums[b]))
+                    .then_with(|| survivors[a].cmp(&survivors[b]))
             });
             survivors = order[..keep].iter().map(|&k| survivors[k]).collect();
             if survivors.len() <= 1 {
@@ -137,7 +142,7 @@ mod tests {
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         let thetas = crate::bandits::exact::exact_thetas(&engine);
         let mut sorted = thetas.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let q10 = sorted[256 / 10];
         let mut hits = 0;
         for t in 0..10 {

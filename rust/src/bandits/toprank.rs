@@ -50,10 +50,10 @@ impl MedoidAlgorithm for TopRank {
         // ---- phase 1: shared-reference scoring -----------------------------
         let refs = rng.sample_without_replacement(n, m);
         let arms: Vec<usize> = (0..n).collect();
-        let mut sums = vec![0f32; n];
+        let mut sums = vec![0f64; n];
         engine.pull_block(&arms, &refs, &mut sums);
         pulls += (n * m) as u64;
-        let means: Vec<f64> = sums.iter().map(|&s| s as f64 / m as f64).collect();
+        let means: Vec<f64> = sums.iter().map(|&s| s / m as f64).collect();
 
         // Hoeffding radius from the empirical distance range (distances are
         // bounded by the data's diameter; we estimate it from phase 1).
@@ -72,8 +72,12 @@ impl MedoidAlgorithm for TopRank {
         // guardrail: cap candidates at n/4 by tightening to the k smallest
         let cap = (n / 4).max(2);
         if candidates.len() > cap {
+            // NaN-safe total order (both NaN signs last), point index as
+            // deterministic tie-break.
             candidates.sort_unstable_by(|&a, &b| {
-                means[a].partial_cmp(&means[b]).unwrap_or(std::cmp::Ordering::Equal)
+                crate::bandits::nan_last(means[a])
+                    .total_cmp(&crate::bandits::nan_last(means[b]))
+                    .then_with(|| a.cmp(&b))
             });
             candidates.truncate(cap);
         }
@@ -81,13 +85,13 @@ impl MedoidAlgorithm for TopRank {
         let all: Vec<usize> = (0..n).collect();
         let mut best = (best_phase1, f64::INFINITY);
         let mut estimates: Vec<(usize, f64)> = Vec::with_capacity(candidates.len());
-        let mut out = vec![0f32; candidates.len()];
+        let mut out = vec![0f64; candidates.len()];
         engine.pull_block(&candidates, &all, &mut out);
         pulls += (candidates.len() * n) as u64;
         for (k, &c) in candidates.iter().enumerate() {
-            let theta = out[k] as f64 / n as f64;
+            let theta = out[k] / n as f64;
             estimates.push((c, theta));
-            if theta < best.1 {
+            if !theta.is_nan() && theta < best.1 {
                 best = (c, theta);
             }
         }

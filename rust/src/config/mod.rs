@@ -106,6 +106,90 @@ impl AlgoConfig {
     }
 }
 
+/// k-medoids clustering knobs (the `kmedoids` CLI subcommand, server op and
+/// [`crate::kmedoids::BanditKMedoids`]). Budgets are pulls-per-arm over the
+/// respective arm space: BUILD arms are candidate points, SWAP arms are
+/// (medoid, non-medoid) pairs, polish arms are cluster members.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KMedoidsConfig {
+    /// Number of medoids.
+    pub k: usize,
+    /// Halving budget per BUILD step (pulls per candidate arm).
+    pub build_pulls_per_arm: f64,
+    /// Halving budget per SWAP round (pulls per swap-pair arm).
+    pub swap_pulls_per_arm: f64,
+    /// SWAP rounds before giving up (each round stops early once the best
+    /// verified swap no longer improves the exact loss). 0 disables SWAP.
+    pub max_swap_rounds: usize,
+    /// Per-cluster corrSH polish budget (pulls per member arm); 0 disables
+    /// the polish pass.
+    pub polish_pulls_per_arm: f64,
+}
+
+impl Default for KMedoidsConfig {
+    fn default() -> Self {
+        KMedoidsConfig {
+            k: 5,
+            build_pulls_per_arm: 12.0,
+            swap_pulls_per_arm: 3.0,
+            max_swap_rounds: 3,
+            polish_pulls_per_arm: 32.0,
+        }
+    }
+}
+
+impl KMedoidsConfig {
+    /// Parse from a JSON object (`{"k": 5, "build_pulls_per_arm": 12, ...}`;
+    /// unknown fields are ignored, `Null` yields the defaults).
+    pub fn from_json_value(v: &Value) -> Result<Self> {
+        let mut cfg = KMedoidsConfig::default();
+        if matches!(v, Value::Null) {
+            return Ok(cfg);
+        }
+        if let Some(k) = v.get("k").as_usize() {
+            cfg.k = k;
+        }
+        if let Some(x) = v.get("build_pulls_per_arm").as_f64() {
+            cfg.build_pulls_per_arm = x;
+        }
+        if let Some(x) = v.get("swap_pulls_per_arm").as_f64() {
+            cfg.swap_pulls_per_arm = x;
+        }
+        if let Some(r) = v.get("max_swap_rounds").as_usize() {
+            cfg.max_swap_rounds = r;
+        }
+        if let Some(x) = v.get("polish_pulls_per_arm").as_f64() {
+            cfg.polish_pulls_per_arm = x;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Reject degenerate knobs up front (the Budget layer would clamp them,
+    /// but a config typo should fail loudly, not silently under-sample).
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(self.k >= 1, "kmedoids.k must be >= 1");
+        crate::ensure!(
+            self.build_pulls_per_arm.is_finite() && self.build_pulls_per_arm > 0.0,
+            "kmedoids.build_pulls_per_arm must be finite and > 0"
+        );
+        crate::ensure!(
+            self.swap_pulls_per_arm.is_finite() && self.swap_pulls_per_arm >= 0.0,
+            "kmedoids.swap_pulls_per_arm must be finite and >= 0"
+        );
+        crate::ensure!(
+            self.polish_pulls_per_arm.is_finite() && self.polish_pulls_per_arm >= 0.0,
+            "kmedoids.polish_pulls_per_arm must be finite and >= 0"
+        );
+        Ok(())
+    }
+
+    /// Instantiate the clustering algorithm.
+    pub fn build(&self) -> crate::kmedoids::BanditKMedoids {
+        crate::kmedoids::BanditKMedoids::new(self.clone())
+    }
+}
+
 /// Server runtime shape: the `serve` command and `server::Executor`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServerConfig {
@@ -154,6 +238,8 @@ pub struct RunConfig {
     pub metric: Metric,
     pub engine: EngineKind,
     pub algo: AlgoConfig,
+    /// k-medoids knobs (the `kmedoids` subcommand; ignored by `medoid`).
+    pub kmedoids: KMedoidsConfig,
     /// Artifact directory for the PJRT engine.
     pub artifacts_dir: String,
     pub trials: usize,
@@ -167,6 +253,7 @@ impl Default for RunConfig {
             metric: Metric::L2,
             engine: EngineKind::Native,
             algo: AlgoConfig::CorrSh { pulls_per_arm: 24.0 },
+            kmedoids: KMedoidsConfig::default(),
             artifacts_dir: "artifacts".to_string(),
             trials: 1,
         }
@@ -217,6 +304,7 @@ impl RunConfig {
         if !matches!(algo, Value::Null) {
             cfg.algo = AlgoConfig::from_json(algo)?;
         }
+        cfg.kmedoids = KMedoidsConfig::from_json_value(v.get("kmedoids"))?;
         Ok(cfg)
     }
 
@@ -343,6 +431,39 @@ mod tests {
             assert_eq!(algo.name(), name);
             let _ = algo.build(100);
         }
+    }
+
+    #[test]
+    fn kmedoids_config_parses_and_validates() {
+        // absent block -> defaults
+        let cfg = RunConfig::from_json_value(&json::parse("{}").unwrap()).unwrap();
+        assert_eq!(cfg.kmedoids, KMedoidsConfig::default());
+        // overrides ride along a full run config
+        let v = json::parse(
+            r#"{"dataset": {"kind": "mixture", "n": 2000, "clusters": 5},
+                "kmedoids": {"k": 5, "build_pulls_per_arm": 16,
+                             "swap_pulls_per_arm": 2, "max_swap_rounds": 2,
+                             "polish_pulls_per_arm": 24}}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json_value(&v).unwrap();
+        assert_eq!(cfg.kmedoids.k, 5);
+        assert_eq!(cfg.kmedoids.build_pulls_per_arm, 16.0);
+        assert_eq!(cfg.kmedoids.swap_pulls_per_arm, 2.0);
+        assert_eq!(cfg.kmedoids.max_swap_rounds, 2);
+        assert_eq!(cfg.kmedoids.polish_pulls_per_arm, 24.0);
+        // degenerate knobs fail loudly
+        for bad in [
+            r#"{"k": 0}"#,
+            r#"{"build_pulls_per_arm": 0}"#,
+            r#"{"build_pulls_per_arm": -2}"#,
+            r#"{"swap_pulls_per_arm": -1}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(KMedoidsConfig::from_json_value(&v).is_err(), "accepted {bad}");
+        }
+        // the config builds a runnable algorithm
+        assert_eq!(KMedoidsConfig::default().build().cfg.k, 5);
     }
 
     #[test]

@@ -32,7 +32,7 @@ impl BudgetLedger {
     }
 
     pub fn remaining(&self) -> u64 {
-        (self.budget + self.slack).saturating_sub(self.spent)
+        self.budget.saturating_add(self.slack).saturating_sub(self.spent)
     }
 
     /// Charge a round's pulls. Panics (debug) / errors if the hard cap
@@ -40,7 +40,7 @@ impl BudgetLedger {
     /// condition.
     pub fn charge_round(&mut self, round: usize, pulls: u64) -> crate::Result<()> {
         crate::ensure!(
-            self.spent + pulls <= self.budget + self.slack,
+            self.spent.saturating_add(pulls) <= self.budget.saturating_add(self.slack),
             "round {round} would overspend: spent {} + {pulls} > budget {} + slack {}",
             self.spent,
             self.budget,

@@ -36,9 +36,19 @@ pub struct RoundPlan {
 
 /// t_r for a given budget/survivor count (Algorithm 1 line 3).
 pub fn t_r(total_budget: u64, survivors: usize, n: usize) -> usize {
-    let log = ceil_log2(n).max(1);
-    let t = (total_budget / (survivors as u64 * log as u64)) as usize;
-    t.clamp(1, n)
+    t_r_capped(total_budget, survivors, ceil_log2(n), n)
+}
+
+/// Generalized t_r for a split arm/reference universe: `log_rounds` halving
+/// rounds over the arm space (`⌈log₂ n_arms⌉`), with the shared reference
+/// draw clamped to the reference-universe size `max_t`. The medoid problem
+/// is the special case `log_rounds = ⌈log₂ n⌉, max_t = n`; the k-medoids
+/// BUILD/SWAP oracles halve over candidate/swap arms while still drawing
+/// references from the `n` data points.
+pub fn t_r_capped(total_budget: u64, survivors: usize, log_rounds: usize, max_t: usize) -> usize {
+    let log = log_rounds.max(1) as u64;
+    let t = (total_budget / (survivors.max(1) as u64 * log)) as usize;
+    t.clamp(1, max_t.max(1))
 }
 
 /// The complete (deterministic) halving schedule for (n, T).
@@ -174,5 +184,18 @@ mod tests {
     fn t_r_clamps() {
         assert_eq!(t_r(0, 10, 100), 1); // floor 0 -> clamp 1
         assert_eq!(t_r(u64::MAX / 2, 2, 100), 100); // huge -> clamp n
+    }
+
+    #[test]
+    fn t_r_capped_generalizes_t_r() {
+        // arms == refs == n reproduces the paper schedule exactly
+        for (budget, survivors, n) in [(4_000u64, 100usize, 100usize), (64, 10, 10)] {
+            assert_eq!(t_r(budget, survivors, n), t_r_capped(budget, survivors, ceil_log2(n), n));
+        }
+        // split universes: refs clamp to the data size, not the arm count
+        assert_eq!(t_r_capped(u64::MAX / 2, 2, ceil_log2(10_000), 500), 500);
+        assert_eq!(t_r_capped(0, 10_000, ceil_log2(10_000), 500), 1);
+        // degenerate inputs never divide by zero
+        assert_eq!(t_r_capped(100, 0, 0, 0), 1);
     }
 }

@@ -36,6 +36,38 @@ pub fn generate(cfg: &SynthConfig) -> Data {
     Data::Dense(DenseData::new(n, dim, data))
 }
 
+/// Gaussian mixture with **planted per-cluster medoids** — the k-medoids
+/// workload's ground-truth dataset ([`crate::kmedoids`]).
+///
+/// `cfg.clusters` well-separated unit-variance clusters (centers drawn at
+/// 10× scale, so inter-center distances dwarf the within-cluster spread).
+/// Point `j` belongs to cluster `j % clusters`, and points `0..clusters`
+/// sit *exactly* on their cluster's center — each is its cluster's medoid
+/// with overwhelming probability (same argument as [`generate`]'s planted
+/// point 0), so the optimal medoid set is `{0, .., clusters-1}`.
+pub fn generate_mixture(cfg: &SynthConfig) -> Data {
+    let mut rng = Rng::seeded(cfg.seed ^ 0x13C7_55EE);
+    let n = cfg.n;
+    let dim = cfg.dim;
+    let k = cfg.clusters.clamp(1, n.max(1));
+    let mut centers = vec![0f32; k * dim];
+    for v in centers.iter_mut() {
+        *v = (rng.gaussian() * 10.0) as f32;
+    }
+    let mut data = vec![0f32; n * dim];
+    for i in 0..n {
+        let c = i % k;
+        let row = &mut data[i * dim..(i + 1) * dim];
+        row.copy_from_slice(&centers[c * dim..(c + 1) * dim]);
+        if i >= k {
+            for v in row.iter_mut() {
+                *v += rng.gaussian() as f32;
+            }
+        }
+    }
+    Data::Dense(DenseData::new(n, dim, data))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,6 +97,33 @@ mod tests {
             }
         }
         assert_eq!(best.0, 0, "planted medoid lost: θ_0={t0:.4}, θ_{}={:.4}", best.0, best.1);
+    }
+
+    #[test]
+    fn mixture_plants_per_cluster_medoids() {
+        let k = 4;
+        let cfg = SynthConfig { n: 400, dim: 8, seed: 3, clusters: k, ..Default::default() };
+        let d = generate_mixture(&cfg);
+        // Within each cluster (members j ≡ c mod k), the planted center c
+        // must be the exact within-cluster medoid.
+        for c in 0..k {
+            let members: Vec<usize> = (0..d.n()).filter(|j| j % k == c).collect();
+            let theta = |i: usize| -> f64 {
+                members.iter().map(|&j| d.distance(Metric::L2, i, j, None) as f64).sum()
+            };
+            let t_center = theta(c);
+            for &m in &members {
+                assert!(
+                    t_center <= theta(m) + 1e-9,
+                    "cluster {c}: planted center beaten by member {m}"
+                );
+            }
+        }
+        // Clusters are well separated: cross-cluster distances dwarf
+        // within-cluster ones.
+        let within = d.distance(Metric::L2, 0, k, None);
+        let across = d.distance(Metric::L2, 0, 1, None);
+        assert!(across > 3.0 * within, "clusters not separated: {across} vs {within}");
     }
 
     #[test]

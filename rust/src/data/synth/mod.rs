@@ -51,6 +51,9 @@ pub enum Kind {
     Netflix,
     Mnist,
     Gaussian,
+    /// Gaussian mixture with planted per-cluster medoids (`clusters` knob)
+    /// — the k-medoids ground-truth workload.
+    Mixture,
 }
 
 impl Kind {
@@ -60,6 +63,7 @@ impl Kind {
             Kind::Netflix => "netflix",
             Kind::Mnist => "mnist",
             Kind::Gaussian => "gaussian",
+            Kind::Mixture => "mixture",
         }
     }
 
@@ -71,6 +75,7 @@ impl Kind {
             Kind::Netflix => Metric::Cosine,
             Kind::Mnist => Metric::L2,
             Kind::Gaussian => Metric::L2,
+            Kind::Mixture => Metric::L2,
         }
     }
 
@@ -80,6 +85,7 @@ impl Kind {
             Kind::Netflix => netflix::generate(cfg),
             Kind::Mnist => mnist::generate(cfg),
             Kind::Gaussian => gaussian::generate(cfg),
+            Kind::Mixture => gaussian::generate_mixture(cfg),
         }
     }
 }
@@ -93,6 +99,7 @@ impl std::str::FromStr for Kind {
             "netflix" => Ok(Kind::Netflix),
             "mnist" | "mnist-zeros" => Ok(Kind::Mnist),
             "gaussian" | "toy" => Ok(Kind::Gaussian),
+            "mixture" | "gmm" => Ok(Kind::Mixture),
             other => crate::bail!("unknown dataset kind {other:?}"),
         }
     }
@@ -104,7 +111,7 @@ mod tests {
 
     #[test]
     fn kinds_parse() {
-        for k in [Kind::RnaSeq, Kind::Netflix, Kind::Mnist, Kind::Gaussian] {
+        for k in [Kind::RnaSeq, Kind::Netflix, Kind::Mnist, Kind::Gaussian, Kind::Mixture] {
             assert_eq!(k.name().parse::<Kind>().unwrap(), k);
         }
     }
@@ -112,7 +119,7 @@ mod tests {
     #[test]
     fn generators_deterministic_by_seed() {
         let cfg = SynthConfig { n: 50, dim: 64, seed: 9, ..Default::default() };
-        for k in [Kind::RnaSeq, Kind::Netflix, Kind::Mnist, Kind::Gaussian] {
+        for k in [Kind::RnaSeq, Kind::Netflix, Kind::Mnist, Kind::Gaussian, Kind::Mixture] {
             let a = k.generate(&cfg);
             let b = k.generate(&cfg);
             assert_eq!(a.n(), b.n());

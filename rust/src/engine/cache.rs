@@ -23,6 +23,10 @@ pub struct EngineCache {
     entries: Mutex<HashMap<(String, u64, Metric), Arc<PreparedEngine>>>,
     hits: Counter,
     misses: Counter,
+    /// NaN pulls banked from evicted sessions, so [`EngineCache::nan_pulls`]
+    /// stays monotone across `invalidate`/unregister instead of dropping
+    /// the poisoning signal with the offending dataset.
+    evicted_nan_pulls: Counter,
 }
 
 impl EngineCache {
@@ -62,9 +66,17 @@ impl EngineCache {
 
     /// Drop every cached session for `name` (all generations and metrics).
     /// Called on `unregister` and re-`register` as memory hygiene —
-    /// correctness against stale data comes from the generation key.
+    /// correctness against stale data comes from the generation key. The
+    /// evicted sessions' NaN-pull counts are banked first (monotone metric).
     pub fn invalidate(&self, name: &str) {
-        self.entries.lock().unwrap().retain(|(n, _, _), _| n != name);
+        self.entries.lock().unwrap().retain(|(n, _, _), p| {
+            if n == name {
+                self.evicted_nan_pulls.add(p.nan_pulls());
+                false
+            } else {
+                true
+            }
+        });
     }
 
     pub fn len(&self) -> usize {
@@ -81,6 +93,16 @@ impl EngineCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.get()
+    }
+
+    /// NaN pulls surfaced across every session this cache has held — live
+    /// entries plus counts banked from evicted ones (see
+    /// [`PreparedEngine::nan_pulls`]); exported through the server's
+    /// `metrics` op so poisoned datasets are observable, not silent, and
+    /// the signal survives unregistering the offending dataset.
+    pub fn nan_pulls(&self) -> u64 {
+        let live: u64 = self.entries.lock().unwrap().values().map(|p| p.nan_pulls()).sum();
+        self.evicted_nan_pulls.get() + live
     }
 }
 
@@ -138,6 +160,23 @@ mod tests {
         let again = cache.get_or_prepare("toy", 1, Metric::L2, &new_data);
         assert!(Arc::ptr_eq(&fresh, &again));
         assert!(Arc::ptr_eq(again.data(), &new_data));
+    }
+
+    #[test]
+    fn nan_pulls_survive_eviction() {
+        use crate::engine::{NativeEngine, PullEngine};
+        let cache = EngineCache::new();
+        let mut raw = vec![0.5f32; 20 * 4];
+        raw[0] = f32::NAN;
+        let data = Arc::new(Data::Dense(crate::data::DenseData::new(20, 4, raw)));
+        let prepared = cache.get_or_prepare("bad", 0, Metric::L2, &data);
+        let engine = NativeEngine::from_prepared(prepared, 1);
+        assert!(engine.pull(0, 1).is_nan());
+        assert_eq!(cache.nan_pulls(), 1);
+        // Evicting the poisoned dataset must not reset the signal.
+        cache.invalidate("bad");
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.nan_pulls(), 1, "nan_pulls went backwards on eviction");
     }
 
     #[test]

@@ -37,6 +37,12 @@ use crate::metrics::Counter;
 /// (arm, ref) pair exactly once — the correlation property of Algorithm 1
 /// comes from the *caller* passing the same `refs` for all arms.
 ///
+/// Precision policy (DESIGN.md §9): individual distances are `f32` (the
+/// kernel/artifact dtype), but block **sums** are produced in `f64` — with
+/// `t_r` up to `n` references per arm, `t · d(x_i, x_j)` overflows f32's
+/// 24-bit mantissa long before the paper's dataset scales, which silently
+/// biased the round estimator.
+///
 /// Deliberately NOT `Sync`: the PJRT engine wraps a single-threaded PJRT
 /// client handle (the `xla` crate's client is `Rc`-based). Parallel trial
 /// runners bound on `PullEngine + Sync` generically and use the native
@@ -49,11 +55,12 @@ pub trait PullEngine {
     /// One distance computation.
     fn pull(&self, arm: usize, reference: usize) -> f32;
 
-    /// Sum of distances from each arm to all of `refs`. Default: scalar loop.
-    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+    /// Sum of distances from each arm to all of `refs`, accumulated in f64.
+    /// Default: scalar loop.
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         assert_eq!(arms.len(), out.len());
         for (k, &a) in arms.iter().enumerate() {
-            out[k] = refs.iter().map(|&r| self.pull(a, r)).sum();
+            out[k] = refs.iter().map(|&r| self.pull(a, r) as f64).sum();
         }
     }
 
@@ -109,7 +116,7 @@ impl<E: PullEngine> PullEngine for CountingEngine<E> {
         self.inner.pull(arm, reference)
     }
 
-    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         self.counter.add((arms.len() * refs.len()) as u64);
         self.inner.pull_block(arms, refs, out);
     }
@@ -133,7 +140,7 @@ mod tests {
         assert_eq!(e.pulls(), 0);
         let _ = e.pull(0, 1);
         assert_eq!(e.pulls(), 1);
-        let mut out = vec![0f32; 4];
+        let mut out = vec![0f64; 4];
         e.pull_block(&[0, 1, 2, 3], &[5, 6, 7], &mut out);
         assert_eq!(e.pulls(), 1 + 12);
         let mut m = vec![0f32; 6];
@@ -160,7 +167,7 @@ mod tests {
                 (a * 100 + r) as f32
             }
         }
-        let mut out = vec![0f32; 2];
+        let mut out = vec![0f64; 2];
         Toy.pull_block(&[1, 2], &[3, 4], &mut out);
         assert_eq!(out, vec![103.0 + 104.0, 203.0 + 204.0]);
         let mut m = vec![0f32; 4];

@@ -10,6 +10,7 @@ use std::sync::Arc;
 use crate::data::{Data, SparseData};
 use crate::distance::Metric;
 use crate::engine::PullEngine;
+use crate::metrics::Counter;
 use crate::util::threads;
 
 /// The amortizable half of a native engine: the dataset plus every
@@ -27,6 +28,17 @@ pub struct PreparedEngine {
     /// block hot path visit only the *arm's* support against a densified
     /// reference row (see `sparse_block`).
     row_reduction: Option<Arc<Vec<f32>>>,
+    /// NaN **results** surfaced by this session's pull paths (poisoned
+    /// inputs, e.g. a NaN feature value), counted at each API's output
+    /// granularity: one per NaN distance for `pull`/`pull_matrix`, one per
+    /// NaN *sum* for `pull_block` (scanning the output is free; per-distance
+    /// detection inside the accumulation kernels is not). The metric is a
+    /// poisoning *detection signal* — nonzero means NaN flowed through this
+    /// session — not a calibrated distance-level count. NaN is still
+    /// *propagated* (the bandit selection layer orders it last via
+    /// `nan_last`/`total_cmp`) but never silently: the count is exported
+    /// through [`NativeEngine::nan_pulls`] and the server's `metrics` op.
+    nan_pulls: Counter,
 }
 
 impl PreparedEngine {
@@ -47,7 +59,7 @@ impl PreparedEngine {
             )),
             _ => None,
         };
-        PreparedEngine { data, metric, norms, row_reduction }
+        PreparedEngine { data, metric, norms, row_reduction, nan_pulls: Counter::new() }
     }
 
     pub fn data(&self) -> &Arc<Data> {
@@ -56,6 +68,11 @@ impl PreparedEngine {
 
     pub fn metric(&self) -> Metric {
         self.metric
+    }
+
+    /// NaN results surfaced so far by every engine sharing this session.
+    pub fn nan_pulls(&self) -> u64 {
+        self.nan_pulls.get()
     }
 }
 
@@ -88,10 +105,32 @@ impl NativeEngine {
         &self.prepared
     }
 
+    /// NaN results surfaced by this engine's session (shared across every
+    /// engine wrapping the same [`PreparedEngine`]).
+    pub fn nan_pulls(&self) -> u64 {
+        self.prepared.nan_pulls()
+    }
+
     #[inline]
     fn dist(&self, i: usize, j: usize) -> f32 {
         let p = &*self.prepared;
         p.data.distance(p.metric, i, j, p.norms.as_ref().map(|n| n.as_slice()))
+    }
+
+    /// Count NaN sums in a finished block (O(arms) scan — negligible next
+    /// to the O(arms·refs·d) distance work it audits).
+    fn note_nan_sums(&self, out: &[f64]) {
+        let nans = out.iter().filter(|v| v.is_nan()).count();
+        if nans > 0 {
+            self.prepared.nan_pulls.add(nans as u64);
+        }
+    }
+
+    fn note_nan_dists(&self, out: &[f32]) {
+        let nans = out.iter().filter(|v| v.is_nan()).count();
+        if nans > 0 {
+            self.prepared.nan_pulls.add(nans as u64);
+        }
     }
 
     /// Sparse block fast path (§Perf optimization #1, EXPERIMENTS.md):
@@ -106,7 +145,7 @@ impl NativeEngine {
     /// l2²(a,y) = Σ_{k∈supp(a)} ((a_k−y_k)² − y_k²) + Σy²
     /// cos(a,y) = 1 − (Σ_{k∈supp(a)} a_k·y_k) / (‖a‖‖y‖)
     /// ```
-    fn sparse_block(&self, s: &SparseData, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+    fn sparse_block(&self, s: &SparseData, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         let dim = s.dim;
         let work = arms.len() * refs.len();
         let threads = if work < 4096 { 1 } else { self.threads };
@@ -169,7 +208,7 @@ impl NativeEngine {
                 }
             }
             for (o, &a) in slot.iter_mut().zip(&acc) {
-                *o = a as f32;
+                *o = a;
             }
         });
     }
@@ -190,10 +229,14 @@ impl PullEngine for NativeEngine {
 
     #[inline]
     fn pull(&self, arm: usize, reference: usize) -> f32 {
-        self.dist(arm, reference)
+        let d = self.dist(arm, reference);
+        if d.is_nan() {
+            self.prepared.nan_pulls.add(1);
+        }
+        d
     }
 
-    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         assert_eq!(arms.len(), out.len());
         // Sparse data takes the densified-reference fast path (~12x on the
         // RNA-Seq geometry — see EXPERIMENTS.md §Perf). Densifying a
@@ -202,7 +245,9 @@ impl PullEngine for NativeEngine {
         // correlated-round shape).
         if let Data::Sparse(s) = &*self.prepared.data {
             if arms.len() >= 4 {
-                return self.sparse_block(s, arms, refs, out);
+                self.sparse_block(s, arms, refs, out);
+                self.note_nan_sums(out);
+                return;
             }
         }
         // Dense: parallel over arms, refs swept innermost so rows stay
@@ -217,9 +262,10 @@ impl PullEngine for NativeEngine {
                 for &r in refs {
                     acc += self.dist(a, r) as f64;
                 }
-                *o = acc as f32;
+                *o = acc;
             }
         });
+        self.note_nan_sums(out);
     }
 
     fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
@@ -283,6 +329,7 @@ impl PullEngine for NativeEngine {
                     }
                 }
             });
+            self.note_nan_dists(out);
             return;
         }
         let threads = if out.len() < 4096 { 1 } else { self.threads };
@@ -292,6 +339,7 @@ impl PullEngine for NativeEngine {
                 *o = self.dist(a, refs[j]);
             }
         });
+        self.note_nan_dists(out);
     }
 }
 
@@ -299,6 +347,7 @@ impl PullEngine for NativeEngine {
 mod tests {
     use super::*;
     use crate::data::synth::{netflix, rnaseq, SynthConfig};
+    use crate::data::DenseData;
     use crate::util::rng::Rng;
 
     fn engines() -> Vec<(&'static str, NativeEngine)> {
@@ -315,10 +364,10 @@ mod tests {
         for (name, e) in engines() {
             let arms: Vec<usize> = (0..e.n()).filter(|_| rng.chance(0.3)).collect();
             let refs = rng.sample_without_replacement(e.n(), 17);
-            let mut out = vec![0f32; arms.len()];
+            let mut out = vec![0f64; arms.len()];
             e.pull_block(&arms, &refs, &mut out);
             for (k, &a) in arms.iter().enumerate() {
-                let want: f32 = refs.iter().map(|&r| e.pull(a, r)).sum();
+                let want: f64 = refs.iter().map(|&r| e.pull(a, r) as f64).sum();
                 assert!(
                     (out[k] - want).abs() < 1e-3 * want.abs().max(1.0),
                     "{name}: arm {a}: {} vs {want}",
@@ -326,6 +375,53 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn block_sums_keep_f64_precision_at_large_magnitude() {
+        // Regression for the f32 round-sum bug: distances ~1e7 summed over
+        // hundreds of refs lose ≫1e-6 relative precision in f32.
+        let n = 400;
+        let dim = 8;
+        let mut rng = Rng::seeded(50);
+        let raw: Vec<f32> = (0..n * dim).map(|_| (rng.gaussian() * 1e7) as f32).collect();
+        let data = Data::Dense(DenseData::new(n, dim, raw));
+        let e = NativeEngine::with_threads(Arc::new(data), Metric::L2, 4);
+        let arms: Vec<usize> = (0..n).collect();
+        let refs: Vec<usize> = (0..n).collect();
+        let mut out = vec![0f64; n];
+        e.pull_block(&arms, &refs, &mut out);
+        for (k, &o) in out.iter().enumerate() {
+            let want: f64 = refs.iter().map(|&r| e.pull(k, r) as f64).sum();
+            let rel = (o - want).abs() / want.abs().max(1.0);
+            assert!(rel < 1e-9, "arm {k}: block {o} vs scalar {want} (rel {rel:.3e})");
+        }
+        assert_eq!(e.nan_pulls(), 0);
+    }
+
+    #[test]
+    fn nan_inputs_are_counted_not_silent() {
+        let mut raw = vec![0.5f32; 20 * 4];
+        raw[3 * 4] = f32::NAN; // poison row 3
+        let data = Data::Dense(DenseData::new(20, 4, raw));
+        let e = NativeEngine::with_threads(Arc::new(data), Metric::L2, 1);
+        assert_eq!(e.nan_pulls(), 0);
+        assert!(e.pull(3, 0).is_nan());
+        assert_eq!(e.nan_pulls(), 1);
+        let arms: Vec<usize> = (0..20).collect();
+        let refs: Vec<usize> = (0..20).collect();
+        let mut out = vec![0f64; 20];
+        e.pull_block(&arms, &refs, &mut out);
+        // ref 3 participates in every arm's sum, so every sum is NaN.
+        assert!(out.iter().all(|v| v.is_nan()));
+        assert_eq!(e.nan_pulls(), 1 + 20, "every NaN sum counted");
+        let mut m = vec![0f32; 2 * 20];
+        e.pull_matrix(&[3, 5], &refs, &mut m);
+        assert_eq!(e.nan_pulls(), 21 + 20 + 1, "NaN matrix entries counted");
+        // The counter is a session property: a sibling engine over the same
+        // PreparedEngine observes the same count.
+        let sib = NativeEngine::from_prepared(e.prepared().clone(), 2);
+        assert_eq!(sib.nan_pulls(), e.nan_pulls());
     }
 
     #[test]
@@ -378,8 +474,8 @@ mod tests {
         let parallel = NativeEngine::with_threads(data, Metric::L2, 8);
         let arms: Vec<usize> = (0..400).collect();
         let refs: Vec<usize> = (0..100).collect();
-        let mut a = vec![0f32; 400];
-        let mut b = vec![0f32; 400];
+        let mut a = vec![0f64; 400];
+        let mut b = vec![0f64; 400];
         serial.pull_block(&arms, &refs, &mut a);
         parallel.pull_block(&arms, &refs, &mut b);
         assert_eq!(a, b);

@@ -80,7 +80,7 @@ impl PullEngine for PjrtEngine {
             .distance(self.metric, arm, reference, self.norms.as_ref().map(|n| n.as_slice()))
     }
 
-    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         assert_eq!(arms.len(), out.len());
         out.fill(0.0);
         let dim = self.data.dim();
@@ -114,8 +114,10 @@ impl PullEngine for PjrtEngine {
             }
 
             let sums = exe.run(xs, ys, ms).expect("pjrt chunk_sums execution failed");
+            // Per-job partial sums accumulate in f64 host-side (the artifact
+            // output stays f32 per tile, which is 256 refs at most).
             for k in 0..job.arm_len {
-                out[job.arm_start + k] += sums[k];
+                out[job.arm_start + k] += sums[k] as f64;
             }
         }
     }
@@ -152,8 +154,8 @@ mod tests {
             let native = NativeEngine::with_threads(data.clone(), metric, 1);
             let arms: Vec<usize> = rng.sample_without_replacement(300, 100);
             let refs: Vec<usize> = rng.sample_without_replacement(300, 37);
-            let mut got = vec![0f32; arms.len()];
-            let mut want = vec![0f32; arms.len()];
+            let mut got = vec![0f64; arms.len()];
+            let mut want = vec![0f64; arms.len()];
             pjrt.pull_block(&arms, &refs, &mut got);
             native.pull_block(&arms, &refs, &mut want);
             for k in 0..arms.len() {

@@ -165,7 +165,7 @@ pub fn fig2_toy_demo(samples: usize, seed: u64) -> Fig2Demo {
     let thetas = crate::bandits::exact::exact_thetas(&engine);
     let medoid = crate::bandits::argmin(thetas.iter().cloned());
     let mut order: Vec<usize> = (0..thetas.len()).collect();
-    order.sort_by(|&a, &b| thetas[a].partial_cmp(&thetas[b]).unwrap());
+    order.sort_by(|&a, &b| thetas[a].total_cmp(&thetas[b]).then_with(|| a.cmp(&b)));
     let mid = order[order.len() / 2];
 
     let mut rng = Rng::seeded(seed ^ 0xF16);
@@ -214,7 +214,7 @@ pub fn fig3_difference_histograms(
 
     // hard arm: smallest positive Δ; mid arm: median Δ
     let mut order: Vec<usize> = (0..data.n()).filter(|&i| i != st.medoid).collect();
-    order.sort_by(|&a, &b| st.deltas[a].partial_cmp(&st.deltas[b]).unwrap());
+    order.sort_by(|&a, &b| st.deltas[a].total_cmp(&st.deltas[b]).then_with(|| a.cmp(&b)));
     let hard = order[0];
     let mid = order[order.len() / 2];
 

@@ -1,0 +1,432 @@
+//! k-medoids clustering (BUILD / SWAP / polish) on top of the corrSH pull
+//! substrate — the paper's motivating workload ("clustering the data to
+//! discover sub-classes of cells, where medoid finding is used as a
+//! subroutine") promoted from example code to a first-class subsystem, in
+//! the style of BanditPAM (Tiwari et al., NeurIPS 2020): every phase is a
+//! best-arm problem answered by the *same* correlated halving oracle that
+//! powers single-medoid identification.
+//!
+//! * **BUILD** ([`build`]) — greedy seeding: step `i` treats every
+//!   non-medoid as an arm whose score against reference `j` is the marginal
+//!   loss `min(best_i(j), d(x, j))`, and runs
+//!   [`correlated_halving_argmin`] over the candidates (shared reference
+//!   draws ⇒ the cross-cluster variance cancels exactly as in Theorem 2.1).
+//! * **SWAP** ([`swap`]) — PAM improvement: arms are (medoid, non-medoid)
+//!   pairs scored by the post-swap loss `min(removed(j), d(x, j))`; the
+//!   winning pair is verified against the *exact* current loss before being
+//!   applied, so SWAP never accepts a regression.
+//! * **Polish** — per-cluster corrSH restricted to the cluster's members
+//!   (the same subroutine the paper's intro describes), again accepted only
+//!   on exact improvement.
+//!
+//! All distance work flows through [`PullEngine::pull_matrix`] /
+//! [`PullEngine::pull_block`], i.e. the persistent worker pool and (via the
+//! server) the cached `PreparedEngine` sessions. Pull counts are reported
+//! per phase and measured at the engine boundary (SWAP deduplicates the
+//! shared candidate rows inside a round, so it pulls *fewer* distances than
+//! the schedule charges).
+
+pub mod build;
+pub mod swap;
+
+use std::time::{Duration, Instant};
+
+use crate::bandits::corr_sh::correlated_halving_argmin;
+use crate::config::KMedoidsConfig;
+use crate::engine::PullEngine;
+use crate::util::rng::Rng;
+
+/// Outcome of one k-medoids run.
+#[derive(Clone, Debug)]
+pub struct KMedoidsResult {
+    /// Selected medoids (BUILD order; positions are dataset row indices).
+    pub medoids: Vec<usize>,
+    /// Per-point index into `medoids` (nearest medoid under the metric).
+    pub assignments: Vec<usize>,
+    /// Final mean distance to the assigned medoid.
+    pub loss: f64,
+    /// Mean loss after each BUILD step, each accepted SWAP and each
+    /// accepted polish — non-increasing by construction.
+    pub loss_trajectory: Vec<f64>,
+    /// Distance computations per phase, measured at the engine boundary.
+    pub build_pulls: u64,
+    pub swap_pulls: u64,
+    pub polish_pulls: u64,
+    /// SWAP rounds executed / swaps accepted before convergence.
+    pub swap_rounds: usize,
+    pub swaps_accepted: usize,
+    pub wall: Duration,
+}
+
+impl KMedoidsResult {
+    /// Total distance computations across all phases.
+    pub fn pulls(&self) -> u64 {
+        self.build_pulls + self.swap_pulls + self.polish_pulls
+    }
+
+    /// Cluster sizes, index-aligned with `medoids`.
+    pub fn cluster_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.medoids.len()];
+        for &a in &self.assignments {
+            sizes[a] += 1;
+        }
+        sizes
+    }
+}
+
+/// A k-medoids clustering algorithm — the [`crate::bandits::MedoidAlgorithm`]
+/// counterpart for the clustering workload (same engine/rng contract, richer
+/// result).
+pub trait ClusteringAlgorithm {
+    fn name(&self) -> &'static str;
+
+    /// Cluster `engine`'s dataset using `rng` for all randomness.
+    fn run(&self, engine: &dyn PullEngine, rng: &mut Rng) -> KMedoidsResult;
+}
+
+/// Cached per-medoid distance rows plus the derived assignment structure.
+/// `rows` is row-major k×n with `rows[c·n + j] = d(medoids[c], x_j)` — the
+/// only O(k·n) state the phases share; every update (swap, polish) replaces
+/// one row for n pulls and re-derives the rest for free.
+pub(crate) struct ClusterState {
+    pub medoids: Vec<usize>,
+    pub rows: Vec<f32>,
+    /// Index into `medoids` of each point's nearest medoid.
+    pub nearest: Vec<usize>,
+    /// Distance to the nearest medoid.
+    pub d1: Vec<f32>,
+    /// Distance to the second-nearest medoid (∞ when k = 1) — the removal
+    /// cost the SWAP scorer needs.
+    pub d2: Vec<f32>,
+}
+
+impl ClusterState {
+    pub(crate) fn new(n: usize) -> Self {
+        ClusterState {
+            medoids: Vec::new(),
+            rows: Vec::new(),
+            nearest: vec![0; n],
+            d1: vec![f32::INFINITY; n],
+            d2: vec![f32::INFINITY; n],
+        }
+    }
+
+    /// Re-derive nearest / d1 / d2 from the cached rows (O(k·n) compute,
+    /// zero pulls). NaN distances never win a comparison, so a poisoned
+    /// point keeps its previous-best finite assignment where one exists.
+    pub(crate) fn refresh(&mut self) {
+        let k = self.medoids.len();
+        let n = self.d1.len();
+        for j in 0..n {
+            let (mut c1, mut b1, mut b2) = (0usize, f32::INFINITY, f32::INFINITY);
+            for c in 0..k {
+                let d = self.rows[c * n + j];
+                if d < b1 {
+                    b2 = b1;
+                    b1 = d;
+                    c1 = c;
+                } else if d < b2 {
+                    b2 = d;
+                }
+            }
+            self.nearest[j] = c1;
+            self.d1[j] = b1;
+            self.d2[j] = b2;
+        }
+    }
+
+    /// Mean distance to the assigned medoid.
+    pub(crate) fn loss(&self) -> f64 {
+        let n = self.d1.len().max(1);
+        self.d1.iter().map(|&d| d as f64).sum::<f64>() / n as f64
+    }
+
+    /// Exact mean loss if medoid slot `c` were replaced by a point whose
+    /// full distance row is `row` — zero pulls, derived from the cached
+    /// d1/d2/nearest structure. The single acceptance criterion shared by
+    /// SWAP and polish.
+    pub(crate) fn post_swap_loss(&self, c: usize, row: &[f32]) -> f64 {
+        let n = self.d1.len();
+        let mut acc = 0f64;
+        for j in 0..n {
+            let removed = if self.nearest[j] == c { self.d2[j] } else { self.d1[j] };
+            acc += (removed as f64).min(row[j] as f64);
+        }
+        acc / n.max(1) as f64
+    }
+
+    /// Install `medoid` (with its full distance `row`) into slot `c` and
+    /// re-derive the assignment structure.
+    pub(crate) fn apply_row(&mut self, c: usize, medoid: usize, row: &[f32]) {
+        let n = self.d1.len();
+        self.medoids[c] = medoid;
+        self.rows[c * n..(c + 1) * n].copy_from_slice(row);
+        self.refresh();
+    }
+}
+
+/// BanditPAM-style k-medoids: bandit BUILD seeding + bandit SWAP
+/// improvement + per-cluster corrSH polish, all through the shared
+/// correlated halving oracle.
+#[derive(Clone, Debug)]
+pub struct BanditKMedoids {
+    pub cfg: KMedoidsConfig,
+}
+
+impl BanditKMedoids {
+    pub fn new(cfg: KMedoidsConfig) -> Self {
+        BanditKMedoids { cfg }
+    }
+}
+
+impl ClusteringAlgorithm for BanditKMedoids {
+    fn name(&self) -> &'static str {
+        "bandit-kmedoids"
+    }
+
+    fn run(&self, engine: &dyn PullEngine, rng: &mut Rng) -> KMedoidsResult {
+        let start = Instant::now();
+        let n = engine.n();
+        if n == 0 {
+            return KMedoidsResult {
+                medoids: vec![],
+                assignments: vec![],
+                loss: 0.0,
+                loss_trajectory: vec![],
+                build_pulls: 0,
+                swap_pulls: 0,
+                polish_pulls: 0,
+                swap_rounds: 0,
+                swaps_accepted: 0,
+                wall: start.elapsed(),
+            };
+        }
+        let k = self.cfg.k.clamp(1, n);
+        let mut trajectory = Vec::new();
+
+        let (mut state, build_pulls) =
+            build::run(engine, k, self.cfg.build_pulls_per_arm, rng, &mut trajectory);
+
+        let swap_out = if self.cfg.max_swap_rounds > 0 && k < n {
+            swap::run(
+                engine,
+                &mut state,
+                self.cfg.swap_pulls_per_arm,
+                self.cfg.max_swap_rounds,
+                rng,
+                &mut trajectory,
+            )
+        } else {
+            swap::SwapOutcome::default()
+        };
+
+        let polish_pulls = if self.cfg.polish_pulls_per_arm > 0.0 {
+            polish(engine, &mut state, self.cfg.polish_pulls_per_arm, rng, &mut trajectory)
+        } else {
+            0
+        };
+
+        state.refresh();
+        KMedoidsResult {
+            assignments: state.nearest.clone(),
+            loss: state.loss(),
+            medoids: state.medoids,
+            loss_trajectory: trajectory,
+            build_pulls,
+            swap_pulls: swap_out.pulls,
+            polish_pulls,
+            swap_rounds: swap_out.rounds,
+            swaps_accepted: swap_out.accepted,
+            wall: start.elapsed(),
+        }
+    }
+}
+
+/// Polish: re-run the paper's single-medoid subroutine inside each cluster
+/// (corrSH over the members, the `examples/rnaseq_clustering.rs` pattern),
+/// accepting a candidate only when the *exact* global loss improves.
+/// Returns the pulls spent.
+fn polish(
+    engine: &dyn PullEngine,
+    state: &mut ClusterState,
+    pulls_per_arm: f64,
+    rng: &mut Rng,
+    trajectory: &mut Vec<f64>,
+) -> u64 {
+    let n = engine.n();
+    let k = state.medoids.len();
+    state.refresh();
+    let mut pulls = 0u64;
+    let mut row = vec![0f32; n];
+    let all: Vec<usize> = (0..n).collect();
+    for c in 0..k {
+        let members: Vec<usize> = (0..n).filter(|&j| state.nearest[j] == c).collect();
+        if members.len() < 2 {
+            continue;
+        }
+        let m = members.len();
+        let budget = crate::bandits::corr_sh::Budget::PerArm(pulls_per_arm).total(m);
+        let outcome = correlated_halving_argmin(m, m, budget, rng, &mut |arms, refs, out| {
+            let a: Vec<usize> = arms.iter().map(|&i| members[i]).collect();
+            let r: Vec<usize> = refs.iter().map(|&j| members[j]).collect();
+            engine.pull_block(&a, &r, out);
+        });
+        pulls += outcome.pulls;
+        let cand = members[outcome.best];
+        if cand == state.medoids[c] {
+            continue;
+        }
+        // Exact acceptance: replace row c by the candidate's and keep the
+        // change only if the global loss strictly improves.
+        engine.pull_matrix(&[cand], &all, &mut row);
+        pulls += n as u64;
+        if state.post_swap_loss(c, &row) < state.loss() {
+            state.apply_row(c, cand, &row);
+            trajectory.push(state.loss());
+        }
+    }
+    pulls
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian, SynthConfig};
+    use crate::data::{Data, DenseData};
+    use crate::distance::Metric;
+    use crate::engine::{CountingEngine, NativeEngine};
+
+    fn mixture_engine(n: usize, k: usize, seed: u64) -> CountingEngine<NativeEngine> {
+        let data = gaussian::generate_mixture(&SynthConfig {
+            n,
+            dim: 16,
+            seed,
+            clusters: k,
+            ..Default::default()
+        });
+        CountingEngine::new(NativeEngine::new(data, Metric::L2))
+    }
+
+    /// The PR's acceptance bar: k = 5 planted clusters on n = 2000 points,
+    /// ≥ 90% exact-medoid agreement at ≤ 5% of the exact-algorithm pull
+    /// count (exact BUILD alone sweeps k·n² distances).
+    #[test]
+    fn recovers_planted_mixture_medoids_cheaply() {
+        let n = 2000;
+        let k = 5;
+        let engine = mixture_engine(n, k, 42);
+        let exact_cost = (k as u64) * (n as u64) * (n as u64);
+        let trials = 5u64;
+        let mut agree = 0usize;
+        for seed in 0..trials {
+            let before = engine.pulls();
+            let mut rng = Rng::seeded(seed);
+            let res = BanditKMedoids::new(KMedoidsConfig { k, ..Default::default() })
+                .run(&engine, &mut rng);
+            let consumed = engine.pulls() - before;
+            assert_eq!(res.pulls(), consumed, "phase pull accounting vs engine counter");
+            assert!(
+                res.pulls() * 20 <= exact_cost,
+                "seed {seed}: {} pulls > 5% of exact {exact_cost}",
+                res.pulls()
+            );
+            // Planted medoids are points 0..k (exact centers of the
+            // generator's clusters).
+            let hits = res.medoids.iter().filter(|&&m| m < k).count();
+            assert!(hits >= k - 1, "seed {seed}: medoids {:?} missed >1 center", res.medoids);
+            agree += hits;
+            // medoids are distinct and assignments index into them
+            let mut sorted = res.medoids.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicate medoids: {:?}", res.medoids);
+            assert_eq!(res.assignments.len(), n);
+            assert!(res.assignments.iter().all(|&a| a < k));
+        }
+        let rate = agree as f64 / (trials as usize * k) as f64;
+        assert!(rate >= 0.9, "exact-medoid agreement {rate:.2} < 0.9");
+    }
+
+    #[test]
+    fn loss_trajectory_is_monotone_nonincreasing() {
+        let engine = mixture_engine(600, 4, 7);
+        let res = BanditKMedoids::new(KMedoidsConfig { k: 4, ..Default::default() })
+            .run(&engine, &mut Rng::seeded(1));
+        assert!(!res.loss_trajectory.is_empty());
+        for w in res.loss_trajectory.windows(2) {
+            assert!(
+                w[1] <= w[0] + 1e-9,
+                "loss increased along the trajectory: {:?}",
+                res.loss_trajectory
+            );
+        }
+        let last = *res.loss_trajectory.last().unwrap();
+        assert!((last - res.loss).abs() < 1e-9);
+        assert_eq!(res.cluster_sizes().iter().sum::<usize>(), 600);
+    }
+
+    #[test]
+    fn assignments_are_nearest_medoid() {
+        let engine = mixture_engine(300, 3, 9);
+        let res = BanditKMedoids::new(KMedoidsConfig { k: 3, ..Default::default() })
+            .run(&engine, &mut Rng::seeded(0));
+        for j in 0..300 {
+            let assigned = engine.pull(res.medoids[res.assignments[j]], j);
+            for &m in &res.medoids {
+                assert!(
+                    assigned <= engine.pull(m, j) + 1e-5,
+                    "point {j} not assigned to its nearest medoid"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn k_equals_one_matches_single_medoid() {
+        // Single cluster with the planted medoid at point 0: k = 1 must
+        // reduce to the paper's problem.
+        let data = gaussian::generate(&SynthConfig {
+            n: 400,
+            dim: 16,
+            seed: 3,
+            outlier_frac: 0.05,
+            ..Default::default()
+        });
+        let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
+        let res = BanditKMedoids::new(KMedoidsConfig {
+            k: 1,
+            build_pulls_per_arm: 48.0,
+            ..Default::default()
+        })
+        .run(&engine, &mut Rng::seeded(2));
+        assert_eq!(res.medoids, vec![0]);
+        assert!(res.assignments.iter().all(|&a| a == 0));
+    }
+
+    #[test]
+    fn k_clamps_to_n_and_degenerate_inputs_are_safe() {
+        let raw: Vec<f32> = (0..6 * 2).map(|i| i as f32).collect();
+        let data = Data::Dense(DenseData::new(6, 2, raw));
+        let engine = NativeEngine::new(data, Metric::L2);
+        let res = BanditKMedoids::new(KMedoidsConfig { k: 100, ..Default::default() })
+            .run(&engine, &mut Rng::seeded(0));
+        assert_eq!(res.medoids.len(), 6, "k clamps to n");
+        assert!(res.loss < 1e-9, "every point is its own medoid");
+        let mut sorted = res.medoids.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let engine = mixture_engine(500, 4, 13);
+        let a = BanditKMedoids::new(KMedoidsConfig { k: 4, ..Default::default() })
+            .run(&engine, &mut Rng::seeded(5));
+        let b = BanditKMedoids::new(KMedoidsConfig { k: 4, ..Default::default() })
+            .run(&engine, &mut Rng::seeded(5));
+        assert_eq!(a.medoids, b.medoids);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.pulls(), b.pulls());
+        assert_eq!(a.loss_trajectory, b.loss_trajectory);
+    }
+}

@@ -1,0 +1,199 @@
+//! SWAP phase: PAM improvement as a best-arm problem.
+//!
+//! A round treats every (medoid slot `c`, non-medoid `x`) pair as an arm
+//! (`arm = xi·k + c`); the score against reference `j` is the post-swap
+//! loss contribution
+//!
+//! ```text
+//! score((c, x), j) = min(removed_c(j), d(x, j))
+//! removed_c(j)     = d2(j) if nearest(j) = c else d1(j)
+//! ```
+//!
+//! with `d1/d2/nearest` derived from the exact cached medoid rows — so the
+//! only pulls a round needs are `d(x, J_r)` for the *distinct* candidates
+//! still alive, shared across the k slots that reference them (the same
+//! correlated-reference amortization the engine's densified sparse path
+//! exploits). The halving winner is then verified exactly: its full row
+//! (n pulls) gives the true post-swap loss, and the swap is applied only on
+//! strict improvement — otherwise the phase has converged and stops.
+
+use std::collections::HashMap;
+
+use crate::bandits::corr_sh::{correlated_halving_argmin, Budget};
+use crate::engine::PullEngine;
+use crate::kmedoids::ClusterState;
+use crate::util::rng::Rng;
+
+/// SWAP phase outcome: engine-boundary pulls, rounds run, swaps applied.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SwapOutcome {
+    pub pulls: u64,
+    pub rounds: usize,
+    pub accepted: usize,
+}
+
+pub(crate) fn run(
+    engine: &dyn PullEngine,
+    state: &mut ClusterState,
+    pulls_per_arm: f64,
+    max_rounds: usize,
+    rng: &mut Rng,
+    trajectory: &mut Vec<f64>,
+) -> SwapOutcome {
+    let n = engine.n();
+    let k = state.medoids.len();
+    let all: Vec<usize> = (0..n).collect();
+    let mut row = vec![0f32; n];
+    let mut out = SwapOutcome::default();
+
+    for _round in 0..max_rounds {
+        state.refresh();
+        let cur_loss = state.loss();
+        let mut is_medoid = vec![false; n];
+        for &m in &state.medoids {
+            is_medoid[m] = true;
+        }
+        let cands: Vec<usize> = (0..n).filter(|&j| !is_medoid[j]).collect();
+        if cands.is_empty() {
+            break;
+        }
+        let n_arms = cands.len() * k;
+        let budget = Budget::PerArm(pulls_per_arm).total(n_arms);
+
+        // Engine-boundary pull accounting: rounds deduplicate the candidate
+        // rows shared by the k slots, so actual pulls ≤ the schedule's
+        // |S_r|·t_r charge.
+        let mut actual_pulls = 0u64;
+        let outcome = {
+            let state = &*state; // shared borrow for the scorer
+            correlated_halving_argmin(n_arms, n, budget, rng, &mut |arms, refs, sums| {
+                let mut xs: Vec<usize> = Vec::new();
+                let mut slot_of: HashMap<usize, usize> = HashMap::new();
+                for &arm in arms {
+                    let x = cands[arm / k];
+                    slot_of.entry(x).or_insert_with(|| {
+                        xs.push(x);
+                        xs.len() - 1
+                    });
+                }
+                let m = refs.len();
+                let mut d = vec![0f32; xs.len() * m];
+                engine.pull_matrix(&xs, refs, &mut d);
+                actual_pulls += (xs.len() * m) as u64;
+                for (ai, &arm) in arms.iter().enumerate() {
+                    let x = cands[arm / k];
+                    let c = arm % k;
+                    let drow = &d[slot_of[&x] * m..(slot_of[&x] + 1) * m];
+                    let mut acc = 0f64;
+                    for (ri, &j) in refs.iter().enumerate() {
+                        let removed = if state.nearest[j] == c {
+                            state.d2[j]
+                        } else {
+                            state.d1[j]
+                        };
+                        acc += (removed as f64).min(drow[ri] as f64);
+                    }
+                    sums[ai] = acc;
+                }
+            })
+        };
+        out.pulls += actual_pulls;
+        out.rounds += 1;
+
+        // Exact verification of the winning pair before applying it — the
+        // shared `post_swap_loss`/`apply_row` criterion (also used by the
+        // polish pass).
+        let (c, x) = (outcome.best % k, cands[outcome.best / k]);
+        engine.pull_matrix(&[x], &all, &mut row);
+        out.pulls += n as u64;
+        if state.post_swap_loss(c, &row) < cur_loss {
+            state.apply_row(c, x, &row);
+            trajectory.push(state.loss());
+            out.accepted += 1;
+        } else {
+            break; // best candidate swap does not improve ⇒ converged
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian, SynthConfig};
+    use crate::distance::Metric;
+    use crate::engine::{CountingEngine, NativeEngine};
+    use crate::kmedoids::build;
+
+    #[test]
+    fn swap_only_ever_improves_the_exact_loss() {
+        let data = gaussian::generate_mixture(&SynthConfig {
+            n: 500,
+            dim: 8,
+            seed: 4,
+            clusters: 3,
+            ..Default::default()
+        });
+        let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
+        let mut rng = Rng::seeded(2);
+        let mut trajectory = Vec::new();
+        // Deliberately under-budget BUILD so SWAP has work to do.
+        let (mut state, _) = build::run(&engine, 3, 2.0, &mut rng, &mut trajectory);
+        state.refresh();
+        let before = state.loss();
+        let out = run(&engine, &mut state, 4.0, 6, &mut rng, &mut trajectory);
+        state.refresh();
+        assert!(state.loss() <= before + 1e-9, "SWAP regressed the loss");
+        assert!(out.rounds >= 1);
+        if out.accepted > 0 {
+            assert!(state.loss() < before);
+        }
+    }
+
+    #[test]
+    fn swap_repairs_an_uncovered_cluster() {
+        // Seed the state with cluster 0 uncovered (two medoids inside
+        // cluster 1, one in cluster 2): the loss gap is at the inter-center
+        // scale, so SWAP must move a medoid into cluster 0 and the loss
+        // must drop sharply.
+        let k = 3;
+        let n = 300;
+        let data = gaussian::generate_mixture(&SynthConfig {
+            n,
+            dim: 8,
+            seed: 6,
+            clusters: k,
+            ..Default::default()
+        });
+        let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
+        let mut state = crate::kmedoids::ClusterState::new(n);
+        // generator layout: point j belongs to cluster j % k, points 0..k
+        // are the planted centers — so {k + 1, 1, 2} covers clusters
+        // {1, 1, 2} and leaves cluster 0 unserved.
+        let seeds = [k + 1, 1, 2];
+        let all: Vec<usize> = (0..n).collect();
+        let mut row = vec![0f32; n];
+        for &m in &seeds {
+            engine.pull_matrix(&[m], &all, &mut row);
+            state.rows.extend_from_slice(&row);
+            state.medoids.push(m);
+        }
+        state.refresh();
+        let before = state.loss();
+        let mut rng = Rng::seeded(0);
+        let mut trajectory = Vec::new();
+        let out = run(&engine, &mut state, 6.0, 6, &mut rng, &mut trajectory);
+        assert!(out.accepted >= 1, "SWAP accepted nothing on an improvable seed");
+        state.refresh();
+        assert!(
+            state.loss() < before * 0.8,
+            "loss barely improved: {before} -> {}",
+            state.loss()
+        );
+        let mut covered = vec![false; k];
+        for &m in &state.medoids {
+            covered[m % k] = true;
+        }
+        assert!(covered.iter().all(|&c| c), "a cluster is still uncovered: {:?}", state.medoids);
+    }
+}

@@ -50,6 +50,7 @@ pub mod data;
 pub mod distance;
 pub mod engine;
 pub mod experiments;
+pub mod kmedoids;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -1,11 +1,12 @@
 //! `corrsh` — launcher for the Correlated Sequential Halving framework.
 //!
 //! ```text
-//! corrsh medoid  --preset rnaseq20k --scale 20 --algo corrsh --budget 24 [--engine pjrt]
-//! corrsh repro   --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation [--scale N --trials T]
-//! corrsh stats   --preset mnist --scale 8
-//! corrsh serve   --addr 127.0.0.1:7878
-//! corrsh gen     --kind rnaseq --n 2000 --dim 256 --out data.npy
+//! corrsh medoid   --preset rnaseq20k --scale 20 --algo corrsh --budget 24 [--engine pjrt]
+//! corrsh kmedoids --kind mixture --n 2000 --clusters 5 --k 5 [--seed S --workers W]
+//! corrsh repro    --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation [--scale N --trials T]
+//! corrsh stats    --preset mnist --scale 8
+//! corrsh serve    --addr 127.0.0.1:7878
+//! corrsh gen      --kind rnaseq --n 2000 --dim 256 --out data.npy
 //! ```
 
 use corrsh::util::error::{Context, Result};
@@ -17,14 +18,17 @@ use corrsh::server;
 use corrsh::util::cli::Args;
 use corrsh::util::rng::Rng;
 
-const USAGE: &str = "corrsh <medoid|repro|stats|serve|gen> [flags]
-  medoid: --preset P | --config file.json [--scale N] [--algo A] [--budget X]
-          [--engine native|pjrt] [--seed S] [--trials T]
-  repro:  --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation|all
-          [--scale N] [--trials T] [--seed S]
-  stats:  --preset P [--scale N] [--seed S]
-  serve:  [--addr HOST:PORT] [--preload P] [--workers N] [--queue-cap N]
-  gen:    --kind K --n N --dim D [--seed S] --out FILE.npy";
+const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen> [flags]
+  medoid:   --preset P | --config file.json [--scale N] [--algo A] [--budget X]
+            [--engine native|pjrt] [--seed S] [--trials T]
+  kmedoids: --preset P | --config file.json | --kind K [--n N --dim D --clusters C]
+            [--k K] [--build-budget X] [--swap-budget X] [--swap-rounds R]
+            [--polish-budget X] [--seed S] [--workers W] (native engine only)
+  repro:    --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation|all
+            [--scale N] [--trials T] [--seed S]
+  stats:    --preset P [--scale N] [--seed S]
+  serve:    [--addr HOST:PORT] [--preload P] [--workers N] [--queue-cap N]
+  gen:      --kind K --n N --dim D [--seed S] --out FILE.npy";
 
 fn main() {
     let args = match Args::from_env() {
@@ -37,6 +41,7 @@ fn main() {
     let cmd = args.command.clone().unwrap_or_default();
     let result = match cmd.as_str() {
         "medoid" => cmd_medoid(&args),
+        "kmedoids" => cmd_kmedoids(&args),
         "repro" => cmd_repro(&args),
         "stats" => cmd_stats(&args),
         "serve" => cmd_serve(&args),
@@ -67,6 +72,19 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     let scale: usize = args.parse_or("scale", 1)?;
     if scale > 1 {
         cfg = cfg.scaled_down(scale);
+    }
+    if let Some(kind) = args.str_opt("kind") {
+        let new_kind: Kind = kind.parse()?;
+        // Refresh the metric only when it was derived from the old kind —
+        // an explicitly-configured metric (config file "metric" key)
+        // survives a --kind override; --metric below still wins over both.
+        if cfg.metric == cfg.dataset_kind.default_metric() {
+            cfg.metric = new_kind.default_metric();
+        }
+        cfg.dataset_kind = new_kind;
+    }
+    if let Some(c) = args.parse_opt::<usize>("clusters")? {
+        cfg.synth.clusters = c;
     }
     if let Some(n) = args.parse_opt::<usize>("n")? {
         cfg.synth.n = n;
@@ -136,6 +154,75 @@ fn cmd_medoid(args: &Args) -> Result<()> {
             res.rounds.len()
         );
     }
+    Ok(())
+}
+
+fn cmd_kmedoids(args: &Args) -> Result<()> {
+    use corrsh::kmedoids::ClusteringAlgorithm;
+
+    let cfg = load_config(args)?;
+    let mut kcfg = cfg.kmedoids.clone();
+    if let Some(k) = args.parse_opt::<usize>("k")? {
+        kcfg.k = k;
+    }
+    if let Some(x) = args.parse_opt::<f64>("build-budget")? {
+        kcfg.build_pulls_per_arm = x;
+    }
+    if let Some(x) = args.parse_opt::<f64>("swap-budget")? {
+        kcfg.swap_pulls_per_arm = x;
+    }
+    if let Some(r) = args.parse_opt::<usize>("swap-rounds")? {
+        kcfg.max_swap_rounds = r;
+    }
+    if let Some(x) = args.parse_opt::<f64>("polish-budget")? {
+        kcfg.polish_pulls_per_arm = x;
+    }
+    kcfg.validate()?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let workers: usize = args.parse_or("workers", corrsh::util::threads::default_threads())?;
+    args.finish()?;
+    if cfg.engine == corrsh::config::EngineKind::Pjrt {
+        corrsh::bail!("kmedoids: native engine only (drop --engine pjrt)");
+    }
+
+    eprintln!(
+        "dataset={} n={} dim={} metric={} k={} workers={workers}",
+        cfg.dataset_kind.name(),
+        cfg.synth.n,
+        cfg.synth.dim,
+        cfg.metric,
+        kcfg.k
+    );
+    let data = runner::build_data(&cfg);
+    corrsh::ensure!(
+        kcfg.k <= data.n(),
+        "kmedoids: k = {} exceeds dataset size n = {}",
+        kcfg.k,
+        data.n()
+    );
+    let engine = corrsh::engine::NativeEngine::with_threads(
+        data.clone(),
+        cfg.metric,
+        workers.max(1),
+    );
+    let mut rng = Rng::seeded(seed);
+    let res = corrsh::kmedoids::BanditKMedoids::new(kcfg).run(&engine, &mut rng);
+    let mut medoids = res.medoids.clone();
+    medoids.sort_unstable();
+    println!(
+        "medoids={medoids:?} loss={:.4} pulls={} (build={} swap={} polish={}, \
+         {:.2}/point) swaps={}/{} wall={:.3}s",
+        res.loss,
+        res.pulls(),
+        res.build_pulls,
+        res.swap_pulls,
+        res.polish_pulls,
+        res.pulls() as f64 / data.n() as f64,
+        res.swaps_accepted,
+        res.swap_rounds,
+        res.wall.as_secs_f64()
+    );
+    println!("cluster_sizes={:?}", res.cluster_sizes());
     Ok(())
 }
 

@@ -15,6 +15,9 @@
 //! ← {"ok":true,"medoid":412,"pulls":52000,"wall_ms":8.3,"seed":7,"algo":"corrsh"}
 //! → {"op":"medoid_batch","dataset":"cells","seeds":[1,2,3],"pulls_per_arm":24}
 //! ← {"ok":true,"jobs":3,"pulls":156000,"results":[{"seed":1,...},...]}
+//! → {"op":"kmedoids","dataset":"cells","k":5,"seed":7}   # BUILD/SWAP clustering
+//! ← {"ok":true,"medoids":[0,412,...],"cluster_sizes":[...],"loss":1.93,
+//!    "pulls":184000,"build_pulls":...,"swap_pulls":...,"polish_pulls":...}
 //! → {"op":"stats","dataset":"cells"}         # Δ/ρ/H₂ summary
 //! → {"op":"metrics"}                         # counters, cache, queue depth
 //! → {"op":"list"}                            # registered datasets
@@ -35,7 +38,8 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::bandits::MedoidAlgorithm;
-use crate::config::{AlgoConfig, ServerConfig};
+use crate::config::{AlgoConfig, KMedoidsConfig, ServerConfig};
+use crate::kmedoids::ClusteringAlgorithm;
 use crate::data::synth::{Kind, SynthConfig};
 use crate::data::Data;
 use crate::distance::Metric;
@@ -66,6 +70,8 @@ pub struct State {
     pub requests: AtomicU64,
     pub errors: AtomicU64,
     pulls: Counter,
+    /// Completed `kmedoids` runs (the clustering workload's op counter).
+    kmedoids_runs: Counter,
     shutdown: AtomicBool,
 }
 
@@ -136,12 +142,16 @@ impl State {
             "register" => {
                 let name = req.get("name").as_str().context("missing name")?.to_string();
                 let kind: Kind = req.get("kind").as_str().context("missing kind")?.parse()?;
-                let cfg = SynthConfig {
+                let mut cfg = SynthConfig {
                     n: req.get("n").as_usize().unwrap_or(1000),
                     dim: req.get("dim").as_usize().unwrap_or(256),
                     seed: req.get("seed").as_u64().unwrap_or(0),
                     ..Default::default()
                 };
+                if let Some(c) = req.get("clusters").as_usize() {
+                    crate::ensure!(c >= 1, "register: clusters must be >= 1");
+                    cfg.clusters = c;
+                }
                 crate::ensure!(cfg.n >= 2, "register: n must be >= 2 (got {})", cfg.n);
                 crate::ensure!(cfg.dim >= 1, "register: dim must be >= 1");
                 let metric = match req.get("metric").as_str() {
@@ -202,6 +212,44 @@ impl State {
                 ]))
             }
             "medoid_batch" => self.medoid_batch(req),
+            "kmedoids" => {
+                let name = req.get("dataset").as_str().context("missing dataset")?;
+                let entry = self.get(name)?;
+                let n = entry.data.n();
+                let cfg = KMedoidsConfig::from_json_value(req)?;
+                crate::ensure!(cfg.k <= n, "kmedoids: k = {} exceeds dataset size n = {n}", cfg.k);
+                let seed = req.get("seed").as_u64().unwrap_or(0);
+                let engine = self.engine(name, &entry);
+                let mut rng = Rng::seeded(seed);
+                let res = cfg.build().run(&engine, &mut rng);
+                self.pulls.add(res.pulls());
+                self.kmedoids_runs.add(1);
+                let medoids: Vec<Value> = res.medoids.iter().map(|&m| Value::from(m)).collect();
+                let sizes: Vec<Value> =
+                    res.cluster_sizes().iter().map(|&s| Value::from(s)).collect();
+                let mut pairs = vec![
+                    ("ok", true.into()),
+                    ("algo", "bandit-kmedoids".into()),
+                    ("k", res.medoids.len().into()),
+                    ("medoids", Value::Array(medoids)),
+                    ("cluster_sizes", Value::Array(sizes)),
+                    ("loss", res.loss.into()),
+                    ("pulls", res.pulls().into()),
+                    ("build_pulls", res.build_pulls.into()),
+                    ("swap_pulls", res.swap_pulls.into()),
+                    ("polish_pulls", res.polish_pulls.into()),
+                    ("swap_rounds", res.swap_rounds.into()),
+                    ("swaps_accepted", res.swaps_accepted.into()),
+                    ("wall_ms", (res.wall.as_secs_f64() * 1e3).into()),
+                    ("seed", seed_value(seed)),
+                ];
+                // Full per-point assignments are O(n) on the wire — opt-in.
+                if req.get("assignments").as_bool() == Some(true) {
+                    let a: Vec<Value> = res.assignments.iter().map(|&x| Value::from(x)).collect();
+                    pairs.push(("assignments", Value::Array(a)));
+                }
+                Ok(Value::from_pairs(pairs))
+            }
             "stats" => {
                 let name = req.get("dataset").as_str().context("missing dataset")?;
                 let entry = self.get(name)?;
@@ -226,6 +274,7 @@ impl State {
                 ("requests", self.requests.load(Ordering::Relaxed).into()),
                 ("errors", self.errors.load(Ordering::Relaxed).into()),
                 ("pulls", self.pulls.get().into()),
+                ("kmedoids_runs", self.kmedoids_runs.get().into()),
                 ("datasets", self.datasets.lock().unwrap().len().into()),
                 (
                     "engine_cache",
@@ -233,6 +282,7 @@ impl State {
                         ("entries", self.cache.len().into()),
                         ("hits", self.cache.hits().into()),
                         ("misses", self.cache.misses().into()),
+                        ("nan_pulls", self.cache.nan_pulls().into()),
                     ]),
                 ),
             ])),
@@ -859,6 +909,71 @@ mod tests {
             r#"{"op":"medoid_batch","dataset":"toy","seeds":[-1]}"#,
             // count is capped BEFORE the seed vector is materialized
             r#"{"op":"medoid_batch","dataset":"toy","seed":0,"count":200000000000}"#,
+        ] {
+            let r = state.handle(&req(bad));
+            assert_eq!(r.get("ok").as_bool(), Some(false), "should fail: {bad}");
+        }
+    }
+
+    #[test]
+    fn kmedoids_op_recovers_planted_cluster_medoids() {
+        // The PR's server-side acceptance check: k = 5 planted clusters on
+        // n = 2000, ≥ 4/5 exact-medoid agreement at ≤ 5% of the exact
+        // BUILD sweep (k·n² pulls), over a cached engine session.
+        let state = State::new();
+        let r = state.handle(&req(
+            r#"{"op":"register","name":"mix","kind":"mixture","n":2000,"dim":16,
+                "seed":42,"clusters":5}"#,
+        ));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        let r = state.handle(&req(r#"{"op":"kmedoids","dataset":"mix","k":5,"seed":1}"#));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        let medoids = r.get("medoids").as_array().unwrap();
+        assert_eq!(medoids.len(), 5);
+        let hits = medoids.iter().filter(|m| m.as_usize().unwrap() < 5).count();
+        assert!(hits >= 4, "planted-center agreement {hits}/5: {r}");
+        let pulls = r.get("pulls").as_u64().unwrap();
+        let exact = 5 * 2000u64 * 2000;
+        assert!(pulls * 20 <= exact, "{pulls} pulls > 5% of exact {exact}");
+        assert_eq!(
+            pulls,
+            r.get("build_pulls").as_u64().unwrap()
+                + r.get("swap_pulls").as_u64().unwrap()
+                + r.get("polish_pulls").as_u64().unwrap()
+        );
+        let sizes = r.get("cluster_sizes").as_array().unwrap();
+        let total: usize = sizes.iter().map(|s| s.as_usize().unwrap()).sum();
+        assert_eq!(total, 2000);
+        assert!(matches!(r.get("assignments"), Value::Null), "assignments are opt-in");
+
+        // Determinism through the cached session: same seed, same answer.
+        let r2 = state.handle(&req(r#"{"op":"kmedoids","dataset":"mix","k":5,"seed":1}"#));
+        assert_eq!(
+            r2.get("medoids").as_array().unwrap(),
+            medoids,
+            "cached-session rerun diverged"
+        );
+
+        // Opt-in assignments round-trip, and the run counter advances.
+        let r3 = state.handle(&req(
+            r#"{"op":"kmedoids","dataset":"mix","k":3,"seed":0,"assignments":true}"#,
+        ));
+        assert_eq!(r3.get("assignments").as_array().unwrap().len(), 2000);
+        let m = state.handle(&req(r#"{"op":"metrics"}"#));
+        assert_eq!(m.get("kmedoids_runs").as_u64(), Some(3));
+        assert_eq!(m.get("engine_cache").get("nan_pulls").as_u64(), Some(0));
+        assert_eq!(m.get("engine_cache").get("misses").as_u64(), Some(1), "one preparation");
+    }
+
+    #[test]
+    fn kmedoids_op_error_paths() {
+        let state = State::new();
+        register_toy(&state, "toy");
+        for bad in [
+            r#"{"op":"kmedoids","dataset":"missing","k":3}"#,
+            r#"{"op":"kmedoids","dataset":"toy","k":0}"#,
+            r#"{"op":"kmedoids","dataset":"toy","k":5000}"#,
+            r#"{"op":"kmedoids","dataset":"toy","k":3,"build_pulls_per_arm":-1}"#,
         ] {
             let r = state.handle(&req(bad));
             assert_eq!(r.get("ok").as_bool(), Some(false), "should fail: {bad}");

@@ -108,9 +108,7 @@ pub fn hardness(deltas: &[f64], rhos: &[f64], medoid: usize) -> (f64, f64) {
     let n = deltas.len();
     // H2: sort by Δ ascending, skip the medoid (Δ=0)
     let mut by_delta: Vec<usize> = (0..n).filter(|&i| i != medoid).collect();
-    by_delta.sort_unstable_by(|&a, &b| {
-        deltas[a].partial_cmp(&deltas[b]).unwrap_or(std::cmp::Ordering::Equal)
-    });
+    by_delta.sort_unstable_by(|&a, &b| deltas[a].total_cmp(&deltas[b]).then_with(|| a.cmp(&b)));
     let mut h2 = 0f64;
     for (rank0, &i) in by_delta.iter().enumerate() {
         let rank = rank0 + 2; // the paper's index starts at i=2 for the first non-medoid
@@ -122,7 +120,7 @@ pub fn hardness(deltas: &[f64], rhos: &[f64], medoid: usize) -> (f64, f64) {
     by_ratio.sort_unstable_by(|&a, &b| {
         let ra = deltas[a] / rhos[a].max(1e-12);
         let rb = deltas[b] / rhos[b].max(1e-12);
-        ra.partial_cmp(&rb).unwrap_or(std::cmp::Ordering::Equal)
+        ra.total_cmp(&rb).then_with(|| a.cmp(&b))
     });
     let mut h2t = 0f64;
     for (rank0, &i) in by_ratio.iter().enumerate() {

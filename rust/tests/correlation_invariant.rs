@@ -43,12 +43,12 @@ impl PullEngine for RecordingEngine {
         self.batches.lock().unwrap().push((vec![a], vec![r]));
         ((a as i64 - r as i64).unsigned_abs() % 97) as f32 + a as f32 * 1e-3
     }
-    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         self.batches.lock().unwrap().push((arms.to_vec(), refs.to_vec()));
         for (k, &a) in arms.iter().enumerate() {
             out[k] = refs
                 .iter()
-                .map(|&r| ((a as i64 - r as i64).unsigned_abs() % 97) as f32 + a as f32 * 1e-3)
+                .map(|&r| ((a as i64 - r as i64).unsigned_abs() % 97) as f64 + a as f64 * 1e-3)
                 .sum();
         }
     }

@@ -1,0 +1,94 @@
+//! Determinism under concurrency: for a fixed seed, every algorithm must
+//! produce bitwise-identical decisions regardless of engine thread count —
+//! including on datasets with duplicate points, which exercise the
+//! total_cmp + arm-index tie-break path (duplicate rows have bitwise-equal
+//! sums under a shared reference set, so any ordering leak from sort
+//! internals or chunking would surface here).
+
+use std::sync::Arc;
+
+use corrsh::bandits::{CorrSh, MedoidAlgorithm, SeqHalving};
+use corrsh::config::KMedoidsConfig;
+use corrsh::data::synth::{gaussian, SynthConfig};
+use corrsh::data::{Data, DenseData};
+use corrsh::distance::Metric;
+use corrsh::engine::NativeEngine;
+use corrsh::kmedoids::{BanditKMedoids, ClusteringAlgorithm};
+use corrsh::util::rng::Rng;
+
+/// A mixture dataset where every point appears twice (row i and row
+/// n/2 + i are bitwise identical) — maximal tie pressure.
+fn duplicated_mixture(half: usize, clusters: usize, seed: u64) -> Arc<Data> {
+    let base = gaussian::generate_mixture(&SynthConfig {
+        n: half,
+        dim: 8,
+        seed,
+        clusters,
+        ..Default::default()
+    })
+    .to_dense();
+    let mut raw = base.data.clone();
+    raw.extend_from_slice(&base.data);
+    Arc::new(Data::Dense(DenseData::new(half * 2, base.dim, raw)))
+}
+
+#[test]
+fn medoid_identical_across_worker_counts_with_duplicates() {
+    let data = duplicated_mixture(150, 3, 9);
+    let one = NativeEngine::with_threads(data.clone(), Metric::L2, 1);
+    let eight = NativeEngine::with_threads(data, Metric::L2, 8);
+    for seed in 0..8 {
+        let a = CorrSh::with_pulls_per_arm(16.0).run(&one, &mut Rng::seeded(seed));
+        let b = CorrSh::with_pulls_per_arm(16.0).run(&eight, &mut Rng::seeded(seed));
+        assert_eq!(a.best, b.best, "seed {seed}: medoid diverged across worker counts");
+        assert_eq!(a.pulls, b.pulls, "seed {seed}: pull ledgers diverged");
+        assert_eq!(a.rounds, b.rounds, "seed {seed}: round traces diverged");
+        let s = SeqHalving::with_pulls_per_arm(16.0).run(&one, &mut Rng::seeded(seed));
+        let t = SeqHalving::with_pulls_per_arm(16.0).run(&eight, &mut Rng::seeded(seed));
+        assert_eq!(s.best, t.best, "seed {seed}: seq-halving diverged");
+    }
+}
+
+#[test]
+fn kmedoids_identical_across_worker_counts_with_duplicates() {
+    let data = duplicated_mixture(200, 4, 3);
+    let one = NativeEngine::with_threads(data.clone(), Metric::L2, 1);
+    let eight = NativeEngine::with_threads(data, Metric::L2, 8);
+    let cfg = KMedoidsConfig { k: 4, ..Default::default() };
+    for seed in 0..3 {
+        let a = BanditKMedoids::new(cfg.clone()).run(&one, &mut Rng::seeded(seed));
+        let b = BanditKMedoids::new(cfg.clone()).run(&eight, &mut Rng::seeded(seed));
+        assert_eq!(a.medoids, b.medoids, "seed {seed}: medoid sets diverged");
+        assert_eq!(a.assignments, b.assignments, "seed {seed}: assignments diverged");
+        assert_eq!(a.pulls(), b.pulls(), "seed {seed}: pull counts diverged");
+        assert_eq!(
+            a.loss_trajectory,
+            b.loss_trajectory,
+            "seed {seed}: loss trajectories diverged"
+        );
+    }
+}
+
+#[test]
+fn block_sums_bitwise_identical_across_worker_counts() {
+    // The property the two tests above rest on, checked directly: chunk
+    // boundaries change with the thread count, but each arm's f64 sum is
+    // accumulated in reference order, so outputs are bitwise identical.
+    let data = duplicated_mixture(300, 5, 17);
+    let n = data.n();
+    let one = NativeEngine::with_threads(data.clone(), Metric::L2, 1);
+    let eight = NativeEngine::with_threads(data, Metric::L2, 8);
+    let arms: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::seeded(0);
+    let refs = rng.sample_without_replacement(n, 64);
+    let mut a = vec![0f64; n];
+    let mut b = vec![0f64; n];
+    one.pull_block(&arms, &refs, &mut a);
+    eight.pull_block(&arms, &refs, &mut b);
+    assert_eq!(a, b);
+    // Duplicate rows really do produce bitwise-equal sums (the tie the
+    // selection layer must break by index).
+    for i in 0..n / 2 {
+        assert_eq!(a[i], a[n / 2 + i], "rows {i} and {} are duplicates", n / 2 + i);
+    }
+}

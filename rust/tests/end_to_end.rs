@@ -141,6 +141,66 @@ fn cli_binary_smoke() {
     assert!(!out.status.success());
 }
 
+/// The k-medoids CLI subcommand end to end (the PR's CLI-side acceptance
+/// check): k = 5 planted clusters on n = 2000 via a config file with a
+/// `kmedoids` block, ≥ 4/5 planted centers recovered at ≤ 5% of the exact
+/// k·n² BUILD sweep.
+#[test]
+fn cli_kmedoids_recovers_planted_clusters() {
+    let bin = env!("CARGO_BIN_EXE_corrsh");
+    let dir = std::env::temp_dir().join("corrsh-cli-kmed");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("kmed.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{"dataset": {"kind": "mixture", "n": 2000, "dim": 16, "seed": 42, "clusters": 5},
+            "kmedoids": {"k": 5}}"#,
+    )
+    .unwrap();
+    let out = Command::new(bin)
+        .args(["kmedoids", "--config"])
+        .arg(&cfg_path)
+        .args(["--seed", "1"])
+        .output()
+        .expect("run corrsh kmedoids");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let list = stdout
+        .split_once("medoids=[")
+        .and_then(|(_, rest)| rest.split_once(']'))
+        .map(|(inner, _)| inner)
+        .unwrap_or_else(|| panic!("no medoids list in output: {stdout}"));
+    let medoids: Vec<usize> =
+        list.split(',').map(|s| s.trim().parse().unwrap()).collect();
+    assert_eq!(medoids.len(), 5, "{stdout}");
+    let hits = medoids.iter().filter(|&&m| m < 5).count();
+    assert!(hits >= 4, "planted-center agreement {hits}/5: {stdout}");
+    let pulls: u64 = stdout
+        .split_once("pulls=")
+        .and_then(|(_, rest)| rest.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no pull count in output: {stdout}"));
+    assert!(pulls * 20 <= 5 * 2000 * 2000, "{pulls} pulls > 5% of the exact sweep");
+
+    // flag overrides ride on top of the config file
+    let out = Command::new(bin)
+        .args(["kmedoids", "--config"])
+        .arg(&cfg_path)
+        .args(["--k", "3", "--swap-rounds", "0", "--seed", "0"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("swaps=0/0"), "swap rounds not disabled: {stdout}");
+
+    // degenerate k fails fast
+    let out = Command::new(bin)
+        .args(["kmedoids", "--kind", "gaussian", "--n", "50", "--dim", "4", "--k", "100"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "k > n should fail");
+}
+
 /// Config file round-trip through the CLI.
 #[test]
 fn cli_config_file() {

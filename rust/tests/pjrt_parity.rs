@@ -46,8 +46,8 @@ fn block_sums_agree_across_engines_all_metrics() {
             let n_refs = rng.range(1, 200);
             let arms = rng.sample_without_replacement(500, n_arms);
             let refs = rng.sample_without_replacement(500, n_refs);
-            let mut got = vec![0f32; arms.len()];
-            let mut want = vec![0f32; arms.len()];
+            let mut got = vec![0f64; arms.len()];
+            let mut want = vec![0f64; arms.len()];
             pjrt.pull_block(&arms, &refs, &mut got);
             native.pull_block(&arms, &refs, &mut want);
             for k in 0..arms.len() {
@@ -105,8 +105,8 @@ fn sparse_dataset_through_pjrt_gather() {
     let native = NativeEngine::with_threads(data.clone(), Metric::L1, 1);
     let arms: Vec<usize> = (0..300).collect();
     let refs: Vec<usize> = (0..77).collect();
-    let mut got = vec![0f32; 300];
-    let mut want = vec![0f32; 300];
+    let mut got = vec![0f64; 300];
+    let mut want = vec![0f64; 300];
     pjrt.pull_block(&arms, &refs, &mut got);
     native.pull_block(&arms, &refs, &mut want);
     for k in 0..300 {
