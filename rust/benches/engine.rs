@@ -47,6 +47,56 @@ fn main() {
         e.pull(i, (i * 11 + 5) % 4_000)
     });
 
+    // ---- dense tiles: seed per-pair path vs tiled kernel layer ---------------
+    // The acceptance geometry for the tile layer (DESIGN.md §11): MNIST-like
+    // n=1000, d=784, L2. `pull_block_scalar`/`pull_matrix_scalar` are the
+    // seed hot path kept as the reference; `pull_block`/`pull_matrix` route
+    // through the packed-tile kernels. The derived `speedup/*` rows land in
+    // BENCH_engine.json so CI tracks old-vs-new on every run.
+    b.group("dense tiles (n=1000 arms x 256 refs, d=784)");
+    let tile_data = Arc::new(mnist::generate(&SynthConfig {
+        n: 1_000,
+        dim: 784,
+        seed: 7,
+        ..Default::default()
+    }));
+    let tile_arms: Vec<usize> = (0..1_000).collect();
+    let tile_refs: Vec<usize> = rng.sample_without_replacement(1_000, 256);
+    let mut tile_out = vec![0f64; tile_arms.len()];
+    let mut tile_mat = vec![0f32; tile_arms.len() * tile_refs.len()];
+    let pairs = (tile_arms.len() * tile_refs.len()) as u64;
+    for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+        let e = NativeEngine::with_threads(
+            tile_data.clone(),
+            metric,
+            corrsh::util::threads::default_threads(),
+        );
+        b.bench_items(&format!("block_per_pair/{metric}"), pairs, || {
+            e.pull_block_scalar(&tile_arms, &tile_refs, &mut tile_out);
+            tile_out[0]
+        });
+        let old = b.last_mean_s().unwrap();
+        b.bench_items(&format!("block_tiled/{metric}"), pairs, || {
+            e.pull_block(&tile_arms, &tile_refs, &mut tile_out);
+            tile_out[0]
+        });
+        let new = b.last_mean_s().unwrap();
+        b.record_metric(&format!("speedup/block_{metric}"), old / new.max(1e-12), "x");
+        if metric == Metric::L2 {
+            b.bench_items(&format!("matrix_per_pair/{metric}"), pairs, || {
+                e.pull_matrix_scalar(&tile_arms, &tile_refs, &mut tile_mat);
+                tile_mat[0]
+            });
+            let old_m = b.last_mean_s().unwrap();
+            b.bench_items(&format!("matrix_tiled/{metric}"), pairs, || {
+                e.pull_matrix(&tile_arms, &tile_refs, &mut tile_mat);
+                tile_mat[0]
+            });
+            let new_m = b.last_mean_s().unwrap();
+            b.record_metric(&format!("speedup/matrix_{metric}"), old_m / new_m.max(1e-12), "x");
+        }
+    }
+
     // ---- native batched block throughput (the corrSH round shape) -------------
     b.group("pull_block (native, 1024 arms x 256 refs, d=784)");
     let arms: Vec<usize> = (0..1024).collect();

@@ -15,6 +15,21 @@
 //! Invariant (property-tested): every (arm, ref) pair is covered by exactly
 //! one job, and every job's shape is an available bucket.
 
+/// Tile-aligned work split: the chunk size that divides `len` into about
+/// `parts` runs while keeping every run (except possibly the tail) a
+/// multiple of `tile`.
+///
+/// The native dense tile layer (`engine::kernel`) parallelizes over arm
+/// chunks with this: chunk boundaries landing on tile boundaries mean an
+/// arm's micro-tile membership — and therefore its bitwise result — is
+/// independent of the worker count, the same exact-coverage discipline the
+/// PJRT job grid below gets from bucket shapes.
+pub fn aligned_chunk(len: usize, parts: usize, tile: usize) -> usize {
+    let tile = tile.max(1);
+    let per = len.div_ceil(parts.max(1)).max(1);
+    per.div_ceil(tile) * tile
+}
+
 /// One PJRT job: `arm_span` and `ref_span` index into the round's arm/ref
 /// lists; the job runs on bucket `(bucket_arms, bucket_refs)` with padding.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -229,6 +244,31 @@ mod tests {
             (total_cells as f64) < useful as f64 * 1.05,
             "padding waste too high: {total_cells} vs {useful}"
         );
+    }
+
+    #[test]
+    fn aligned_chunk_is_tile_multiple_and_covers() {
+        testing::check(
+            "aligned-chunk",
+            testing::default_cases(),
+            |rng| (1 + rng.below(5000), 1 + rng.below(64), 1 + rng.below(16)),
+            |&(len, parts, tile), _| {
+                let chunk = aligned_chunk(len, parts, tile);
+                if chunk == 0 || chunk % tile != 0 {
+                    return Err(format!("chunk {chunk} not a positive multiple of {tile}"));
+                }
+                // About `parts` runs: never more than the unaligned split.
+                let runs = len.div_ceil(chunk);
+                if runs > parts {
+                    return Err(format!("{runs} runs > {parts} parts (chunk {chunk})"));
+                }
+                Ok(())
+            },
+        );
+        // degenerate inputs clamp instead of panicking
+        assert_eq!(aligned_chunk(10, 0, 4), 12);
+        assert_eq!(aligned_chunk(0, 8, 4), 4);
+        assert_eq!(aligned_chunk(100, 3, 0), 34);
     }
 
     #[test]

@@ -40,6 +40,14 @@ impl SparseData {
         Ok(SparseData { n, dim, indptr, indices, values })
     }
 
+    /// Average nnz per row, never 0 — the *effective* per-pair dim of the
+    /// engine's sparse support walks, which the FLOP-based serial-vs-
+    /// parallel cutoff scales by (the nominal `dim` would overcount the
+    /// work by ~1/density).
+    pub fn avg_nnz(&self) -> usize {
+        self.indices.len().div_ceil(self.n.max(1)).max(1)
+    }
+
     /// Build from per-row (index, value) lists (sorts each row).
     pub fn from_rows(n: usize, dim: usize, rows: Vec<Vec<(u32, f32)>>) -> Self {
         assert_eq!(rows.len(), n);

@@ -82,6 +82,15 @@ pub fn norm(a: &[f32]) -> f32 {
     dot_dense(a, a).sqrt()
 }
 
+/// Squared euclidean norm accumulated in f64 — exact for f32 inputs up to
+/// f64 rounding. The tiled L2 norm expansion (`engine::kernel`) subtracts
+/// `2⟨a,b⟩` from `‖a‖² + ‖b‖²`, so the norms must not carry f32 chain
+/// error of their own into the cancellation.
+#[inline]
+pub fn sqnorm_f64(a: &[f32]) -> f64 {
+    a.iter().map(|&v| v as f64 * v as f64).sum()
+}
+
 /// Cosine distance `1 − <a,b>/(‖a‖‖b‖)` with precomputed norms.
 /// Zero rows (norm 0) get distance 1 to everything — same convention as the
 /// L1 Pallas kernel and python oracle.
@@ -172,6 +181,20 @@ mod tests {
             let denom = naive_dot(&a, &a).sqrt() * naive_dot(&b, &b).sqrt();
             let want = if denom <= 1e-24 { 1.0 } else { 1.0 - dot / denom };
             assert!((cos - want).abs() < 1e-4, "cosine len {len}: {cos} vs {want}");
+        }
+    }
+
+    #[test]
+    fn sqnorm_f64_matches_f64_oracle() {
+        let mut rng = Rng::seeded(13);
+        for len in [0usize, 1, 3, 4, 7, 129] {
+            let a: Vec<f32> = (0..len).map(|_| (rng.gaussian() * 1e6) as f32).collect();
+            let want: f64 = a.iter().map(|&v| (v as f64).powi(2)).sum();
+            let got = sqnorm_f64(&a);
+            assert!((got - want).abs() <= want.abs() * 1e-14, "len {len}: {got} vs {want}");
+            // and it agrees with the f32 norm at f32 precision
+            let n32 = norm(&a) as f64;
+            assert!((got.sqrt() - n32).abs() <= n32.max(1.0) * 1e-5);
         }
     }
 

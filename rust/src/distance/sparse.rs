@@ -19,8 +19,12 @@ impl<'a> SparseRow<'a> {
         self.values.iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
-    pub fn abs_sum(&self) -> f32 {
-        self.values.iter().map(|v| v.abs()).sum()
+    /// Σ|v| over the support, accumulated in f64 — feeds the engine's L1
+    /// row-reduction, whose correction terms cancel at large magnitudes
+    /// (DESIGN.md §9: the f32 chain error here is what the f64 round-sum
+    /// policy exists to exclude).
+    pub fn abs_sum_f64(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64).abs()).sum()
     }
 }
 
@@ -159,6 +163,8 @@ mod tests {
         assert_eq!(l1_sparse(a, e), 5.0);
         assert_eq!(l2_sparse(a, e), (4.0f32 + 9.0).sqrt());
         assert_eq!(cosine_sparse(a, e, a.norm(), 0.0), 1.0);
+        assert_eq!(e.abs_sum_f64(), 0.0);
+        assert_eq!(a.abs_sum_f64(), 5.0);
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //!
 //! The paper's headline is wall-clock speed, and for a service the wall
 //! clock starts before the first pull: preparing a `NativeEngine` costs an
-//! O(n·d) pass (cosine norms, sparse row-reductions) that used to be paid
-//! by *every* `medoid`/`stats` request. The cache pays it once per
+//! O(n·d) pass (cosine norms, the f64 squared norms the tiled L2 kernels
+//! subtract against, sparse row-reductions) that used to be paid by
+//! *every* `medoid`/`stats` request. The cache pays it once per
 //! registered dataset; every subsequent query wraps the shared
 //! [`PreparedEngine`] via [`NativeEngine::from_prepared`] for free. Hit /
 //! miss counters are exported through the server's `metrics` op so

@@ -1,0 +1,569 @@
+//! Tiled dense block kernels — the GEMM-style hot path behind
+//! `NativeEngine::pull_block` / `pull_matrix` on dense data (DESIGN.md §11).
+//!
+//! The correlated round shape scores *every* surviving arm against the same
+//! reference set, which makes the dense pull workload a tall-skinny
+//! arm × ref product. The seed path evaluated it one (arm, ref) pair at a
+//! time — every pair re-streamed both rows and did one FMA per two loads.
+//! This layer restructures it the way a register-blocked GEMM would:
+//!
+//! * **Packing.** The reference rows are repacked k-major — one cache
+//!   block at a time, into a per-worker scratch — as tiles of
+//!   [`REF_LANES`] rows (`packed[k·8 + lane] = ref_lane[k]`), so the
+//!   micro-kernel's innermost loop reads one contiguous 8-wide f32 vector
+//!   per feature index — the layout LLVM auto-vectorizes reliably. Short
+//!   tiles are zero-padded; padded lanes are computed and discarded
+//!   (their chains never touch a real lane's accumulator).
+//! * **Register micro-tile.** [`ARM_TILE`] arms × [`REF_LANES`] refs per
+//!   micro-kernel call: 4 broadcast loads + 1 packed vector load feed 32
+//!   multiply-accumulates, versus 2 loads per 1 FMA on the per-pair path.
+//!   Arm remainders dispatch to `MR ∈ {1,2,3}` instantiations of the same
+//!   const-generic kernel, so a pair's arithmetic — and therefore its
+//!   result, bitwise — does not depend on which tile it landed in.
+//! * **Cache blocking.** Packed ref tiles are visited in blocks sized to
+//!   keep ~[`BLOCK_BUDGET_F32`] floats resident (L2-sized), with the whole
+//!   arm chunk swept per block so each packed tile loaded from memory is
+//!   reused across every arm tile.
+//! * **Norm trick.** L2 and cosine share one dot-product micro-kernel via
+//!   `d²(a,b) = ‖a‖² + ‖b‖² − 2⟨a,b⟩`, with squared norms precomputed once
+//!   per session (`PreparedEngine`, f64). Cancellation guard: lane products
+//!   accumulate in f32 but fold into f64 every [`SEG_LEN`] features, and a
+//!   pair whose d² lands below [`L2_CANCEL_REL`] of `‖a‖² + ‖b‖²` (near
+//!   duplicates, where the subtraction would eat the mantissa) falls back
+//!   to the direct `Σ(a−b)²` kernel; the surviving fast path clamps at
+//!   `max(0, ·)` before the sqrt. NaN inputs take the fallback too (every
+//!   comparison fails), so poisoned rows still propagate NaN instead of
+//!   being laundered to 0 by the clamp.
+//!
+//! Precision policy (DESIGN.md §9) is preserved: individual distances stay
+//! f32, block sums accumulate in f64 in reference order, so results are
+//! bitwise identical across thread counts and ref-block sizes.
+
+use crate::coordinator::planner::aligned_chunk;
+use crate::data::DenseData;
+use crate::distance::{dense, Metric};
+use crate::util::threads;
+
+/// Arms per register micro-tile (broadcast operands).
+pub const ARM_TILE: usize = 4;
+/// Reference rows per packed tile (one 8-wide f32 vector per feature).
+pub const REF_LANES: usize = 8;
+/// Features per f32 accumulation segment before folding into f64. Bounds
+/// the f32 chain error at ~`SEG_LEN · ε` worst-case regardless of `dim`.
+const SEG_LEN: usize = 64;
+/// Packed floats kept resident per ref block (256 KiB — L2-sized).
+const BLOCK_BUDGET_F32: usize = 1 << 16;
+/// Norm-trick cancellation guard: fall back to the direct kernel when
+/// `d² ≤ L2_CANCEL_REL · (‖a‖² + ‖b‖²)`. Above the cutoff the f32 lane
+/// rounding in the dot is ≤ ~1e-6 of the norms' scale, keeping the fast
+/// path within 1e-5 relative of the scalar reference; below it the rows
+/// are near-duplicates and `Σ(a−b)²` is both cheap (rare) and exact.
+const L2_CANCEL_REL: f64 = 0.1;
+
+/// The shared micro-kernel: per-(arm, lane) f32 chains of `op(a, y)` over
+/// one packed 8-lane ref tile, folded to f64 every [`SEG_LEN`] features.
+/// Each (i, l) chain is independent, so values don't depend on MR or tile
+/// membership. `op` is monomorphized and inlined, so [`dot_tile`] and
+/// [`l1_tile`] compile to the same loop shape with only the lane op
+/// swapped — one place owns the segment/fold structure.
+fn lane_tile<const MR: usize>(
+    rows: &[&[f32]; MR],
+    packed: &[f32],
+    op: impl Fn(f32, f32) -> f32 + Copy,
+) -> [[f64; REF_LANES]; MR] {
+    let dim = rows[0].len();
+    debug_assert_eq!(packed.len(), dim * REF_LANES);
+    let mut wide = [[0f64; REF_LANES]; MR];
+    let mut k0 = 0usize;
+    while k0 < dim {
+        let k1 = (k0 + SEG_LEN).min(dim);
+        let mut acc = [[0f32; REF_LANES]; MR];
+        let seg = &packed[k0 * REF_LANES..k1 * REF_LANES];
+        for (k, y) in seg.chunks_exact(REF_LANES).enumerate() {
+            for i in 0..MR {
+                let a = rows[i][k0 + k];
+                for (lane, &yv) in acc[i].iter_mut().zip(y) {
+                    *lane += op(a, yv);
+                }
+            }
+        }
+        for i in 0..MR {
+            for (w, &narrow) in wide[i].iter_mut().zip(&acc[i]) {
+                *w += narrow as f64;
+            }
+        }
+        k0 = k1;
+    }
+    wide
+}
+
+/// Σ_k a_i[k] · y_l[k] (the L2/cosine norm-trick operand).
+fn dot_tile<const MR: usize>(rows: &[&[f32]; MR], packed: &[f32]) -> [[f64; REF_LANES]; MR] {
+    lane_tile(rows, packed, |a, y| a * y)
+}
+
+/// Σ_k |a_i[k] − y_l[k]|.
+fn l1_tile<const MR: usize>(rows: &[&[f32]; MR], packed: &[f32]) -> [[f64; REF_LANES]; MR] {
+    lane_tile(rows, packed, |a, y| (a - y).abs())
+}
+
+/// Repack ref tiles `[t0, t1)` k-major into `scratch`:
+/// `scratch[(t−t0)·8·dim + k·8 + lane] = data.row(refs[t·8 + lane])[k]`,
+/// zero-padding missing lanes. Packing one cache block at a time keeps the
+/// transient footprint at ~[`BLOCK_BUDGET_F32`] floats per worker — a
+/// full-universe ref set (the exact sweeps pass `refs = 0..n`) would
+/// otherwise duplicate the whole dataset per call.
+fn pack_block(data: &DenseData, refs: &[usize], t0: usize, t1: usize, scratch: &mut Vec<f32>) {
+    let dim = data.dim;
+    scratch.clear();
+    scratch.resize((t1 - t0) * REF_LANES * dim, 0.0);
+    let block_refs = &refs[t0 * REF_LANES..(t1 * REF_LANES).min(refs.len())];
+    for (j, &r) in block_refs.iter().enumerate() {
+        let tile = &mut scratch[(j / REF_LANES) * REF_LANES * dim..];
+        let lane = j % REF_LANES;
+        for (k, &v) in data.row(r).iter().enumerate() {
+            tile[k * REF_LANES + lane] = v;
+        }
+    }
+}
+
+/// One dense-tile kernel session: the dataset plus the per-metric
+/// precomputations the combine step reads (`PreparedEngine` owns them).
+pub struct DenseTileCtx<'a> {
+    data: &'a DenseData,
+    metric: Metric,
+    /// Euclidean row norms (cosine).
+    norms: Option<&'a [f32]>,
+    /// f64 squared row norms (L2 norm trick).
+    sq_norms: Option<&'a [f64]>,
+    /// Packed ref tiles visited per cache block (tests override this to
+    /// pin determinism across blockings; see [`Self::with_block_tiles`]).
+    block_tiles: usize,
+}
+
+impl<'a> DenseTileCtx<'a> {
+    /// `norms` is required for [`Metric::Cosine`], `sq_norms` for
+    /// [`Metric::L2`] (both precomputed once in `PreparedEngine`).
+    pub fn new(
+        data: &'a DenseData,
+        metric: Metric,
+        norms: Option<&'a [f32]>,
+        sq_norms: Option<&'a [f64]>,
+    ) -> Self {
+        assert!(
+            metric != Metric::Cosine || norms.is_some(),
+            "cosine tile kernel needs precomputed norms"
+        );
+        assert!(
+            metric != Metric::L2 || sq_norms.is_some(),
+            "l2 tile kernel needs precomputed squared norms"
+        );
+        let block_tiles = (BLOCK_BUDGET_F32 / (REF_LANES * data.dim.max(1))).clamp(1, 64);
+        DenseTileCtx { data, metric, norms, sq_norms, block_tiles }
+    }
+
+    /// Override the ref cache-block size (in packed tiles). Results are
+    /// bitwise independent of this — pinned by the determinism tests.
+    pub fn with_block_tiles(mut self, tiles: usize) -> Self {
+        self.block_tiles = tiles.max(1);
+        self
+    }
+
+    /// Distances of `arm_ids` (1..=[`ARM_TILE`]) against one packed ref
+    /// tile, into `out[i][lane]` for the `tile_refs.len()` valid lanes.
+    fn tile_distances<const MR: usize>(
+        &self,
+        arm_ids: &[usize],
+        tile_refs: &[usize],
+        packed: &[f32],
+        out: &mut [[f32; REF_LANES]; ARM_TILE],
+    ) {
+        let rows: [&[f32]; MR] = std::array::from_fn(|i| self.data.row(arm_ids[i]));
+        match self.metric {
+            Metric::L1 => {
+                let sums = l1_tile::<MR>(&rows, packed);
+                for i in 0..MR {
+                    for (o, &s) in out[i][..tile_refs.len()].iter_mut().zip(&sums[i]) {
+                        *o = s as f32;
+                    }
+                }
+            }
+            Metric::L2 => {
+                let dots = dot_tile::<MR>(&rows, packed);
+                let sq = self.sq_norms.expect("checked in new()");
+                for i in 0..MR {
+                    let sa = sq[arm_ids[i]];
+                    for (l, &r) in tile_refs.iter().enumerate() {
+                        let scale = sa + sq[r];
+                        let d2 = scale - 2.0 * dots[i][l];
+                        // NaN d2 fails the comparison and lands in the
+                        // fallback, which propagates it — the clamp only
+                        // ever sees finite positives.
+                        out[i][l] = if d2 > L2_CANCEL_REL * scale {
+                            d2.max(0.0).sqrt() as f32
+                        } else {
+                            dense::l2sq_dense(rows[i], self.data.row(r)).sqrt()
+                        };
+                    }
+                }
+            }
+            Metric::Cosine => {
+                let dots = dot_tile::<MR>(&rows, packed);
+                let norms = self.norms.expect("checked in new()");
+                for i in 0..MR {
+                    let na = norms[arm_ids[i]];
+                    for (l, &r) in tile_refs.iter().enumerate() {
+                        let denom = na * norms[r];
+                        // Zero rows → distance 1, same convention as
+                        // `cosine_dense`; NaN norms fail the guard and
+                        // propagate.
+                        out[i][l] = if denom <= 1e-24 {
+                            1.0
+                        } else {
+                            (1.0 - dots[i][l] / denom as f64) as f32
+                        };
+                    }
+                }
+            }
+        }
+    }
+
+    fn tile_distances_dyn(
+        &self,
+        arm_ids: &[usize],
+        tile_refs: &[usize],
+        packed: &[f32],
+        out: &mut [[f32; REF_LANES]; ARM_TILE],
+    ) {
+        match arm_ids.len() {
+            1 => self.tile_distances::<1>(arm_ids, tile_refs, packed, out),
+            2 => self.tile_distances::<2>(arm_ids, tile_refs, packed, out),
+            3 => self.tile_distances::<3>(arm_ids, tile_refs, packed, out),
+            4 => self.tile_distances::<4>(arm_ids, tile_refs, packed, out),
+            n => unreachable!("arm micro-tile of {n} > ARM_TILE"),
+        }
+    }
+
+    /// The determinism-critical tile sweep for one ARM_TILE-aligned arm
+    /// chunk: ref cache blocks outer, arm tiles mid, ref tiles inner —
+    /// everything ascending — calling
+    /// `emit(arm_offset_in_chunk, mr, ref_tile, lanes, dists)` per
+    /// micro-tile. Both public entry points drive this one loop, so the
+    /// blocking/alignment logic that tile membership (and therefore
+    /// bitwise reproducibility) depends on cannot diverge between them.
+    fn sweep_chunk(
+        &self,
+        chunk_arms: &[usize],
+        refs: &[usize],
+        mut emit: impl FnMut(usize, usize, usize, usize, &[[f32; REF_LANES]; ARM_TILE]),
+    ) {
+        let dim = self.data.dim;
+        let n_tiles = refs.len().div_ceil(REF_LANES);
+        let mut dists = [[0f32; REF_LANES]; ARM_TILE];
+        let mut packed = Vec::new();
+        for t0 in (0..n_tiles).step_by(self.block_tiles) {
+            let t1 = (t0 + self.block_tiles).min(n_tiles);
+            pack_block(self.data, refs, t0, t1, &mut packed);
+            for a0 in (0..chunk_arms.len()).step_by(ARM_TILE) {
+                let mr = (chunk_arms.len() - a0).min(ARM_TILE);
+                let arm_ids = &chunk_arms[a0..a0 + mr];
+                for t in t0..t1 {
+                    let lanes = (refs.len() - t * REF_LANES).min(REF_LANES);
+                    let tile_refs = &refs[t * REF_LANES..t * REF_LANES + lanes];
+                    let tile = &packed[(t - t0) * REF_LANES * dim..][..REF_LANES * dim];
+                    self.tile_distances_dyn(arm_ids, tile_refs, tile, &mut dists);
+                    emit(a0, mr, t, lanes, &dists);
+                }
+            }
+        }
+    }
+
+    /// `out[k] = Σ_{j ∈ refs} d(arms[k], refs[j])`, accumulated in f64 in
+    /// reference order (bitwise thread/blocking-independent).
+    pub fn block_sums(&self, arms: &[usize], refs: &[usize], threads: usize, out: &mut [f64]) {
+        assert_eq!(arms.len(), out.len());
+        out.fill(0.0);
+        if arms.is_empty() || refs.is_empty() {
+            return;
+        }
+        // Chunks are ARM_TILE-aligned so an arm's tile membership — hence
+        // its micro-kernel instantiation — is identical at any thread
+        // count.
+        let chunk = aligned_chunk(arms.len(), threads.max(1) * 4, ARM_TILE);
+        threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
+            let chunk_arms = &arms[start..start + slot.len()];
+            self.sweep_chunk(chunk_arms, refs, |a0, mr, _t, lanes, dists| {
+                for (i, row) in dists.iter().enumerate().take(mr) {
+                    let mut tile_sum = 0f64;
+                    for &d in &row[..lanes] {
+                        tile_sum += d as f64;
+                    }
+                    slot[a0 + i] += tile_sum;
+                }
+            });
+        });
+    }
+
+    /// `out[k·refs.len() + j] = d(arms[k], refs[j])` (row-major).
+    pub fn matrix(&self, arms: &[usize], refs: &[usize], threads: usize, out: &mut [f32]) {
+        let m = refs.len();
+        assert_eq!(arms.len() * m, out.len());
+        if out.is_empty() {
+            return;
+        }
+        let chunk = aligned_chunk(arms.len(), threads.max(1) * 4, ARM_TILE) * m;
+        threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
+            debug_assert_eq!(start % m, 0);
+            let arm0 = start / m;
+            let chunk_arms = &arms[arm0..arm0 + slot.len() / m];
+            self.sweep_chunk(chunk_arms, refs, |a0, mr, t, lanes, dists| {
+                for (i, row) in dists.iter().enumerate().take(mr) {
+                    let dst = &mut slot[(a0 + i) * m + t * REF_LANES..][..lanes];
+                    dst.copy_from_slice(&row[..lanes]);
+                }
+            });
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::testing;
+
+    /// f64 scalar reference: the ground truth every tiled kernel is held
+    /// to (f32 inputs, f64 arithmetic throughout).
+    fn naive_f64(metric: Metric, a: &[f32], b: &[f32]) -> f64 {
+        match metric {
+            Metric::L1 => a.iter().zip(b).map(|(&x, &y)| ((x - y) as f64).abs()).sum(),
+            Metric::L2 => a
+                .iter()
+                .zip(b)
+                .map(|(&x, &y)| {
+                    let d = (x - y) as f64;
+                    d * d
+                })
+                .sum::<f64>()
+                .sqrt(),
+            Metric::Cosine => {
+                let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+                let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+                let nb: f64 = b.iter().map(|&y| (y as f64).powi(2)).sum::<f64>().sqrt();
+                if na * nb <= 1e-24 {
+                    1.0
+                } else {
+                    1.0 - dot / (na * nb)
+                }
+            }
+        }
+    }
+
+    fn random_data(rng: &mut Rng, n: usize, dim: usize, scale: f64) -> DenseData {
+        let raw: Vec<f32> = (0..n * dim).map(|_| (rng.gaussian() * scale) as f32).collect();
+        DenseData::new(n, dim, raw)
+    }
+
+    fn ctx_over<'a>(
+        data: &'a DenseData,
+        metric: Metric,
+        norms: &'a [f32],
+        sq: &'a [f64],
+    ) -> DenseTileCtx<'a> {
+        DenseTileCtx::new(data, metric, Some(norms), Some(sq))
+    }
+
+    fn prep(data: &DenseData) -> (Vec<f32>, Vec<f64>) {
+        let norms: Vec<f32> = (0..data.n).map(|i| dense::norm(data.row(i))).collect();
+        let sq: Vec<f64> = (0..data.n).map(|i| dense::sqnorm_f64(data.row(i))).collect();
+        (norms, sq)
+    }
+
+    /// Every metric × odd dims (segment tails) × arm/ref counts off the
+    /// tile grid, block_sums AND matrix, against the f64 scalar reference.
+    #[test]
+    fn tiled_kernels_match_scalar_reference() {
+        testing::check(
+            "dense-tile-parity",
+            testing::default_cases(),
+            |rng| {
+                let dim = [1, 2, 3, 5, 8, 17, 63, 64, 65, 129, 300][rng.below(11)];
+                let n_arms = 1 + rng.below(13);
+                let n_refs = 1 + rng.below(19);
+                let threads = 1 + rng.below(4);
+                (dim, n_arms, n_refs, threads)
+            },
+            |&(dim, n_arms, n_refs, threads), rng| {
+                let n = 40;
+                let data = random_data(rng, n, dim, 1.0);
+                let (norms, sq) = prep(&data);
+                let arms: Vec<usize> = (0..n_arms).map(|_| rng.below(n)).collect();
+                let refs: Vec<usize> = (0..n_refs).map(|_| rng.below(n)).collect();
+                for metric in Metric::ALL {
+                    let ctx = ctx_over(&data, metric, &norms, &sq);
+                    let mut sums = vec![0f64; n_arms];
+                    ctx.block_sums(&arms, &refs, threads, &mut sums);
+                    let mut mat = vec![0f32; n_arms * n_refs];
+                    ctx.matrix(&arms, &refs, threads, &mut mat);
+                    for (k, &a) in arms.iter().enumerate() {
+                        let mut want_sum = 0f64;
+                        for (j, &r) in refs.iter().enumerate() {
+                            let want = naive_f64(metric, data.row(a), data.row(r));
+                            want_sum += want;
+                            let got = mat[k * n_refs + j] as f64;
+                            if (got - want).abs() > 1e-5 * want.abs().max(1.0) {
+                                return Err(format!(
+                                    "{metric} d={dim} matrix ({a},{r}): {got} vs {want}"
+                                ));
+                            }
+                        }
+                        if (sums[k] - want_sum).abs() > 1e-5 * want_sum.abs().max(1.0) {
+                            return Err(format!(
+                                "{metric} d={dim} block arm {a}: {} vs {want_sum}",
+                                sums[k]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Near-duplicate rows at large magnitude: the norm-trick subtraction
+    /// cancels catastrophically, so these pairs must take the direct-kernel
+    /// fallback — never a NaN or a negative distance, and bitwise equal to
+    /// the scalar f32 kernel the fallback delegates to.
+    #[test]
+    fn near_duplicates_hit_the_fallback_not_nan() {
+        let dim = 96;
+        let mut rng = Rng::seeded(77);
+        let base: Vec<f32> = (0..dim).map(|_| (rng.gaussian() * 1e6) as f32).collect();
+        let mut raw = base.clone();
+        raw.extend(base.iter().map(|v| v + 1e-1)); // ~1e-7 relative offset
+        raw.extend(base.iter().cloned()); // exact duplicate
+        raw.extend((0..dim).map(|_| (rng.gaussian() * 1e6) as f32)); // far row
+        let data = DenseData::new(4, dim, raw);
+        let (norms, sq) = prep(&data);
+        for metric in [Metric::L2, Metric::Cosine, Metric::L1] {
+            let ctx = ctx_over(&data, metric, &norms, &sq);
+            let arms = [0usize, 1, 2, 3];
+            let mut mat = vec![0f32; 16];
+            ctx.matrix(&arms, &arms, 1, &mut mat);
+            for (p, &d) in mat.iter().enumerate() {
+                assert!(!d.is_nan(), "{metric} pair {p} produced NaN");
+                // cosine may round to a hair below zero on duplicates (same
+                // convention as the scalar kernels); L1/L2 must not.
+                let floor = if metric == Metric::Cosine { -1e-5 } else { 0.0 };
+                assert!(d >= floor, "{metric} pair {p} produced negative distance {d}");
+            }
+            if metric == Metric::L2 {
+                // diagonal: exact zero through the fallback
+                for i in 0..4 {
+                    assert_eq!(mat[i * 4 + i], 0.0, "self-distance row {i}");
+                }
+                // the near-duplicate pair delegates to the direct kernel —
+                // bitwise equality, not just tolerance
+                assert_eq!(mat[1], dense::l2_dense(data.row(0), data.row(1)));
+                assert_eq!(mat[2], dense::l2_dense(data.row(0), data.row(2)));
+            }
+        }
+    }
+
+    /// Results are bitwise identical across thread counts, ref cache-block
+    /// sizes, and arm-list splits (tile-membership independence).
+    #[test]
+    fn bitwise_deterministic_across_tilings_and_threads() {
+        let mut rng = Rng::seeded(5);
+        let data = random_data(&mut rng, 60, 131, 1.0);
+        let (norms, sq) = prep(&data);
+        let arms: Vec<usize> = (0..57).collect(); // 57 % 4 != 0
+        let refs: Vec<usize> = (0..29).collect(); // 29 % 8 != 0
+        for metric in Metric::ALL {
+            let mut base_sums = vec![0f64; arms.len()];
+            let mut base_mat = vec![0f32; arms.len() * refs.len()];
+            {
+                let ctx = ctx_over(&data, metric, &norms, &sq);
+                ctx.block_sums(&arms, &refs, 1, &mut base_sums);
+                ctx.matrix(&arms, &refs, 1, &mut base_mat);
+            }
+            for block_tiles in [1usize, 2, 1024] {
+                for threads in [1usize, 3, 8] {
+                    let ctx = ctx_over(&data, metric, &norms, &sq).with_block_tiles(block_tiles);
+                    let mut sums = vec![0f64; arms.len()];
+                    ctx.block_sums(&arms, &refs, threads, &mut sums);
+                    assert_eq!(
+                        sums, base_sums,
+                        "{metric}: block_sums diverged at block_tiles={block_tiles} \
+                         threads={threads}"
+                    );
+                    let mut mat = vec![0f32; arms.len() * refs.len()];
+                    ctx.matrix(&arms, &refs, threads, &mut mat);
+                    assert_eq!(
+                        mat, base_mat,
+                        "{metric}: matrix diverged at block_tiles={block_tiles} \
+                         threads={threads}"
+                    );
+                }
+            }
+            // Dropping the last arm changes every tile's membership near
+            // the tail; shared arms must not move by a single bit.
+            let ctx = ctx_over(&data, metric, &norms, &sq);
+            let mut shorter = vec![0f64; arms.len() - 1];
+            ctx.block_sums(&arms[..arms.len() - 1], &refs, 4, &mut shorter);
+            assert_eq!(&base_sums[..shorter.len()], &shorter[..], "{metric}: subset diverged");
+        }
+    }
+
+    #[test]
+    fn zero_rows_cosine_is_one_through_tiles() {
+        let mut raw = vec![0f32; 8 * 10];
+        for v in raw.iter_mut().skip(10) {
+            *v = 1.0;
+        }
+        let data = DenseData::new(8, 10, raw);
+        let (norms, sq) = prep(&data);
+        let ctx = ctx_over(&data, Metric::Cosine, &norms, &sq);
+        let arms: Vec<usize> = (0..8).collect();
+        let mut mat = vec![0f32; 64];
+        ctx.matrix(&arms, &arms, 1, &mut mat);
+        for j in 0..8 {
+            assert_eq!(mat[j], 1.0, "zero row vs row {j}");
+        }
+    }
+
+    #[test]
+    fn nan_rows_propagate_through_tiles() {
+        let mut raw = vec![0.5f32; 12 * 6];
+        raw[3 * 6 + 2] = f32::NAN;
+        let data = DenseData::new(12, 6, raw);
+        let (norms, sq) = prep(&data);
+        for metric in Metric::ALL {
+            let ctx = ctx_over(&data, metric, &norms, &sq);
+            let arms: Vec<usize> = (0..12).collect();
+            let mut sums = vec![0f64; 12];
+            ctx.block_sums(&arms, &arms, 1, &mut sums);
+            assert!(sums.iter().all(|s| s.is_nan()), "{metric}: poisoned ref must taint sums");
+            let mut mat = vec![0f32; 12 * 12];
+            ctx.matrix(&arms, &arms, 1, &mut mat);
+            for k in 0..12 {
+                assert!(mat[k * 12 + 3].is_nan(), "{metric}: ({k},3) must be NaN");
+                assert!(mat[3 * 12 + k].is_nan(), "{metric}: (3,{k}) must be NaN");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_noops() {
+        let data = random_data(&mut Rng::seeded(1), 5, 7, 1.0);
+        let (norms, sq) = prep(&data);
+        let ctx = ctx_over(&data, Metric::L1, &norms, &sq);
+        let mut sums = vec![7f64; 3];
+        ctx.block_sums(&[0, 1, 2], &[], 4, &mut sums);
+        assert_eq!(sums, vec![0.0; 3], "no refs → zero sums");
+        let mut none: Vec<f64> = vec![];
+        ctx.block_sums(&[], &[0], 4, &mut none);
+        let mut mat: Vec<f32> = vec![];
+        ctx.matrix(&[], &[0, 1], 4, &mut mat);
+    }
+}

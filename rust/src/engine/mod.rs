@@ -4,12 +4,15 @@
 //! counts on its x-axes. The bandit algorithms only see [`PullEngine`]; the
 //! concrete engines are:
 //!
-//! * [`NativeEngine`] — vectorized CPU sweeps over the dataset (dense or
-//!   CSR), thread-parallel over arms via the persistent worker pool. The
+//! * [`NativeEngine`] — vectorized CPU sweeps over the dataset, thread-
+//!   parallel over arm tiles via the persistent worker pool: dense blocks
+//!   run on the GEMM-style tiled kernel layer ([`kernel`] — packed ref
+//!   tiles, register micro-tiles, norm-trick L2/cosine with a cancellation
+//!   guard), sparse blocks on the densified-reference CSR fast paths. The
 //!   wall-clock workhorse and the correctness oracle for the PJRT path.
 //!   Construction is split: [`PreparedEngine`] holds the O(n·d)
-//!   precomputations (norms, row-reductions) as a shareable session, and
-//!   [`NativeEngine::from_prepared`] wraps one for free.
+//!   precomputations (norms, squared norms, row-reductions) as a shareable
+//!   session, and [`NativeEngine::from_prepared`] wraps one for free.
 //! * [`EngineCache`] — keyed `(dataset, metric) → Arc<PreparedEngine>`
 //!   cache so repeated queries (the server's steady state) prepare once.
 //! * `PjrtEngine` (feature `pjrt`) — executes the AOT-compiled L1/L2
@@ -18,6 +21,7 @@
 //! * [`CountingEngine`] — decorator adding atomic pull accounting.
 
 pub mod cache;
+pub mod kernel;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;

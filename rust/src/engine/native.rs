@@ -7,11 +7,28 @@
 
 use std::sync::Arc;
 
-use crate::data::{Data, SparseData};
-use crate::distance::Metric;
+use crate::data::{Data, DenseData, SparseData};
+use crate::distance::{dense, Metric};
+use crate::engine::kernel::{self, DenseTileCtx};
 use crate::engine::PullEngine;
 use crate::metrics::Counter;
 use crate::util::threads;
+
+/// `√max(0, d²)` that lets NaN through: the sparse L2 corrections can
+/// round a true-zero distance slightly negative (clamp), but a NaN from a
+/// poisoned row must *propagate* (DESIGN.md §9) — `f64::max(NaN, 0.0)`
+/// returns `0.0` in Rust, which would hand the poisoned pair the minimum
+/// possible distance and silence the `nan_pulls` detection signal.
+#[inline]
+fn nan_safe_clamp_sqrt(d2: f64) -> f64 {
+    if d2 > 0.0 {
+        d2.sqrt()
+    } else if d2.is_nan() {
+        f64::NAN
+    } else {
+        0.0
+    }
+}
 
 /// The amortizable half of a native engine: the dataset plus every
 /// precomputation the pull hot paths read (cosine norms, sparse
@@ -26,8 +43,14 @@ pub struct PreparedEngine {
     norms: Option<Arc<Vec<f32>>>,
     /// Precomputed per-row Σ|v| (sparse ℓ₁) or Σv² (sparse ℓ₂) — lets the
     /// block hot path visit only the *arm's* support against a densified
-    /// reference row (see `sparse_block`).
-    row_reduction: Option<Arc<Vec<f32>>>,
+    /// reference row (see `sparse_block`). f64: these feed the same
+    /// cancellation-prone corrections as `corr`, so an f32 chain here
+    /// would dominate the error budget the f64 fix bought back.
+    row_reduction: Option<Arc<Vec<f64>>>,
+    /// f64 squared row norms (dense ℓ₂ only): the tiled block kernels
+    /// compute `d² = ‖a‖² + ‖b‖² − 2⟨a,b⟩`, and the norms must not carry
+    /// f32 chain error into that subtraction (DESIGN.md §11).
+    sq_norms: Option<Arc<Vec<f64>>>,
     /// NaN **results** surfaced by this session's pull paths (poisoned
     /// inputs, e.g. a NaN feature value), counted at each API's output
     /// granularity: one per NaN distance for `pull`/`pull_matrix`, one per
@@ -50,16 +73,22 @@ impl PreparedEngine {
         };
         let row_reduction = match (&*data, metric) {
             (Data::Sparse(s), Metric::L1) => Some(Arc::new(
-                (0..s.n).map(|i| s.row(i).abs_sum()).collect::<Vec<f32>>(),
+                (0..s.n).map(|i| s.row(i).abs_sum_f64()).collect::<Vec<f64>>(),
             )),
             (Data::Sparse(s), Metric::L2) => Some(Arc::new(
                 (0..s.n)
-                    .map(|i| s.row(i).values.iter().map(|v| v * v).sum())
-                    .collect::<Vec<f32>>(),
+                    .map(|i| s.row(i).values.iter().map(|&v| v as f64 * v as f64).sum())
+                    .collect::<Vec<f64>>(),
             )),
             _ => None,
         };
-        PreparedEngine { data, metric, norms, row_reduction, nan_pulls: Counter::new() }
+        let sq_norms = match (&*data, metric) {
+            (Data::Dense(d), Metric::L2) => Some(Arc::new(
+                (0..d.n).map(|i| dense::sqnorm_f64(d.row(i))).collect::<Vec<f64>>(),
+            )),
+            _ => None,
+        };
+        PreparedEngine { data, metric, norms, row_reduction, sq_norms, nan_pulls: Counter::new() }
     }
 
     pub fn data(&self) -> &Arc<Data> {
@@ -148,7 +177,9 @@ impl NativeEngine {
     fn sparse_block(&self, s: &SparseData, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         let dim = s.dim;
         let work = arms.len() * refs.len();
-        let threads = if work < 4096 { 1 } else { self.threads };
+        // FLOP-scaled cutoff over the *effective* per-pair dim (a sparse
+        // pair costs the arm's support walk, not a d-length sweep).
+        let threads = threads::plan_threads(self.threads, work, s.avg_nnz());
         let chunk = arms.len().div_ceil(threads.max(1)).max(1);
         let metric = self.prepared.metric;
         let norms = self.prepared.norms.as_deref().map(|v| v.as_slice());
@@ -162,30 +193,35 @@ impl NativeEngine {
                 for (&c, &v) in y.indices.iter().zip(y.values) {
                     scratch[c as usize] = v;
                 }
+                // `corr` accumulates in f64: the `(av−yv)² − yv²` and
+                // `|av−yv| − |yv|` corrections cancel almost exactly at
+                // large magnitudes, and an f32 running sum re-introduced
+                // the chain error the f64 round-sum policy (DESIGN.md §9)
+                // exists to exclude.
                 match metric {
                     Metric::L1 => {
-                        let y_abs = redux.unwrap()[j] as f64;
+                        let y_abs = redux.unwrap()[j];
                         for (k, a) in acc.iter_mut().enumerate() {
                             let row = s.row(arms[start + k]);
-                            let mut corr = 0f32;
+                            let mut corr = 0f64;
                             for (&c, &av) in row.indices.iter().zip(row.values) {
                                 let yv = scratch[c as usize];
-                                corr += (av - yv).abs() - yv.abs();
+                                corr += ((av - yv).abs() - yv.abs()) as f64;
                             }
-                            *a += corr as f64 + y_abs;
+                            *a += corr + y_abs;
                         }
                     }
                     Metric::L2 => {
-                        let y_sq = redux.unwrap()[j] as f64;
+                        let y_sq = redux.unwrap()[j];
                         for (k, a) in acc.iter_mut().enumerate() {
                             let row = s.row(arms[start + k]);
-                            let mut corr = 0f32;
+                            let mut corr = 0f64;
                             for (&c, &av) in row.indices.iter().zip(row.values) {
                                 let yv = scratch[c as usize];
-                                let d = av - yv;
-                                corr += d * d - yv * yv;
+                                let d = (av - yv) as f64;
+                                corr += d * d - yv as f64 * yv as f64;
                             }
-                            *a += (corr as f64 + y_sq).max(0.0).sqrt();
+                            *a += nan_safe_clamp_sqrt(corr + y_sq);
                         }
                     }
                     Metric::Cosine => {
@@ -193,12 +229,12 @@ impl NativeEngine {
                         for (k, a) in acc.iter_mut().enumerate() {
                             let arm = arms[start + k];
                             let row = s.row(arm);
-                            let mut dot = 0f32;
+                            let mut dot = 0f64;
                             for (&c, &av) in row.indices.iter().zip(row.values) {
-                                dot += av * scratch[c as usize];
+                                dot += av as f64 * scratch[c as usize] as f64;
                             }
                             let denom = norms.unwrap()[arm] * ny;
-                            *a += if denom <= 1e-24 { 1.0 } else { (1.0 - dot / denom) as f64 };
+                            *a += if denom <= 1e-24 { 1.0 } else { 1.0 - dot / denom as f64 };
                         }
                     }
                 }
@@ -211,6 +247,54 @@ impl NativeEngine {
                 *o = a;
             }
         });
+    }
+
+    /// The dense tile-kernel session view over this engine's precomputed
+    /// norms (see [`crate::engine::kernel`]).
+    fn tile_ctx<'a>(&'a self, d: &'a DenseData) -> DenseTileCtx<'a> {
+        DenseTileCtx::new(
+            d,
+            self.prepared.metric,
+            self.prepared.norms.as_deref().map(|v| v.as_slice()),
+            self.prepared.sq_norms.as_deref().map(|v| v.as_slice()),
+        )
+    }
+
+    /// Per-pair scalar reference for [`PullEngine::pull_block`]: one
+    /// `dist` call per (arm, ref) pair, f64 sums in reference order. This
+    /// is the seed hot path the tiled kernels replaced — kept as the
+    /// correctness oracle for the tile layer's property tests and the
+    /// old-vs-new baseline in `benches/engine.rs`.
+    pub fn pull_block_scalar(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
+        assert_eq!(arms.len(), out.len());
+        let threads = threads::plan_threads(self.threads, arms.len() * refs.len(), self.dim());
+        let chunk = arms.len().div_ceil(threads.max(1) * 4).max(1);
+        threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
+            for (off, o) in slot.iter_mut().enumerate() {
+                let a = arms[start + off];
+                let mut acc = 0f64; // f64 accumulator: t_r can reach n
+                for &r in refs {
+                    acc += self.dist(a, r) as f64;
+                }
+                *o = acc;
+            }
+        });
+        self.note_nan_sums(out);
+    }
+
+    /// Per-pair scalar reference for [`PullEngine::pull_matrix`] (see
+    /// [`NativeEngine::pull_block_scalar`]).
+    pub fn pull_matrix_scalar(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        assert_eq!(arms.len() * refs.len(), out.len());
+        let m = refs.len();
+        let threads = threads::plan_threads(self.threads, out.len(), self.dim());
+        threads::parallel_chunks_mut(out, m.max(1), threads, |start, row| {
+            let a = arms[start / m];
+            for (j, o) in row.iter_mut().enumerate() {
+                *o = self.dist(a, refs[j]);
+            }
+        });
+        self.note_nan_dists(out);
     }
 }
 
@@ -250,22 +334,19 @@ impl PullEngine for NativeEngine {
                 return;
             }
         }
-        // Dense: parallel over arms, refs swept innermost so rows stay
-        // cache-resident.
-        let work = arms.len() * refs.len();
-        let threads = if work < 4096 { 1 } else { self.threads };
-        let chunk = arms.len().div_ceil(threads.max(1) * 4).max(1);
-        threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
-            for (off, o) in slot.iter_mut().enumerate() {
-                let a = arms[start + off];
-                let mut acc = 0f64; // f64 accumulator: t_r can reach n
-                for &r in refs {
-                    acc += self.dist(a, r) as f64;
-                }
-                *o = acc;
+        // Dense: the tiled kernel layer (packed ref tiles + register
+        // micro-tiles, ≥3× the per-pair path on MNIST-like geometry — see
+        // DESIGN.md §11). ≥ARM_TILE arms amortizes the packing pass; tiny
+        // blocks take the scalar reference path.
+        if let Data::Dense(d) = &*self.prepared.data {
+            if arms.len() >= kernel::ARM_TILE {
+                let threads = threads::plan_threads(self.threads, arms.len() * refs.len(), d.dim);
+                self.tile_ctx(d).block_sums(arms, refs, threads, out);
+                self.note_nan_sums(out);
+                return;
             }
-        });
-        self.note_nan_sums(out);
+        }
+        self.pull_block_scalar(arms, refs, out);
     }
 
     fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
@@ -278,7 +359,8 @@ impl PullEngine for NativeEngine {
             let metric = self.prepared.metric;
             let norms = self.prepared.norms.as_deref().map(|v| v.as_slice());
             let redux = self.prepared.row_reduction.as_deref().map(|v| v.as_slice());
-            let threads = if out.len() < 4096 { 1 } else { self.threads };
+            // Average-nnz FLOP cutoff, same rationale as `sparse_block`.
+            let threads = threads::plan_threads(self.threads, out.len(), s.avg_nnz());
             let chunk = (arms.len().div_ceil(threads.max(1)).max(1)) * m;
             threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
                 debug_assert_eq!(start % m, 0);
@@ -293,32 +375,35 @@ impl PullEngine for NativeEngine {
                     for k in 0..n_arms {
                         let arm = arms[arm0 + k];
                         let row = s.row(arm);
-                        let mut corr = 0f32;
+                        // f64 `corr`, same rationale as `sparse_block`:
+                        // the correction terms cancel at large magnitudes
+                        // and must not pick up f32 chain error.
+                        let mut corr = 0f64;
                         let d = match metric {
                             Metric::L1 => {
                                 for (&c, &av) in row.indices.iter().zip(row.values) {
                                     let yv = scratch[c as usize];
-                                    corr += (av - yv).abs() - yv.abs();
+                                    corr += ((av - yv).abs() - yv.abs()) as f64;
                                 }
-                                corr + redux.unwrap()[r]
+                                (corr + redux.unwrap()[r]) as f32
                             }
                             Metric::L2 => {
                                 for (&c, &av) in row.indices.iter().zip(row.values) {
                                     let yv = scratch[c as usize];
-                                    let dd = av - yv;
-                                    corr += dd * dd - yv * yv;
+                                    let dd = (av - yv) as f64;
+                                    corr += dd * dd - yv as f64 * yv as f64;
                                 }
-                                (corr + redux.unwrap()[r]).max(0.0).sqrt()
+                                nan_safe_clamp_sqrt(corr + redux.unwrap()[r]) as f32
                             }
                             Metric::Cosine => {
                                 for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    corr += av * scratch[c as usize];
+                                    corr += av as f64 * scratch[c as usize] as f64;
                                 }
                                 let denom = norms.unwrap()[arm] * norms.unwrap()[r];
                                 if denom <= 1e-24 {
                                     1.0
                                 } else {
-                                    1.0 - corr / denom
+                                    (1.0 - corr / denom as f64) as f32
                                 }
                             }
                         };
@@ -332,14 +417,17 @@ impl PullEngine for NativeEngine {
             self.note_nan_dists(out);
             return;
         }
-        let threads = if out.len() < 4096 { 1 } else { self.threads };
-        threads::parallel_chunks_mut(out, m, threads, |start, row| {
-            let a = arms[start / m];
-            for (j, o) in row.iter_mut().enumerate() {
-                *o = self.dist(a, refs[j]);
+        // Dense: same tiled kernel layer as `pull_block`, writing elements
+        // instead of accumulating.
+        if let Data::Dense(d) = &*self.prepared.data {
+            if arms.len() >= kernel::ARM_TILE {
+                let threads = threads::plan_threads(self.threads, out.len(), d.dim);
+                self.tile_ctx(d).matrix(arms, refs, threads, out);
+                self.note_nan_dists(out);
+                return;
             }
-        });
-        self.note_nan_dists(out);
+        }
+        self.pull_matrix_scalar(arms, refs, out);
     }
 }
 
@@ -380,7 +468,11 @@ mod tests {
     #[test]
     fn block_sums_keep_f64_precision_at_large_magnitude() {
         // Regression for the f32 round-sum bug: distances ~1e7 summed over
-        // hundreds of refs lose ≫1e-6 relative precision in f32.
+        // hundreds of refs lose ≫1e-6 relative precision in f32. The tiled
+        // path computes L2 via the norm expansion, so individual distances
+        // differ from the direct scalar kernel by f32 rounding (~1e-7
+        // relative each); 1e-6 on the sums still fails hard if any f32
+        // accumulation sneaks back in (that bug cost ~1e-4).
         let n = 400;
         let dim = 8;
         let mut rng = Rng::seeded(50);
@@ -394,9 +486,96 @@ mod tests {
         for (k, &o) in out.iter().enumerate() {
             let want: f64 = refs.iter().map(|&r| e.pull(k, r) as f64).sum();
             let rel = (o - want).abs() / want.abs().max(1.0);
-            assert!(rel < 1e-9, "arm {k}: block {o} vs scalar {want} (rel {rel:.3e})");
+            assert!(rel < 1e-6, "arm {k}: block {o} vs scalar {want} (rel {rel:.3e})");
         }
         assert_eq!(e.nan_pulls(), 0);
+    }
+
+    #[test]
+    fn sparse_block_sums_keep_f64_precision_at_large_magnitude() {
+        // Companion regression for the sparse fast paths: the per-distance
+        // correction `corr` cancels `(av−yv)² − yv²` terms of ~1e14 down
+        // to ~1e13, which an f32 running sum cannot survive. Held to an
+        // exact f64 oracle over the densified rows.
+        use crate::data::SparseData;
+        let (n, dim) = (160, 512);
+        let mut rng = Rng::seeded(51);
+        let rows: Vec<Vec<(u32, f32)>> = (0..n)
+            .map(|_| {
+                (0..dim as u32)
+                    .filter(|_| rng.chance(0.4))
+                    .map(|c| (c, (rng.gaussian() * 1e7) as f32))
+                    .collect()
+            })
+            .collect();
+        let sp = SparseData::from_rows(n, dim, rows);
+        let dense_view = Data::Sparse(sp.clone()).to_dense();
+        let e = NativeEngine::with_threads(Arc::new(Data::Sparse(sp)), Metric::L2, 4);
+        let arms: Vec<usize> = (0..n).collect();
+        let refs: Vec<usize> = (0..n).collect();
+        let mut out = vec![0f64; n];
+        e.pull_block(&arms, &refs, &mut out);
+        let mut mat = vec![0f32; n * n];
+        e.pull_matrix(&arms, &refs, &mut mat);
+        for (k, &o) in out.iter().enumerate() {
+            let mut want = 0f64;
+            for (r, &got_elem) in refs.iter().zip(&mat[k * n..(k + 1) * n]) {
+                let exact: f64 = dense_view
+                    .row(k)
+                    .iter()
+                    .zip(dense_view.row(*r))
+                    .map(|(&a, &b)| {
+                        let d = (a - b) as f64;
+                        d * d
+                    })
+                    .sum::<f64>()
+                    .sqrt();
+                want += exact;
+                let rel_elem = ((got_elem as f64) - exact).abs() / exact.abs().max(1.0);
+                assert!(
+                    rel_elem < 1e-6,
+                    "matrix ({k},{r}): {got_elem} vs exact {exact} (rel {rel_elem:.3e})"
+                );
+            }
+            let rel = (o - want).abs() / want.abs().max(1.0);
+            assert!(rel < 1e-7, "arm {k}: block {o} vs exact {want} (rel {rel:.3e})");
+        }
+        assert_eq!(e.nan_pulls(), 0);
+    }
+
+    #[test]
+    fn dense_tiled_paths_match_scalar_reference() {
+        // The engine-level wiring of the tile layer: pull_block /
+        // pull_matrix against the seed per-pair reference paths, every
+        // metric, arm/ref counts off the tile grid.
+        let cfg = SynthConfig { n: 150, dim: 101, seed: 21, ..Default::default() };
+        let data = Arc::new(crate::data::synth::gaussian::generate(&cfg));
+        let mut rng = Rng::seeded(22);
+        for metric in Metric::ALL {
+            let e = NativeEngine::with_threads(data.clone(), metric, 4);
+            let arms: Vec<usize> = (0..(4 * 13 + 3)).map(|_| rng.below(150)).collect();
+            let refs: Vec<usize> = (0..(8 * 4 + 5)).map(|_| rng.below(150)).collect();
+            let mut tiled = vec![0f64; arms.len()];
+            let mut scalar = vec![0f64; arms.len()];
+            e.pull_block(&arms, &refs, &mut tiled);
+            e.pull_block_scalar(&arms, &refs, &mut scalar);
+            for (k, (&t, &s)) in tiled.iter().zip(&scalar).enumerate() {
+                assert!(
+                    (t - s).abs() < 1e-5 * s.abs().max(1.0),
+                    "{metric} block arm {k}: tiled {t} vs scalar {s}"
+                );
+            }
+            let mut tm = vec![0f32; arms.len() * refs.len()];
+            let mut sm = vec![0f32; arms.len() * refs.len()];
+            e.pull_matrix(&arms, &refs, &mut tm);
+            e.pull_matrix_scalar(&arms, &refs, &mut sm);
+            for (p, (&t, &s)) in tm.iter().zip(&sm).enumerate() {
+                assert!(
+                    (t - s).abs() < 1e-5 * s.abs().max(1.0),
+                    "{metric} matrix cell {p}: tiled {t} vs scalar {s}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -422,6 +601,33 @@ mod tests {
         // PreparedEngine observes the same count.
         let sib = NativeEngine::from_prepared(e.prepared().clone(), 2);
         assert_eq!(sib.nan_pulls(), e.nan_pulls());
+    }
+
+    #[test]
+    fn sparse_nan_inputs_are_counted_not_silent() {
+        // Regression: `f64::max(NaN, 0.0)` is `0.0` in Rust, so the sparse
+        // L2 clamp used to launder a poisoned row into distance 0 — the
+        // *minimum* possible, which would hand the poisoned row the medoid
+        // — with nan_pulls staying 0.
+        use crate::data::SparseData;
+        let mut rows: Vec<Vec<(u32, f32)>> =
+            (0..12).map(|i| vec![(0u32, 1.0 + i as f32), (3, 2.0)]).collect();
+        rows[3][0].1 = f32::NAN; // poison row 3
+        let sp = SparseData::from_rows(12, 8, rows);
+        let e = NativeEngine::with_threads(Arc::new(Data::Sparse(sp)), Metric::L2, 1);
+        let arms: Vec<usize> = (0..12).collect();
+        let mut out = vec![0f64; 12];
+        e.pull_block(&arms, &arms, &mut out);
+        assert!(out.iter().all(|v| v.is_nan()), "poisoned ref must taint every sparse L2 sum");
+        assert_eq!(e.nan_pulls(), 12, "every NaN sparse sum counted");
+        let mut m = vec![0f32; 12 * 12];
+        e.pull_matrix(&arms, &arms, &mut m);
+        for k in 0..12 {
+            assert!(m[k * 12 + 3].is_nan(), "({k},3) must be NaN, not a laundered 0");
+            assert!(m[3 * 12 + k].is_nan(), "(3,{k}) must be NaN");
+        }
+        // row 3 + column 3 minus the (3,3) overlap
+        assert_eq!(e.nan_pulls(), 12 + 23, "NaN sparse matrix entries counted");
     }
 
     #[test]

@@ -10,6 +10,12 @@
 //! Single `pull`s (used by the stats engine, not the algorithms' hot path)
 //! take the scalar native path — a distance computation is the same
 //! quantity on either engine; integration tests assert exact agreement.
+//!
+//! Parity oracle: `tests/pjrt_parity.rs` and the unit test below hold this
+//! engine to the *native* engine, whose dense blocks now run the tiled
+//! norm-trick kernels (`engine::kernel`). The 2e-4 relative tolerance
+//! budgets both sides' f32 kernel rounding (per-tile f32 sums here,
+//! segment-folded lanes there); both accumulate cross-tile in f64.
 
 use std::sync::Arc;
 

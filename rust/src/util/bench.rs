@@ -148,6 +148,13 @@ impl Bencher {
         self
     }
 
+    /// Mean seconds of the most recently finished benchmark — lets a bench
+    /// binary derive ratios (e.g. old-path vs new-path speedup) and record
+    /// them via [`Bencher::record_metric`] without re-measuring.
+    pub fn last_mean_s(&self) -> Option<f64> {
+        self.results.last().map(|s| s.mean.as_secs_f64())
+    }
+
     /// Record a pre-measured scalar (e.g. pulls/arm from an experiment run)
     /// so it lands in the JSONL alongside timings.
     pub fn record_metric(&mut self, name: &str, value: f64, unit: &str) -> &mut Self {
@@ -236,6 +243,7 @@ mod tests {
         assert_eq!(b.results.len(), 2);
         assert!(b.results[0].iters >= 5);
         assert!(b.results[1].throughput.unwrap() > 0.0);
+        assert_eq!(b.last_mean_s(), Some(b.results[1].mean.as_secs_f64()));
         std::env::remove_var("CORRSH_BENCH_SECS");
     }
 

@@ -22,6 +22,24 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Serial-vs-parallel cutoff for the engine block paths, in element-ops
+/// (pairs × dim). The old cutoff counted (arm, ref) pairs alone, so a
+/// 4095-pair block at d = 784 (~3.2 M FLOPs) ran single-threaded while a
+/// 4096-pair block at d = 4 paid pool dispatch for ~16 K FLOPs. 2¹⁸
+/// element-ops ≈ the seed's 4096-pair cutoff at d = 64.
+pub const PAR_FLOP_CUTOFF: usize = 1 << 18;
+
+/// How many workers a block of `pairs` (arm, ref) distances over `dim`
+/// features should use: 1 below [`PAR_FLOP_CUTOFF`] element-ops (pool
+/// dispatch would dominate), else the engine's configured `threads`.
+pub fn plan_threads(threads: usize, pairs: usize, dim: usize) -> usize {
+    if pairs.saturating_mul(dim.max(1)) < PAR_FLOP_CUTOFF {
+        1
+    } else {
+        threads.max(1)
+    }
+}
+
 /// A take-once cell handing each chunk to exactly one claimant.
 type Slot<'a, T> = Mutex<Option<(usize, &'a mut [T])>>;
 
@@ -101,6 +119,24 @@ mod tests {
         for (i, &x) in out.iter().enumerate() {
             assert_eq!(x, i * i);
         }
+    }
+
+    #[test]
+    fn flop_cutoff_counts_dim_not_just_pairs() {
+        // The regression this exists for: a 4095-pair block at d=784 is
+        // ~3.2M FLOPs and must engage the pool even though it is under the
+        // old 4096-pair cutoff.
+        assert_eq!(plan_threads(8, 4095, 784), 8, "high-dim small-pair block stayed serial");
+        // …while genuinely tiny work stays serial at any dim:
+        assert_eq!(plan_threads(8, 100, 8), 1);
+        assert_eq!(plan_threads(8, 4095, 4), 1, "low-dim small-pair block engaged the pool");
+        // boundary: exactly the cutoff goes parallel, one element-op less
+        // does not
+        assert_eq!(plan_threads(8, PAR_FLOP_CUTOFF, 1), 8);
+        assert_eq!(plan_threads(8, PAR_FLOP_CUTOFF - 1, 1), 1);
+        // degenerate inputs never return 0 workers or overflow
+        assert_eq!(plan_threads(0, usize::MAX, usize::MAX), 1);
+        assert_eq!(plan_threads(8, usize::MAX, 0), 8);
     }
 
     #[test]

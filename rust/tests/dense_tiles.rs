@@ -1,0 +1,170 @@
+//! Engine-level contract of the dense tiled kernel layer (DESIGN.md §11):
+//! `pull_block` / `pull_matrix` on dense data route through the packed-tile
+//! kernels and must (a) match the seed per-pair scalar reference within
+//! 1e-5 relative on every metric, dim tail, and tile remainder, (b) stay
+//! bitwise deterministic across worker counts, and (c) survive
+//! near-duplicate rows without NaN or negative distances.
+
+use std::sync::Arc;
+
+use corrsh::data::synth::{gaussian, mnist, SynthConfig};
+use corrsh::data::{Data, DenseData};
+use corrsh::distance::Metric;
+use corrsh::engine::{NativeEngine, PullEngine};
+use corrsh::util::rng::Rng;
+use corrsh::util::testing;
+
+#[test]
+fn tiled_engine_matches_scalar_reference_property() {
+    testing::check(
+        "engine-dense-tile-parity",
+        // Each case prepares three engines over fresh data — keep the count
+        // CI-friendly; the kernel-level property test sweeps more shapes.
+        (testing::default_cases() / 4).max(8),
+        |rng| {
+            let dim = [1, 3, 4, 7, 8, 33, 65, 129][rng.below(8)];
+            let n_arms = 4 + rng.below(29); // ≥ ARM_TILE so the tiles engage
+            let n_refs = 1 + rng.below(37);
+            (dim, n_arms, n_refs)
+        },
+        |&(dim, n_arms, n_refs), rng| {
+            let n = 60;
+            let data = Arc::new(gaussian::generate(&SynthConfig {
+                n,
+                dim,
+                seed: rng.below(1 << 30) as u64,
+                ..Default::default()
+            }));
+            let arms: Vec<usize> = (0..n_arms).map(|_| rng.below(n)).collect();
+            let refs: Vec<usize> = (0..n_refs).map(|_| rng.below(n)).collect();
+            for metric in Metric::ALL {
+                let e = NativeEngine::with_threads(data.clone(), metric, 4);
+                let mut tiled = vec![0f64; n_arms];
+                let mut scalar = vec![0f64; n_arms];
+                e.pull_block(&arms, &refs, &mut tiled);
+                e.pull_block_scalar(&arms, &refs, &mut scalar);
+                for (k, (&t, &s)) in tiled.iter().zip(&scalar).enumerate() {
+                    if (t - s).abs() > 1e-5 * s.abs().max(1.0) {
+                        return Err(format!(
+                            "{metric} d={dim} arm {k}: tiled {t} vs scalar {s}"
+                        ));
+                    }
+                }
+                let mut tm = vec![0f32; n_arms * n_refs];
+                let mut sm = vec![0f32; n_arms * n_refs];
+                e.pull_matrix(&arms, &refs, &mut tm);
+                e.pull_matrix_scalar(&arms, &refs, &mut sm);
+                for (p, (&t, &s)) in tm.iter().zip(&sm).enumerate() {
+                    if (t - s).abs() > 1e-5 * s.abs().max(1.0) {
+                        return Err(format!(
+                            "{metric} d={dim} cell {p}: tiled {t} vs scalar {s}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn acceptance_geometry_mnist_784() {
+    // The ISSUE's acceptance shape (MNIST-like d=784, L2) at a CI-sized n:
+    // tile parity on the exact geometry the ≥3× throughput target is
+    // measured on (`benches/engine.rs` dense-tiles group).
+    let data = Arc::new(mnist::generate(&SynthConfig {
+        n: 200,
+        dim: 784,
+        seed: 4,
+        ..Default::default()
+    }));
+    let mut rng = Rng::seeded(9);
+    let arms: Vec<usize> = (0..199).collect(); // 199 % 4 != 0
+    let refs = rng.sample_without_replacement(200, 61); // 61 % 8 != 0
+    for metric in Metric::ALL {
+        let e = NativeEngine::with_threads(data.clone(), metric, 8);
+        let mut tiled = vec![0f64; arms.len()];
+        let mut scalar = vec![0f64; arms.len()];
+        e.pull_block(&arms, &refs, &mut tiled);
+        e.pull_block_scalar(&arms, &refs, &mut scalar);
+        for (k, (&t, &s)) in tiled.iter().zip(&scalar).enumerate() {
+            assert!(
+                (t - s).abs() < 1e-5 * s.abs().max(1.0),
+                "{metric} arm {k}: tiled {t} vs scalar {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tiled_block_bitwise_deterministic_across_workers() {
+    let data = Arc::new(mnist::generate(&SynthConfig {
+        n: 300,
+        dim: 144,
+        seed: 6,
+        ..Default::default()
+    }));
+    let mut rng = Rng::seeded(2);
+    let arms: Vec<usize> = (0..297).collect();
+    let refs = rng.sample_without_replacement(300, 43);
+    for metric in Metric::ALL {
+        let mut base_sums = vec![0f64; arms.len()];
+        let mut base_mat = vec![0f32; arms.len() * refs.len()];
+        let one = NativeEngine::with_threads(data.clone(), metric, 1);
+        one.pull_block(&arms, &refs, &mut base_sums);
+        one.pull_matrix(&arms, &refs, &mut base_mat);
+        for threads in [2usize, 5, 8] {
+            let e = NativeEngine::with_threads(data.clone(), metric, threads);
+            let mut sums = vec![0f64; arms.len()];
+            e.pull_block(&arms, &refs, &mut sums);
+            assert_eq!(sums, base_sums, "{metric}: block diverged at {threads} workers");
+            let mut mat = vec![0f32; arms.len() * refs.len()];
+            e.pull_matrix(&arms, &refs, &mut mat);
+            assert_eq!(mat, base_mat, "{metric}: matrix diverged at {threads} workers");
+        }
+    }
+}
+
+#[test]
+fn near_duplicate_rows_never_nan_or_negative() {
+    // Rows crafted so the L2 norm expansion cancels catastrophically:
+    // identical rows, rows offset by ~1e-7 relative, and a large-magnitude
+    // cluster. The clamp + direct-kernel fallback must keep every distance
+    // finite and non-negative through the full engine path.
+    let dim = 784;
+    let mut rng = Rng::seeded(3);
+    let base: Vec<f32> = (0..dim).map(|_| (rng.gaussian() * 1e5).abs() as f32).collect();
+    let mut raw = Vec::new();
+    for i in 0..24 {
+        // rows 0..8 identical, 8..16 nudged by one part in ~1e7, 16..24 far
+        let scale = if i < 16 { 1.0f32 } else { 1.5 + (i as f32) * 0.01 };
+        let nudge = if (8..16).contains(&i) { 1e-2f32 * (i as f32 - 7.0) } else { 0.0 };
+        raw.extend(base.iter().map(|&v| v * scale + nudge));
+    }
+    let data = Arc::new(Data::Dense(DenseData::new(24, dim, raw)));
+    let arms: Vec<usize> = (0..24).collect();
+    for metric in [Metric::L2, Metric::L1, Metric::Cosine] {
+        let e = NativeEngine::with_threads(data.clone(), metric, 4);
+        let mut mat = vec![0f32; 24 * 24];
+        e.pull_matrix(&arms, &arms, &mut mat);
+        let mut sums = vec![0f64; 24];
+        e.pull_block(&arms, &arms, &mut sums);
+        let floor = if metric == Metric::Cosine { -1e-5 } else { 0.0 };
+        for (p, &d) in mat.iter().enumerate() {
+            assert!(!d.is_nan(), "{metric} cell {p} is NaN");
+            assert!(d >= floor, "{metric} cell {p} went negative: {d}");
+        }
+        for (k, &s) in sums.iter().enumerate() {
+            assert!(!s.is_nan() && s >= floor as f64 * 24.0, "{metric} sum {k}: {s}");
+        }
+        assert_eq!(e.nan_pulls(), 0, "{metric}: clamp/fallback leaked NaN");
+        if metric == Metric::L2 {
+            // identical rows are exactly zero apart (fallback, not clamp)
+            for i in 0..8 {
+                for j in 0..8 {
+                    assert_eq!(mat[i * 24 + j], 0.0, "identical rows ({i},{j})");
+                }
+            }
+        }
+    }
+}
