@@ -2,12 +2,47 @@
 //! Correlated Sequential Halving run per iteration on each dataset
 //! geometry, native engine, default thread count — the number EXPERIMENTS.md
 //! §Perf tracks before/after optimization.
+//!
+//! Two storage-layer additions (EXPERIMENTS.md §Perf #7):
+//!
+//! * `sharded vs resident` — the same corrSH run over the same bytes,
+//!   resident vs served from a shard manifest (pinned reader), recorded as
+//!   the `sharded_vs_resident` relative-throughput row. Winners are
+//!   asserted identical (the backends are bitwise-parity tested).
+//! * `e2e million` (env `CORRSH_E2E_MILLION=1`) — an n = 10⁶, d = 128
+//!   corrSH medoid run *from a shard manifest*, streamed through the
+//!   shard writer so the matrix never materializes; records wall seconds,
+//!   pulls/arm and the process peak-RSS, and fails loudly if resident
+//!   memory exceeded 2 GiB (the ISSUE's acceptance envelope).
+
+use std::sync::Arc;
 
 use corrsh::bandits::{CorrSh, MedoidAlgorithm};
 use corrsh::config::RunConfig;
+use corrsh::data::store::{ShardedData, StoreOptions};
+use corrsh::data::synth::{Kind, SynthConfig};
+use corrsh::data::Data;
 use corrsh::experiments::runner;
 use corrsh::util::bench::Bencher;
 use corrsh::util::rng::Rng;
+
+/// Peak resident set size of this process in bytes (linux VmHWM; 0 where
+/// /proc is unavailable — the memory gate only runs on linux CI).
+fn peak_rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else { return 0 };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
 
 fn main() {
     let scale: usize = std::env::var("CORRSH_BENCH_SCALE")
@@ -37,5 +72,96 @@ fn main() {
         });
         b.record_metric(&format!("{preset}/pulls_per_arm"), pulls as f64 / n as f64, "pulls/arm");
     }
+
+    // ---- sharded vs resident: same bytes, two storage backends --------
+    b.group("e2e sharded vs resident");
+    {
+        let cfg = RunConfig::preset("mnist").unwrap().scaled_down(scale);
+        let data = runner::build_data(&cfg);
+        let n = data.n();
+        let dir = std::env::temp_dir().join("corrsh-e2e-bench").join("mnist-shards");
+        let _ = std::fs::remove_dir_all(&dir);
+        let manifest =
+            corrsh::data::store::write_sharded(&data, &dir, (n / 8).max(1)).unwrap();
+        // pinned reader (the portable worst case; mmap builds only get
+        // faster than this)
+        let sd = ShardedData::open_with(
+            &manifest,
+            &StoreOptions { force_pinned: true, ..Default::default() },
+        )
+        .unwrap();
+        let threads = corrsh::util::threads::default_threads();
+        let resident =
+            corrsh::engine::NativeEngine::with_threads(data.clone(), cfg.metric, threads);
+        let sharded = corrsh::engine::NativeEngine::with_threads(
+            Arc::new(Data::Sharded(sd)),
+            cfg.metric,
+            threads,
+        );
+        let mut res_best = 0usize;
+        b.bench_items(&format!("resident/n={n}/corrsh@24ppa"), n as u64, || {
+            let mut rng = Rng::seeded(7);
+            res_best = CorrSh::with_pulls_per_arm(24.0).run(&resident, &mut rng).best;
+            res_best
+        });
+        let resident_s = b.last_mean_s().unwrap();
+        let mut sh_best = 0usize;
+        b.bench_items(&format!("sharded/n={n}/corrsh@24ppa"), n as u64, || {
+            let mut rng = Rng::seeded(7);
+            sh_best = CorrSh::with_pulls_per_arm(24.0).run(&sharded, &mut rng).best;
+            sh_best
+        });
+        let sharded_s = b.last_mean_s().unwrap();
+        assert_eq!(res_best, sh_best, "backends disagreed on the medoid");
+        // >1 would mean sharding is free; the row tracks how close we get
+        b.record_metric("sharded_vs_resident", resident_s / sharded_s, "x rel throughput");
+    }
+
+    // ---- the million-point acceptance run (opt-in: slow + 0.5 GB disk) --
+    if std::env::var("CORRSH_E2E_MILLION").map(|v| v == "1").unwrap_or(false) {
+        b.group("e2e million (sharded, d=128)");
+        let n: usize = std::env::var("CORRSH_E2E_MILLION_N")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(1_000_000);
+        let dim = 128;
+        let dir = std::env::temp_dir().join("corrsh-e2e-bench").join("million-shards");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SynthConfig { n, dim, seed: 0, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        // Streams shard-by-shard: the n×d matrix never materializes.
+        let manifest = Kind::Gaussian.write_sharded(&cfg, &dir, 16_384).unwrap();
+        let gen_s = t0.elapsed().as_secs_f64();
+        let sd = ShardedData::open(&manifest).unwrap();
+        let engine = corrsh::engine::NativeEngine::with_threads(
+            Arc::new(Data::Sharded(sd)),
+            corrsh::distance::Metric::L2,
+            corrsh::util::threads::default_threads(),
+        );
+        let t1 = std::time::Instant::now();
+        let res = CorrSh::with_pulls_per_arm(24.0).run(&engine, &mut Rng::seeded(0));
+        let run_s = t1.elapsed().as_secs_f64();
+        let rss = peak_rss_bytes();
+        let gib = rss as f64 / (1u64 << 30) as f64;
+        b.record_metric("e2e_million/n", n as f64, "points");
+        b.record_metric("e2e_million/gen_write_s", gen_s, "s");
+        b.record_metric("e2e_million/corrsh_wall_s", run_s, "s");
+        b.record_metric(
+            "e2e_million/pulls_per_arm",
+            res.pulls as f64 / n as f64,
+            "pulls/arm",
+        );
+        b.record_metric("e2e_million/peak_rss_gib", gib, "GiB");
+        println!("e2e million: medoid={} pulls={} rss={gib:.3} GiB", res.best, res.pulls);
+        let _ = std::fs::remove_dir_all(&dir);
+        if rss > 0 {
+            assert!(
+                gib < 2.0,
+                "million-point sharded run exceeded the 2 GiB acceptance envelope: {gib:.3} GiB"
+            );
+        }
+    }
+
     b.write_jsonl();
+    b.write_bench_json("e2e");
 }

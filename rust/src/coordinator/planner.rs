@@ -30,6 +30,47 @@ pub fn aligned_chunk(len: usize, parts: usize, tile: usize) -> usize {
     per.div_ceil(tile) * tile
 }
 
+/// [`aligned_chunk`] with shard awareness: when the data lives in a shard
+/// store of `shard_rows` rows per shard (0 = resident, no shards), the
+/// chunk additionally lands on shard boundaries — big chunks round up to
+/// whole shards, small chunks to a tile-multiple divisor of the shard — so
+/// a worker sweeping a sorted row range touches at most one shard per job
+/// instead of paying cold shard fetches on both ends.
+///
+/// Only applies when `shard_rows` is itself tile-aligned (otherwise shard
+/// alignment would break the tile alignment that bitwise determinism
+/// rides on — tile alignment always wins).
+pub fn shard_aligned_chunk(len: usize, parts: usize, tile: usize, shard_rows: usize) -> usize {
+    let tile = tile.max(1);
+    let base = aligned_chunk(len, parts, tile);
+    if shard_rows < 2 || shard_rows % tile != 0 {
+        return base;
+    }
+    if base >= shard_rows {
+        return base.div_ceil(shard_rows) * shard_rows;
+    }
+    // Largest tile-multiple divisor of the shard that fits the base chunk:
+    // chunks tile the shard exactly, so no chunk straddles a boundary.
+    let mut best = tile;
+    let mut c = tile;
+    while c <= base {
+        if shard_rows % c == 0 {
+            best = c;
+        }
+        c += tile;
+    }
+    // Alignment is a perf heuristic only — if the shard size is divisor-poor
+    // (e.g. a prime row count) the best divisor can collapse toward `tile`,
+    // which would shatter the split into per-tile jobs. Accepting an
+    // occasional straddled shard strictly dominates that, so keep the plain
+    // split unless the divisor stays within 2x of the requested granularity.
+    if best * 2 >= base {
+        best
+    } else {
+        base
+    }
+}
+
 /// One PJRT job: `arm_span` and `ref_span` index into the round's arm/ref
 /// lists; the job runs on bucket `(bucket_arms, bucket_refs)` with padding.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -269,6 +310,66 @@ mod tests {
         assert_eq!(aligned_chunk(10, 0, 4), 12);
         assert_eq!(aligned_chunk(0, 8, 4), 4);
         assert_eq!(aligned_chunk(100, 3, 0), 34);
+    }
+
+    #[test]
+    fn shard_aligned_chunk_respects_tiles_and_boundaries() {
+        testing::check(
+            "shard-aligned-chunk",
+            testing::default_cases(),
+            |rng| {
+                let len = 1 + rng.below(100_000);
+                let parts = 1 + rng.below(64);
+                let tile = 1 + rng.below(16);
+                // tile-aligned and unaligned shard sizes, plus 0 = resident
+                let shard_rows = [0, tile * (1 + rng.below(64)), 1 + rng.below(1000)]
+                    [rng.below(3)];
+                (len, parts, tile, shard_rows)
+            },
+            |&(len, parts, tile, shard_rows), _| {
+                let chunk = shard_aligned_chunk(len, parts, tile, shard_rows);
+                if chunk == 0 || chunk % tile != 0 {
+                    return Err(format!("chunk {chunk} not a positive multiple of {tile}"));
+                }
+                let plain = aligned_chunk(len, parts, tile);
+                if shard_rows >= 2 && shard_rows % tile == 0 {
+                    // shard discipline: whole shards, an exact divisor, or —
+                    // when the shard is divisor-poor — the plain split
+                    // (granularity must never collapse below half of it)
+                    let aligned_to_shard =
+                        chunk % shard_rows == 0 || shard_rows % chunk == 0;
+                    if !aligned_to_shard && chunk != plain {
+                        return Err(format!(
+                            "chunk {chunk} neither shard-aligned ({shard_rows} rows/shard) \
+                             nor the plain split {plain}"
+                        ));
+                    }
+                    if 2 * chunk < plain {
+                        return Err(format!(
+                            "chunk {chunk} shattered the split (plain {plain})"
+                        ));
+                    }
+                } else if chunk != plain {
+                    return Err("unaligned shards must not change the plain split".into());
+                }
+                Ok(())
+            },
+        );
+        // spot values: big chunks round up to whole shards…
+        assert_eq!(shard_aligned_chunk(1000, 2, 4, 128), 512);
+        // …small chunks divide one shard exactly…
+        assert_eq!(shard_aligned_chunk(128, 8, 4, 128), 16);
+        // …and a shard size that defeats both keeps plain tile alignment.
+        assert_eq!(shard_aligned_chunk(100, 3, 4, 7), aligned_chunk(100, 3, 4));
+        // Divisor-poor shard sizes (e.g. a prime row count) fall back to
+        // the plain split instead of shattering the workload into
+        // chunk=tile jobs (the prepare pass calls this with tile=1, where
+        // that degeneration meant one pool job per row).
+        assert_eq!(
+            shard_aligned_chunk(1_000_000, 16, 1, 65_537),
+            aligned_chunk(1_000_000, 16, 1)
+        );
+        assert_eq!(shard_aligned_chunk(10_000, 8, 4, 4 * 9973), aligned_chunk(10_000, 8, 4));
     }
 
     #[test]

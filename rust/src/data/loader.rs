@@ -1,5 +1,7 @@
-//! Dataset loaders: `.npy` dense matrices and a simple CSR triplet format,
-//! so real datasets (when available) drop in for the synthetic generators.
+//! Dataset loaders: `.npy` dense matrices, a simple CSR triplet format,
+//! and shard manifests (`manifest.json` / shard directories — see
+//! [`crate::data::store`]), so real datasets drop in for the synthetic
+//! generators at any scale.
 //!
 //! CSR text format (one header line, then one line per nonzero):
 //! ```text
@@ -14,19 +16,28 @@ use std::path::Path;
 use crate::bail;
 use crate::util::error::{Context, Result};
 
+use crate::data::store::{Manifest, ShardedData};
 use crate::data::{Data, DenseData, SparseData};
 use crate::util::npy;
 
-/// Load a dataset by extension: `.npy` (dense) or `.csr` (sparse triplets).
+/// Load a dataset, auto-detecting the format: a shard directory or
+/// `manifest.json` opens as [`ShardedData`] *without loading payloads*;
+/// `.npy` (dense) and `.csr` (sparse triplets) load resident.
 pub fn load(path: impl AsRef<Path>) -> Result<Data> {
     let p = path.as_ref();
+    if Manifest::detect(p) {
+        return Ok(Data::Sharded(ShardedData::open(p)?));
+    }
     match p.extension().and_then(|e| e.to_str()) {
         Some("npy") => {
             let m = npy::read(p)?;
             Ok(Data::Dense(DenseData::new(m.rows, m.cols, m.data)))
         }
         Some("csr") => load_csr(p),
-        other => bail!("unsupported dataset extension {other:?} (want .npy or .csr)"),
+        other => bail!(
+            "unsupported dataset path {p:?} (want .npy, .csr, or a shard manifest); \
+             extension {other:?}"
+        ),
     }
 }
 
@@ -115,5 +126,26 @@ mod tests {
     #[test]
     fn unknown_extension_rejected() {
         assert!(load("data.parquet").is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip_through_loader() {
+        use crate::data::store;
+        let d = DenseData::new(9, 4, (0..36).map(|i| i as f32 * 0.25).collect());
+        let dir = std::env::temp_dir().join("corrsh-loader-tests").join("shards");
+        let _ = std::fs::remove_dir_all(&dir);
+        let manifest = store::write_sharded(&Data::Dense(d.clone()), &dir, 4).unwrap();
+        // both the manifest path and its directory auto-detect
+        for p in [manifest.as_path(), dir.as_path()] {
+            match load(p).unwrap() {
+                Data::Sharded(sd) => {
+                    assert_eq!((sd.n(), sd.dim()), (9, 4));
+                    let mut buf = vec![0f32; 4];
+                    sd.densify_row_into(7, &mut buf);
+                    assert_eq!(buf, d.row(7));
+                }
+                other => panic!("expected sharded, got {other:?}"),
+            }
+        }
     }
 }

@@ -1,11 +1,14 @@
-//! Dataset substrate: dense matrices, CSR sparse matrices, loaders and the
-//! synthetic generators standing in for the paper's datasets (DESIGN.md §7).
+//! Dataset substrate: dense matrices, CSR sparse matrices, the sharded
+//! on-disk store, loaders and the synthetic generators standing in for the
+//! paper's datasets (DESIGN.md §7, §12).
 
 pub mod loader;
 pub mod sparse;
+pub mod store;
 pub mod synth;
 
 pub use sparse::SparseData;
+pub use store::ShardedData;
 
 use crate::distance::{Metric, SparseRow};
 
@@ -31,12 +34,16 @@ impl DenseData {
 
 /// A dataset: points living in a common space with per-row access.
 ///
-/// Both storage layouts serve every metric; the engines pick the fastest
-/// path (sparse merge-walks vs dense vectorized sweeps) per representation.
+/// All storage layouts serve every metric; the engines pick the fastest
+/// path (sparse merge-walks vs dense vectorized sweeps vs shard-aware
+/// gathers) per representation. [`Data::Sharded`] serves rows from an
+/// on-disk shard set within a fixed resident budget — the backend that
+/// hosts the paper's 10⁵–10⁶-point workloads (DESIGN.md §12).
 #[derive(Clone, Debug)]
 pub enum Data {
     Dense(DenseData),
     Sparse(SparseData),
+    Sharded(ShardedData),
 }
 
 impl Data {
@@ -44,6 +51,7 @@ impl Data {
         match self {
             Data::Dense(d) => d.n,
             Data::Sparse(s) => s.n,
+            Data::Sharded(sd) => sd.n(),
         }
     }
 
@@ -51,18 +59,36 @@ impl Data {
         match self {
             Data::Dense(d) => d.dim,
             Data::Sparse(s) => s.dim,
+            Data::Sharded(sd) => sd.dim(),
         }
     }
 
     pub fn is_sparse(&self) -> bool {
-        matches!(self, Data::Sparse(_))
+        match self {
+            Data::Sparse(_) => true,
+            Data::Sharded(sd) => sd.is_sparse(),
+            Data::Dense(_) => false,
+        }
     }
 
-    /// Euclidean norms of every row (precomputed once for cosine).
+    /// Euclidean norms of every row (precomputed once for cosine). The
+    /// sharded backend streams shard-by-shard — same per-row kernels, so
+    /// the result is bitwise identical to the resident path.
     pub fn norms(&self) -> Vec<f32> {
         match self {
             Data::Dense(d) => (0..d.n).map(|i| crate::distance::dense::norm(d.row(i))).collect(),
             Data::Sparse(s) => (0..s.n).map(|i| s.row(i).norm()).collect(),
+            Data::Sharded(sd) => {
+                let mut out = vec![0f32; sd.n()];
+                if sd.is_sparse() {
+                    sd.for_sparse_rows(0, sd.n(), |i, r| out[i] = r.norm());
+                } else {
+                    sd.for_dense_rows(0, sd.n(), |i, row| {
+                        out[i] = crate::distance::dense::norm(row)
+                    });
+                }
+                out
+            }
         }
     }
 
@@ -76,6 +102,7 @@ impl Data {
         match self {
             Data::Dense(d) => metric.dense(d.row(i), d.row(j), ni, nj),
             Data::Sparse(s) => metric.sparse(s.row(i), s.row(j), ni, nj),
+            Data::Sharded(sd) => sd.distance(metric, i, j, ni, nj),
         }
     }
 
@@ -91,6 +118,7 @@ impl Data {
                     out[c as usize] = v;
                 }
             }
+            Data::Sharded(sd) => sd.densify_row_into(i, out),
         }
     }
 
@@ -109,6 +137,7 @@ impl Data {
                 }
                 DenseData::new(s.n, s.dim, data)
             }
+            Data::Sharded(sd) => sd.to_resident().to_dense(),
         }
     }
 }

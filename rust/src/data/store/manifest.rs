@@ -1,0 +1,356 @@
+//! On-disk shard manifest: one `manifest.json` per shard directory
+//! describing fixed-row-count shard files (DESIGN.md §12).
+//!
+//! ```json
+//! {"format":"corrsh-shards","version":1,"kind":"dense","n":1000000,
+//!  "dim":128,"rows_per_shard":16384,
+//!  "shards":[{"rows":16384,"data":"shard-00000.npy"}, ...]}
+//! ```
+//!
+//! Sparse manifests replace `data` with a CSR triple per shard
+//! (`indptr`/`indices`/`values`, raw little-endian u64/u32/f32) plus the
+//! shard's `nnz`. Shard file names are stored relative to the manifest's
+//! directory so a shard set can be moved or mounted read-only as a unit.
+
+use std::path::{Path, PathBuf};
+
+use crate::bail;
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Value};
+
+pub const MANIFEST_FORMAT: &str = "corrsh-shards";
+pub const MANIFEST_VERSION: u64 = 1;
+/// Default manifest file name inside a shard directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardKind {
+    Dense,
+    Sparse,
+}
+
+impl ShardKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardKind::Dense => "dense",
+            ShardKind::Sparse => "sparse",
+        }
+    }
+}
+
+/// Per-shard file set (file names relative to the manifest directory).
+#[derive(Clone, Debug)]
+pub enum ShardFiles {
+    Dense { data: String },
+    Sparse { indptr: String, indices: String, values: String },
+}
+
+#[derive(Clone, Debug)]
+pub struct ShardEntry {
+    /// Rows stored in this shard (== `rows_per_shard` except the tail).
+    pub rows: usize,
+    /// Nonzeros in this shard (sparse only; 0 for dense).
+    pub nnz: usize,
+    pub files: ShardFiles,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub kind: ShardKind,
+    pub n: usize,
+    pub dim: usize,
+    pub rows_per_shard: usize,
+    /// Total nonzeros (sparse only; 0 for dense).
+    pub nnz: usize,
+    pub shards: Vec<ShardEntry>,
+}
+
+impl Manifest {
+    /// `(shard index, row index within the shard)` of global row `i`.
+    #[inline]
+    pub fn locate(&self, i: usize) -> (usize, usize) {
+        debug_assert!(i < self.n);
+        (i / self.rows_per_shard, i % self.rows_per_shard)
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.kind == ShardKind::Sparse
+    }
+
+    /// Structural invariants: every shard holds exactly `rows_per_shard`
+    /// rows except a shorter tail, and the rows sum to `n`.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(self.n >= 1, "manifest: n must be >= 1");
+        crate::ensure!(self.dim >= 1, "manifest: dim must be >= 1");
+        crate::ensure!(self.rows_per_shard >= 1, "manifest: rows_per_shard must be >= 1");
+        let want = self.n.div_ceil(self.rows_per_shard);
+        crate::ensure!(
+            self.shards.len() == want,
+            "manifest: {} shards for n={} rows_per_shard={} (want {want})",
+            self.shards.len(),
+            self.n,
+            self.rows_per_shard
+        );
+        let mut total = 0usize;
+        let mut nnz = 0usize;
+        for (s, e) in self.shards.iter().enumerate() {
+            let full = s + 1 < self.shards.len();
+            let want_rows = if full {
+                self.rows_per_shard
+            } else {
+                self.n - s * self.rows_per_shard
+            };
+            crate::ensure!(
+                e.rows == want_rows,
+                "manifest: shard {s} has {} rows (want {want_rows})",
+                e.rows
+            );
+            match (&e.files, self.kind) {
+                (ShardFiles::Dense { .. }, ShardKind::Dense) => {}
+                (ShardFiles::Sparse { .. }, ShardKind::Sparse) => {}
+                _ => bail!("manifest: shard {s} file set does not match kind"),
+            }
+            total += e.rows;
+            nnz += e.nnz;
+        }
+        crate::ensure!(total == self.n, "manifest: shard rows sum {total} != n {}", self.n);
+        if self.kind == ShardKind::Sparse {
+            crate::ensure!(nnz == self.nnz, "manifest: shard nnz sum {nnz} != nnz {}", self.nnz);
+        }
+        Ok(())
+    }
+
+    pub fn to_value(&self) -> Value {
+        let shards: Vec<Value> = self
+            .shards
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![("rows", e.rows.into())];
+                match &e.files {
+                    ShardFiles::Dense { data } => pairs.push(("data", data.as_str().into())),
+                    ShardFiles::Sparse { indptr, indices, values } => {
+                        pairs.push(("nnz", e.nnz.into()));
+                        pairs.push(("indptr", indptr.as_str().into()));
+                        pairs.push(("indices", indices.as_str().into()));
+                        pairs.push(("values", values.as_str().into()));
+                    }
+                }
+                Value::from_pairs(pairs)
+            })
+            .collect();
+        let mut pairs = vec![
+            ("format", MANIFEST_FORMAT.into()),
+            ("version", MANIFEST_VERSION.into()),
+            ("kind", self.kind.name().into()),
+            ("n", self.n.into()),
+            ("dim", self.dim.into()),
+            ("rows_per_shard", self.rows_per_shard.into()),
+        ];
+        if self.kind == ShardKind::Sparse {
+            pairs.push(("nnz", self.nnz.into()));
+        }
+        pairs.push(("shards", Value::Array(shards)));
+        Value::from_pairs(pairs)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Manifest> {
+        crate::ensure!(
+            v.get("format").as_str() == Some(MANIFEST_FORMAT),
+            "not a {MANIFEST_FORMAT} manifest"
+        );
+        let version = v.get("version").as_u64().context("manifest: missing version")?;
+        crate::ensure!(
+            version == MANIFEST_VERSION,
+            "manifest version {version} unsupported (want {MANIFEST_VERSION})"
+        );
+        let kind = match v.get("kind").as_str().context("manifest: missing kind")? {
+            "dense" => ShardKind::Dense,
+            "sparse" => ShardKind::Sparse,
+            other => bail!("manifest: unknown kind {other:?}"),
+        };
+        let n = v.get("n").as_usize().context("manifest: missing n")?;
+        let dim = v.get("dim").as_usize().context("manifest: missing dim")?;
+        let rows_per_shard =
+            v.get("rows_per_shard").as_usize().context("manifest: missing rows_per_shard")?;
+        let mut shards = Vec::new();
+        for (s, e) in v.get("shards").as_array().context("manifest: missing shards")?.iter()
+            .enumerate()
+        {
+            let rows = e.get("rows").as_usize().with_context(|| format!("shard {s}: rows"))?;
+            let nnz = e.get("nnz").as_usize().unwrap_or(0);
+            let files = match kind {
+                ShardKind::Dense => ShardFiles::Dense {
+                    data: e
+                        .get("data")
+                        .as_str()
+                        .with_context(|| format!("shard {s}: data"))?
+                        .to_string(),
+                },
+                ShardKind::Sparse => ShardFiles::Sparse {
+                    indptr: e
+                        .get("indptr")
+                        .as_str()
+                        .with_context(|| format!("shard {s}: indptr"))?
+                        .to_string(),
+                    indices: e
+                        .get("indices")
+                        .as_str()
+                        .with_context(|| format!("shard {s}: indices"))?
+                        .to_string(),
+                    values: e
+                        .get("values")
+                        .as_str()
+                        .with_context(|| format!("shard {s}: values"))?
+                        .to_string(),
+                },
+            };
+            shards.push(ShardEntry { rows, nnz, files });
+        }
+        let nnz = v.get("nnz").as_usize().unwrap_or(0);
+        let m = Manifest { kind, n, dim, rows_per_shard, nnz, shards };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Write `manifest.json` into `dir`; returns the manifest path.
+    pub fn save(&self, dir: &Path) -> Result<PathBuf> {
+        self.validate()?;
+        let path = dir.join(MANIFEST_FILE);
+        std::fs::write(&path, json::to_string(&self.to_value()) + "\n")
+            .with_context(|| format!("write {path:?}"))?;
+        Ok(path)
+    }
+
+    /// Load a manifest from a `manifest.json` path *or* a directory that
+    /// contains one; returns the manifest plus its directory (shard file
+    /// names resolve relative to it).
+    pub fn load(path: &Path) -> Result<(Manifest, PathBuf)> {
+        let file = if path.is_dir() { path.join(MANIFEST_FILE) } else { path.to_path_buf() };
+        let dir = file.parent().context("manifest has no parent directory")?.to_path_buf();
+        let text =
+            std::fs::read_to_string(&file).with_context(|| format!("read {file:?}"))?;
+        let v = json::parse(&text).with_context(|| format!("parse {file:?}"))?;
+        let m = Self::from_value(&v).with_context(|| format!("manifest {file:?}"))?;
+        Ok((m, dir))
+    }
+
+    /// True if `path` plausibly names a shard manifest (used by the loader's
+    /// auto-detection; cheap — does not read shard files).
+    pub fn detect(path: &Path) -> bool {
+        let file = if path.is_dir() { path.join(MANIFEST_FILE) } else { path.to_path_buf() };
+        if file.file_name().and_then(|f| f.to_str()) != Some(MANIFEST_FILE)
+            && file.extension().and_then(|e| e.to_str()) != Some("json")
+        {
+            return false;
+        }
+        match std::fs::read_to_string(&file) {
+            Ok(text) => json::parse(&text)
+                .map(|v| v.get("format").as_str() == Some(MANIFEST_FORMAT))
+                .unwrap_or(false),
+            Err(_) => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(kind: ShardKind) -> Manifest {
+        let shards = match kind {
+            ShardKind::Dense => vec![
+                ShardEntry {
+                    rows: 4,
+                    nnz: 0,
+                    files: ShardFiles::Dense { data: "shard-00000.npy".into() },
+                },
+                ShardEntry {
+                    rows: 2,
+                    nnz: 0,
+                    files: ShardFiles::Dense { data: "shard-00001.npy".into() },
+                },
+            ],
+            ShardKind::Sparse => vec![
+                ShardEntry {
+                    rows: 4,
+                    nnz: 7,
+                    files: ShardFiles::Sparse {
+                        indptr: "s0.indptr.bin".into(),
+                        indices: "s0.indices.bin".into(),
+                        values: "s0.values.bin".into(),
+                    },
+                },
+                ShardEntry {
+                    rows: 2,
+                    nnz: 3,
+                    files: ShardFiles::Sparse {
+                        indptr: "s1.indptr.bin".into(),
+                        indices: "s1.indices.bin".into(),
+                        values: "s1.values.bin".into(),
+                    },
+                },
+            ],
+        };
+        Manifest {
+            kind,
+            n: 6,
+            dim: 5,
+            rows_per_shard: 4,
+            nnz: if kind == ShardKind::Sparse { 10 } else { 0 },
+            shards,
+        }
+    }
+
+    #[test]
+    fn roundtrip_both_kinds() {
+        for kind in [ShardKind::Dense, ShardKind::Sparse] {
+            let m = toy(kind);
+            m.validate().unwrap();
+            let back = Manifest::from_value(&m.to_value()).unwrap();
+            assert_eq!(back.n, 6);
+            assert_eq!(back.rows_per_shard, 4);
+            assert_eq!(back.kind, kind);
+            assert_eq!(back.shards.len(), 2);
+        }
+    }
+
+    #[test]
+    fn validation_catches_bad_shapes() {
+        let mut m = toy(ShardKind::Dense);
+        m.shards[0].rows = 3; // not a full shard
+        assert!(m.validate().is_err());
+        let mut m = toy(ShardKind::Dense);
+        m.n = 7; // rows don't sum
+        assert!(m.validate().is_err());
+        let mut m = toy(ShardKind::Sparse);
+        m.nnz = 99;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn locate_maps_rows_to_shards() {
+        let m = toy(ShardKind::Dense);
+        assert_eq!(m.locate(0), (0, 0));
+        assert_eq!(m.locate(3), (0, 3));
+        assert_eq!(m.locate(4), (1, 0));
+        assert_eq!(m.locate(5), (1, 1));
+    }
+
+    #[test]
+    fn save_load_detect() {
+        let dir = std::env::temp_dir().join("corrsh-manifest-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = toy(ShardKind::Dense);
+        let path = m.save(&dir).unwrap();
+        assert!(Manifest::detect(&path));
+        assert!(Manifest::detect(&dir));
+        let (back, back_dir) = Manifest::load(&dir).unwrap();
+        assert_eq!(back.n, m.n);
+        assert_eq!(back_dir, dir);
+        // a random json is not a manifest
+        let other = dir.join("not-manifest.json");
+        std::fs::write(&other, "{\"x\":1}").unwrap();
+        assert!(!Manifest::detect(&other));
+        assert!(!Manifest::detect(std::path::Path::new("/nonexistent/manifest.json")));
+    }
+}

@@ -1,0 +1,469 @@
+//! Sharded, memory-mapped dataset backend (DESIGN.md §12): an on-disk
+//! manifest pointing at fixed-row-count `.npy` shards (dense) or CSR shard
+//! triples (sparse), served through a zero-copy mmap reader (feature
+//! `mmap`) or a pure-`std` pinned-block LRU fallback.
+//!
+//! This is what lets the bandit layer host the paper's n ≈ 10⁵–10⁶
+//! workloads: corrSH touches only ~n log n of the n² distances, so the
+//! binding constraint is *holding* the points — [`ShardedData`] keeps
+//! resident memory at the cache budget instead of the dataset size, and
+//! the engines pull rows through the shard map instead of a contiguous
+//! matrix.
+
+pub mod manifest;
+pub mod reader;
+pub mod writer;
+
+pub use manifest::{Manifest, ShardKind, MANIFEST_FILE};
+pub use reader::{cache_stats, mmap_compiled, ShardCacheStats, SparseCursor, StoreOptions};
+pub use writer::{shard_file, write_sharded, DenseShardWriter, SparseShardWriter};
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::data::{Data, DenseData, SparseData};
+use crate::distance::{Metric, SparseRow};
+use crate::util::error::Result;
+
+use reader::{DenseBackend, SparseBackend};
+
+enum Backend {
+    Dense(DenseBackend),
+    Sparse(SparseBackend),
+}
+
+struct Inner {
+    manifest: Manifest,
+    dir: PathBuf,
+    backend: Backend,
+}
+
+/// A dataset served from an on-disk shard set. Opening reads only the
+/// manifest and shard headers — payload bytes are pulled on demand, so
+/// registering a million-point dataset is O(#shards), not O(n·d).
+///
+/// Cloning shares the underlying readers and caches (`Arc`).
+#[derive(Clone)]
+pub struct ShardedData {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for ShardedData {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedData")
+            .field("kind", &self.inner.manifest.kind)
+            .field("n", &self.inner.manifest.n)
+            .field("dim", &self.inner.manifest.dim)
+            .field("rows_per_shard", &self.inner.manifest.rows_per_shard)
+            .field("shards", &self.inner.manifest.shards.len())
+            .field("mmapped", &self.mmapped())
+            .finish()
+    }
+}
+
+impl ShardedData {
+    /// Open a shard set from a manifest path or its directory.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        Self::open_with(path, &StoreOptions::default())
+    }
+
+    pub fn open_with(path: impl AsRef<Path>, opts: &StoreOptions) -> Result<Self> {
+        let (manifest, dir) = Manifest::load(path.as_ref())?;
+        let backend = match manifest.kind {
+            ShardKind::Dense => Backend::Dense(DenseBackend::open(&manifest, &dir, opts)?),
+            ShardKind::Sparse => Backend::Sparse(SparseBackend::open(&manifest, &dir, opts)?),
+        };
+        Ok(ShardedData { inner: Arc::new(Inner { manifest, dir, backend }) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    /// Directory the shard files live in (the manifest's directory).
+    pub fn dir(&self) -> &Path {
+        &self.inner.dir
+    }
+
+    pub fn n(&self) -> usize {
+        self.inner.manifest.n
+    }
+
+    pub fn dim(&self) -> usize {
+        self.inner.manifest.dim
+    }
+
+    pub fn rows_per_shard(&self) -> usize {
+        self.inner.manifest.rows_per_shard
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.inner.manifest.is_sparse()
+    }
+
+    /// Effective per-pair dim of the sparse support walks (same formula as
+    /// [`SparseData::avg_nnz`]); `dim` for dense.
+    pub fn avg_nnz(&self) -> usize {
+        match &self.inner.backend {
+            Backend::Dense(_) => self.dim(),
+            Backend::Sparse(s) => s.avg_nnz(),
+        }
+    }
+
+    /// True when every dense shard is served zero-copy via mmap.
+    pub fn mmapped(&self) -> bool {
+        match &self.inner.backend {
+            Backend::Dense(d) => d.fully_mapped(),
+            Backend::Sparse(_) => false,
+        }
+    }
+
+    /// Bytes currently pinned by this dataset's block/shard cache (mapped
+    /// shards pin nothing — the OS owns those pages).
+    pub fn pinned_bytes(&self) -> usize {
+        match &self.inner.backend {
+            Backend::Dense(d) => d.pinned_bytes(),
+            Backend::Sparse(s) => s.pinned_bytes(),
+        }
+    }
+
+    fn dense(&self) -> &DenseBackend {
+        match &self.inner.backend {
+            Backend::Dense(d) => d,
+            Backend::Sparse(_) => panic!("dense row access on a sparse shard set"),
+        }
+    }
+
+    fn sparse(&self) -> &SparseBackend {
+        match &self.inner.backend {
+            Backend::Sparse(s) => s,
+            Backend::Dense(_) => panic!("sparse row access on a dense shard set"),
+        }
+    }
+
+    /// Serve dense row `i` to `f` (zero-copy when mapped, pinned otherwise).
+    #[inline]
+    pub fn with_dense_row<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        self.dense().with_row(i, f)
+    }
+
+    /// Zero-copy dense row borrow — `Some` only on fully-mapped shard sets.
+    #[inline]
+    pub fn try_dense_row(&self, i: usize) -> Option<&[f32]> {
+        match &self.inner.backend {
+            Backend::Dense(d) => d.try_row(i),
+            Backend::Sparse(_) => None,
+        }
+    }
+
+    /// Serve sparse row `i` to `f`.
+    #[inline]
+    pub fn with_sparse_row<R>(&self, i: usize, f: impl FnOnce(SparseRow<'_>) -> R) -> R {
+        self.sparse().with_row(i, f)
+    }
+
+    /// A per-worker cursor for [`ShardedData::with_sparse_row_cached`].
+    pub fn sparse_cursor(&self) -> SparseCursor {
+        self.sparse().cursor()
+    }
+
+    /// [`ShardedData::with_sparse_row`] through a cursor pinning the
+    /// last-touched shard — the engine hot loops use this so consecutive
+    /// row accesses don't take the dataset-wide cache lock per pair.
+    #[inline]
+    pub fn with_sparse_row_cached<R>(
+        &self,
+        cur: &mut SparseCursor,
+        i: usize,
+        f: impl FnOnce(SparseRow<'_>) -> R,
+    ) -> R {
+        self.sparse().with_row_cached(cur, i, f)
+    }
+
+    /// Stream dense rows `start..start+count` in order (each shard window
+    /// fetched once) — the shape the `PreparedEngine` reductions sweep.
+    pub fn for_dense_rows(&self, start: usize, count: usize, f: impl FnMut(usize, &[f32])) {
+        self.dense().for_rows(start, count, f);
+    }
+
+    pub fn for_sparse_rows(&self, start: usize, count: usize, f: impl FnMut(usize, SparseRow<'_>)) {
+        self.sparse().for_rows(start, count, f);
+    }
+
+    /// Copy row `i` into `out` as a dense vector (the PJRT gather path).
+    pub fn densify_row_into(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim());
+        match &self.inner.backend {
+            Backend::Dense(d) => d.with_row(i, |row| out.copy_from_slice(row)),
+            Backend::Sparse(s) => s.with_row(i, |r| {
+                out.fill(0.0);
+                for (&c, &v) in r.indices.iter().zip(r.values) {
+                    out[c as usize] = v;
+                }
+            }),
+        }
+    }
+
+    /// Distance between rows `i` and `j` — the same scalar kernels as the
+    /// resident backends, on bitwise-identical row bytes.
+    #[inline]
+    pub fn distance(&self, metric: Metric, i: usize, j: usize, ni: f32, nj: f32) -> f32 {
+        match &self.inner.backend {
+            Backend::Dense(d) => {
+                d.with_row(i, |a| d.with_row(j, |b| metric.dense(a, b, ni, nj)))
+            }
+            Backend::Sparse(s) => {
+                s.with_row(i, |a| s.with_row(j, |b| metric.sparse(a, b, ni, nj)))
+            }
+        }
+    }
+
+    /// Materialize the shard set as a resident [`Data`] (tests / small
+    /// datasets only — this is exactly the allocation sharding avoids).
+    pub fn to_resident(&self) -> Data {
+        match &self.inner.backend {
+            Backend::Dense(d) => {
+                let (n, dim) = (self.n(), self.dim());
+                let mut out = vec![0f32; n * dim];
+                d.for_rows(0, n, |i, row| out[i * dim..(i + 1) * dim].copy_from_slice(row));
+                Data::Dense(DenseData::new(n, dim, out))
+            }
+            Backend::Sparse(s) => {
+                let mut rows: Vec<Vec<(u32, f32)>> = Vec::with_capacity(self.n());
+                s.for_rows(0, self.n(), |_, r| {
+                    rows.push(r.indices.iter().copied().zip(r.values.iter().copied()).collect());
+                });
+                Data::Sparse(SparseData::from_rows(self.n(), self.dim(), rows))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{netflix, rnaseq, SynthConfig};
+    use crate::data::DenseData;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("corrsh-store-tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn dense_roundtrip_bitwise() {
+        let n = 37;
+        let dim = 9;
+        let data: Vec<f32> = (0..n * dim).map(|i| (i as f32).sin()).collect();
+        let d = DenseData::new(n, dim, data);
+        let dir = tmp("dense-rt");
+        let manifest = write_sharded(&Data::Dense(d.clone()), &dir, 8).unwrap();
+        let sd = ShardedData::open(&manifest).unwrap();
+        assert_eq!((sd.n(), sd.dim(), sd.rows_per_shard()), (n, dim, 8));
+        assert!(!sd.is_sparse());
+        let mut buf = vec![0f32; dim];
+        for i in 0..n {
+            sd.densify_row_into(i, &mut buf);
+            assert_eq!(buf, d.row(i), "row {i}");
+            sd.with_dense_row(i, |row| assert_eq!(row, d.row(i)));
+        }
+        // streaming visit covers every row once, in order
+        let mut seen = 0;
+        sd.for_dense_rows(0, n, |i, row| {
+            assert_eq!(i, seen);
+            assert_eq!(row, d.row(i));
+            seen += 1;
+        });
+        assert_eq!(seen, n);
+        match sd.to_resident() {
+            Data::Dense(back) => assert_eq!(back.data, d.data),
+            _ => panic!("dense expected"),
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip_bitwise() {
+        let cfg = SynthConfig { n: 41, dim: 60, seed: 3, density: 0.1, ..Default::default() };
+        let data = rnaseq::generate(&cfg);
+        let Data::Sparse(sp) = &data else { panic!("rnaseq is sparse") };
+        let dir = tmp("sparse-rt");
+        let manifest = write_sharded(&data, &dir, 7).unwrap();
+        let sd = ShardedData::open(&manifest).unwrap();
+        assert!(sd.is_sparse());
+        assert_eq!(sd.avg_nnz(), sp.avg_nnz());
+        for i in 0..sp.n {
+            let want = sp.row(i);
+            sd.with_sparse_row(i, |r| {
+                assert_eq!(r.indices, want.indices, "row {i}");
+                assert_eq!(r.values, want.values, "row {i}");
+            });
+        }
+        match sd.to_resident() {
+            Data::Sparse(back) => {
+                assert_eq!(back.indptr, sp.indptr);
+                assert_eq!(back.indices, sp.indices);
+                assert_eq!(back.values, sp.values);
+            }
+            _ => panic!("sparse expected"),
+        }
+    }
+
+    #[test]
+    fn tiny_cache_still_serves_every_row() {
+        // Force evictions on every other access: a 1-block cache must stay
+        // correct (the LRU is a performance layer, never a semantic one).
+        let n = 50;
+        let dim = 16;
+        let d = DenseData::new(n, dim, (0..n * dim).map(|i| i as f32).collect());
+        let dir = tmp("tiny-cache");
+        let manifest = write_sharded(&Data::Dense(d.clone()), &dir, 6).unwrap();
+        let opts = StoreOptions {
+            cache_bytes: dim * 4, // one row's bytes -> at most one block
+            block_bytes: dim * 4,
+            force_pinned: true,
+        };
+        let sd = ShardedData::open_with(&manifest, &opts).unwrap();
+        assert!(!sd.mmapped());
+        // strided access defeats the cache on purpose
+        for pass in 0..3 {
+            for i in (0..n).step_by(7 + pass) {
+                sd.with_dense_row(i, |row| assert_eq!(row, d.row(i), "row {i}"));
+            }
+        }
+        // the pinned budget holds even under pathological access: at most
+        // one resident block beyond the (one-block) budget floor
+        assert!(
+            sd.pinned_bytes() <= opts.cache_bytes + opts.block_bytes,
+            "cache exceeded budget: {} > {}",
+            sd.pinned_bytes(),
+            opts.cache_bytes + opts.block_bytes
+        );
+        assert!(sd.pinned_bytes() > 0, "pinned reader holds at least the hot block");
+    }
+
+    #[test]
+    fn cache_stats_move_and_stay_monotone() {
+        let cfg = SynthConfig { n: 30, dim: 40, seed: 5, density: 0.2, ..Default::default() };
+        let data = netflix::generate(&cfg);
+        let dir = tmp("stats");
+        let manifest = write_sharded(&data, &dir, 8).unwrap();
+        let opts = StoreOptions { force_pinned: true, ..Default::default() };
+        let sd = ShardedData::open_with(&manifest, &opts).unwrap();
+        let (h0, m0) = (cache_stats().hits(), cache_stats().misses());
+        sd.with_sparse_row(0, |_| ());
+        sd.with_sparse_row(1, |_| ());
+        let (h1, m1) = (cache_stats().hits(), cache_stats().misses());
+        assert!(m1 > m0, "first touch is a miss");
+        assert!(h1 >= h0 && h1 + m1 > h0 + m0);
+        sd.with_sparse_row(0, |_| ());
+        assert!(cache_stats().hits() > h1, "re-touch within budget is a hit");
+    }
+
+    #[test]
+    fn sparse_cursor_matches_uncached_access() {
+        // The cursor is a lock-elision layer, never a semantic one: even
+        // with a cache evicting on every fetch, cursor reads must be
+        // identical to plain reads (the pinned Arc keeps evicted shards
+        // alive for the cursor's holder).
+        let cfg = SynthConfig { n: 50, dim: 40, seed: 7, density: 0.2, ..Default::default() };
+        let data = rnaseq::generate(&cfg);
+        let dir = tmp("cursor");
+        let manifest = write_sharded(&data, &dir, 7).unwrap();
+        let opts = StoreOptions { cache_bytes: 1, block_bytes: 64, force_pinned: true };
+        let sd = ShardedData::open_with(&manifest, &opts).unwrap();
+        let mut cur = sd.sparse_cursor();
+        // strided orders force shard switches mid-stream
+        for step in [1usize, 3, 11] {
+            for i in (0..50).step_by(step) {
+                sd.with_sparse_row(i, |want| {
+                    sd.with_sparse_row_cached(&mut cur, i, |got| {
+                        assert_eq!(got.indices, want.indices, "row {i} (step {step})");
+                        assert_eq!(got.values, want.values, "row {i} (step {step})");
+                    });
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn reshard_into_source_dir_is_rejected() {
+        // Re-sharding a manifest into its own directory would truncate the
+        // shard files the reader still streams from — must refuse.
+        let d = DenseData::new(8, 3, (0..24).map(|i| i as f32).collect());
+        let dir = tmp("reshard-guard");
+        let manifest = write_sharded(&Data::Dense(d.clone()), &dir, 4).unwrap();
+        let sd = Data::Sharded(ShardedData::open(&manifest).unwrap());
+        assert!(write_sharded(&sd, &dir, 2).is_err(), "clobbering the source must fail");
+        // source is intact and a distinct target works
+        let manifest2 = write_sharded(&sd, dir.join("copy"), 2).unwrap();
+        let back = ShardedData::open_with(
+            &manifest2,
+            &StoreOptions { force_pinned: true, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!((back.n(), back.dim(), back.rows_per_shard()), (8, 3, 2));
+        let mut buf = vec![0f32; 3];
+        back.densify_row_into(5, &mut buf);
+        assert_eq!(buf, d.row(5));
+    }
+
+    #[test]
+    fn open_rejects_corrupt_shard_sets() {
+        let d = DenseData::new(10, 4, (0..40).map(|i| i as f32).collect());
+        let dir = tmp("corrupt");
+        let manifest = write_sharded(&Data::Dense(d), &dir, 4).unwrap();
+        // truncate a shard payload
+        let shard0 = dir.join("shard-00000.npy");
+        let bytes = std::fs::read(&shard0).unwrap();
+        std::fs::write(&shard0, &bytes[..bytes.len() - 8]).unwrap();
+        assert!(ShardedData::open(&manifest).is_err(), "short shard must fail at open");
+    }
+
+    #[test]
+    fn corrupt_sparse_shard_fails_with_clear_message() {
+        // A crafted shard with out-of-range column indices must fail at
+        // decode with a descriptive panic (the server executor catches
+        // panics into error responses) — never an OOB index deep in an
+        // engine hot loop.
+        let rows: Vec<Vec<(u32, f32)>> =
+            (0..20).map(|i| vec![(0u32, i as f32), (5, 1.0)]).collect();
+        let data = Data::Sparse(crate::data::SparseData::from_rows(20, 16, rows));
+        let dir = tmp("corrupt-sparse");
+        let manifest = write_sharded(&data, &dir, 8).unwrap();
+        // poison shard 1's indices with a column >= dim (every shard has
+        // exactly 2 nonzeros per row by construction)
+        let idx_path = dir.join("shard-00001.indices.bin");
+        let mut bytes = std::fs::read(&idx_path).unwrap();
+        bytes[..4].copy_from_slice(&999u32.to_le_bytes());
+        std::fs::write(&idx_path, bytes).unwrap();
+        let sd = ShardedData::open(&manifest).unwrap(); // open stays lazy
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sd.with_sparse_row(9, |r| r.nnz()) // row 9 lives in shard 1
+        }))
+        .expect_err("decoding the poisoned shard must fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("column index"), "unhelpful panic message: {msg:?}");
+        // untouched shards still serve
+        sd.with_sparse_row(0, |r| assert!(r.nnz() < 17));
+    }
+
+    #[test]
+    fn writer_rejects_degenerate_input() {
+        let dir = tmp("degenerate");
+        assert!(DenseShardWriter::create(&dir, 0, 4).is_err());
+        assert!(DenseShardWriter::create(&dir, 4, 0).is_err());
+        let mut w = DenseShardWriter::create(&dir, 4, 2).unwrap();
+        assert!(w.push_row(&[1.0, 2.0]).is_err(), "wrong row length");
+        let w = DenseShardWriter::create(&dir, 4, 2).unwrap();
+        assert!(w.finish().is_err(), "empty shard set");
+        let mut w = SparseShardWriter::create(&dir, 4, 2).unwrap();
+        assert!(w.push_row(&[2, 1], &[1.0, 1.0]).is_err(), "unsorted indices");
+        assert!(w.push_row(&[9], &[1.0]).is_err(), "index out of range");
+    }
+}

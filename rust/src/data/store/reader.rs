@@ -1,0 +1,770 @@
+//! Shard readers: zero-copy mmap (feature `mmap`, linux x86_64/aarch64)
+//! with a pure-`std` fallback that `pread()`s shard windows into a small
+//! LRU of pinned blocks, so the default no-unsafe/offline build serves the
+//! same manifests with bounded resident memory (DESIGN.md §12).
+//!
+//! Cache traffic is observable through the process-global
+//! [`cache_stats`] (hit/miss counters + pinned-bytes gauge), exported by
+//! the server's `metrics` op as `shard_cache`.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::data::store::manifest::{Manifest, ShardFiles};
+use crate::distance::SparseRow;
+use crate::metrics::Counter;
+use crate::util::error::{Context, Result};
+use crate::util::npy;
+
+/// Reader knobs. Defaults serve million-point shard sets inside a small,
+/// fixed resident budget; tests shrink the cache to force evictions.
+#[derive(Clone, Debug)]
+pub struct StoreOptions {
+    /// Total bytes the pinned-block caches may hold per dataset
+    /// (default 128 MiB, env `CORRSH_SHARD_CACHE_MB` overrides).
+    pub cache_bytes: usize,
+    /// Bytes per cached dense block (rounded to whole rows; default 256 KiB).
+    pub block_bytes: usize,
+    /// Skip the mmap reader even when compiled in (tests compare readers).
+    pub force_pinned: bool,
+}
+
+impl Default for StoreOptions {
+    fn default() -> Self {
+        let mb = std::env::var("CORRSH_SHARD_CACHE_MB")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(128)
+            .max(1);
+        StoreOptions { cache_bytes: mb << 20, block_bytes: 1 << 18, force_pinned: false }
+    }
+}
+
+/// Process-global shard-cache telemetry: hits/misses are monotone
+/// counters, `pinned_bytes` tracks bytes currently held by pinned-block
+/// caches across every open [`crate::data::store::ShardedData`].
+#[derive(Debug)]
+pub struct ShardCacheStats {
+    hits: Counter,
+    misses: Counter,
+    pinned: AtomicI64,
+}
+
+impl ShardCacheStats {
+    const fn new() -> Self {
+        ShardCacheStats { hits: Counter::new(), misses: Counter::new(), pinned: AtomicI64::new(0) }
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.get()
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.get()
+    }
+
+    pub fn pinned_bytes(&self) -> u64 {
+        self.pinned.load(Ordering::Relaxed).max(0) as u64
+    }
+
+    fn add_pinned(&self, delta: i64) {
+        self.pinned.fetch_add(delta, Ordering::Relaxed);
+    }
+}
+
+/// The global shard-cache stats sink (see [`ShardCacheStats`]).
+pub fn cache_stats() -> &'static ShardCacheStats {
+    static STATS: ShardCacheStats = ShardCacheStats::new();
+    &STATS
+}
+
+/// Positioned read that never moves a shared cursor (concurrent workers
+/// read the same shard files).
+#[cfg(unix)]
+fn read_exact_at(f: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    std::os::unix::fs::FileExt::read_exact_at(f, buf, off)
+}
+
+#[cfg(windows)]
+fn read_exact_at(f: &File, buf: &mut [u8], off: u64) -> std::io::Result<()> {
+    use std::os::windows::fs::FileExt;
+    let mut pos = 0usize;
+    while pos < buf.len() {
+        let n = f.seek_read(&mut buf[pos..], off + pos as u64)?;
+        if n == 0 {
+            return Err(std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "short read"));
+        }
+        pos += n;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// mmap (feature `mmap`): raw-syscall read-only mapping, so the offline
+// dependency closure stays empty (no libc crate). Unsupported targets and
+// the default build fall back to the pinned reader transparently.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(
+    feature = "mmap",
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod mapping {
+    use std::fs::File;
+    use std::os::fd::AsRawFd;
+
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+
+    /// Read-only private mapping of a whole shard file.
+    pub struct Mmap {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ/MAP_PRIVATE over an immutable shard
+    // file — shared references to its bytes never alias a write.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        pub fn map_readonly(f: &File) -> std::io::Result<Mmap> {
+            let len = f.metadata()?.len() as usize;
+            if len == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    "cannot map an empty shard",
+                ));
+            }
+            // SAFETY: valid fd, length > 0; the kernel picks the address.
+            let ret = unsafe { sys_mmap(len, f.as_raw_fd()) };
+            if (-4095..0).contains(&ret) {
+                return Err(std::io::Error::from_raw_os_error(-ret as i32));
+            }
+            Ok(Mmap { ptr: ret as *const u8, len })
+        }
+
+        pub fn bytes(&self) -> &[u8] {
+            // SAFETY: ptr/len describe the live mapping owned by self.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // SAFETY: unmapping exactly the range mmap returned.
+            unsafe { sys_munmap(self.ptr, self.len) };
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn sys_mmap(len: usize, fd: i32) -> isize {
+        let mut ret: isize = 9; // __NR_mmap
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") ret,
+            in("rdi") 0usize,
+            in("rsi") len,
+            in("rdx") PROT_READ,
+            in("r10") MAP_PRIVATE,
+            in("r8") fd as isize,
+            in("r9") 0usize,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn sys_munmap(addr: *const u8, len: usize) {
+        let mut _ret: isize = 11; // __NR_munmap
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") _ret,
+            in("rdi") addr,
+            in("rsi") len,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn sys_mmap(len: usize, fd: i32) -> isize {
+        let mut ret: isize = 0;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 222usize, // __NR_mmap
+            inlateout("x0") ret,
+            in("x1") len,
+            in("x2") PROT_READ,
+            in("x3") MAP_PRIVATE,
+            in("x4") fd as isize,
+            in("x5") 0usize,
+            options(nostack)
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn sys_munmap(addr: *const u8, len: usize) {
+        let mut _ret: isize = addr as isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") 215usize, // __NR_munmap
+            inlateout("x0") _ret,
+            in("x1") len,
+            options(nostack)
+        );
+    }
+}
+
+/// True when this build can serve dense shards zero-copy via mmap.
+pub fn mmap_compiled() -> bool {
+    cfg!(all(
+        feature = "mmap",
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Dense backend
+// ---------------------------------------------------------------------------
+
+struct DenseShard {
+    file: File,
+    data_off: u64,
+    rows: usize,
+    #[cfg(all(
+        feature = "mmap",
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    map: Option<mapping::Mmap>,
+}
+
+impl DenseShard {
+    /// Zero-copy f32 view of the whole shard payload (mmap builds only).
+    #[cfg(all(
+        feature = "mmap",
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    fn floats(&self, dim: usize) -> Option<&[f32]> {
+        let m = self.map.as_ref()?;
+        let off = self.data_off as usize;
+        let count = self.rows * dim;
+        let bytes = m.bytes();
+        debug_assert!(off % 4 == 0 && off + count * 4 <= bytes.len());
+        // SAFETY: 4-alignment of `off` and payload bounds were validated at
+        // open (unaligned/short shards are never mapped); the mapping is
+        // read-only and outlives the returned borrow.
+        Some(unsafe { std::slice::from_raw_parts(bytes.as_ptr().add(off) as *const f32, count) })
+    }
+
+    #[cfg(not(all(
+        feature = "mmap",
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    fn floats(&self, _dim: usize) -> Option<&[f32]> {
+        None
+    }
+}
+
+struct CachedBlock {
+    data: Arc<Vec<f32>>,
+    stamp: u64,
+}
+
+struct BlockCache {
+    map: HashMap<(u32, u32), CachedBlock>,
+    clock: u64,
+    bytes: usize,
+    budget: usize,
+}
+
+pub(crate) struct DenseBackend {
+    dim: usize,
+    rows_per_shard: usize,
+    /// Rows per pinned block (blocks never straddle a shard).
+    block_rows: usize,
+    shards: Vec<DenseShard>,
+    cache: Mutex<BlockCache>,
+}
+
+impl DenseBackend {
+    pub fn open(manifest: &Manifest, dir: &Path, opts: &StoreOptions) -> Result<DenseBackend> {
+        let dim = manifest.dim;
+        let mut shards = Vec::with_capacity(manifest.shards.len());
+        for (s, e) in manifest.shards.iter().enumerate() {
+            let ShardFiles::Dense { data } = &e.files else {
+                crate::bail!("shard {s}: dense backend over sparse manifest entry");
+            };
+            let path = dir.join(data);
+            let mut file = File::open(&path).with_context(|| format!("open shard {path:?}"))?;
+            let h = npy::read_header_from(&mut file)
+                .with_context(|| format!("shard header {path:?}"))?;
+            crate::ensure!(
+                h.dtype == npy::Dtype::F4,
+                "shard {s}: dtype {:?} (shards must be <f4)",
+                h.dtype
+            );
+            crate::ensure!(
+                h.rows == e.rows && h.cols == dim,
+                "shard {s}: {}x{} on disk vs {}x{dim} in manifest",
+                h.rows,
+                h.cols,
+                e.rows
+            );
+            let need = h.data_offset + (e.rows * dim * 4) as u64;
+            let len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+            crate::ensure!(len >= need, "shard {s}: file {len}B short of payload {need}B");
+            shards.push(Self::new_shard(file, &h, e.rows, opts));
+        }
+        let block_rows =
+            (opts.block_bytes / (dim * 4).max(1)).clamp(1, manifest.rows_per_shard.max(1));
+        Ok(DenseBackend {
+            dim,
+            rows_per_shard: manifest.rows_per_shard,
+            block_rows,
+            shards,
+            cache: Mutex::new(BlockCache {
+                map: HashMap::new(),
+                clock: 0,
+                bytes: 0,
+                budget: opts.cache_bytes.max(1),
+            }),
+        })
+    }
+
+    #[cfg(all(
+        feature = "mmap",
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    fn new_shard(file: File, h: &npy::Header, rows: usize, opts: &StoreOptions) -> DenseShard {
+        // The zero-copy view needs 4-aligned payloads and a little-endian
+        // host; anything else quietly serves through the pinned reader.
+        let map = if opts.force_pinned
+            || h.data_offset % 4 != 0
+            || !cfg!(target_endian = "little")
+        {
+            None
+        } else {
+            mapping::Mmap::map_readonly(&file).ok()
+        };
+        DenseShard { file, data_off: h.data_offset, rows, map }
+    }
+
+    #[cfg(not(all(
+        feature = "mmap",
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    )))]
+    fn new_shard(file: File, h: &npy::Header, rows: usize, _opts: &StoreOptions) -> DenseShard {
+        DenseShard { file, data_off: h.data_offset, rows }
+    }
+
+    /// True when every shard is served zero-copy.
+    pub fn fully_mapped(&self) -> bool {
+        self.shards.iter().all(|s| s.floats(self.dim).is_some())
+    }
+
+    /// Bytes currently pinned by this dataset's block cache.
+    pub fn pinned_bytes(&self) -> usize {
+        self.cache.lock().unwrap().bytes
+    }
+
+    #[inline]
+    fn locate(&self, i: usize) -> (usize, usize) {
+        (i / self.rows_per_shard, i % self.rows_per_shard)
+    }
+
+    /// Zero-copy row borrow — `Some` only on fully-mapped shards.
+    #[inline]
+    pub fn try_row(&self, i: usize) -> Option<&[f32]> {
+        let (s, l) = self.locate(i);
+        let fl = self.shards[s].floats(self.dim)?;
+        Some(&fl[l * self.dim..(l + 1) * self.dim])
+    }
+
+    /// Serve row `i` to `f`, through the map or a pinned block.
+    #[inline]
+    pub fn with_row<R>(&self, i: usize, f: impl FnOnce(&[f32]) -> R) -> R {
+        let (s, l) = self.locate(i);
+        if let Some(fl) = self.shards[s].floats(self.dim) {
+            return f(&fl[l * self.dim..(l + 1) * self.dim]);
+        }
+        let b = l / self.block_rows;
+        let block = self.fetch_block(s, b);
+        let base = (l - b * self.block_rows) * self.dim;
+        f(&block[base..base + self.dim])
+    }
+
+    /// Visit rows `start..start+count` in order, fetching each shard window
+    /// exactly once — the streaming shape `PreparedEngine` reduces over.
+    pub fn for_rows(&self, start: usize, count: usize, mut f: impl FnMut(usize, &[f32])) {
+        let end = start + count;
+        let mut i = start;
+        while i < end {
+            let (s, l) = self.locate(i);
+            let shard = &self.shards[s];
+            if let Some(fl) = shard.floats(self.dim) {
+                let take = (end - i).min(shard.rows - l);
+                for k in 0..take {
+                    f(i + k, &fl[(l + k) * self.dim..(l + k + 1) * self.dim]);
+                }
+                i += take;
+            } else {
+                let b = l / self.block_rows;
+                let b0 = b * self.block_rows;
+                let block_len = (shard.rows - b0).min(self.block_rows);
+                let take = (end - i).min(block_len - (l - b0));
+                let block = self.fetch_block(s, b);
+                for k in 0..take {
+                    let base = (l - b0 + k) * self.dim;
+                    f(i + k, &block[base..base + self.dim]);
+                }
+                i += take;
+            }
+        }
+    }
+
+    fn fetch_block(&self, s: usize, b: usize) -> Arc<Vec<f32>> {
+        let key = (s as u32, b as u32);
+        {
+            let mut c = self.cache.lock().unwrap();
+            c.clock += 1;
+            let stamp = c.clock;
+            if let Some(e) = c.map.get_mut(&key) {
+                e.stamp = stamp;
+                let out = e.data.clone();
+                drop(c);
+                cache_stats().hits.add(1);
+                return out;
+            }
+        }
+        cache_stats().misses.add(1);
+        // Shard I/O runs outside the cache lock so concurrent workers on
+        // different blocks never serialize behind a pread; a racing pair on
+        // the same cold block costs one redundant read at worst.
+        let data = Arc::new(self.read_block(s, b));
+        let bytes = data.len() * 4;
+        let mut c = self.cache.lock().unwrap();
+        c.clock += 1;
+        let stamp = c.clock;
+        let out = match c.map.get_mut(&key) {
+            Some(e) => {
+                e.stamp = stamp;
+                e.data.clone()
+            }
+            None => {
+                c.bytes += bytes;
+                cache_stats().add_pinned(bytes as i64);
+                c.map.insert(key, CachedBlock { data: data.clone(), stamp });
+                data
+            }
+        };
+        while c.bytes > c.budget && c.map.len() > 1 {
+            let victim = c
+                .map
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let e = c.map.remove(&k).expect("victim present");
+                    let freed = e.data.len() * 4;
+                    c.bytes -= freed;
+                    cache_stats().add_pinned(-(freed as i64));
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    fn read_block(&self, s: usize, b: usize) -> Vec<f32> {
+        let shard = &self.shards[s];
+        let r0 = b * self.block_rows;
+        let rows = (shard.rows - r0).min(self.block_rows);
+        let count = rows * self.dim;
+        let mut raw = vec![0u8; count * 4];
+        read_exact_at(&shard.file, &mut raw, shard.data_off + (r0 * self.dim * 4) as u64)
+            .unwrap_or_else(|e| panic!("shard {s} block {b}: pread failed: {e}"));
+        raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+}
+
+impl Drop for DenseBackend {
+    fn drop(&mut self) {
+        let c = self.cache.get_mut().unwrap();
+        cache_stats().add_pinned(-(c.bytes as i64));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse backend: whole decoded CSR shards in the LRU (a CSR row's three
+// slices don't window cleanly into fixed-size blocks).
+// ---------------------------------------------------------------------------
+
+struct SparseShardFiles {
+    indptr: PathBuf,
+    indices: PathBuf,
+    values: PathBuf,
+    rows: usize,
+    nnz: usize,
+}
+
+/// One decoded CSR shard (shard-local indptr).
+struct SparseShardData {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl SparseShardData {
+    fn bytes(&self) -> usize {
+        self.indptr.len() * 8 + self.indices.len() * 4 + self.values.len() * 4
+    }
+}
+
+struct CachedShard {
+    data: Arc<SparseShardData>,
+    stamp: u64,
+}
+
+/// Per-worker pin on the last-touched sparse shard (see
+/// [`SparseBackend::with_row_cached`]). Holding the `Arc` keeps the shard
+/// alive even if the LRU evicts it, so a cursor never serves stale rows.
+pub struct SparseCursor {
+    shard: Option<(u32, Arc<SparseShardData>)>,
+}
+
+struct SparseCache {
+    map: HashMap<u32, CachedShard>,
+    clock: u64,
+    bytes: usize,
+    budget: usize,
+}
+
+pub(crate) struct SparseBackend {
+    rows_per_shard: usize,
+    dim: usize,
+    avg_nnz: usize,
+    shards: Vec<SparseShardFiles>,
+    cache: Mutex<SparseCache>,
+}
+
+impl SparseBackend {
+    pub fn open(manifest: &Manifest, dir: &Path, opts: &StoreOptions) -> Result<SparseBackend> {
+        let mut shards = Vec::with_capacity(manifest.shards.len());
+        for (s, e) in manifest.shards.iter().enumerate() {
+            let ShardFiles::Sparse { indptr, indices, values } = &e.files else {
+                crate::bail!("shard {s}: sparse backend over dense manifest entry");
+            };
+            let f = SparseShardFiles {
+                indptr: dir.join(indptr),
+                indices: dir.join(indices),
+                values: dir.join(values),
+                rows: e.rows,
+                nnz: e.nnz,
+            };
+            for (path, want) in [
+                (&f.indptr, ((e.rows + 1) * 8) as u64),
+                (&f.indices, (e.nnz * 4) as u64),
+                (&f.values, (e.nnz * 4) as u64),
+            ] {
+                let len = std::fs::metadata(path)
+                    .with_context(|| format!("stat {path:?}"))?
+                    .len();
+                crate::ensure!(len == want, "shard {s}: {path:?} is {len}B (want {want}B)");
+            }
+            shards.push(f);
+        }
+        // Same formula as `SparseData::avg_nnz` so the FLOP-based thread
+        // cutoff plans identically for resident and sharded backends.
+        let avg_nnz = manifest.nnz.div_ceil(manifest.n.max(1)).max(1);
+        Ok(SparseBackend {
+            rows_per_shard: manifest.rows_per_shard,
+            dim: manifest.dim,
+            avg_nnz,
+            shards,
+            cache: Mutex::new(SparseCache {
+                map: HashMap::new(),
+                clock: 0,
+                bytes: 0,
+                budget: opts.cache_bytes.max(1),
+            }),
+        })
+    }
+
+    pub fn avg_nnz(&self) -> usize {
+        self.avg_nnz
+    }
+
+    /// Bytes currently pinned by this dataset's shard cache.
+    pub fn pinned_bytes(&self) -> usize {
+        self.cache.lock().unwrap().bytes
+    }
+
+    #[inline]
+    pub fn with_row<R>(&self, i: usize, f: impl FnOnce(SparseRow<'_>) -> R) -> R {
+        let (s, l) = (i / self.rows_per_shard, i % self.rows_per_shard);
+        let shard = self.fetch_shard(s);
+        let (lo, hi) = (shard.indptr[l], shard.indptr[l + 1]);
+        f(SparseRow { indices: &shard.indices[lo..hi], values: &shard.values[lo..hi] })
+    }
+
+    pub fn cursor(&self) -> SparseCursor {
+        SparseCursor { shard: None }
+    }
+
+    /// [`SparseBackend::with_row`] through a per-worker cursor that pins
+    /// the last-touched shard: consecutive row accesses within one shard
+    /// skip the dataset-wide cache lock entirely — without this, the
+    /// sparse engine hot loops would take the Mutex once per (arm, ref)
+    /// pair and serialize every worker on it.
+    #[inline]
+    pub fn with_row_cached<R>(
+        &self,
+        cur: &mut SparseCursor,
+        i: usize,
+        f: impl FnOnce(SparseRow<'_>) -> R,
+    ) -> R {
+        let (s, l) = (i / self.rows_per_shard, i % self.rows_per_shard);
+        let hit = matches!(&cur.shard, Some((cs, _)) if *cs == s as u32);
+        if !hit {
+            cur.shard = Some((s as u32, self.fetch_shard(s)));
+        }
+        let shard = &cur.shard.as_ref().expect("just pinned").1;
+        let (lo, hi) = (shard.indptr[l], shard.indptr[l + 1]);
+        f(SparseRow { indices: &shard.indices[lo..hi], values: &shard.values[lo..hi] })
+    }
+
+    /// Visit rows `start..start+count` in order, decoding each shard once.
+    pub fn for_rows(&self, start: usize, count: usize, mut f: impl FnMut(usize, SparseRow<'_>)) {
+        let end = start + count;
+        let mut i = start;
+        while i < end {
+            let (s, l) = (i / self.rows_per_shard, i % self.rows_per_shard);
+            let shard = self.fetch_shard(s);
+            let take = (end - i).min(self.shards[s].rows - l);
+            for k in 0..take {
+                let (lo, hi) = (shard.indptr[l + k], shard.indptr[l + k + 1]);
+                f(
+                    i + k,
+                    SparseRow { indices: &shard.indices[lo..hi], values: &shard.values[lo..hi] },
+                );
+            }
+            i += take;
+        }
+    }
+
+    fn fetch_shard(&self, s: usize) -> Arc<SparseShardData> {
+        let key = s as u32;
+        {
+            let mut c = self.cache.lock().unwrap();
+            c.clock += 1;
+            let stamp = c.clock;
+            if let Some(e) = c.map.get_mut(&key) {
+                e.stamp = stamp;
+                let out = e.data.clone();
+                drop(c);
+                cache_stats().hits.add(1);
+                return out;
+            }
+        }
+        cache_stats().misses.add(1);
+        let data = Arc::new(self.read_shard(s));
+        let bytes = data.bytes();
+        let mut c = self.cache.lock().unwrap();
+        c.clock += 1;
+        let stamp = c.clock;
+        let out = match c.map.get_mut(&key) {
+            Some(e) => {
+                e.stamp = stamp;
+                e.data.clone()
+            }
+            None => {
+                c.bytes += bytes;
+                cache_stats().add_pinned(bytes as i64);
+                c.map.insert(key, CachedShard { data: data.clone(), stamp });
+                data
+            }
+        };
+        while c.bytes > c.budget && c.map.len() > 1 {
+            let victim = c
+                .map
+                .iter()
+                .filter(|(k, _)| **k != key)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let e = c.map.remove(&k).expect("victim present");
+                    let freed = e.data.bytes();
+                    c.bytes -= freed;
+                    cache_stats().add_pinned(-(freed as i64));
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    fn read_shard(&self, s: usize) -> SparseShardData {
+        let files = &self.shards[s];
+        let indptr_raw = std::fs::read(&files.indptr)
+            .unwrap_or_else(|e| panic!("sparse shard {s}: read indptr failed: {e}"));
+        let indices_raw = std::fs::read(&files.indices)
+            .unwrap_or_else(|e| panic!("sparse shard {s}: read indices failed: {e}"));
+        let values_raw = std::fs::read(&files.values)
+            .unwrap_or_else(|e| panic!("sparse shard {s}: read values failed: {e}"));
+        let indptr: Vec<usize> = indptr_raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        let indices: Vec<u32> = indices_raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let values: Vec<f32> =
+            values_raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        assert_eq!(indptr.len(), files.rows + 1, "sparse shard {s}: indptr len");
+        assert_eq!(indices.len(), files.nnz, "sparse shard {s}: indices len");
+        assert_eq!(values.len(), files.nnz, "sparse shard {s}: values len");
+        assert_eq!(*indptr.last().unwrap(), files.nnz, "sparse shard {s}: indptr tail");
+        // Structural validation at decode time (open stays payload-free):
+        // a corrupt or hand-built shard must fail here with a clear message
+        // — which the server's executor catches into an error response —
+        // not out-of-bounds-panic deep inside an engine hot loop.
+        let mut prev = 0usize;
+        for (r, &p) in indptr.iter().enumerate() {
+            assert!(
+                p >= prev && p <= files.nnz,
+                "sparse shard {s}: indptr not monotone/bounded at local row {r}"
+            );
+            prev = p;
+        }
+        if let Some(&bad) = indices.iter().find(|&&c| c as usize >= self.dim) {
+            panic!("sparse shard {s}: column index {bad} >= dim {}", self.dim);
+        }
+        SparseShardData { indptr, indices, values }
+    }
+}
+
+impl Drop for SparseBackend {
+    fn drop(&mut self) {
+        let c = self.cache.get_mut().unwrap();
+        cache_stats().add_pinned(-(c.bytes as i64));
+    }
+}

@@ -1,0 +1,263 @@
+//! Shard writers: stream rows into fixed-row-count shard files plus a
+//! manifest, without ever holding more than one shard in memory — the
+//! converse of the readers in [`crate::data::store::reader`].
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::data::store::manifest::{Manifest, ShardEntry, ShardFiles, ShardKind};
+use crate::data::Data;
+use crate::util::error::{Context, Result};
+use crate::util::npy;
+
+fn shard_stem(idx: usize) -> String {
+    format!("shard-{idx:05}")
+}
+
+/// Streaming dense shard writer: buffer up to `rows_per_shard` rows, flush
+/// each full shard as a `<f4` `.npy`, then write `manifest.json`.
+pub struct DenseShardWriter {
+    dir: PathBuf,
+    dim: usize,
+    rows_per_shard: usize,
+    buf: Vec<f32>,
+    entries: Vec<ShardEntry>,
+    rows_total: usize,
+}
+
+impl DenseShardWriter {
+    pub fn create(dir: impl AsRef<Path>, dim: usize, rows_per_shard: usize) -> Result<Self> {
+        crate::ensure!(dim >= 1, "shard writer: dim must be >= 1");
+        crate::ensure!(rows_per_shard >= 1, "shard writer: rows_per_shard must be >= 1");
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+        Ok(DenseShardWriter {
+            dir,
+            dim,
+            rows_per_shard,
+            buf: Vec::new(),
+            entries: Vec::new(),
+            rows_total: 0,
+        })
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
+        crate::ensure!(row.len() == self.dim, "push_row: {} values, dim {}", row.len(), self.dim);
+        self.buf.extend_from_slice(row);
+        self.rows_total += 1;
+        if self.buf.len() == self.rows_per_shard * self.dim {
+            self.flush_shard()?;
+        }
+        Ok(())
+    }
+
+    /// Push `rows.len() / dim` row-major rows at once.
+    pub fn push_rows(&mut self, rows: &[f32]) -> Result<()> {
+        crate::ensure!(rows.len() % self.dim == 0, "push_rows: length not a multiple of dim");
+        for row in rows.chunks_exact(self.dim) {
+            self.push_row(row)?;
+        }
+        Ok(())
+    }
+
+    fn flush_shard(&mut self) -> Result<()> {
+        let rows = self.buf.len() / self.dim;
+        let name = format!("{}.npy", shard_stem(self.entries.len()));
+        let m = npy::Matrix::new(rows, self.dim, std::mem::take(&mut self.buf));
+        npy::write(self.dir.join(&name), &m)?;
+        self.entries.push(ShardEntry { rows, nnz: 0, files: ShardFiles::Dense { data: name } });
+        Ok(())
+    }
+
+    /// Flush the tail shard and write `manifest.json`; returns its path.
+    pub fn finish(mut self) -> Result<PathBuf> {
+        if !self.buf.is_empty() {
+            self.flush_shard()?;
+        }
+        crate::ensure!(self.rows_total >= 1, "shard writer: no rows written");
+        let manifest = Manifest {
+            kind: ShardKind::Dense,
+            n: self.rows_total,
+            dim: self.dim,
+            rows_per_shard: self.rows_per_shard,
+            nnz: 0,
+            shards: self.entries,
+        };
+        manifest.save(&self.dir)
+    }
+}
+
+/// Streaming sparse (CSR) shard writer: per shard, three raw little-endian
+/// files — `*.indptr.bin` (u64, shard-local), `*.indices.bin` (u32),
+/// `*.values.bin` (f32).
+pub struct SparseShardWriter {
+    dir: PathBuf,
+    dim: usize,
+    rows_per_shard: usize,
+    indptr: Vec<u64>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    entries: Vec<ShardEntry>,
+    rows_total: usize,
+    nnz_total: usize,
+}
+
+impl SparseShardWriter {
+    pub fn create(dir: impl AsRef<Path>, dim: usize, rows_per_shard: usize) -> Result<Self> {
+        crate::ensure!(dim >= 1, "shard writer: dim must be >= 1");
+        crate::ensure!(rows_per_shard >= 1, "shard writer: rows_per_shard must be >= 1");
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+        Ok(SparseShardWriter {
+            dir,
+            dim,
+            rows_per_shard,
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            entries: Vec::new(),
+            rows_total: 0,
+            nnz_total: 0,
+        })
+    }
+
+    /// Push one row's (sorted, in-range) CSR slices.
+    pub fn push_row(&mut self, indices: &[u32], values: &[f32]) -> Result<()> {
+        crate::ensure!(indices.len() == values.len(), "push_row: indices/values mismatch");
+        for w in indices.windows(2) {
+            crate::ensure!(w[0] < w[1], "push_row: indices not strictly sorted");
+        }
+        if let Some(&last) = indices.last() {
+            crate::ensure!((last as usize) < self.dim, "push_row: index {last} >= dim");
+        }
+        self.indices.extend_from_slice(indices);
+        self.values.extend_from_slice(values);
+        self.indptr.push(self.indices.len() as u64);
+        self.rows_total += 1;
+        self.nnz_total += indices.len();
+        if self.indptr.len() - 1 == self.rows_per_shard {
+            self.flush_shard()?;
+        }
+        Ok(())
+    }
+
+    fn flush_shard(&mut self) -> Result<()> {
+        let rows = self.indptr.len() - 1;
+        let nnz = self.indices.len();
+        let stem = shard_stem(self.entries.len());
+        let files = ShardFiles::Sparse {
+            indptr: format!("{stem}.indptr.bin"),
+            indices: format!("{stem}.indices.bin"),
+            values: format!("{stem}.values.bin"),
+        };
+        let ShardFiles::Sparse { indptr, indices, values } = &files else { unreachable!() };
+        write_le(&self.dir.join(indptr), self.indptr.iter().map(|v| v.to_le_bytes()))?;
+        write_le(&self.dir.join(indices), self.indices.iter().map(|v| v.to_le_bytes()))?;
+        write_le(&self.dir.join(values), self.values.iter().map(|v| v.to_le_bytes()))?;
+        self.entries.push(ShardEntry { rows, nnz, files });
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<PathBuf> {
+        if self.indptr.len() > 1 {
+            self.flush_shard()?;
+        }
+        crate::ensure!(self.rows_total >= 1, "shard writer: no rows written");
+        let manifest = Manifest {
+            kind: ShardKind::Sparse,
+            n: self.rows_total,
+            dim: self.dim,
+            rows_per_shard: self.rows_per_shard,
+            nnz: self.nnz_total,
+            shards: self.entries,
+        };
+        manifest.save(&self.dir)
+    }
+}
+
+fn write_le<const N: usize>(
+    path: &Path,
+    items: impl Iterator<Item = [u8; N]>,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    for b in items {
+        buf.extend_from_slice(&b);
+    }
+    let mut f =
+        std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(&buf).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+/// Convert any in-memory (or already-sharded) dataset into a shard set
+/// under `dir`; returns the manifest path. Row payloads are copied
+/// bitwise, so the sharded dataset is bit-identical to its source.
+pub fn write_sharded(data: &Data, dir: impl AsRef<Path>, rows_per_shard: usize) -> Result<PathBuf> {
+    let dir = dir.as_ref();
+    match data {
+        Data::Dense(d) => {
+            let mut w = DenseShardWriter::create(dir, d.dim, rows_per_shard)?;
+            for i in 0..d.n {
+                w.push_row(d.row(i))?;
+            }
+            w.finish()
+        }
+        Data::Sparse(s) => {
+            let mut w = SparseShardWriter::create(dir, s.dim, rows_per_shard)?;
+            for i in 0..s.n {
+                let r = s.row(i);
+                w.push_row(r.indices, r.values)?;
+            }
+            w.finish()
+        }
+        Data::Sharded(sd) => {
+            // Re-sharding into the source directory would truncate shard
+            // files the reader is still streaming from — refuse instead of
+            // destroying the dataset mid-copy.
+            std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+            let src = sd.dir().canonicalize().ok();
+            let dst = dir.canonicalize().ok();
+            crate::ensure!(
+                src.is_none() || dst.is_none() || src != dst,
+                "re-shard target {dir:?} is the source shard directory"
+            );
+            if sd.is_sparse() {
+                let mut w = SparseShardWriter::create(dir, sd.dim(), rows_per_shard)?;
+                let mut err = Ok(());
+                sd.for_sparse_rows(0, sd.n(), |_, r| {
+                    if err.is_ok() {
+                        err = w.push_row(r.indices, r.values);
+                    }
+                });
+                err?;
+                w.finish()
+            } else {
+                let mut w = DenseShardWriter::create(dir, sd.dim(), rows_per_shard)?;
+                let mut err = Ok(());
+                sd.for_dense_rows(0, sd.n(), |_, row| {
+                    if err.is_ok() {
+                        err = w.push_row(row);
+                    }
+                });
+                err?;
+                w.finish()
+            }
+        }
+    }
+}
+
+/// The `corrsh shard` conversion: load a resident dataset file (`.npy` or
+/// `.csr`) — or re-shard an existing manifest — and write a shard set into
+/// `out_dir`. Returns the manifest path.
+pub fn shard_file(
+    input: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    rows_per_shard: usize,
+) -> Result<PathBuf> {
+    let data = crate::data::loader::load(input)?;
+    write_sharded(&data, out_dir, rows_per_shard)
+}

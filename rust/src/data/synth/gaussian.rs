@@ -68,6 +68,67 @@ pub fn generate_mixture(cfg: &SynthConfig) -> Data {
     Data::Dense(DenseData::new(n, dim, data))
 }
 
+/// Fill `out` (row-major, `out.len() / dim` rows) with rows
+/// `row0..row0+rows` of the *streamed* gaussian family: every row is
+/// generated from its own `(seed, index)`-derived RNG, so any shard of the
+/// dataset can be produced independently — the shape the shard writers
+/// need at n = 10⁶ where materializing the matrix is exactly what we're
+/// avoiding. Same structure as [`generate`] (planted row 0 at the origin,
+/// `outlier_frac` periphery), but a distinct deterministic family: the
+/// draw order differs, so streamed bytes ≠ [`generate`] bytes.
+pub fn fill_rows_streamed(cfg: &SynthConfig, row0: usize, out: &mut [f32]) {
+    let dim = cfg.dim;
+    debug_assert_eq!(out.len() % dim, 0);
+    for (k, row) in out.chunks_exact_mut(dim).enumerate() {
+        let i = row0 + k;
+        let mut rng = Rng::seeded(
+            (cfg.seed ^ 0x5EED_57AE).wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+        );
+        if i == 0 {
+            row.fill(0.0);
+        } else if rng.chance(cfg.outlier_frac) {
+            let scale = 6.0 + rng.power_law(2.0).min(10.0);
+            for v in row.iter_mut() {
+                *v = (rng.gaussian() * scale) as f32;
+            }
+        } else {
+            for v in row.iter_mut() {
+                *v = rng.gaussian() as f32;
+            }
+        }
+    }
+}
+
+/// Streamed mixture rows (see [`fill_rows_streamed`]): same planted
+/// structure as [`generate_mixture`] — point `i` in cluster `i % k`,
+/// points `0..k` exactly on their centers — with per-row RNGs so shards
+/// generate independently.
+pub fn fill_mixture_rows_streamed(cfg: &SynthConfig, row0: usize, out: &mut [f32]) {
+    let dim = cfg.dim;
+    debug_assert_eq!(out.len() % dim, 0);
+    let k = cfg.clusters.clamp(1, cfg.n.max(1));
+    // centers are tiny (k·dim): regenerate per call from the center RNG
+    let mut crng = Rng::seeded(cfg.seed ^ 0x13C7_55EE);
+    let mut centers = vec![0f32; k * dim];
+    for v in centers.iter_mut() {
+        *v = (crng.gaussian() * 10.0) as f32;
+    }
+    for (j, row) in out.chunks_exact_mut(dim).enumerate() {
+        let i = row0 + j;
+        let c = i % k;
+        row.copy_from_slice(&centers[c * dim..(c + 1) * dim]);
+        if i >= k {
+            let mut rng = Rng::seeded(
+                (cfg.seed ^ 0x717E_D0CC)
+                    .wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15)),
+            );
+            for v in row.iter_mut() {
+                *v += rng.gaussian() as f32;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +185,36 @@ mod tests {
         let within = d.distance(Metric::L2, 0, k, None);
         let across = d.distance(Metric::L2, 0, 1, None);
         assert!(across > 3.0 * within, "clusters not separated: {across} vs {within}");
+    }
+
+    #[test]
+    fn streamed_rows_are_shard_independent() {
+        // Generating [0, 40) in one call must equal generating any window
+        // split — the property that lets shards stream independently.
+        let cfg = SynthConfig { n: 40, dim: 6, seed: 11, ..Default::default() };
+        let mut whole = vec![0f32; 40 * 6];
+        fill_rows_streamed(&cfg, 0, &mut whole);
+        assert!(whole[..6].iter().all(|&v| v == 0.0), "row 0 planted at origin");
+        for (start, rows) in [(0usize, 7usize), (7, 13), (20, 20)] {
+            let mut window = vec![0f32; rows * 6];
+            fill_rows_streamed(&cfg, start, &mut window);
+            assert_eq!(window, whole[start * 6..(start + rows) * 6], "window {start}+{rows}");
+        }
+        // mixture: same independence plus planted centers
+        let mcfg = SynthConfig { n: 40, dim: 6, clusters: 4, seed: 2, ..Default::default() };
+        let mut mw = vec![0f32; 40 * 6];
+        fill_mixture_rows_streamed(&mcfg, 0, &mut mw);
+        let mut window = vec![0f32; 10 * 6];
+        fill_mixture_rows_streamed(&mcfg, 17, &mut window);
+        assert_eq!(window, mw[17 * 6..27 * 6]);
+        // points 0..k sit exactly on their centers; members of the same
+        // cluster are near them
+        for i in 0..4 {
+            let center = &mw[i * 6..(i + 1) * 6];
+            let member = &mw[(i + 4) * 6..(i + 5) * 6];
+            let d2: f32 = center.iter().zip(member).map(|(a, b)| (a - b) * (a - b)).sum();
+            assert!(d2 < 100.0, "cluster {i} member strayed: {d2}");
+        }
     }
 
     #[test]

@@ -88,7 +88,54 @@ impl Kind {
             Kind::Mixture => gaussian::generate_mixture(cfg),
         }
     }
+
+    /// Generate straight into a shard set under `dir` (returns the
+    /// manifest path). Below [`STREAM_THRESHOLD_FLOATS`] the resident
+    /// generator runs and is converted — bitwise identical to
+    /// [`Kind::generate`]. Above it, the gaussian-family kinds stream
+    /// shard-by-shard through their per-row generators
+    /// ([`gaussian::fill_rows_streamed`]) so n = 10⁶ never materializes —
+    /// a distinct deterministic family (draw order differs from the
+    /// resident generator). Kinds without a streaming writer refuse
+    /// oversize requests instead of silently exhausting memory.
+    pub fn write_sharded(
+        &self,
+        cfg: &SynthConfig,
+        dir: impl AsRef<std::path::Path>,
+        rows_per_shard: usize,
+    ) -> crate::Result<std::path::PathBuf> {
+        use crate::data::store;
+        if cfg.n.saturating_mul(cfg.dim) <= STREAM_THRESHOLD_FLOATS {
+            let data = self.generate(cfg);
+            return store::write_sharded(&data, dir, rows_per_shard);
+        }
+        let fill: fn(&SynthConfig, usize, &mut [f32]) = match self {
+            Kind::Gaussian => gaussian::fill_rows_streamed,
+            Kind::Mixture => gaussian::fill_mixture_rows_streamed,
+            other => crate::bail!(
+                "{}: no streaming shard writer — {}x{} exceeds the resident limit",
+                other.name(),
+                cfg.n,
+                cfg.dim
+            ),
+        };
+        let mut w = store::DenseShardWriter::create(dir, cfg.dim, rows_per_shard)?;
+        let mut buf = vec![0f32; rows_per_shard.min(cfg.n) * cfg.dim];
+        let mut row = 0usize;
+        while row < cfg.n {
+            let take = rows_per_shard.min(cfg.n - row);
+            let slab = &mut buf[..take * cfg.dim];
+            fill(cfg, row, slab);
+            w.push_rows(slab)?;
+            row += take;
+        }
+        w.finish()
+    }
 }
+
+/// Largest `n·dim` the resident-then-convert path of
+/// [`Kind::write_sharded`] will materialize (2²⁶ floats = 256 MiB).
+pub const STREAM_THRESHOLD_FLOATS: usize = 1 << 26;
 
 impl std::str::FromStr for Kind {
     type Err = crate::util::error::Error;
@@ -113,6 +160,29 @@ mod tests {
     fn kinds_parse() {
         for k in [Kind::RnaSeq, Kind::Netflix, Kind::Mnist, Kind::Gaussian, Kind::Mixture] {
             assert_eq!(k.name().parse::<Kind>().unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn write_sharded_small_matches_generate_bitwise() {
+        // Below the streaming threshold the shard set is a conversion of
+        // the resident generator — every row bitwise equal.
+        let dir = std::env::temp_dir().join("corrsh-synth-tests");
+        let cfg = SynthConfig { n: 60, dim: 24, seed: 4, density: 0.1, ..Default::default() };
+        for k in [Kind::Gaussian, Kind::RnaSeq] {
+            let sub = dir.join(k.name());
+            let _ = std::fs::remove_dir_all(&sub);
+            let manifest = k.write_sharded(&cfg, &sub, 16).unwrap();
+            let sharded = crate::data::loader::load(&manifest).unwrap();
+            let resident = k.generate(&cfg);
+            assert_eq!(sharded.is_sparse(), resident.is_sparse(), "{}", k.name());
+            let mut a = vec![0f32; cfg.dim];
+            let mut b = vec![0f32; cfg.dim];
+            for i in 0..cfg.n {
+                sharded.densify_row_into(i, &mut a);
+                resident.densify_row_into(i, &mut b);
+                assert_eq!(a, b, "{} row {i}", k.name());
+            }
         }
     }
 

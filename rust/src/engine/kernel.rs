@@ -39,8 +39,8 @@
 //! f32, block sums accumulate in f64 in reference order, so results are
 //! bitwise identical across thread counts and ref-block sizes.
 
-use crate::coordinator::planner::aligned_chunk;
-use crate::data::DenseData;
+use crate::coordinator::planner::shard_aligned_chunk;
+use crate::data::{DenseData, ShardedData};
 use crate::distance::{dense, Metric};
 use crate::util::threads;
 
@@ -107,30 +107,105 @@ fn l1_tile<const MR: usize>(rows: &[&[f32]; MR], packed: &[f32]) -> [[f64; REF_L
     lane_tile(rows, packed, |a, y| (a - y).abs())
 }
 
+/// Row source for the tile kernels: a resident dense matrix or an on-disk
+/// shard store. Rows come out bitwise identical either way — resident and
+/// mapped shards lend zero-copy slices, the pinned shard reader gathers
+/// into per-worker scratch — so tile results (and therefore bandit
+/// decisions) do not depend on where the bytes live (DESIGN.md §12).
+#[derive(Clone, Copy)]
+pub enum DenseRows<'a> {
+    Resident(&'a DenseData),
+    Sharded(&'a ShardedData),
+}
+
+impl<'a> From<&'a DenseData> for DenseRows<'a> {
+    fn from(d: &'a DenseData) -> Self {
+        DenseRows::Resident(d)
+    }
+}
+
+impl<'a> From<&'a ShardedData> for DenseRows<'a> {
+    fn from(sd: &'a ShardedData) -> Self {
+        assert!(!sd.is_sparse(), "dense tile kernels over a sparse shard set");
+        DenseRows::Sharded(sd)
+    }
+}
+
+impl<'a> DenseRows<'a> {
+    #[inline]
+    pub fn dim(&self) -> usize {
+        match self {
+            DenseRows::Resident(d) => d.dim,
+            DenseRows::Sharded(sd) => sd.dim(),
+        }
+    }
+
+    /// Rows per shard (0 = resident — no boundaries to align to).
+    fn shard_rows(&self) -> usize {
+        match self {
+            DenseRows::Resident(_) => 0,
+            DenseRows::Sharded(sd) => sd.rows_per_shard(),
+        }
+    }
+
+    /// Zero-copy row borrow; `None` means the caller must gather.
+    #[inline]
+    fn try_row(&self, i: usize) -> Option<&'a [f32]> {
+        match self {
+            DenseRows::Resident(d) => Some(d.row(i)),
+            DenseRows::Sharded(sd) => sd.try_dense_row(i),
+        }
+    }
+
+    #[inline]
+    fn copy_row_into(&self, i: usize, out: &mut [f32]) {
+        match self {
+            DenseRows::Resident(d) => out.copy_from_slice(d.row(i)),
+            DenseRows::Sharded(sd) => sd.with_dense_row(i, |row| out.copy_from_slice(row)),
+        }
+    }
+}
+
 /// Repack ref tiles `[t0, t1)` k-major into `scratch`:
-/// `scratch[(t−t0)·8·dim + k·8 + lane] = data.row(refs[t·8 + lane])[k]`,
+/// `scratch[(t−t0)·8·dim + k·8 + lane] = row(refs[t·8 + lane])[k]`,
 /// zero-padding missing lanes. Packing one cache block at a time keeps the
 /// transient footprint at ~[`BLOCK_BUDGET_F32`] floats per worker — a
 /// full-universe ref set (the exact sweeps pass `refs = 0..n`) would
-/// otherwise duplicate the whole dataset per call.
-fn pack_block(data: &DenseData, refs: &[usize], t0: usize, t1: usize, scratch: &mut Vec<f32>) {
-    let dim = data.dim;
+/// otherwise duplicate the whole dataset per call. `row_tmp` is the gather
+/// scratch for row sources that cannot lend zero-copy slices.
+fn pack_block(
+    rows: &DenseRows<'_>,
+    refs: &[usize],
+    t0: usize,
+    t1: usize,
+    scratch: &mut Vec<f32>,
+    row_tmp: &mut Vec<f32>,
+) {
+    let dim = rows.dim();
     scratch.clear();
     scratch.resize((t1 - t0) * REF_LANES * dim, 0.0);
     let block_refs = &refs[t0 * REF_LANES..(t1 * REF_LANES).min(refs.len())];
     for (j, &r) in block_refs.iter().enumerate() {
         let tile = &mut scratch[(j / REF_LANES) * REF_LANES * dim..];
         let lane = j % REF_LANES;
-        for (k, &v) in data.row(r).iter().enumerate() {
+        let row = match rows.try_row(r) {
+            Some(row) => row,
+            None => {
+                row_tmp.resize(dim, 0.0);
+                rows.copy_row_into(r, row_tmp);
+                &row_tmp[..]
+            }
+        };
+        for (k, &v) in row.iter().enumerate() {
             tile[k * REF_LANES + lane] = v;
         }
     }
 }
 
-/// One dense-tile kernel session: the dataset plus the per-metric
+/// One dense-tile kernel session: the row source plus the per-metric
 /// precomputations the combine step reads (`PreparedEngine` owns them).
 pub struct DenseTileCtx<'a> {
-    data: &'a DenseData,
+    rows: DenseRows<'a>,
     metric: Metric,
     /// Euclidean row norms (cosine).
     norms: Option<&'a [f32]>,
@@ -145,11 +220,12 @@ impl<'a> DenseTileCtx<'a> {
     /// `norms` is required for [`Metric::Cosine`], `sq_norms` for
     /// [`Metric::L2`] (both precomputed once in `PreparedEngine`).
     pub fn new(
-        data: &'a DenseData,
+        rows: impl Into<DenseRows<'a>>,
         metric: Metric,
         norms: Option<&'a [f32]>,
         sq_norms: Option<&'a [f64]>,
     ) -> Self {
+        let rows = rows.into();
         assert!(
             metric != Metric::Cosine || norms.is_some(),
             "cosine tile kernel needs precomputed norms"
@@ -158,8 +234,8 @@ impl<'a> DenseTileCtx<'a> {
             metric != Metric::L2 || sq_norms.is_some(),
             "l2 tile kernel needs precomputed squared norms"
         );
-        let block_tiles = (BLOCK_BUDGET_F32 / (REF_LANES * data.dim.max(1))).clamp(1, 64);
-        DenseTileCtx { data, metric, norms, sq_norms, block_tiles }
+        let block_tiles = (BLOCK_BUDGET_F32 / (REF_LANES * rows.dim().max(1))).clamp(1, 64);
+        DenseTileCtx { rows, metric, norms, sq_norms, block_tiles }
     }
 
     /// Override the ref cache-block size (in packed tiles). Results are
@@ -171,14 +247,18 @@ impl<'a> DenseTileCtx<'a> {
 
     /// Distances of `arm_ids` (1..=[`ARM_TILE`]) against one packed ref
     /// tile, into `out[i][lane]` for the `tile_refs.len()` valid lanes.
+    /// `arm_rows` are the arm row slices (zero-copy or gathered by
+    /// `sweep_chunk` — bitwise identical either way).
     fn tile_distances<const MR: usize>(
         &self,
         arm_ids: &[usize],
+        arm_rows: &[&[f32]],
         tile_refs: &[usize],
         packed: &[f32],
+        ref_tmp: &mut Vec<f32>,
         out: &mut [[f32; REF_LANES]; ARM_TILE],
     ) {
-        let rows: [&[f32]; MR] = std::array::from_fn(|i| self.data.row(arm_ids[i]));
+        let rows: [&[f32]; MR] = std::array::from_fn(|i| arm_rows[i]);
         match self.metric {
             Metric::L1 => {
                 let sums = l1_tile::<MR>(&rows, packed);
@@ -202,7 +282,15 @@ impl<'a> DenseTileCtx<'a> {
                         out[i][l] = if d2 > L2_CANCEL_REL * scale {
                             d2.max(0.0).sqrt() as f32
                         } else {
-                            dense::l2sq_dense(rows[i], self.data.row(r)).sqrt()
+                            let b = match self.rows.try_row(r) {
+                                Some(s) => s,
+                                None => {
+                                    ref_tmp.resize(rows[i].len(), 0.0);
+                                    self.rows.copy_row_into(r, ref_tmp);
+                                    &ref_tmp[..]
+                                }
+                            };
+                            dense::l2sq_dense(rows[i], b).sqrt()
                         };
                     }
                 }
@@ -228,18 +316,21 @@ impl<'a> DenseTileCtx<'a> {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn tile_distances_dyn(
         &self,
         arm_ids: &[usize],
+        arm_rows: &[&[f32]],
         tile_refs: &[usize],
         packed: &[f32],
+        ref_tmp: &mut Vec<f32>,
         out: &mut [[f32; REF_LANES]; ARM_TILE],
     ) {
         match arm_ids.len() {
-            1 => self.tile_distances::<1>(arm_ids, tile_refs, packed, out),
-            2 => self.tile_distances::<2>(arm_ids, tile_refs, packed, out),
-            3 => self.tile_distances::<3>(arm_ids, tile_refs, packed, out),
-            4 => self.tile_distances::<4>(arm_ids, tile_refs, packed, out),
+            1 => self.tile_distances::<1>(arm_ids, arm_rows, tile_refs, packed, ref_tmp, out),
+            2 => self.tile_distances::<2>(arm_ids, arm_rows, tile_refs, packed, ref_tmp, out),
+            3 => self.tile_distances::<3>(arm_ids, arm_rows, tile_refs, packed, ref_tmp, out),
+            4 => self.tile_distances::<4>(arm_ids, arm_rows, tile_refs, packed, ref_tmp, out),
             n => unreachable!("arm micro-tile of {n} > ARM_TILE"),
         }
     }
@@ -257,21 +348,48 @@ impl<'a> DenseTileCtx<'a> {
         refs: &[usize],
         mut emit: impl FnMut(usize, usize, usize, usize, &[[f32; REF_LANES]; ARM_TILE]),
     ) {
-        let dim = self.data.dim;
+        let dim = self.rows.dim();
         let n_tiles = refs.len().div_ceil(REF_LANES);
         let mut dists = [[0f32; REF_LANES]; ARM_TILE];
         let mut packed = Vec::new();
+        let mut row_tmp = Vec::new();
+        let mut ref_tmp = Vec::new();
+        // Gather target for arm rows the store can't lend zero-copy (the
+        // pinned shard reader): one micro-tile's worth, refilled per tile —
+        // tiny next to the 4×`lanes`×dim distance work it feeds.
+        let mut arm_scratch = vec![0f32; ARM_TILE * dim];
         for t0 in (0..n_tiles).step_by(self.block_tiles) {
             let t1 = (t0 + self.block_tiles).min(n_tiles);
-            pack_block(self.data, refs, t0, t1, &mut packed);
+            pack_block(&self.rows, refs, t0, t1, &mut packed, &mut row_tmp);
             for a0 in (0..chunk_arms.len()).step_by(ARM_TILE) {
                 let mr = (chunk_arms.len() - a0).min(ARM_TILE);
                 let arm_ids = &chunk_arms[a0..a0 + mr];
+                let mut arm_rows: [&[f32]; ARM_TILE] = [&[]; ARM_TILE];
+                let direct = arm_ids.iter().all(|&a| self.rows.try_row(a).is_some());
+                if direct {
+                    for (k, &a) in arm_ids.iter().enumerate() {
+                        arm_rows[k] = self.rows.try_row(a).expect("checked direct");
+                    }
+                } else {
+                    for (k, &a) in arm_ids.iter().enumerate() {
+                        self.rows.copy_row_into(a, &mut arm_scratch[k * dim..(k + 1) * dim]);
+                    }
+                    for (k, slot) in arm_rows.iter_mut().enumerate().take(mr) {
+                        *slot = &arm_scratch[k * dim..(k + 1) * dim];
+                    }
+                }
                 for t in t0..t1 {
                     let lanes = (refs.len() - t * REF_LANES).min(REF_LANES);
                     let tile_refs = &refs[t * REF_LANES..t * REF_LANES + lanes];
                     let tile = &packed[(t - t0) * REF_LANES * dim..][..REF_LANES * dim];
-                    self.tile_distances_dyn(arm_ids, tile_refs, tile, &mut dists);
+                    self.tile_distances_dyn(
+                        arm_ids,
+                        &arm_rows[..mr],
+                        tile_refs,
+                        tile,
+                        &mut ref_tmp,
+                        &mut dists,
+                    );
                     emit(a0, mr, t, lanes, &dists);
                 }
             }
@@ -288,8 +406,11 @@ impl<'a> DenseTileCtx<'a> {
         }
         // Chunks are ARM_TILE-aligned so an arm's tile membership — hence
         // its micro-kernel instantiation — is identical at any thread
-        // count.
-        let chunk = aligned_chunk(arms.len(), threads.max(1) * 4, ARM_TILE);
+        // count; sharded sources additionally land on shard boundaries
+        // (shard alignment never breaks tile alignment, so results stay
+        // bitwise identical to the resident split).
+        let chunk =
+            shard_aligned_chunk(arms.len(), threads.max(1) * 4, ARM_TILE, self.rows.shard_rows());
         threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
             let chunk_arms = &arms[start..start + slot.len()];
             self.sweep_chunk(chunk_arms, refs, |a0, mr, _t, lanes, dists| {
@@ -311,7 +432,9 @@ impl<'a> DenseTileCtx<'a> {
         if out.is_empty() {
             return;
         }
-        let chunk = aligned_chunk(arms.len(), threads.max(1) * 4, ARM_TILE) * m;
+        let chunk =
+            shard_aligned_chunk(arms.len(), threads.max(1) * 4, ARM_TILE, self.rows.shard_rows())
+                * m;
         threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
             debug_assert_eq!(start % m, 0);
             let arm0 = start / m;
@@ -549,6 +672,49 @@ mod tests {
             for k in 0..12 {
                 assert!(mat[k * 12 + 3].is_nan(), "{metric}: ({k},3) must be NaN");
                 assert!(mat[3 * 12 + k].is_nan(), "{metric}: (3,{k}) must be NaN");
+            }
+        }
+    }
+
+    /// The tile layer is storage-blind: a shard-backed row source (pinned
+    /// reader, evicting cache) must produce bitwise the same sums and
+    /// matrices as the resident matrix it was written from.
+    #[test]
+    fn sharded_rows_bitwise_equal_resident() {
+        use crate::data::store::{write_sharded, ShardedData, StoreOptions};
+        use crate::data::Data;
+        let mut rng = Rng::seeded(31);
+        let data = random_data(&mut rng, 50, 67, 1.0);
+        let (norms, sq) = prep(&data);
+        let dir = std::env::temp_dir().join("corrsh-kernel-tests").join("tile-parity");
+        let _ = std::fs::remove_dir_all(&dir);
+        let manifest = write_sharded(&Data::Dense(data.clone()), &dir, 12).unwrap();
+        // a cache holding ~2 blocks of 4 rows each forces mid-sweep churn
+        let opts = StoreOptions {
+            cache_bytes: 2 * 4 * 67 * 4,
+            block_bytes: 4 * 67 * 4,
+            force_pinned: true,
+        };
+        let pinned = ShardedData::open_with(&manifest, &opts).unwrap();
+        let default = ShardedData::open(&manifest).unwrap();
+        let arms: Vec<usize> = (0..45).collect(); // 45 % 4 != 0
+        let refs: Vec<usize> = (5..42).collect(); // 37 % 8 != 0
+        for metric in Metric::ALL {
+            let ctx = ctx_over(&data, metric, &norms, &sq);
+            let mut base_sums = vec![0f64; arms.len()];
+            let mut base_mat = vec![0f32; arms.len() * refs.len()];
+            ctx.block_sums(&arms, &refs, 3, &mut base_sums);
+            ctx.matrix(&arms, &refs, 3, &mut base_mat);
+            for sd in [&pinned, &default] {
+                let ctx = DenseTileCtx::new(sd, metric, Some(&norms[..]), Some(&sq[..]));
+                for threads in [1usize, 4] {
+                    let mut sums = vec![0f64; arms.len()];
+                    ctx.block_sums(&arms, &refs, threads, &mut sums);
+                    assert_eq!(sums, base_sums, "{metric}: sharded sums diverged");
+                    let mut mat = vec![0f32; arms.len() * refs.len()];
+                    ctx.matrix(&arms, &refs, threads, &mut mat);
+                    assert_eq!(mat, base_mat, "{metric}: sharded matrix diverged");
+                }
             }
         }
     }

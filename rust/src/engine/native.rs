@@ -7,9 +7,10 @@
 
 use std::sync::Arc;
 
-use crate::data::{Data, DenseData, SparseData};
-use crate::distance::{dense, Metric};
-use crate::engine::kernel::{self, DenseTileCtx};
+use crate::coordinator::planner;
+use crate::data::{Data, ShardedData, SparseData};
+use crate::distance::{dense, Metric, SparseRow};
+use crate::engine::kernel::{self, DenseRows, DenseTileCtx};
 use crate::engine::PullEngine;
 use crate::metrics::Counter;
 use crate::util::threads;
@@ -65,10 +66,17 @@ pub struct PreparedEngine {
 }
 
 impl PreparedEngine {
-    /// Run the O(n·d) preparation pass (norms / row-reductions).
+    /// Run the O(n·d) preparation pass (norms / row-reductions). Resident
+    /// data maps per row; sharded data streams one pass per shard on the
+    /// worker pool (each shard fetched once, chunk boundaries on shard
+    /// boundaries) — same per-row kernels, so the reductions are bitwise
+    /// identical to the resident path at any worker count.
     pub fn prepare(data: Arc<Data>, metric: Metric) -> Self {
         let norms = match metric {
-            Metric::Cosine => Some(Arc::new(data.norms())),
+            Metric::Cosine => Some(Arc::new(match &*data {
+                Data::Sharded(sd) => sharded_norms(sd),
+                resident => resident.norms(),
+            })),
             _ => None,
         };
         let row_reduction = match (&*data, metric) {
@@ -80,12 +88,18 @@ impl PreparedEngine {
                     .map(|i| s.row(i).values.iter().map(|&v| v as f64 * v as f64).sum())
                     .collect::<Vec<f64>>(),
             )),
+            (Data::Sharded(sd), Metric::L1 | Metric::L2) if sd.is_sparse() => {
+                Some(Arc::new(sharded_row_reduction(sd, metric)))
+            }
             _ => None,
         };
         let sq_norms = match (&*data, metric) {
             (Data::Dense(d), Metric::L2) => Some(Arc::new(
                 (0..d.n).map(|i| dense::sqnorm_f64(d.row(i))).collect::<Vec<f64>>(),
             )),
+            (Data::Sharded(sd), Metric::L2) if !sd.is_sparse() => {
+                Some(Arc::new(sharded_sq_norms(sd)))
+            }
             _ => None,
         };
         PreparedEngine { data, metric, norms, row_reduction, sq_norms, nan_pulls: Counter::new() }
@@ -99,10 +113,138 @@ impl PreparedEngine {
         self.metric
     }
 
+    /// Precomputed euclidean row norms (cosine sessions only).
+    pub fn norms(&self) -> Option<&[f32]> {
+        self.norms.as_deref().map(|v| v.as_slice())
+    }
+
+    /// Precomputed f64 squared row norms (dense ℓ₂ sessions only).
+    pub fn sq_norms(&self) -> Option<&[f64]> {
+        self.sq_norms.as_deref().map(|v| v.as_slice())
+    }
+
+    /// Precomputed per-row Σ|v| / Σv² (sparse ℓ₁/ℓ₂ sessions only).
+    pub fn row_reductions(&self) -> Option<&[f64]> {
+        self.row_reduction.as_deref().map(|v| v.as_slice())
+    }
+
     /// NaN results surfaced so far by every engine sharing this session.
     pub fn nan_pulls(&self) -> u64 {
         self.nan_pulls.get()
     }
+}
+
+/// Shard-streaming cosine norms: one pass per shard on the worker pool.
+fn sharded_norms(sd: &ShardedData) -> Vec<f32> {
+    let threads = threads::default_threads();
+    let mut out = vec![0f32; sd.n()];
+    let chunk = planner::shard_aligned_chunk(sd.n(), threads * 2, 1, sd.rows_per_shard());
+    threads::parallel_chunks_mut(&mut out, chunk, threads, |start, slot| {
+        if sd.is_sparse() {
+            sd.for_sparse_rows(start, slot.len(), |i, r| slot[i - start] = r.norm());
+        } else {
+            sd.for_dense_rows(start, slot.len(), |i, row| slot[i - start] = dense::norm(row));
+        }
+    });
+    out
+}
+
+/// Shard-streaming f64 squared norms (dense ℓ₂ norm trick).
+fn sharded_sq_norms(sd: &ShardedData) -> Vec<f64> {
+    let threads = threads::default_threads();
+    let mut out = vec![0f64; sd.n()];
+    let chunk = planner::shard_aligned_chunk(sd.n(), threads * 2, 1, sd.rows_per_shard());
+    threads::parallel_chunks_mut(&mut out, chunk, threads, |start, slot| {
+        sd.for_dense_rows(start, slot.len(), |i, row| {
+            slot[i - start] = dense::sqnorm_f64(row)
+        });
+    });
+    out
+}
+
+/// Shard-streaming sparse row reductions (Σ|v| for ℓ₁, Σv² for ℓ₂) —
+/// the same per-row expressions as the resident arm of `prepare`.
+fn sharded_row_reduction(sd: &ShardedData, metric: Metric) -> Vec<f64> {
+    let threads = threads::default_threads();
+    let mut out = vec![0f64; sd.n()];
+    let chunk = planner::shard_aligned_chunk(sd.n(), threads * 2, 1, sd.rows_per_shard());
+    threads::parallel_chunks_mut(&mut out, chunk, threads, |start, slot| {
+        sd.for_sparse_rows(start, slot.len(), |i, r| {
+            slot[i - start] = match metric {
+                Metric::L1 => r.abs_sum_f64(),
+                _ => r.values.iter().map(|&v| v as f64 * v as f64).sum(),
+            };
+        });
+    });
+    out
+}
+
+/// Row source for the sparse fast paths: resident CSR or a sparse shard
+/// store. The hot loops are written against this, so the densified-
+/// reference arithmetic — and therefore every bit of every sum — is
+/// shared between backends.
+#[derive(Clone, Copy)]
+enum SparseRows<'a> {
+    Resident(&'a SparseData),
+    Sharded(&'a ShardedData),
+}
+
+impl SparseRows<'_> {
+    #[inline]
+    fn dim(&self) -> usize {
+        match self {
+            SparseRows::Resident(s) => s.dim,
+            SparseRows::Sharded(sd) => sd.dim(),
+        }
+    }
+
+    #[inline]
+    fn avg_nnz(&self) -> usize {
+        match self {
+            SparseRows::Resident(s) => s.avg_nnz(),
+            SparseRows::Sharded(sd) => sd.avg_nnz(),
+        }
+    }
+
+    #[inline]
+    fn with_row<R>(&self, i: usize, f: impl FnOnce(SparseRow<'_>) -> R) -> R {
+        match self {
+            SparseRows::Resident(s) => f(s.row(i)),
+            SparseRows::Sharded(sd) => sd.with_sparse_row(i, f),
+        }
+    }
+
+    /// One per worker: pins the last-touched shard so the per-pair inner
+    /// loops don't take the shard-cache lock per access (resident rows
+    /// need no pin — the cursor is a no-op there).
+    fn cursor(&self) -> SparseRowCursor {
+        match self {
+            SparseRows::Resident(_) => SparseRowCursor::Resident,
+            SparseRows::Sharded(sd) => SparseRowCursor::Sharded(sd.sparse_cursor()),
+        }
+    }
+
+    #[inline]
+    fn with_row_cached<R>(
+        &self,
+        cur: &mut SparseRowCursor,
+        i: usize,
+        f: impl FnOnce(SparseRow<'_>) -> R,
+    ) -> R {
+        match (self, cur) {
+            (SparseRows::Resident(s), _) => f(s.row(i)),
+            (SparseRows::Sharded(sd), SparseRowCursor::Sharded(c)) => {
+                sd.with_sparse_row_cached(c, i, f)
+            }
+            (SparseRows::Sharded(sd), _) => sd.with_sparse_row(i, f),
+        }
+    }
+}
+
+/// See [`SparseRows::cursor`].
+enum SparseRowCursor {
+    Resident,
+    Sharded(crate::data::store::SparseCursor),
 }
 
 pub struct NativeEngine {
@@ -174,8 +316,8 @@ impl NativeEngine {
     /// l2²(a,y) = Σ_{k∈supp(a)} ((a_k−y_k)² − y_k²) + Σy²
     /// cos(a,y) = 1 − (Σ_{k∈supp(a)} a_k·y_k) / (‖a‖‖y‖)
     /// ```
-    fn sparse_block(&self, s: &SparseData, arms: &[usize], refs: &[usize], out: &mut [f64]) {
-        let dim = s.dim;
+    fn sparse_block(&self, s: SparseRows<'_>, arms: &[usize], refs: &[usize], out: &mut [f64]) {
+        let dim = s.dim();
         let work = arms.len() * refs.len();
         // FLOP-scaled cutoff over the *effective* per-pair dim (a sparse
         // pair costs the arm's support walk, not a d-length sweep).
@@ -188,11 +330,19 @@ impl NativeEngine {
         threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
             let mut scratch = vec![0f32; dim];
             let mut acc = vec![0f64; slot.len()];
+            // Per-worker shard pins: the arm loop below touches consecutive
+            // arms per ref, so `arm_cur` skips the shard-cache lock for
+            // every access inside the pinned shard; `ref_cur` keeps the
+            // reference row's shard alive between the densify and
+            // un-densify passes (zero-copy on the resident backend).
+            let mut arm_cur = s.cursor();
+            let mut ref_cur = s.cursor();
             for &j in refs {
-                let y = s.row(j);
-                for (&c, &v) in y.indices.iter().zip(y.values) {
-                    scratch[c as usize] = v;
-                }
+                s.with_row_cached(&mut ref_cur, j, |y| {
+                    for (&c, &v) in y.indices.iter().zip(y.values) {
+                        scratch[c as usize] = v;
+                    }
+                });
                 // `corr` accumulates in f64: the `(av−yv)² − yv²` and
                 // `|av−yv| − |yv|` corrections cancel almost exactly at
                 // large magnitudes, and an f32 running sum re-introduced
@@ -202,25 +352,29 @@ impl NativeEngine {
                     Metric::L1 => {
                         let y_abs = redux.unwrap()[j];
                         for (k, a) in acc.iter_mut().enumerate() {
-                            let row = s.row(arms[start + k]);
-                            let mut corr = 0f64;
-                            for (&c, &av) in row.indices.iter().zip(row.values) {
-                                let yv = scratch[c as usize];
-                                corr += ((av - yv).abs() - yv.abs()) as f64;
-                            }
+                            let corr = s.with_row_cached(&mut arm_cur, arms[start + k], |row| {
+                                let mut corr = 0f64;
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    let yv = scratch[c as usize];
+                                    corr += ((av - yv).abs() - yv.abs()) as f64;
+                                }
+                                corr
+                            });
                             *a += corr + y_abs;
                         }
                     }
                     Metric::L2 => {
                         let y_sq = redux.unwrap()[j];
                         for (k, a) in acc.iter_mut().enumerate() {
-                            let row = s.row(arms[start + k]);
-                            let mut corr = 0f64;
-                            for (&c, &av) in row.indices.iter().zip(row.values) {
-                                let yv = scratch[c as usize];
-                                let d = (av - yv) as f64;
-                                corr += d * d - yv as f64 * yv as f64;
-                            }
+                            let corr = s.with_row_cached(&mut arm_cur, arms[start + k], |row| {
+                                let mut corr = 0f64;
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    let yv = scratch[c as usize];
+                                    let d = (av - yv) as f64;
+                                    corr += d * d - yv as f64 * yv as f64;
+                                }
+                                corr
+                            });
                             *a += nan_safe_clamp_sqrt(corr + y_sq);
                         }
                     }
@@ -228,20 +382,25 @@ impl NativeEngine {
                         let ny = norms.unwrap()[j];
                         for (k, a) in acc.iter_mut().enumerate() {
                             let arm = arms[start + k];
-                            let row = s.row(arm);
-                            let mut dot = 0f64;
-                            for (&c, &av) in row.indices.iter().zip(row.values) {
-                                dot += av as f64 * scratch[c as usize] as f64;
-                            }
+                            let dot = s.with_row_cached(&mut arm_cur, arm, |row| {
+                                let mut dot = 0f64;
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    dot += av as f64 * scratch[c as usize] as f64;
+                                }
+                                dot
+                            });
                             let denom = norms.unwrap()[arm] * ny;
                             *a += if denom <= 1e-24 { 1.0 } else { 1.0 - dot / denom as f64 };
                         }
                     }
                 }
-                // un-densify (touch only y's support)
-                for &c in y.indices {
-                    scratch[c as usize] = 0.0;
-                }
+                // un-densify (touch only y's support; the pinned ref
+                // shard makes this second fetch lock-free)
+                s.with_row_cached(&mut ref_cur, j, |y| {
+                    for &c in y.indices {
+                        scratch[c as usize] = 0.0;
+                    }
+                });
             }
             for (o, &a) in slot.iter_mut().zip(&acc) {
                 *o = a;
@@ -249,11 +408,84 @@ impl NativeEngine {
         });
     }
 
+    /// Element-writing twin of [`NativeEngine::sparse_block`] (the
+    /// stats-engine hot path): same densified-reference walks, same f64
+    /// `corr` accumulation, writing `slot[k·m + j]` instead of summing.
+    fn sparse_matrix(&self, s: SparseRows<'_>, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        let m = refs.len();
+        let dim = s.dim();
+        let metric = self.prepared.metric;
+        let norms = self.prepared.norms.as_deref().map(|v| v.as_slice());
+        let redux = self.prepared.row_reduction.as_deref().map(|v| v.as_slice());
+        // Average-nnz FLOP cutoff, same rationale as `sparse_block`.
+        let threads = threads::plan_threads(self.threads, out.len(), s.avg_nnz());
+        let chunk = (arms.len().div_ceil(threads.max(1)).max(1)) * m;
+        threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
+            debug_assert_eq!(start % m, 0);
+            let arm0 = start / m;
+            let n_arms = slot.len() / m;
+            let mut scratch = vec![0f32; dim];
+            // Per-worker shard pins, same rationale as `sparse_block`.
+            let mut arm_cur = s.cursor();
+            let mut ref_cur = s.cursor();
+            for (j, &r) in refs.iter().enumerate() {
+                s.with_row_cached(&mut ref_cur, r, |y| {
+                    for (&c, &v) in y.indices.iter().zip(y.values) {
+                        scratch[c as usize] = v;
+                    }
+                });
+                for k in 0..n_arms {
+                    let arm = arms[arm0 + k];
+                    // f64 `corr`, same rationale as `sparse_block`: the
+                    // correction terms cancel at large magnitudes and must
+                    // not pick up f32 chain error.
+                    let d = s.with_row_cached(&mut arm_cur, arm, |row| {
+                        let mut corr = 0f64;
+                        match metric {
+                            Metric::L1 => {
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    let yv = scratch[c as usize];
+                                    corr += ((av - yv).abs() - yv.abs()) as f64;
+                                }
+                                (corr + redux.unwrap()[r]) as f32
+                            }
+                            Metric::L2 => {
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    let yv = scratch[c as usize];
+                                    let dd = (av - yv) as f64;
+                                    corr += dd * dd - yv as f64 * yv as f64;
+                                }
+                                nan_safe_clamp_sqrt(corr + redux.unwrap()[r]) as f32
+                            }
+                            Metric::Cosine => {
+                                for (&c, &av) in row.indices.iter().zip(row.values) {
+                                    corr += av as f64 * scratch[c as usize] as f64;
+                                }
+                                let denom = norms.unwrap()[arm] * norms.unwrap()[r];
+                                if denom <= 1e-24 {
+                                    1.0
+                                } else {
+                                    (1.0 - corr / denom as f64) as f32
+                                }
+                            }
+                        }
+                    });
+                    slot[k * m + j] = d;
+                }
+                s.with_row_cached(&mut ref_cur, r, |y| {
+                    for &c in y.indices {
+                        scratch[c as usize] = 0.0;
+                    }
+                });
+            }
+        });
+    }
+
     /// The dense tile-kernel session view over this engine's precomputed
-    /// norms (see [`crate::engine::kernel`]).
-    fn tile_ctx<'a>(&'a self, d: &'a DenseData) -> DenseTileCtx<'a> {
+    /// norms (see [`crate::engine::kernel`]) — resident or sharded rows.
+    fn tile_ctx<'a>(&'a self, rows: impl Into<DenseRows<'a>>) -> DenseTileCtx<'a> {
         DenseTileCtx::new(
-            d,
+            rows,
             self.prepared.metric,
             self.prepared.norms.as_deref().map(|v| v.as_slice()),
             self.prepared.sq_norms.as_deref().map(|v| v.as_slice()),
@@ -326,108 +558,64 @@ impl PullEngine for NativeEngine {
         // RNA-Seq geometry — see EXPERIMENTS.md §Perf). Densifying a
         // reference costs O(d), amortized over the arms that read it: only
         // worth it when several arms share the refs (which is exactly the
-        // correlated-round shape).
-        if let Data::Sparse(s) = &*self.prepared.data {
-            if arms.len() >= 4 {
-                self.sparse_block(s, arms, refs, out);
+        // correlated-round shape). Sharded backends run the *same* hot
+        // loops through their row sources, so resident and sharded results
+        // are bitwise identical (DESIGN.md §12).
+        match &*self.prepared.data {
+            Data::Sparse(s) if arms.len() >= 4 => {
+                self.sparse_block(SparseRows::Resident(s), arms, refs, out);
                 self.note_nan_sums(out);
-                return;
             }
-        }
-        // Dense: the tiled kernel layer (packed ref tiles + register
-        // micro-tiles, ≥3× the per-pair path on MNIST-like geometry — see
-        // DESIGN.md §11). ≥ARM_TILE arms amortizes the packing pass; tiny
-        // blocks take the scalar reference path.
-        if let Data::Dense(d) = &*self.prepared.data {
-            if arms.len() >= kernel::ARM_TILE {
+            Data::Sharded(sd) if sd.is_sparse() && arms.len() >= 4 => {
+                self.sparse_block(SparseRows::Sharded(sd), arms, refs, out);
+                self.note_nan_sums(out);
+            }
+            // Dense: the tiled kernel layer (packed ref tiles + register
+            // micro-tiles, ≥3× the per-pair path on MNIST-like geometry —
+            // see DESIGN.md §11). ≥ARM_TILE arms amortizes the packing
+            // pass; tiny blocks take the scalar reference path.
+            Data::Dense(d) if arms.len() >= kernel::ARM_TILE => {
                 let threads = threads::plan_threads(self.threads, arms.len() * refs.len(), d.dim);
                 self.tile_ctx(d).block_sums(arms, refs, threads, out);
                 self.note_nan_sums(out);
-                return;
             }
+            Data::Sharded(sd) if !sd.is_sparse() && arms.len() >= kernel::ARM_TILE => {
+                let threads =
+                    threads::plan_threads(self.threads, arms.len() * refs.len(), sd.dim());
+                self.tile_ctx(sd).block_sums(arms, refs, threads, out);
+                self.note_nan_sums(out);
+            }
+            _ => self.pull_block_scalar(arms, refs, out),
         }
-        self.pull_block_scalar(arms, refs, out);
     }
 
     fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
         assert_eq!(arms.len() * refs.len(), out.len());
-        let m = refs.len();
-        // Same densified-reference trick as sparse_block, writing elements
-        // instead of accumulating (stats-engine hot path, §Perf).
-        if let (Data::Sparse(s), true) = (&*self.prepared.data, arms.len() >= 4) {
-            let dim = s.dim;
-            let metric = self.prepared.metric;
-            let norms = self.prepared.norms.as_deref().map(|v| v.as_slice());
-            let redux = self.prepared.row_reduction.as_deref().map(|v| v.as_slice());
-            // Average-nnz FLOP cutoff, same rationale as `sparse_block`.
-            let threads = threads::plan_threads(self.threads, out.len(), s.avg_nnz());
-            let chunk = (arms.len().div_ceil(threads.max(1)).max(1)) * m;
-            threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
-                debug_assert_eq!(start % m, 0);
-                let arm0 = start / m;
-                let n_arms = slot.len() / m;
-                let mut scratch = vec![0f32; dim];
-                for (j, &r) in refs.iter().enumerate() {
-                    let y = s.row(r);
-                    for (&c, &v) in y.indices.iter().zip(y.values) {
-                        scratch[c as usize] = v;
-                    }
-                    for k in 0..n_arms {
-                        let arm = arms[arm0 + k];
-                        let row = s.row(arm);
-                        // f64 `corr`, same rationale as `sparse_block`:
-                        // the correction terms cancel at large magnitudes
-                        // and must not pick up f32 chain error.
-                        let mut corr = 0f64;
-                        let d = match metric {
-                            Metric::L1 => {
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    let yv = scratch[c as usize];
-                                    corr += ((av - yv).abs() - yv.abs()) as f64;
-                                }
-                                (corr + redux.unwrap()[r]) as f32
-                            }
-                            Metric::L2 => {
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    let yv = scratch[c as usize];
-                                    let dd = (av - yv) as f64;
-                                    corr += dd * dd - yv as f64 * yv as f64;
-                                }
-                                nan_safe_clamp_sqrt(corr + redux.unwrap()[r]) as f32
-                            }
-                            Metric::Cosine => {
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    corr += av as f64 * scratch[c as usize] as f64;
-                                }
-                                let denom = norms.unwrap()[arm] * norms.unwrap()[r];
-                                if denom <= 1e-24 {
-                                    1.0
-                                } else {
-                                    (1.0 - corr / denom as f64) as f32
-                                }
-                            }
-                        };
-                        slot[k * m + j] = d;
-                    }
-                    for &c in y.indices {
-                        scratch[c as usize] = 0.0;
-                    }
-                }
-            });
-            self.note_nan_dists(out);
-            return;
-        }
-        // Dense: same tiled kernel layer as `pull_block`, writing elements
-        // instead of accumulating.
-        if let Data::Dense(d) = &*self.prepared.data {
-            if arms.len() >= kernel::ARM_TILE {
+        match &*self.prepared.data {
+            // Same densified-reference trick as sparse_block, writing
+            // elements instead of accumulating (stats-engine hot path).
+            Data::Sparse(s) if arms.len() >= 4 => {
+                self.sparse_matrix(SparseRows::Resident(s), arms, refs, out);
+                self.note_nan_dists(out);
+            }
+            Data::Sharded(sd) if sd.is_sparse() && arms.len() >= 4 => {
+                self.sparse_matrix(SparseRows::Sharded(sd), arms, refs, out);
+                self.note_nan_dists(out);
+            }
+            // Dense: same tiled kernel layer as `pull_block`, writing
+            // elements instead of accumulating.
+            Data::Dense(d) if arms.len() >= kernel::ARM_TILE => {
                 let threads = threads::plan_threads(self.threads, out.len(), d.dim);
                 self.tile_ctx(d).matrix(arms, refs, threads, out);
                 self.note_nan_dists(out);
-                return;
             }
+            Data::Sharded(sd) if !sd.is_sparse() && arms.len() >= kernel::ARM_TILE => {
+                let threads = threads::plan_threads(self.threads, out.len(), sd.dim());
+                self.tile_ctx(sd).matrix(arms, refs, threads, out);
+                self.note_nan_dists(out);
+            }
+            _ => self.pull_matrix_scalar(arms, refs, out),
         }
-        self.pull_matrix_scalar(arms, refs, out);
     }
 }
 
@@ -670,6 +858,92 @@ mod tests {
         }
         // The Arc really is shared, not re-prepared per engine.
         assert!(Arc::ptr_eq(a.prepared(), b.prepared()));
+    }
+
+    #[test]
+    fn sharded_engines_match_resident_bitwise() {
+        // Full-engine contract of the storage layer: the same pull APIs
+        // over a shard-backed Data (pinned reader, evicting cache) must be
+        // bitwise equal to the resident backends on every metric family.
+        use crate::data::store::{write_sharded, ShardedData, StoreOptions};
+        let tmp = std::env::temp_dir().join("corrsh-native-sharded-tests");
+        let cases: Vec<(&str, Data, Metric)> = vec![
+            (
+                "dense-l2",
+                crate::data::synth::mnist::generate(&SynthConfig {
+                    n: 90,
+                    dim: 33,
+                    seed: 8,
+                    ..Default::default()
+                }),
+                Metric::L2,
+            ),
+            (
+                "dense-cos",
+                crate::data::synth::gaussian::generate(&SynthConfig {
+                    n: 70,
+                    dim: 21,
+                    seed: 12,
+                    ..Default::default()
+                }),
+                Metric::Cosine,
+            ),
+            (
+                "sparse-l1",
+                rnaseq::generate(&SynthConfig {
+                    n: 80,
+                    dim: 64,
+                    seed: 9,
+                    density: 0.15,
+                    ..Default::default()
+                }),
+                Metric::L1,
+            ),
+            (
+                "sparse-cos",
+                netflix::generate(&SynthConfig {
+                    n: 80,
+                    dim: 64,
+                    seed: 10,
+                    density: 0.1,
+                    ..Default::default()
+                }),
+                Metric::Cosine,
+            ),
+        ];
+        for (name, data, metric) in cases {
+            let dir = tmp.join(name);
+            let _ = std::fs::remove_dir_all(&dir);
+            let manifest = write_sharded(&data, &dir, 13).unwrap();
+            let opts = StoreOptions {
+                cache_bytes: 1 << 14,
+                block_bytes: 1 << 10,
+                force_pinned: true,
+            };
+            let sd = ShardedData::open_with(&manifest, &opts).unwrap();
+            let resident = NativeEngine::with_threads(Arc::new(data), metric, 4);
+            let sharded = NativeEngine::with_threads(Arc::new(Data::Sharded(sd)), metric, 4);
+            let n = resident.n();
+            let arms: Vec<usize> = (0..n).collect();
+            let refs: Vec<usize> = (0..n / 2).collect();
+            let mut a = vec![0f64; n];
+            let mut b = vec![0f64; n];
+            resident.pull_block(&arms, &refs, &mut a);
+            sharded.pull_block(&arms, &refs, &mut b);
+            assert_eq!(a, b, "{name}: block sums diverged");
+            let mut ma = vec![0f32; n * refs.len()];
+            let mut mb = vec![0f32; n * refs.len()];
+            resident.pull_matrix(&arms, &refs, &mut ma);
+            sharded.pull_matrix(&arms, &refs, &mut mb);
+            assert_eq!(ma, mb, "{name}: matrices diverged");
+            // singles and small (scalar-path) blocks too
+            assert_eq!(resident.pull(3, 7).to_bits(), sharded.pull(3, 7).to_bits(), "{name}");
+            let mut sa = vec![0f64; 2];
+            let mut sb = vec![0f64; 2];
+            resident.pull_block(&[1, 5], &refs, &mut sa);
+            sharded.pull_block(&[1, 5], &refs, &mut sb);
+            assert_eq!(sa, sb, "{name}: scalar-path block diverged");
+        }
     }
 
     #[test]

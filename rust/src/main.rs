@@ -7,6 +7,8 @@
 //! corrsh stats    --preset mnist --scale 8
 //! corrsh serve    --addr 127.0.0.1:7878
 //! corrsh gen      --kind rnaseq --n 2000 --dim 256 --out data.npy
+//! corrsh shard    data.npy shards/ --rows-per-shard 65536
+//! corrsh shard    --kind gaussian --n 1000000 --dim 128 --out shards/
 //! ```
 
 use corrsh::util::error::{Context, Result};
@@ -18,7 +20,7 @@ use corrsh::server;
 use corrsh::util::cli::Args;
 use corrsh::util::rng::Rng;
 
-const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen> [flags]
+const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen|shard> [flags]
   medoid:   --preset P | --config file.json [--scale N] [--algo A] [--budget X]
             [--engine native|pjrt] [--seed S] [--trials T]
   kmedoids: --preset P | --config file.json | --kind K [--n N --dim D --clusters C]
@@ -28,7 +30,9 @@ const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen> [flags]
             [--scale N] [--trials T] [--seed S]
   stats:    --preset P [--scale N] [--seed S]
   serve:    [--addr HOST:PORT] [--preload P] [--workers N] [--queue-cap N]
-  gen:      --kind K --n N --dim D [--seed S] --out FILE.npy";
+  gen:      --kind K --n N --dim D [--seed S] --out FILE.npy
+  shard:    <in.npy|in.csr|manifest.json> <out-dir> [--rows-per-shard N]
+            | --kind K --n N --dim D [--seed S] --out DIR (streams at scale)";
 
 fn main() {
     let args = match Args::from_env() {
@@ -46,6 +50,7 @@ fn main() {
         "stats" => cmd_stats(&args),
         "serve" => cmd_serve(&args),
         "gen" => cmd_gen(&args),
+        "shard" => cmd_shard(&args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -366,6 +371,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eprintln!("preloaded: {resp}");
     }
     server::serve_with(state, &server_cfg)
+}
+
+/// `corrsh shard <in> <out-dir> [--rows-per-shard N]` — convert an
+/// existing dataset file (or re-shard a manifest) into a shard set; or
+/// `corrsh shard --kind K --n N --dim D --out DIR` to generate one
+/// directly (streaming shard-by-shard past the resident limit, which is
+/// how the n = 10⁶ bench datasets are produced).
+fn cmd_shard(args: &Args) -> Result<()> {
+    let rows_per_shard: usize = args.parse_or("rows-per-shard", 65_536)?;
+    corrsh::ensure!(rows_per_shard >= 1, "--rows-per-shard must be >= 1");
+    let manifest = if let Some(kind) = args.str_opt("kind") {
+        let kind: Kind = kind.parse()?;
+        let out = args.str_required("out")?;
+        let cfg = corrsh::data::synth::SynthConfig {
+            n: args.parse_or("n", 1000)?,
+            dim: args.parse_or("dim", 256)?,
+            seed: args.parse_or("seed", 0)?,
+            ..Default::default()
+        };
+        args.finish()?;
+        kind.write_sharded(&cfg, &out, rows_per_shard)?
+    } else {
+        let input = args
+            .positional
+            .first()
+            .context("shard: missing input path (corrsh shard <in> <out-dir>)")?;
+        let out = args.positional.get(1).context("shard: missing output directory")?;
+        args.finish()?;
+        corrsh::data::store::shard_file(input, out, rows_per_shard)
+            .with_context(|| format!("shard {input}"))?
+    };
+    let data = corrsh::data::loader::load(&manifest)?;
+    eprintln!(
+        "wrote {} ({} x {}, {} rows/shard, {})",
+        manifest.display(),
+        data.n(),
+        data.dim(),
+        rows_per_shard,
+        if data.is_sparse() { "sparse" } else { "dense" }
+    );
+    Ok(())
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {

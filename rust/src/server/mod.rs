@@ -10,7 +10,10 @@
 //!
 //! ```text
 //! → {"op":"register","name":"cells","kind":"rnaseq","n":2000,"dim":256,"seed":1}
-//! ← {"ok":true,"name":"cells","n":2000,"metric":"l1"}
+//! ← {"ok":true,"name":"cells","n":2000,"metric":"l1","sharded":false}
+//! → {"op":"register","name":"big","path":"/data/shards/manifest.json"}
+//!                                            # shard manifest: no loading —
+//! ← {"ok":true,"name":"big","n":1000000,...} # rows stream from disk on demand
 //! → {"op":"medoid","dataset":"cells","algo":"corrsh","pulls_per_arm":24,"seed":7}
 //! ← {"ok":true,"medoid":412,"pulls":52000,"wall_ms":8.3,"seed":7,"algo":"corrsh"}
 //! → {"op":"medoid_batch","dataset":"cells","seeds":[1,2,3],"pulls_per_arm":24}
@@ -141,25 +144,41 @@ impl State {
             }
             "register" => {
                 let name = req.get("name").as_str().context("missing name")?.to_string();
-                let kind: Kind = req.get("kind").as_str().context("missing kind")?.parse()?;
-                let mut cfg = SynthConfig {
-                    n: req.get("n").as_usize().unwrap_or(1000),
-                    dim: req.get("dim").as_usize().unwrap_or(256),
-                    seed: req.get("seed").as_u64().unwrap_or(0),
-                    ..Default::default()
+                // Two sources: `path` (a .npy/.csr file, or a shard
+                // manifest — the latter registers *without loading*, rows
+                // stream from disk on demand) or `kind` (a generator).
+                let (data, metric) = if let Some(path) = req.get("path").as_str() {
+                    let data = crate::data::loader::load(path)?;
+                    let metric: Metric = match req.get("metric").as_str() {
+                        Some(m) => m.parse()?,
+                        None if data.is_sparse() => Metric::L1,
+                        None => Metric::L2,
+                    };
+                    crate::ensure!(data.n() >= 2, "register: dataset has n = {}", data.n());
+                    (Arc::new(data), metric)
+                } else {
+                    let kind: Kind =
+                        req.get("kind").as_str().context("missing kind (or path)")?.parse()?;
+                    let mut cfg = SynthConfig {
+                        n: req.get("n").as_usize().unwrap_or(1000),
+                        dim: req.get("dim").as_usize().unwrap_or(256),
+                        seed: req.get("seed").as_u64().unwrap_or(0),
+                        ..Default::default()
+                    };
+                    if let Some(c) = req.get("clusters").as_usize() {
+                        crate::ensure!(c >= 1, "register: clusters must be >= 1");
+                        cfg.clusters = c;
+                    }
+                    crate::ensure!(cfg.n >= 2, "register: n must be >= 2 (got {})", cfg.n);
+                    crate::ensure!(cfg.dim >= 1, "register: dim must be >= 1");
+                    let metric = match req.get("metric").as_str() {
+                        Some(m) => m.parse()?,
+                        None => kind.default_metric(),
+                    };
+                    (Arc::new(kind.generate(&cfg)), metric)
                 };
-                if let Some(c) = req.get("clusters").as_usize() {
-                    crate::ensure!(c >= 1, "register: clusters must be >= 1");
-                    cfg.clusters = c;
-                }
-                crate::ensure!(cfg.n >= 2, "register: n must be >= 2 (got {})", cfg.n);
-                crate::ensure!(cfg.dim >= 1, "register: dim must be >= 1");
-                let metric = match req.get("metric").as_str() {
-                    Some(m) => m.parse()?,
-                    None => kind.default_metric(),
-                };
-                let data = Arc::new(kind.generate(&cfg));
                 let n = data.n();
+                let sharded = matches!(&*data, Data::Sharded(_));
                 // Stale sessions for the old binding of this name are
                 // swept here (memory hygiene); correctness against the
                 // re-register race comes from the generation cache key.
@@ -176,6 +195,7 @@ impl State {
                     ("name", name.into()),
                     ("n", n.into()),
                     ("metric", metric.name().into()),
+                    ("sharded", sharded.into()),
                 ]))
             }
             "unregister" => {
@@ -284,6 +304,21 @@ impl State {
                         ("misses", self.cache.misses().into()),
                         ("nan_pulls", self.cache.nan_pulls().into()),
                     ]),
+                ),
+                (
+                    // Shard-store traffic (process-global): monotone
+                    // hit/miss counters plus the pinned-bytes gauge, so
+                    // "the million-point dataset stayed inside its cache
+                    // budget" is observable, not assumed (DESIGN.md §12).
+                    "shard_cache",
+                    {
+                        let s = crate::data::store::cache_stats();
+                        Value::from_pairs(vec![
+                            ("hits", s.hits().into()),
+                            ("misses", s.misses().into()),
+                            ("pinned_bytes", s.pinned_bytes().into()),
+                        ])
+                    },
                 ),
             ])),
             "shutdown" => {
@@ -774,6 +809,61 @@ mod tests {
         assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
         assert_eq!(r.get("seed").as_u64(), Some(u64::MAX));
         assert_eq!(r.get("seed").as_str(), Some("18446744073709551615"));
+    }
+
+    #[test]
+    fn register_by_path_matches_generator_registration() {
+        // The same bytes registered three ways — generator, resident .npy,
+        // shard manifest — must give identical medoid answers, and the
+        // manifest registration must report sharded:true.
+        let dir = std::env::temp_dir().join("corrsh-server-tests").join("register-path");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cfg = crate::data::synth::SynthConfig { n: 150, dim: 8, seed: 4, ..Default::default() };
+        let data = Kind::Gaussian.generate(&cfg);
+        let npy = dir.join("toy.npy");
+        crate::data::loader::save_dense_npy(&npy, &data.to_dense()).unwrap();
+        let manifest = crate::data::store::write_sharded(&data, dir.join("shards"), 32).unwrap();
+
+        let state = State::new();
+        let r = state.handle(&req(
+            r#"{"op":"register","name":"gen","kind":"gaussian","n":150,"dim":8,"seed":4}"#,
+        ));
+        assert_eq!(r.get("sharded").as_bool(), Some(false));
+        let r = state.handle(&req(&format!(
+            r#"{{"op":"register","name":"npy","path":{:?},"metric":"l2"}}"#,
+            npy.to_str().unwrap()
+        )));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("sharded").as_bool(), Some(false));
+        let r = state.handle(&req(&format!(
+            r#"{{"op":"register","name":"shards","path":{:?},"metric":"l2"}}"#,
+            manifest.to_str().unwrap()
+        )));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("sharded").as_bool(), Some(true));
+        assert_eq!(r.get("n").as_usize(), Some(150));
+
+        let answers: Vec<(Option<usize>, Option<u64>)> = ["gen", "npy", "shards"]
+            .iter()
+            .map(|name| {
+                let r = state.handle(&req(&format!(
+                    r#"{{"op":"medoid","dataset":"{name}","pulls_per_arm":32,"seed":7}}"#
+                )));
+                assert_eq!(r.get("ok").as_bool(), Some(true), "{name}: {r}");
+                (r.get("medoid").as_usize(), r.get("pulls").as_u64())
+            })
+            .collect();
+        assert_eq!(answers[0], answers[1], "generator vs npy");
+        assert_eq!(answers[1], answers[2], "npy vs shard manifest");
+
+        // shard_cache gauges are exported and the manifest dataset moved them
+        let m = state.handle(&req(r#"{"op":"metrics"}"#));
+        let sc = m.get("shard_cache");
+        assert!(sc.get("hits").as_u64().is_some() && sc.get("misses").as_u64().is_some());
+        // registering a bogus path fails cleanly
+        let r = state.handle(&req(r#"{"op":"register","name":"x","path":"/no/such.npy"}"#));
+        assert_eq!(r.get("ok").as_bool(), Some(false));
     }
 
     #[test]

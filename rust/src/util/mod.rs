@@ -15,10 +15,12 @@
 //! * [`threads`] — parallel-for shims over the pool, used by the native
 //!   pull engine and the trial runner.
 //! * [`bench`] — micro-benchmark harness (criterion-style reporting).
-//! * [`testing`] — property-test loop (randomized cases, seed reported on
-//!   failure) used across the crate's unit tests.
-//! * [`npy`] — NumPy `.npy` v1 reader/writer for dataset interchange with
-//!   the python layer.
+//! * [`testing`] — property-test harness (seeded case generation,
+//!   shrink-on-fail, `cases_from_env`) used across the crate's unit and
+//!   integration tests.
+//! * [`npy`] — NumPy `.npy` v1–v3 reader / v1 writer for dataset
+//!   interchange with the python layer and the sharded store's dense
+//!   shard files.
 
 pub mod bench;
 pub mod cli;

@@ -1,7 +1,17 @@
-//! NumPy `.npy` (format version 1.0) reader/writer for f32/f64 C-order
-//! matrices — the dataset interchange format between the python layer
-//! (generators, notebooks) and the rust runtime.
+//! NumPy `.npy` reader/writer for f32/f64 C-order matrices — the dataset
+//! interchange format between the python layer (generators, notebooks) and
+//! the rust runtime.
+//!
+//! The reader accepts format versions 1.0–3.x: v1 carries a 2-byte header
+//! length, v2/v3 a 4-byte one (v3 only changes the allowed field-name
+//! encoding, which this parser never relied on). Header padding is *not*
+//! assumed to land on any particular alignment — numpy ≥1.9 pads to 64
+//! bytes, older writers to 16, and hand-rolled files to anything — so the
+//! payload offset is always derived from the encoded header length. The
+//! writer emits v1.0 with 64-byte alignment (what every modern numpy
+//! produces and the mmap reader wants).
 
+use std::fs::File;
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -58,25 +68,59 @@ fn parse_header(h: &str) -> Result<(String, bool, Vec<usize>)> {
     Ok((descr, fortran, dims))
 }
 
-/// Read a 1-D or 2-D f32/f64 little-endian `.npy` file as a [`Matrix`]
-/// (1-D becomes a single row).
-pub fn read(path: impl AsRef<Path>) -> Result<Matrix> {
-    let mut f = std::fs::File::open(&path)
-        .with_context(|| format!("open {:?}", path.as_ref()))?;
+/// Element type of an `.npy` payload this reader understands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F4,
+    F8,
+}
+
+impl Dtype {
+    pub fn size(&self) -> usize {
+        match self {
+            Dtype::F4 => 4,
+            Dtype::F8 => 8,
+        }
+    }
+}
+
+/// Parsed `.npy` preamble: shape, dtype, and the byte offset where the
+/// payload starts. Parsing the header alone is what lets the sharded store
+/// register terabyte-scale shard sets without touching their payloads.
+#[derive(Clone, Debug)]
+pub struct Header {
+    pub rows: usize,
+    pub cols: usize,
+    pub dtype: Dtype,
+    /// Absolute byte offset of the first payload element.
+    pub data_offset: u64,
+}
+
+/// Parse the magic + version + header dict from an open file positioned at
+/// the start. Accepts versions 1.0 through 3.x (2-byte header length for
+/// v1, 4-byte for v2/v3) and any header padding.
+pub fn read_header_from(f: &mut File) -> Result<Header> {
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic).context("npy magic")?;
     if &magic[..6] != MAGIC {
         bail!("not an npy file: bad magic");
     }
     let major = magic[6];
-    if major != 1 {
-        bail!("unsupported npy version {major}.x (only 1.0)");
-    }
-    let mut lenb = [0u8; 2];
-    f.read_exact(&mut lenb)?;
-    let hlen = u16::from_le_bytes(lenb) as usize;
+    let (hlen, pre) = match major {
+        1 => {
+            let mut lenb = [0u8; 2];
+            f.read_exact(&mut lenb)?;
+            (u16::from_le_bytes(lenb) as usize, 10usize)
+        }
+        2 | 3 => {
+            let mut lenb = [0u8; 4];
+            f.read_exact(&mut lenb)?;
+            (u32::from_le_bytes(lenb) as usize, 12usize)
+        }
+        other => bail!("unsupported npy version {other}.x (want 1.x-3.x)"),
+    };
     let mut hdr = vec![0u8; hlen];
-    f.read_exact(&mut hdr)?;
+    f.read_exact(&mut hdr).context("npy header")?;
     let hdr = String::from_utf8(hdr).context("npy header utf8")?;
     let (descr, fortran, dims) = parse_header(&hdr)?;
     if fortran {
@@ -87,31 +131,44 @@ pub fn read(path: impl AsRef<Path>) -> Result<Matrix> {
         2 => (dims[0], dims[1]),
         d => bail!("npy ndim {d} unsupported (want 1 or 2)"),
     };
-    let count = rows * cols;
-    let mut raw = Vec::new();
-    f.read_to_end(&mut raw)?;
-    let data: Vec<f32> = match descr.as_str() {
-        "<f4" | "|f4" => {
-            if raw.len() < count * 4 {
-                bail!("npy truncated: want {} bytes, have {}", count * 4, raw.len());
-            }
-            raw.chunks_exact(4)
-                .take(count)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                .collect()
-        }
-        "<f8" => {
-            if raw.len() < count * 8 {
-                bail!("npy truncated");
-            }
-            raw.chunks_exact(8)
-                .take(count)
-                .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
-                .collect()
-        }
+    let dtype = match descr.as_str() {
+        "<f4" | "|f4" => Dtype::F4,
+        "<f8" => Dtype::F8,
         other => bail!("npy dtype {other} unsupported (want <f4 or <f8)"),
     };
-    Ok(Matrix::new(rows, cols, data))
+    Ok(Header { rows, cols, dtype, data_offset: (pre + hlen) as u64 })
+}
+
+/// Parse only the preamble of an `.npy` file (shape/dtype/payload offset).
+pub fn read_header(path: impl AsRef<Path>) -> Result<Header> {
+    let mut f = File::open(&path).with_context(|| format!("open {:?}", path.as_ref()))?;
+    read_header_from(&mut f)
+}
+
+/// Read a 1-D or 2-D f32/f64 little-endian `.npy` file (any supported
+/// format version) as a [`Matrix`] (1-D becomes a single row).
+pub fn read(path: impl AsRef<Path>) -> Result<Matrix> {
+    let mut f = File::open(&path).with_context(|| format!("open {:?}", path.as_ref()))?;
+    let h = read_header_from(&mut f)?;
+    let count = h.rows * h.cols;
+    let mut raw = Vec::new();
+    f.read_to_end(&mut raw)?;
+    if raw.len() < count * h.dtype.size() {
+        bail!("npy truncated: want {} bytes, have {}", count * h.dtype.size(), raw.len());
+    }
+    let data: Vec<f32> = match h.dtype {
+        Dtype::F4 => raw
+            .chunks_exact(4)
+            .take(count)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect(),
+        Dtype::F8 => raw
+            .chunks_exact(8)
+            .take(count)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()) as f32)
+            .collect(),
+    };
+    Ok(Matrix::new(h.rows, h.cols, data))
 }
 
 /// Write a [`Matrix`] as `<f4` C-order `.npy` v1.0.
@@ -211,6 +268,77 @@ mod tests {
         std::fs::write(&p, bytes).unwrap();
         let m = read(&p).unwrap();
         assert_eq!(m.data, vec![1.5, -2.0]);
+    }
+
+    /// Build an npy byte stream with an explicit version and padding (the
+    /// shapes the fixture files under `rust/tests/fixtures/` pin at the
+    /// integration level).
+    fn build_npy(major: u8, pad_to: usize, descr: &str, shape: &str, payload: &[u8]) -> Vec<u8> {
+        let mut header =
+            format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape}, }}");
+        let pre = if major == 1 { 10 } else { 12 };
+        let unpadded = pre + header.len() + 1;
+        header.extend(std::iter::repeat(' ').take((pad_to - unpadded % pad_to) % pad_to));
+        header.push('\n');
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&[major, 0]);
+        if major == 1 {
+            bytes.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        } else {
+            bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        }
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(payload);
+        bytes
+    }
+
+    #[test]
+    fn reads_v2_and_v3_headers() {
+        let payload: Vec<u8> =
+            [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        for major in [2u8, 3] {
+            let p = tmp(&format!("v{major}.npy"));
+            std::fs::write(&p, build_npy(major, 64, "<f4", "(2, 3)", &payload)).unwrap();
+            let m = read(&p).unwrap();
+            assert_eq!((m.rows, m.cols), (2, 3), "v{major}");
+            assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], "v{major}");
+            let h = read_header(&p).unwrap();
+            assert_eq!(h.dtype, Dtype::F4);
+            assert_eq!(h.data_offset % 64, 0, "v{major}: writer aligned to 64");
+        }
+        // version 4 does not exist — must be rejected, not misparsed
+        let p = tmp("v4.npy");
+        std::fs::write(&p, build_npy(4, 64, "<f4", "(2, 3)", &payload)).unwrap();
+        assert!(read(&p).is_err());
+    }
+
+    #[test]
+    fn tolerates_odd_header_padding() {
+        // Old numpy (<1.9) pads v1 headers to 16 bytes, not 64; nothing in
+        // the spec forbids even unpadded headers. The payload offset must
+        // come from the encoded length, never an alignment assumption.
+        let payload: Vec<u8> = [7.5f32, -1.25].iter().flat_map(|v| v.to_le_bytes()).collect();
+        for (pad, name) in [(16usize, "pad16.npy"), (1, "pad1.npy"), (64, "pad64.npy")] {
+            let p = tmp(name);
+            std::fs::write(&p, build_npy(1, pad, "<f4", "(1, 2)", &payload)).unwrap();
+            let m = read(&p).unwrap();
+            assert_eq!(m.data, vec![7.5, -1.25], "pad {pad}");
+        }
+        let h = read_header(&tmp("pad1.npy")).unwrap();
+        assert_ne!(h.data_offset % 64, 0, "unaligned fixture actually unaligned");
+    }
+
+    #[test]
+    fn header_only_parse_matches_full_read() {
+        let m = Matrix::new(5, 3, (0..15).map(|i| i as f32).collect());
+        let p = tmp("hdr.npy");
+        write(&p, &m).unwrap();
+        let h = read_header(&p).unwrap();
+        assert_eq!((h.rows, h.cols), (5, 3));
+        assert_eq!(h.dtype, Dtype::F4);
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(bytes.len() as u64, h.data_offset + 15 * 4);
     }
 
     #[test]

@@ -1,28 +1,62 @@
-//! Property-testing loop (proptest is outside the offline closure).
+//! Property-test harness (proptest is outside the offline closure).
 //!
-//! [`check`] runs a property over many randomly generated cases; on failure
-//! it panics with the case's `Debug` and the per-case seed so the exact case
-//! is reproducible with [`replay`]. Used across the crate for the
-//! coordinator/batcher/state invariants DESIGN.md §8 calls out.
+//! Three pieces shared by every property test in the crate (DESIGN.md §8):
+//!
+//! * **Seeded case generation** — [`check`]/[`check_shrink`] run a property
+//!   over many cases, each drawn from a per-case seeded RNG, so a failure
+//!   names the exact seed and [`replay`] reproduces it.
+//! * **Shrink-on-fail** — [`check_shrink`] takes a caller-supplied shrinker
+//!   (candidate smaller inputs) and greedily minimizes the failing case
+//!   before panicking, re-running the property with the *same* per-case
+//!   RNG so data generated inside the property stays deterministic.
+//! * **`cases_from_env`** — one knob (`CORRSH_PROPTEST_CASES`) scales every
+//!   property's case count between CI (fast) and local soak runs.
 
 use crate::util::rng::Rng;
 
-/// Number of cases per property: env `CORRSH_PROPTEST_CASES` or 128.
-pub fn default_cases() -> usize {
+/// Per-property case count: env `CORRSH_PROPTEST_CASES`, else `default`.
+pub fn cases_from_env(default: usize) -> usize {
     std::env::var("CORRSH_PROPTEST_CASES")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(128)
+        .unwrap_or(default)
+}
+
+/// [`cases_from_env`] with the crate-wide default of 128.
+pub fn default_cases() -> usize {
+    cases_from_env(128)
 }
 
 /// Run `prop` on `cases` random inputs drawn by `gen`.
 ///
 /// `gen` receives a per-case seeded RNG; `prop` returns `Err(reason)` to
-/// fail. Panics with case debug + seed on the first failure.
-pub fn check<T: std::fmt::Debug>(
+/// fail. Panics with case debug + seed on the first failure. (No shrinking
+/// — use [`check_shrink`] when a smaller counterexample helps.)
+pub fn check<T: std::fmt::Debug + Clone>(
     name: &str,
     cases: usize,
     gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T, &mut Rng) -> Result<(), String>,
+) {
+    check_shrink(name, cases, gen, |_| Vec::new(), prop);
+}
+
+/// Maximum property re-runs spent minimizing one failure.
+const SHRINK_BUDGET: usize = 256;
+
+/// [`check`] plus shrink-on-fail: on the first failing case, `shrink`
+/// proposes smaller candidate inputs; the first candidate that still fails
+/// becomes the new case, repeating (greedy descent, bounded by
+/// [`SHRINK_BUDGET`] re-runs) until no candidate fails. The panic reports
+/// both the original and the minimized case.
+///
+/// Every re-run uses the failing case's per-case RNG seed, so properties
+/// that generate data internally shrink deterministically.
+pub fn check_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
     prop: impl Fn(&T, &mut Rng) -> Result<(), String>,
 ) {
     let base_seed: u64 = std::env::var("CORRSH_PROPTEST_SEED")
@@ -33,15 +67,49 @@ pub fn check<T: std::fmt::Debug>(
         let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
         let mut grng = Rng::seeded(seed);
         let input = gen(&mut grng);
-        let mut prng = Rng::seeded(seed ^ 0xABCD);
-        if let Err(why) = prop(&input, &mut prng) {
-            panic!(
-                "property `{name}` failed on case {case} (seed {seed:#x}):\n  \
-                 input: {input:?}\n  reason: {why}\n  \
-                 replay: CORRSH_PROPTEST_SEED={base_seed} (case {case})"
-            );
+        let run = |x: &T| prop(x, &mut Rng::seeded(seed ^ 0xABCD));
+        let Err(why) = run(&input) else { continue };
+        // Greedy shrink: accept the first failing candidate each round.
+        let mut best = input.clone();
+        let mut best_why = why.clone();
+        let mut spent = 0usize;
+        'outer: while spent < SHRINK_BUDGET {
+            for cand in shrink(&best) {
+                spent += 1;
+                if let Err(w) = run(&cand) {
+                    best = cand;
+                    best_why = w;
+                    continue 'outer;
+                }
+                if spent >= SHRINK_BUDGET {
+                    break;
+                }
+            }
+            break;
         }
+        panic!(
+            "property `{name}` failed on case {case} (seed {seed:#x}):\n  \
+             input: {input:?}\n  reason: {why}\n  \
+             shrunk: {best:?}\n  shrunk reason: {best_why}\n  \
+             replay: CORRSH_PROPTEST_SEED={base_seed} (case {case})"
+        );
     }
+}
+
+/// Shrink candidates for a sized knob: step toward `lo` by halving the
+/// distance, then by one. The building block most tuple shrinkers want.
+pub fn shrink_usize(x: usize, lo: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if x > lo {
+        out.push(lo);
+        let mid = lo + (x - lo) / 2;
+        if mid != lo && mid != x {
+            out.push(mid);
+        }
+        out.push(x - 1);
+    }
+    out.dedup();
+    out
 }
 
 /// Re-run a single failing case by seed (debug helper).
@@ -75,6 +143,42 @@ mod tests {
     #[should_panic(expected = "property `always-fails` failed")]
     fn failing_property_panics_with_case() {
         check("always-fails", 8, |r| r.below(10), |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk: 10")]
+    fn shrinker_minimizes_failures() {
+        // property fails for x >= 10; generated x is large; the greedy
+        // shrinker must walk it down to exactly the boundary.
+        check_shrink(
+            "shrinks-to-boundary",
+            64,
+            |r| 500 + r.below(1000),
+            |&x| shrink_usize(x, 0),
+            |&x, _| if x >= 10 { Err(format!("{x} too big")) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn shrink_candidates_descend() {
+        assert_eq!(shrink_usize(5, 5), Vec::<usize>::new());
+        assert_eq!(shrink_usize(6, 5), vec![5]);
+        let c = shrink_usize(100, 1);
+        assert!(c.contains(&1) && c.contains(&50) && c.contains(&99));
+        for &x in &c {
+            assert!(x < 100);
+        }
+    }
+
+    #[test]
+    fn cases_from_env_defaults() {
+        // (env may be set by CI; only check the fallback contract)
+        if std::env::var("CORRSH_PROPTEST_CASES").is_err() {
+            assert_eq!(cases_from_env(7), 7);
+            assert_eq!(default_cases(), 128);
+        } else {
+            assert_eq!(cases_from_env(7), default_cases());
+        }
     }
 
     #[test]

@@ -16,7 +16,9 @@ use corrsh::util::testing;
 
 #[test]
 fn tiled_engine_matches_scalar_reference_property() {
-    testing::check(
+    // check_shrink: a failure minimizes (dim, arms, refs) before panicking,
+    // so kernel regressions report at the smallest reproducing geometry.
+    testing::check_shrink(
         "engine-dense-tile-parity",
         // Each case prepares three engines over fresh data — keep the count
         // CI-friendly; the kernel-level property test sweeps more shapes.
@@ -26,6 +28,19 @@ fn tiled_engine_matches_scalar_reference_property() {
             let n_arms = 4 + rng.below(29); // ≥ ARM_TILE so the tiles engage
             let n_refs = 1 + rng.below(37);
             (dim, n_arms, n_refs)
+        },
+        |&(dim, n_arms, n_refs)| {
+            let mut out = Vec::new();
+            for d in testing::shrink_usize(dim, 1) {
+                out.push((d, n_arms, n_refs));
+            }
+            for a in testing::shrink_usize(n_arms, 4) {
+                out.push((dim, a, n_refs));
+            }
+            for r in testing::shrink_usize(n_refs, 1) {
+                out.push((dim, n_arms, r));
+            }
+            out
         },
         |&(dim, n_arms, n_refs), rng| {
             let n = 60;
@@ -98,31 +113,49 @@ fn acceptance_geometry_mnist_784() {
 
 #[test]
 fn tiled_block_bitwise_deterministic_across_workers() {
+    // Ported from an ad-hoc nested loop to the shared property harness:
+    // each case draws a worker count, arm/ref geometry off the tile grid,
+    // and a metric, and must reproduce the single-threaded result bitwise.
     let data = Arc::new(mnist::generate(&SynthConfig {
         n: 300,
         dim: 144,
         seed: 6,
         ..Default::default()
     }));
-    let mut rng = Rng::seeded(2);
-    let arms: Vec<usize> = (0..297).collect();
-    let refs = rng.sample_without_replacement(300, 43);
-    for metric in Metric::ALL {
-        let mut base_sums = vec![0f64; arms.len()];
-        let mut base_mat = vec![0f32; arms.len() * refs.len()];
-        let one = NativeEngine::with_threads(data.clone(), metric, 1);
-        one.pull_block(&arms, &refs, &mut base_sums);
-        one.pull_matrix(&arms, &refs, &mut base_mat);
-        for threads in [2usize, 5, 8] {
+    let data = &data;
+    testing::check(
+        "engine-dense-tile-worker-determinism",
+        (testing::default_cases() / 4).max(12),
+        |rng| {
+            let threads = 2 + rng.below(7);
+            let n_arms = 5 + rng.below(293); // off the ARM_TILE grid on purpose
+            let n_refs = 1 + rng.below(60);
+            let metric_idx = rng.below(3);
+            (threads, n_arms, n_refs, metric_idx)
+        },
+        |&(threads, n_arms, n_refs, metric_idx), rng| {
+            let metric = Metric::ALL[metric_idx];
+            let arms: Vec<usize> = (0..n_arms).collect();
+            let refs = rng.sample_without_replacement(300, n_refs);
+            let one = NativeEngine::with_threads(data.clone(), metric, 1);
+            let mut base_sums = vec![0f64; arms.len()];
+            let mut base_mat = vec![0f32; arms.len() * refs.len()];
+            one.pull_block(&arms, &refs, &mut base_sums);
+            one.pull_matrix(&arms, &refs, &mut base_mat);
             let e = NativeEngine::with_threads(data.clone(), metric, threads);
             let mut sums = vec![0f64; arms.len()];
             e.pull_block(&arms, &refs, &mut sums);
-            assert_eq!(sums, base_sums, "{metric}: block diverged at {threads} workers");
+            if sums != base_sums {
+                return Err(format!("{metric}: block diverged at {threads} workers"));
+            }
             let mut mat = vec![0f32; arms.len() * refs.len()];
             e.pull_matrix(&arms, &refs, &mut mat);
-            assert_eq!(mat, base_mat, "{metric}: matrix diverged at {threads} workers");
-        }
-    }
+            if mat != base_mat {
+                return Err(format!("{metric}: matrix diverged at {threads} workers"));
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -1,0 +1,486 @@
+//! Integration contract of the sharded dataset layer (DESIGN.md §12):
+//!
+//! * **Storage round-trip property** — random (n, d, rows_per_shard,
+//!   metric, dense/sparse) datasets written through the `corrsh shard`
+//!   conversion path, reloaded as `ShardedData`, and held bitwise equal to
+//!   the resident path for `row()`, `norms()`, the `PreparedEngine`
+//!   reductions, and full `pull_matrix` output — through the default
+//!   reader *and* an eviction-forcing pinned reader (and the mmap reader
+//!   when the `mmap` feature is compiled in).
+//! * **End-to-end determinism** — corrSH medoid + k-medoids on a planted
+//!   mixture return identical winners and pull counts for resident vs
+//!   sharded backends across worker counts and shard sizes that do/don't
+//!   divide n.
+//! * **Server soak** — concurrent clients over a manifest-registered
+//!   dataset while another client churns register/unregister; responses
+//!   stay byte-identical (modulo wall-clock) to a resident reference and
+//!   the `shard_cache` gauges stay monotone.
+//! * **npy format fixtures** — v1/v2/v3 headers with non-64-byte padding
+//!   (checked in under `rust/tests/fixtures/`) parse to the same payload.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use corrsh::bandits::{CorrSh, MedoidAlgorithm};
+use corrsh::config::KMedoidsConfig;
+use corrsh::data::store::{self, cache_stats, ShardedData, StoreOptions};
+use corrsh::data::synth::{Kind, SynthConfig};
+use corrsh::data::{loader, Data};
+use corrsh::distance::Metric;
+use corrsh::engine::{CountingEngine, NativeEngine, PreparedEngine, PullEngine};
+use corrsh::kmedoids::{BanditKMedoids, ClusteringAlgorithm};
+use corrsh::server::{self, State};
+use corrsh::util::json;
+use corrsh::util::rng::Rng;
+use corrsh::util::testing;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("corrsh-sharded-store-tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Save `data` resident (.npy or .csr text), then run it through the CLI
+/// conversion path (`store::shard_file`, what `corrsh shard` calls).
+fn shard_via_cli(data: &Data, dir: &PathBuf, rows_per_shard: usize) -> PathBuf {
+    let input = if data.is_sparse() {
+        let Data::Sparse(s) = data else { unreachable!() };
+        let mut text = format!("csr {} {}\n", s.n, s.dim);
+        for i in 0..s.n {
+            let r = s.row(i);
+            for (&c, &v) in r.indices.iter().zip(r.values) {
+                // exact round-trip: f32 -> shortest decimal -> f32 is lossless
+                text.push_str(&format!("{i} {c} {v}\n"));
+            }
+        }
+        let p = dir.join("input.csr");
+        std::fs::write(&p, text).unwrap();
+        p
+    } else {
+        let p = dir.join("input.npy");
+        loader::save_dense_npy(&p, &data.to_dense()).unwrap();
+        p
+    };
+    store::shard_file(&input, dir.join("shards"), rows_per_shard).unwrap()
+}
+
+/// Reader configurations the round-trip is checked under. The pinned
+/// configs run everywhere; the default config additionally exercises mmap
+/// when the feature is compiled in.
+fn reader_configs(dim: usize) -> Vec<(&'static str, StoreOptions)> {
+    vec![
+        ("default", StoreOptions::default()),
+        (
+            "pinned-evicting",
+            StoreOptions {
+                cache_bytes: (2 * dim * 4).max(64),
+                block_bytes: (dim * 4).max(32),
+                force_pinned: true,
+            },
+        ),
+    ]
+}
+
+#[test]
+fn storage_roundtrip_property_per_metric() {
+    // Acceptance floor: >= 64 seeded cases per metric by default
+    // (CORRSH_PROPTEST_CASES still scales it down for quick local runs).
+    let cases = testing::cases_from_env(64);
+    for metric in Metric::ALL {
+        testing::check_shrink(
+            &format!("sharded-roundtrip-{metric}"),
+            cases,
+            |rng| {
+                let n = 2 + rng.below(90);
+                let dim = 1 + rng.below(48);
+                // shard sizes below, at, and above n
+                let rows_per_shard = 1 + rng.below(n + 4);
+                let sparse = rng.chance(0.5);
+                (n, dim, rows_per_shard, sparse)
+            },
+            |&(n, dim, rows_per_shard, sparse)| {
+                let mut out = Vec::new();
+                for nn in testing::shrink_usize(n, 2) {
+                    out.push((nn, dim, rows_per_shard.min(nn + 1), sparse));
+                }
+                for dd in testing::shrink_usize(dim, 1) {
+                    out.push((n, dd, rows_per_shard, sparse));
+                }
+                for rr in testing::shrink_usize(rows_per_shard, 1) {
+                    out.push((n, dim, rr, sparse));
+                }
+                out
+            },
+            |&(n, dim, rows_per_shard, sparse), rng| {
+                let cfg = SynthConfig {
+                    n,
+                    dim,
+                    seed: rng.below(1 << 30) as u64,
+                    density: 0.2,
+                    ..Default::default()
+                };
+                let data = if sparse {
+                    Kind::RnaSeq.generate(&cfg)
+                } else {
+                    Kind::Gaussian.generate(&cfg)
+                };
+                let dir = tmp(&format!("prop-{metric}-{n}-{dim}-{rows_per_shard}-{sparse}"));
+                let manifest = shard_via_cli(&data, &dir, rows_per_shard);
+                let resident = Arc::new(data);
+                let res_prep = PreparedEngine::prepare(resident.clone(), metric);
+                let res_engine = NativeEngine::from_prepared(Arc::new(res_prep), 4);
+                let arms: Vec<usize> = (0..n).collect();
+                let mut res_mat = vec![0f32; n * n];
+                res_engine.pull_matrix(&arms, &arms, &mut res_mat);
+                let res_norms = resident.norms();
+
+                for (reader, opts) in reader_configs(dim) {
+                    let sd = ShardedData::open_with(&manifest, &opts)
+                        .map_err(|e| format!("open ({reader}): {e}"))?;
+                    let sharded = Arc::new(Data::Sharded(sd));
+                    // row() / densify_row_into bitwise
+                    let mut a = vec![0f32; dim];
+                    let mut b = vec![0f32; dim];
+                    for i in 0..n {
+                        resident.densify_row_into(i, &mut a);
+                        sharded.densify_row_into(i, &mut b);
+                        if a.iter().map(|v| v.to_bits()).ne(b.iter().map(|v| v.to_bits())) {
+                            return Err(format!("{reader}: row {i} bytes diverged"));
+                        }
+                    }
+                    // norms bitwise
+                    let sh_norms = sharded.norms();
+                    if res_norms.iter().map(|v| v.to_bits()).ne(
+                        sh_norms.iter().map(|v| v.to_bits()),
+                    ) {
+                        return Err(format!("{reader}: norms diverged"));
+                    }
+                    // PreparedEngine reductions bitwise
+                    let sh_prep = PreparedEngine::prepare(sharded.clone(), metric);
+                    let rp = res_engine.prepared();
+                    if rp.norms() != sh_prep.norms() {
+                        return Err(format!("{reader}: prepared norms diverged"));
+                    }
+                    if rp.sq_norms() != sh_prep.sq_norms() {
+                        return Err(format!("{reader}: prepared sq_norms diverged"));
+                    }
+                    if rp.row_reductions() != sh_prep.row_reductions() {
+                        return Err(format!("{reader}: prepared row reductions diverged"));
+                    }
+                    // full pull_matrix bitwise
+                    let sh_engine = NativeEngine::from_prepared(Arc::new(sh_prep), 4);
+                    let mut sh_mat = vec![0f32; n * n];
+                    sh_engine.pull_matrix(&arms, &arms, &mut sh_mat);
+                    for (p, (x, y)) in res_mat.iter().zip(&sh_mat).enumerate() {
+                        if x.to_bits() != y.to_bits() {
+                            return Err(format!(
+                                "{reader}: pull_matrix cell {p}: {x} vs {y}"
+                            ));
+                        }
+                    }
+                }
+                let _ = std::fs::remove_dir_all(&dir);
+                Ok(())
+            },
+        );
+    }
+}
+
+#[cfg(feature = "mmap")]
+#[test]
+fn mmap_reader_is_active_and_bitwise_equal() {
+    // With the feature compiled in (on a supported target), the default
+    // reader actually maps — and serves the same bytes as the pinned one.
+    let cfg = SynthConfig { n: 64, dim: 17, seed: 5, ..Default::default() };
+    let data = Kind::Gaussian.generate(&cfg);
+    let dir = tmp("mmap-active");
+    let manifest = store::write_sharded(&data, dir.join("shards"), 16).unwrap();
+    let mapped = ShardedData::open(&manifest).unwrap();
+    assert!(
+        !store::mmap_compiled() || mapped.mmapped(),
+        "mmap compiled but the writer-aligned shards did not map"
+    );
+    let pinned = ShardedData::open_with(
+        &manifest,
+        &StoreOptions { force_pinned: true, ..Default::default() },
+    )
+    .unwrap();
+    assert!(!pinned.mmapped());
+    let mut a = vec![0f32; 17];
+    let mut b = vec![0f32; 17];
+    for i in 0..64 {
+        mapped.densify_row_into(i, &mut a);
+        pinned.densify_row_into(i, &mut b);
+        assert_eq!(a, b, "row {i}");
+    }
+}
+
+#[test]
+fn e2e_determinism_resident_vs_sharded() {
+    // Planted mixture; shard sizes that do (100) and don't (77) divide n;
+    // workers 1 and 8. Winners AND pull counts must match exactly.
+    let n = 600;
+    let k = 4;
+    let cfg = SynthConfig { n, dim: 12, seed: 21, clusters: k, ..Default::default() };
+    let data = Kind::Mixture.generate(&cfg);
+    let dir = tmp("e2e-determinism");
+    let resident = Arc::new(data);
+
+    // resident reference (1 worker)
+    let reference = {
+        let engine = CountingEngine::new(NativeEngine::with_threads(
+            resident.clone(),
+            Metric::L2,
+            1,
+        ));
+        let medoid = CorrSh::with_pulls_per_arm(24.0).run(&engine, &mut Rng::seeded(3));
+        let medoid_pulls = engine.pulls();
+        engine.reset();
+        let km = BanditKMedoids::new(KMedoidsConfig { k, ..Default::default() })
+            .run(&engine, &mut Rng::seeded(3));
+        (medoid.best, medoid.pulls, medoid_pulls, km.medoids.clone(), km.pulls(), engine.pulls())
+    };
+
+    for rows_per_shard in [100usize, 77] {
+        let manifest = store::write_sharded(
+            &resident,
+            dir.join(format!("shards-{rows_per_shard}")),
+            rows_per_shard,
+        )
+        .unwrap();
+        for workers in [1usize, 8] {
+            for (backend, data) in [
+                ("resident", resident.clone()),
+                (
+                    "sharded",
+                    Arc::new(Data::Sharded(
+                        ShardedData::open_with(
+                            &manifest,
+                            &StoreOptions {
+                                cache_bytes: 1 << 15,
+                                block_bytes: 1 << 11,
+                                force_pinned: true,
+                            },
+                        )
+                        .unwrap(),
+                    )),
+                ),
+            ] {
+                let tag = format!("{backend}/rps={rows_per_shard}/workers={workers}");
+                let engine =
+                    CountingEngine::new(NativeEngine::with_threads(data, Metric::L2, workers));
+                let medoid = CorrSh::with_pulls_per_arm(24.0).run(&engine, &mut Rng::seeded(3));
+                assert_eq!(medoid.best, reference.0, "{tag}: medoid winner");
+                assert_eq!(medoid.pulls, reference.1, "{tag}: medoid pull count");
+                assert_eq!(engine.pulls(), reference.2, "{tag}: engine-counted pulls");
+                engine.reset();
+                let km = BanditKMedoids::new(KMedoidsConfig { k, ..Default::default() })
+                    .run(&engine, &mut Rng::seeded(3));
+                assert_eq!(km.medoids, reference.3, "{tag}: kmedoids winners");
+                assert_eq!(km.pulls(), reference.4, "{tag}: kmedoids pull count");
+                assert_eq!(engine.pulls(), reference.5, "{tag}: kmedoids engine pulls");
+            }
+        }
+    }
+}
+
+/// One line-delimited request/response exchange over a shared connection.
+fn roundtrip(sock: &mut TcpStream, reader: &mut BufReader<TcpStream>, msg: &str) -> json::Value {
+    sock.write_all(msg.as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    json::parse(line.trim()).unwrap()
+}
+
+/// Strip fields that legitimately differ between runs (wall-clock) and
+/// compare everything else byte-for-byte via the canonical serializer.
+fn canonical_without_wall(line: &str) -> String {
+    let v = json::parse(line.trim()).unwrap();
+    let json::Value::Object(mut obj) = v else { panic!("not an object: {line}") };
+    obj.remove("wall_ms");
+    json::to_string(&json::Value::Object(obj))
+}
+
+#[test]
+fn server_soak_manifest_registered_dataset() {
+    // Shared dataset on disk, registered from a manifest; 4 clients hammer
+    // medoid queries while a fifth churns register/unregister of a second
+    // dataset. Executor must not stall, answers must match the resident
+    // reference, shard_cache gauges must be monotone.
+    let n = 400;
+    let cfg = SynthConfig { n, dim: 10, seed: 9, ..Default::default() };
+    let data = Kind::Gaussian.generate(&cfg);
+    let dir = tmp("soak");
+    let npy = dir.join("soak.npy");
+    loader::save_dense_npy(&npy, &data.to_dense()).unwrap();
+    let manifest = store::write_sharded(&data, dir.join("shards"), 96).unwrap();
+
+    // resident reference answers (one per client seed)
+    let reference = State::new();
+    let r = reference.handle(
+        &json::parse(&format!(
+            r#"{{"op":"register","name":"soak","path":{:?},"metric":"l2"}}"#,
+            npy.to_str().unwrap()
+        ))
+        .unwrap(),
+    );
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    let expected: Vec<String> = (0..4u64)
+        .map(|seed| {
+            let r = reference.handle(
+                &json::parse(&format!(
+                    r#"{{"op":"medoid","dataset":"soak","pulls_per_arm":24,"seed":{seed}}}"#
+                ))
+                .unwrap(),
+            );
+            assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+            canonical_without_wall(&json::to_string(&r))
+        })
+        .collect();
+
+    // live server over the manifest registration
+    let state = State::new();
+    let r = state.handle(
+        &json::parse(&format!(
+            r#"{{"op":"register","name":"soak","path":{:?},"metric":"l2"}}"#,
+            manifest.to_str().unwrap()
+        ))
+        .unwrap(),
+    );
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    assert_eq!(r.get("sharded").as_bool(), Some(true));
+    let addr = server::serve_background(state).unwrap();
+
+    let gauges = std::sync::Mutex::new(Vec::<(u64, u64)>::new());
+    std::thread::scope(|s| {
+        // 4 query clients
+        for (seed, want) in expected.iter().enumerate() {
+            s.spawn(move || {
+                let mut sock = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(sock.try_clone().unwrap());
+                let mut line = String::new();
+                for round in 0..6 {
+                    sock.write_all(
+                        format!(
+                            "{{\"op\":\"medoid\",\"dataset\":\"soak\",\
+                             \"pulls_per_arm\":24,\"seed\":{seed}}}\n"
+                        )
+                        .as_bytes(),
+                    )
+                    .unwrap();
+                    line.clear();
+                    reader.read_line(&mut line).unwrap();
+                    assert_eq!(
+                        canonical_without_wall(&line),
+                        *want,
+                        "client {seed} round {round}: sharded response diverged from \
+                         the resident reference"
+                    );
+                }
+            });
+        }
+        // churn client: register/unregister a second manifest dataset, and
+        // sample the shard_cache gauges for monotonicity as it goes
+        let manifest2 = store::write_sharded(&data, dir.join("shards2"), 64).unwrap();
+        let gauges = &gauges;
+        s.spawn(move || {
+            let mut sock = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(sock.try_clone().unwrap());
+            for round in 0..5 {
+                let r = roundtrip(
+                    &mut sock,
+                    &mut reader,
+                    &format!(
+                        "{{\"op\":\"register\",\"name\":\"churn\",\"path\":{:?},\
+                         \"metric\":\"l2\"}}\n",
+                        manifest2.to_str().unwrap()
+                    ),
+                );
+                assert_eq!(r.get("ok").as_bool(), Some(true), "churn register {round}: {r}");
+                let r = roundtrip(
+                    &mut sock,
+                    &mut reader,
+                    &format!(
+                        "{{\"op\":\"medoid\",\"dataset\":\"churn\",\
+                         \"pulls_per_arm\":8,\"seed\":{round}}}\n"
+                    ),
+                );
+                assert_eq!(r.get("ok").as_bool(), Some(true), "churn medoid {round}: {r}");
+                let m = roundtrip(&mut sock, &mut reader, "{\"op\":\"metrics\"}\n");
+                let sc = m.get("shard_cache");
+                gauges.lock().unwrap().push((
+                    sc.get("hits").as_u64().unwrap(),
+                    sc.get("misses").as_u64().unwrap(),
+                ));
+                let unreg = "{\"op\":\"unregister\",\"name\":\"churn\"}\n";
+                let r = roundtrip(&mut sock, &mut reader, unreg);
+                assert_eq!(r.get("ok").as_bool(), Some(true), "churn unregister {round}: {r}");
+            }
+        });
+    });
+
+    // gauges sampled during the churn are monotone non-decreasing
+    let samples = gauges.into_inner().unwrap();
+    assert_eq!(samples.len(), 5);
+    for w in samples.windows(2) {
+        assert!(w[1].0 >= w[0].0, "shard_cache hits went backwards: {samples:?}");
+        assert!(w[1].1 >= w[0].1, "shard_cache misses went backwards: {samples:?}");
+    }
+}
+
+#[test]
+fn npy_version_fixtures_parse_identically() {
+    // Checked-in regression fixtures: the same 2x3 arange payload written
+    // as v1.0 with 16-byte padding (old numpy), v2.0, and v3.0. The reader
+    // must produce identical matrices for all three.
+    let fixtures = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures");
+    let want: Vec<f32> = (0..6).map(|i| i as f32).collect();
+    for name in ["v1_pad16.npy", "v2.npy", "v3.npy"] {
+        let m = corrsh::util::npy::read(fixtures.join(name))
+            .unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!((m.rows, m.cols), (2, 3), "{name}");
+        assert_eq!(m.data, want, "{name}");
+    }
+    // and an f8 v2 fixture downcasts exactly as the v1 reader did
+    let m = corrsh::util::npy::read(fixtures.join("v2_f8.npy")).unwrap();
+    assert_eq!(m.data, vec![0.5, -1.5]);
+    // sharding straight from a fixture file works end to end
+    let dir = tmp("fixture-shard");
+    let manifest = store::shard_file(fixtures.join("v2.npy"), dir.join("shards"), 1).unwrap();
+    let sd = ShardedData::open(&manifest).unwrap();
+    assert_eq!((sd.n(), sd.dim()), (2, 3));
+    let mut row = vec![0f32; 3];
+    sd.densify_row_into(1, &mut row);
+    assert_eq!(row, vec![3.0, 4.0, 5.0]);
+}
+
+#[test]
+fn sharded_cache_stays_bounded_under_load() {
+    // A full-universe corrSH run over a pinned shard set with a small
+    // budget: pinned bytes (global gauge) must stay near the budget, not
+    // the dataset size.
+    let n = 500;
+    let dim = 32;
+    let cfg = SynthConfig { n, dim, seed: 13, ..Default::default() };
+    let data = Kind::Gaussian.generate(&cfg);
+    let dir = tmp("bounded");
+    let manifest = store::write_sharded(&data, dir.join("shards"), 64).unwrap();
+    let budget = 16 * 1024;
+    let sd = ShardedData::open_with(
+        &manifest,
+        &StoreOptions { cache_bytes: budget, block_bytes: 2048, force_pinned: true },
+    )
+    .unwrap();
+    let engine = NativeEngine::with_threads(Arc::new(Data::Sharded(sd.clone())), Metric::L2, 4);
+    let res = CorrSh::with_pulls_per_arm(16.0).run(&engine, &mut Rng::seeded(1));
+    assert!(res.best < n);
+    assert!(
+        sd.pinned_bytes() <= budget + 2048,
+        "cache grew past its budget: {} > {budget}",
+        sd.pinned_bytes()
+    );
+    assert!(cache_stats().misses() > 0);
+}
