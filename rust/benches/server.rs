@@ -7,13 +7,31 @@
 //! "Cold" re-registers the dataset before every query, which invalidates
 //! the session cache and forces the O(n·d) preparation pass — the cost
 //! every query paid before PR 2. "Cached" is the server's steady state.
+//!
+//! The `soak/*` rows (PR 6) exercise the epoll event loop end to end:
+//! thousands of idle connections held open while hundreds of active
+//! clients pipeline v2 queries over real sockets, then a deliberate
+//! overload burst to measure the admission-control shed rate. The server
+//! side runs on one event-loop thread plus the worker pool; every
+//! response is id-matched against the blocking `State::handle` baseline.
 
-use corrsh::server::{Executor, State};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+use corrsh::config::ServerConfig;
+use corrsh::server::{
+    event_loop_supported, raise_nofile_limit, serve_background_with, Executor, State,
+};
 use corrsh::util::bench::Bencher;
 use corrsh::util::json;
 
 fn req(s: &str) -> json::Value {
     json::parse(s).unwrap()
+}
+
+fn env_or(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
 }
 
 fn main() {
@@ -96,6 +114,171 @@ fn main() {
         exec.shutdown();
     }
 
+    soak(&mut b);
+
     b.write_jsonl();
     b.write_bench_json("server");
+}
+
+const SOAK_REGISTER: &str =
+    r#"{"op":"register","name":"soak","kind":"gaussian","n":500,"dim":16,"seed":1}"#;
+const SAT_REGISTER: &str =
+    r#"{"op":"register","name":"sat","kind":"gaussian","n":4000,"dim":32,"seed":2}"#;
+const REQS_PER_CLIENT: usize = 20;
+const SEEDS: usize = 32;
+const SAT_REQS: usize = 256;
+
+/// Soak the event loop: `CORRSH_BENCH_SOAK_IDLE` idle connections (default
+/// 2000, degraded gracefully if the fd limit is lower) plus
+/// `CORRSH_BENCH_SOAK_ACTIVE` pipelined clients (default 200), then an
+/// overload burst against a single quota-capped connection.
+fn soak(b: &mut Bencher) {
+    b.group("soak");
+    if !event_loop_supported() {
+        // Keep the row schema stable for CI even where the epoll loop is
+        // compiled out (the blocking fallback would need a thread per
+        // connection, which defeats the point of a soak).
+        b.record_metric("idle_conns", 0.0, "connections");
+        b.record_metric("active_clients", 0.0, "clients");
+        b.record_metric("sustained_rps", 0.0, "req/s");
+        b.record_metric("p99_ms", 0.0, "ms");
+        b.record_metric("shed_rate", 0.0, "fraction");
+        return;
+    }
+    let fd_limit = raise_nofile_limit();
+    let active = env_or("CORRSH_BENCH_SOAK_ACTIVE", 200);
+    let idle_target = env_or("CORRSH_BENCH_SOAK_IDLE", 2000);
+    // Every connection costs two fds here (the client end and the
+    // in-process server end); keep headroom for the process itself.
+    let budget = (fd_limit.saturating_sub(256) / 2) as usize;
+    let idle = idle_target.min(budget.saturating_sub(2 * active));
+
+    // Blocking-server baseline: the deterministic winner per seed.
+    let reference = State::new();
+    let r = reference.handle(&req(SOAK_REGISTER));
+    assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+    let mut baseline = Vec::with_capacity(SEEDS);
+    for seed in 0..SEEDS {
+        let r = reference.handle(&req(&format!(
+            r#"{{"op":"medoid","dataset":"soak","pulls_per_arm":16,"seed":{seed}}}"#
+        )));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        baseline.push(r.get("medoid").as_usize().unwrap());
+    }
+
+    let state = State::new();
+    assert_eq!(state.handle(&req(SOAK_REGISTER)).get("ok").as_bool(), Some(true));
+    assert_eq!(state.handle(&req(SAT_REGISTER)).get("ok").as_bool(), Some(true));
+    let cfg = ServerConfig {
+        workers: 4,
+        queue_cap: 8192,
+        max_connections: idle + active + 64,
+        max_inflight_per_conn: 64,
+        idle_timeout_ms: 0,
+        ..Default::default()
+    };
+    let addr = serve_background_with(state, &cfg).unwrap();
+
+    let mut idle_conns = Vec::with_capacity(idle);
+    for _ in 0..idle {
+        match TcpStream::connect(addr) {
+            Ok(s) => idle_conns.push(s),
+            Err(_) => break, // fd pressure: record the degraded count below
+        }
+    }
+
+    // Active phase: each client writes its whole pipelined burst in one
+    // syscall, then collects id-matched responses. Latency is measured
+    // per response from the burst write, i.e. it includes queueing behind
+    // the client's own pipeline — the number a pipelining client observes.
+    let start = Instant::now();
+    let mut handles = Vec::with_capacity(active);
+    for c in 0..active {
+        let baseline = baseline.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut sock = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(sock.try_clone().unwrap());
+            let mut burst = String::new();
+            for j in 0..REQS_PER_CLIENT {
+                let id = (c * REQS_PER_CLIENT + j) as u64 + 1;
+                let seed = (c * REQS_PER_CLIENT + j) % SEEDS;
+                burst.push_str(&format!(
+                    "{{\"v\":2,\"id\":{id},\"op\":\"medoid\",\
+                     \"params\":{{\"dataset\":\"soak\",\"pulls_per_arm\":16,\"seed\":{seed}}}}}\n"
+                ));
+            }
+            let t0 = Instant::now();
+            sock.write_all(burst.as_bytes()).unwrap();
+            let mut lat_us = Vec::with_capacity(REQS_PER_CLIENT);
+            let mut seen = [false; REQS_PER_CLIENT];
+            for _ in 0..REQS_PER_CLIENT {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let resp = json::parse(line.trim()).unwrap();
+                assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp}");
+                let id = resp.get("id").as_u64().unwrap() as usize;
+                let j = (id - 1) - c * REQS_PER_CLIENT;
+                assert!(j < REQS_PER_CLIENT && !seen[j], "bad or duplicate id {id}");
+                seen[j] = true;
+                let want = baseline[(id - 1) % SEEDS];
+                assert_eq!(
+                    resp.get("result").get("medoid").as_usize(),
+                    Some(want),
+                    "medoid diverged from the blocking baseline (id {id})"
+                );
+                lat_us.push(t0.elapsed().as_micros() as u64);
+            }
+            lat_us
+        }));
+    }
+    let mut lat_us: Vec<u64> = Vec::with_capacity(active * REQS_PER_CLIENT);
+    for h in handles {
+        // A panic here means a dropped/duplicated in-flight request.
+        lat_us.extend(h.join().expect("soak client failed"));
+    }
+    let wall = start.elapsed().as_secs_f64();
+    let total = active * REQS_PER_CLIENT;
+    lat_us.sort_unstable();
+    let p99_ms = lat_us[(total * 99 / 100).min(total - 1)] as f64 / 1000.0;
+
+    // The idle pool must have survived the whole active phase.
+    for i in [0, idle_conns.len().saturating_sub(1)] {
+        let Some(s) = idle_conns.get_mut(i) else { continue };
+        s.write_all(b"{\"v\":2,\"id\":7,\"op\":\"ping\"}\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(s.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("\"pong\":true"), "idle connection died during soak: {line}");
+    }
+
+    // Overload burst: one connection, quota 64, 256 requests in one write.
+    // Admission control must answer the overflow with structured
+    // `overloaded` errors instead of stalling or dropping frames.
+    let mut sat = TcpStream::connect(addr).unwrap();
+    let mut sat_reader = BufReader::new(sat.try_clone().unwrap());
+    let mut burst = String::new();
+    for i in 0..SAT_REQS {
+        burst.push_str(&format!(
+            "{{\"v\":2,\"id\":{},\"op\":\"medoid\",\
+             \"params\":{{\"dataset\":\"sat\",\"pulls_per_arm\":24,\"seed\":3}}}}\n",
+            i + 1
+        ));
+    }
+    sat.write_all(burst.as_bytes()).unwrap();
+    let mut shed = 0usize;
+    for _ in 0..SAT_REQS {
+        let mut line = String::new();
+        sat_reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        if resp.get("ok").as_bool() != Some(true) {
+            assert_eq!(resp.get("error").get("code").as_str(), Some("overloaded"), "{resp}");
+            shed += 1;
+        }
+    }
+    assert!(shed > 0, "saturation burst produced no overload sheds");
+
+    b.record_metric("idle_conns", idle_conns.len() as f64, "connections");
+    b.record_metric("active_clients", active as f64, "clients");
+    b.record_metric("sustained_rps", total as f64 / wall, "req/s");
+    b.record_metric("p99_ms", p99_ms, "ms");
+    b.record_metric("shed_rate", shed as f64 / SAT_REQS as f64, "fraction");
 }

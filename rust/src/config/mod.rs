@@ -190,7 +190,8 @@ impl KMedoidsConfig {
     }
 }
 
-/// Server runtime shape: the `serve` command and `server::Executor`.
+/// Server runtime shape: the `serve` command, `server::Executor`, and the
+/// event loop's admission-control knobs.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ServerConfig {
     pub addr: String,
@@ -199,17 +200,51 @@ pub struct ServerConfig {
     /// Bounded request-queue capacity; submitters block (backpressure)
     /// once it is full.
     pub queue_cap: usize,
+    /// Maximum bytes in a single request line; oversized frames are
+    /// answered with `error.code:"bad_request"` instead of buffering.
+    pub max_request_bytes: usize,
+    /// Open-connection cap; connections beyond it are refused with an
+    /// `overloaded` line at accept time.
+    pub max_connections: usize,
+    /// v2 in-flight quota per connection; excess requests are shed.
+    pub max_inflight_per_conn: usize,
+    /// In-flight quota per dataset across all connections (multi-tenant
+    /// fairness); excess v2 requests are shed, v1 requests are deferred.
+    pub max_inflight_per_dataset: usize,
+    /// Executor queue depth at which new v2 requests are shed with
+    /// `overloaded` (0 → use `queue_cap`).
+    pub shed_watermark: usize,
+    /// Close connections idle (no traffic, nothing in flight) longer than
+    /// this; 0 disables the idle sweep.
+    pub idle_timeout_ms: u64,
+    /// Per-connection buffered-output threshold above which the event loop
+    /// stops reading that socket (write backpressure).
+    pub write_buf_bytes: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7878".to_string(), workers: 0, queue_cap: 256 }
+        ServerConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 0,
+            queue_cap: 256,
+            max_request_bytes: 1 << 20,
+            max_connections: 4096,
+            max_inflight_per_conn: 64,
+            max_inflight_per_dataset: 256,
+            shed_watermark: 0,
+            idle_timeout_ms: 30_000,
+            write_buf_bytes: 1 << 20,
+        }
     }
 }
 
 impl ServerConfig {
     /// Parse from the optional `"server"` object of a config file:
-    /// `{"server": {"addr": "0.0.0.0:7878", "workers": 8, "queue_cap": 512}}`.
+    /// `{"server": {"addr": "0.0.0.0:7878", "workers": 8, "queue_cap": 512,
+    /// "max_request_bytes": 1048576, "max_connections": 4096,
+    /// "max_inflight_per_conn": 64, "max_inflight_per_dataset": 256,
+    /// "shed_watermark": 0, "idle_timeout_ms": 30000}}`.
     pub fn from_json_value(v: &Value) -> Result<Self> {
         let mut cfg = ServerConfig::default();
         let s = v.get("server");
@@ -225,6 +260,32 @@ impl ServerConfig {
         if let Some(c) = s.get("queue_cap").as_usize() {
             crate::ensure!(c >= 1, "server.queue_cap must be >= 1");
             cfg.queue_cap = c;
+        }
+        if let Some(b) = s.get("max_request_bytes").as_usize() {
+            crate::ensure!(b >= 1, "server.max_request_bytes must be >= 1");
+            cfg.max_request_bytes = b;
+        }
+        if let Some(c) = s.get("max_connections").as_usize() {
+            crate::ensure!(c >= 1, "server.max_connections must be >= 1");
+            cfg.max_connections = c;
+        }
+        if let Some(q) = s.get("max_inflight_per_conn").as_usize() {
+            crate::ensure!(q >= 1, "server.max_inflight_per_conn must be >= 1");
+            cfg.max_inflight_per_conn = q;
+        }
+        if let Some(q) = s.get("max_inflight_per_dataset").as_usize() {
+            crate::ensure!(q >= 1, "server.max_inflight_per_dataset must be >= 1");
+            cfg.max_inflight_per_dataset = q;
+        }
+        if let Some(w) = s.get("shed_watermark").as_usize() {
+            cfg.shed_watermark = w;
+        }
+        if let Some(t) = s.get("idle_timeout_ms").as_u64() {
+            cfg.idle_timeout_ms = t;
+        }
+        if let Some(b) = s.get("write_buf_bytes").as_usize() {
+            crate::ensure!(b >= 1, "server.write_buf_bytes must be >= 1");
+            cfg.write_buf_bytes = b;
         }
         Ok(cfg)
     }
@@ -470,16 +531,35 @@ mod tests {
     fn server_config_parses_and_defaults() {
         let cfg = ServerConfig::from_json_value(&json::parse("{}").unwrap()).unwrap();
         assert_eq!(cfg, ServerConfig::default());
+        assert_eq!(cfg.max_request_bytes, 1 << 20);
         let v = json::parse(
-            r#"{"server": {"addr": "0.0.0.0:9000", "workers": 8, "queue_cap": 512}}"#,
+            r#"{"server": {"addr": "0.0.0.0:9000", "workers": 8, "queue_cap": 512,
+                "max_request_bytes": 4096, "max_connections": 100,
+                "max_inflight_per_conn": 2, "max_inflight_per_dataset": 5,
+                "shed_watermark": 7, "idle_timeout_ms": 0, "write_buf_bytes": 65536}}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json_value(&v).unwrap();
         assert_eq!(cfg.addr, "0.0.0.0:9000");
         assert_eq!(cfg.workers, 8);
         assert_eq!(cfg.queue_cap, 512);
-        let bad = json::parse(r#"{"server": {"queue_cap": 0}}"#).unwrap();
-        assert!(ServerConfig::from_json_value(&bad).is_err());
+        assert_eq!(cfg.max_request_bytes, 4096);
+        assert_eq!(cfg.max_connections, 100);
+        assert_eq!(cfg.max_inflight_per_conn, 2);
+        assert_eq!(cfg.max_inflight_per_dataset, 5);
+        assert_eq!(cfg.shed_watermark, 7);
+        assert_eq!(cfg.idle_timeout_ms, 0);
+        assert_eq!(cfg.write_buf_bytes, 65536);
+        for bad in [
+            r#"{"server": {"queue_cap": 0}}"#,
+            r#"{"server": {"max_request_bytes": 0}}"#,
+            r#"{"server": {"max_connections": 0}}"#,
+            r#"{"server": {"max_inflight_per_conn": 0}}"#,
+            r#"{"server": {"max_inflight_per_dataset": 0}}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(ServerConfig::from_json_value(&v).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

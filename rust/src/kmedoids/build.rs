@@ -15,7 +15,7 @@
 
 use crate::bandits::corr_sh::{correlated_halving_argmin, Budget};
 use crate::engine::PullEngine;
-use crate::kmedoids::ClusterState;
+use crate::kmedoids::{ClusterState, Trajectory};
 use crate::util::rng::Rng;
 
 /// Run BUILD: returns the seeded state (medoids + cached rows, refreshed)
@@ -25,7 +25,7 @@ pub(crate) fn run(
     k: usize,
     pulls_per_arm: f64,
     rng: &mut Rng,
-    trajectory: &mut Vec<f64>,
+    trajectory: &mut Trajectory<'_>,
 ) -> (ClusterState, u64) {
     let n = engine.n();
     let mut state = ClusterState::new(n);
@@ -107,7 +107,7 @@ mod tests {
         });
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         for seed in 0..3 {
-            let mut trajectory = Vec::new();
+            let mut trajectory = Trajectory::new();
             let (state, pulls) = run(&engine, k, 12.0, &mut Rng::seeded(seed), &mut trajectory);
             assert_eq!(state.medoids.len(), k);
             // generator layout: point j belongs to cluster j % k
@@ -120,9 +120,10 @@ mod tests {
                 "seed {seed}: medoids {:?} leave a cluster uncovered",
                 state.medoids
             );
-            assert!(pulls > 0 && trajectory.len() == k);
-            for w in trajectory.windows(2) {
-                assert!(w[1] <= w[0] + 1e-9, "BUILD loss increased: {trajectory:?}");
+            let points = trajectory.points();
+            assert!(pulls > 0 && points.len() == k);
+            for w in points.windows(2) {
+                assert!(w[1] <= w[0] + 1e-9, "BUILD loss increased: {points:?}");
             }
         }
     }
@@ -141,7 +142,7 @@ mod tests {
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         let mut hits = 0;
         for seed in 0..5 {
-            let mut traj = Vec::new();
+            let mut traj = Trajectory::new();
             let (state, _) = run(&engine, 1, 48.0, &mut Rng::seeded(seed), &mut traj);
             hits += (state.medoids == vec![0]) as usize;
         }

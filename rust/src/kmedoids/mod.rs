@@ -84,6 +84,56 @@ pub trait ClusteringAlgorithm {
     fn run(&self, engine: &dyn PullEngine, rng: &mut Rng) -> KMedoidsResult;
 }
 
+/// The loss trajectory under construction, with an optional live observer
+/// (the server's streaming-partials hook). `push` has the same call syntax
+/// as the `Vec<f64>` it replaced; the observer additionally sees
+/// `(phase, step-within-phase, loss)` for every point, as it happens, and
+/// never affects the recorded trajectory or the run's determinism.
+pub(crate) struct Trajectory<'a> {
+    points: Vec<f64>,
+    phase: &'static str,
+    step: usize,
+    observer: Option<&'a mut dyn FnMut(&'static str, usize, f64)>,
+}
+
+impl Default for Trajectory<'_> {
+    fn default() -> Self {
+        Trajectory { points: Vec::new(), phase: "", step: 0, observer: None }
+    }
+}
+
+impl<'a> Trajectory<'a> {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn with_observer(observer: &'a mut dyn FnMut(&'static str, usize, f64)) -> Self {
+        Trajectory { observer: Some(observer), ..Self::default() }
+    }
+
+    pub(crate) fn set_phase(&mut self, phase: &'static str) {
+        self.phase = phase;
+        self.step = 0;
+    }
+
+    pub(crate) fn push(&mut self, loss: f64) {
+        if let Some(obs) = self.observer.as_mut() {
+            obs(self.phase, self.step, loss);
+        }
+        self.step += 1;
+        self.points.push(loss);
+    }
+
+    #[cfg(test)]
+    pub(crate) fn points(&self) -> &[f64] {
+        &self.points
+    }
+
+    pub(crate) fn into_points(self) -> Vec<f64> {
+        self.points
+    }
+}
+
 /// Cached per-medoid distance rows plus the derived assignment structure.
 /// `rows` is row-major k×n with `rows[c·n + j] = d(medoids[c], x_j)` — the
 /// only O(k·n) state the phases share; every update (swap, polish) replaces
@@ -177,14 +227,28 @@ impl BanditKMedoids {
     pub fn new(cfg: KMedoidsConfig) -> Self {
         BanditKMedoids { cfg }
     }
-}
 
-impl ClusteringAlgorithm for BanditKMedoids {
-    fn name(&self) -> &'static str {
-        "bandit-kmedoids"
+    /// [`ClusteringAlgorithm::run`] with a live view of the loss
+    /// trajectory: `observer` is called with `(phase, step, loss)` for
+    /// every trajectory point as the run produces it — phases are
+    /// `"build"`, `"swap"`, `"polish"` — which the server streams to
+    /// clients as `"partial":true` frames. The observer is passive: the
+    /// result is identical to `run` for the same engine and seed.
+    pub fn run_with_observer(
+        &self,
+        engine: &dyn PullEngine,
+        rng: &mut Rng,
+        observer: &mut dyn FnMut(&'static str, usize, f64),
+    ) -> KMedoidsResult {
+        self.run_inner(engine, rng, Trajectory::with_observer(observer))
     }
 
-    fn run(&self, engine: &dyn PullEngine, rng: &mut Rng) -> KMedoidsResult {
+    fn run_inner(
+        &self,
+        engine: &dyn PullEngine,
+        rng: &mut Rng,
+        mut trajectory: Trajectory<'_>,
+    ) -> KMedoidsResult {
         let start = Instant::now();
         let n = engine.n();
         if n == 0 {
@@ -202,11 +266,12 @@ impl ClusteringAlgorithm for BanditKMedoids {
             };
         }
         let k = self.cfg.k.clamp(1, n);
-        let mut trajectory = Vec::new();
 
+        trajectory.set_phase("build");
         let (mut state, build_pulls) =
             build::run(engine, k, self.cfg.build_pulls_per_arm, rng, &mut trajectory);
 
+        trajectory.set_phase("swap");
         let swap_out = if self.cfg.max_swap_rounds > 0 && k < n {
             swap::run(
                 engine,
@@ -220,6 +285,7 @@ impl ClusteringAlgorithm for BanditKMedoids {
             swap::SwapOutcome::default()
         };
 
+        trajectory.set_phase("polish");
         let polish_pulls = if self.cfg.polish_pulls_per_arm > 0.0 {
             polish(engine, &mut state, self.cfg.polish_pulls_per_arm, rng, &mut trajectory)
         } else {
@@ -231,7 +297,7 @@ impl ClusteringAlgorithm for BanditKMedoids {
             assignments: state.nearest.clone(),
             loss: state.loss(),
             medoids: state.medoids,
-            loss_trajectory: trajectory,
+            loss_trajectory: trajectory.into_points(),
             build_pulls,
             swap_pulls: swap_out.pulls,
             polish_pulls,
@@ -239,6 +305,16 @@ impl ClusteringAlgorithm for BanditKMedoids {
             swaps_accepted: swap_out.accepted,
             wall: start.elapsed(),
         }
+    }
+}
+
+impl ClusteringAlgorithm for BanditKMedoids {
+    fn name(&self) -> &'static str {
+        "bandit-kmedoids"
+    }
+
+    fn run(&self, engine: &dyn PullEngine, rng: &mut Rng) -> KMedoidsResult {
+        self.run_inner(engine, rng, Trajectory::new())
     }
 }
 
@@ -251,7 +327,7 @@ fn polish(
     state: &mut ClusterState,
     pulls_per_arm: f64,
     rng: &mut Rng,
-    trajectory: &mut Vec<f64>,
+    trajectory: &mut Trajectory<'_>,
 ) -> u64 {
     let n = engine.n();
     let k = state.medoids.len();
@@ -415,6 +491,42 @@ mod tests {
         let mut sorted = res.medoids.clone();
         sorted.sort_unstable();
         assert_eq!(sorted, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn observer_sees_every_trajectory_point_without_changing_the_run() {
+        let engine = mixture_engine(600, 4, 7);
+        let algo = BanditKMedoids::new(KMedoidsConfig { k: 4, ..Default::default() });
+        let plain = algo.run(&engine, &mut Rng::seeded(1));
+        let mut seen: Vec<(&'static str, usize, f64)> = Vec::new();
+        let mut observer = |phase: &'static str, step: usize, loss: f64| {
+            seen.push((phase, step, loss));
+        };
+        let observed = algo.run_with_observer(&engine, &mut Rng::seeded(1), &mut observer);
+        // Passive observer: identical result.
+        assert_eq!(observed.medoids, plain.medoids);
+        assert_eq!(observed.pulls(), plain.pulls());
+        assert_eq!(observed.loss_trajectory, plain.loss_trajectory);
+        // Every trajectory point was streamed, in order.
+        let losses: Vec<f64> = seen.iter().map(|&(_, _, l)| l).collect();
+        assert_eq!(losses, plain.loss_trajectory);
+        // BUILD contributes exactly k points as steps 0..k, and phase
+        // labels stay within the known set with per-phase step counters.
+        assert_eq!(seen[..4].iter().map(|&(p, s, _)| (p, s)).collect::<Vec<_>>(), vec![
+            ("build", 0),
+            ("build", 1),
+            ("build", 2),
+            ("build", 3)
+        ]);
+        for &(phase, _, _) in &seen {
+            assert!(matches!(phase, "build" | "swap" | "polish"), "unknown phase {phase}");
+        }
+        let mut last: std::collections::HashMap<&str, usize> = Default::default();
+        for &(phase, step, _) in &seen[..] {
+            let next = last.entry(phase).or_insert(0);
+            assert_eq!(step, *next, "non-contiguous steps in phase {phase}");
+            *next += 1;
+        }
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::collections::HashMap;
 
 use crate::bandits::corr_sh::{correlated_halving_argmin, Budget};
 use crate::engine::PullEngine;
-use crate::kmedoids::ClusterState;
+use crate::kmedoids::{ClusterState, Trajectory};
 use crate::util::rng::Rng;
 
 /// SWAP phase outcome: engine-boundary pulls, rounds run, swaps applied.
@@ -38,7 +38,7 @@ pub(crate) fn run(
     pulls_per_arm: f64,
     max_rounds: usize,
     rng: &mut Rng,
-    trajectory: &mut Vec<f64>,
+    trajectory: &mut Trajectory<'_>,
 ) -> SwapOutcome {
     let n = engine.n();
     let k = state.medoids.len();
@@ -136,7 +136,7 @@ mod tests {
         });
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         let mut rng = Rng::seeded(2);
-        let mut trajectory = Vec::new();
+        let mut trajectory = Trajectory::new();
         // Deliberately under-budget BUILD so SWAP has work to do.
         let (mut state, _) = build::run(&engine, 3, 2.0, &mut rng, &mut trajectory);
         state.refresh();
@@ -181,7 +181,7 @@ mod tests {
         state.refresh();
         let before = state.loss();
         let mut rng = Rng::seeded(0);
-        let mut trajectory = Vec::new();
+        let mut trajectory = Trajectory::new();
         let out = run(&engine, &mut state, 6.0, 6, &mut rng, &mut trajectory);
         assert!(out.accepted >= 1, "SWAP accepted nothing on an improvable seed");
         state.refresh();

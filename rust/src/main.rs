@@ -30,6 +30,8 @@ const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen|shard> [flags
             [--scale N] [--trials T] [--seed S]
   stats:    --preset P [--scale N] [--seed S]
   serve:    [--addr HOST:PORT] [--preload P] [--workers N] [--queue-cap N]
+            [--max-request-bytes N] [--max-connections N] [--max-inflight-per-conn N]
+            [--max-inflight-per-dataset N] [--shed-watermark N] [--idle-timeout-ms MS]
   gen:      --kind K --n N --dim D [--seed S] --out FILE.npy
   shard:    <in.npy|in.csr|manifest.json> <out-dir> [--rows-per-shard N]
             | --kind K --n N --dim D [--seed S] --out DIR (streams at scale)";
@@ -352,6 +354,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         addr: args.str_or("addr", &defaults.addr),
         workers: args.parse_or("workers", defaults.workers)?,
         queue_cap: args.parse_or("queue-cap", defaults.queue_cap)?,
+        max_request_bytes: args.parse_or("max-request-bytes", defaults.max_request_bytes)?,
+        max_connections: args.parse_or("max-connections", defaults.max_connections)?,
+        max_inflight_per_conn: args
+            .parse_or("max-inflight-per-conn", defaults.max_inflight_per_conn)?,
+        max_inflight_per_dataset: args
+            .parse_or("max-inflight-per-dataset", defaults.max_inflight_per_dataset)?,
+        shed_watermark: args.parse_or("shed-watermark", defaults.shed_watermark)?,
+        idle_timeout_ms: args.parse_or("idle-timeout-ms", defaults.idle_timeout_ms)?,
+        write_buf_bytes: defaults.write_buf_bytes,
     };
     let preload = args.str_opt("preload").map(str::to_string);
     args.finish()?;

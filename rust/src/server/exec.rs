@@ -1,0 +1,382 @@
+//! Bounded-queue request executor: a fixed set of workers drains a
+//! capacity-capped queue of parsed request envelopes. Transport code only
+//! frames bytes and enqueues — heavy work (engine queries, which
+//! themselves fan out on the worker pool) happens on executor workers, so
+//! a burst of clients applies backpressure instead of spawning a compute
+//! avalanche.
+//!
+//! Two submission paths:
+//! - [`Executor::submit`] / [`Executor::submit_env`] block the calling
+//!   thread until the response is ready (the blocking fallback server, the
+//!   CLI preload, benches).
+//! - [`Executor::try_submit`] never blocks: it enqueues with a completion
+//!   callback, or returns the envelope with a [`SubmitError`] so the event
+//!   loop can shape a structured `overloaded` / `shutting_down` response.
+//!
+//! Workers serialize responses to wire shape themselves (envelope +
+//! streaming partial frames), keeping JSON work off the event-loop thread.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::metrics::Gauge;
+use crate::server::ops::State;
+use crate::server::proto::{self, Envelope, OpError};
+use crate::util::json::Value;
+use crate::util::threads;
+
+/// Why a [`Executor::try_submit`] was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is full.
+    Overloaded,
+    /// A `shutdown` request has been accepted.
+    ShuttingDown,
+}
+
+/// Where a finished (or streaming) wire frame goes. `fin` marks the final
+/// frame for the request.
+pub(crate) enum Responder {
+    /// Blocking caller: parked on the slot. Partial frames are dropped —
+    /// a blocking call site has nowhere to deliver them early.
+    Slot(Arc<ResponseSlot>),
+    /// Event-loop caller: frames are handed to the callback as they are
+    /// produced (off-loop serialization happens before the call).
+    Callback(Box<dyn FnMut(Value, bool) + Send>),
+}
+
+impl Responder {
+    fn send(&mut self, frame: Value, fin: bool) {
+        match self {
+            Responder::Slot(slot) => {
+                if fin {
+                    slot.fill(frame);
+                }
+            }
+            Responder::Callback(cb) => cb(frame, fin),
+        }
+    }
+}
+
+/// One queued envelope plus where its frames go.
+struct ExecJob {
+    env: Envelope,
+    responder: Responder,
+}
+
+#[derive(Default)]
+pub(crate) struct ResponseSlot {
+    value: Mutex<Option<Value>>,
+    ready: Condvar,
+}
+
+impl ResponseSlot {
+    fn fill(&self, v: Value) {
+        *self.value.lock().unwrap() = Some(v);
+        self.ready.notify_all();
+    }
+
+    fn wait(&self) -> Value {
+        let mut v = self.value.lock().unwrap();
+        while v.is_none() {
+            v = self.ready.wait(v).unwrap();
+        }
+        v.take().expect("slot filled")
+    }
+}
+
+struct ExecQueue {
+    jobs: VecDeque<ExecJob>,
+    shutdown: bool,
+}
+
+struct ExecShared {
+    queue: Mutex<ExecQueue>,
+    /// Workers wait here for jobs.
+    ready: Condvar,
+    /// Blocking submitters wait here while the bounded queue is full.
+    space: Condvar,
+    cap: usize,
+    depth: Gauge,
+}
+
+/// The bounded request executor (see module docs).
+pub struct Executor {
+    state: Arc<State>,
+    shared: Arc<ExecShared>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Executor {
+    /// `workers == 0` means `threads::default_threads()`.
+    pub fn new(state: Arc<State>, workers: usize, queue_cap: usize) -> Arc<Self> {
+        let workers = if workers == 0 { threads::default_threads() } else { workers };
+        let shared = Arc::new(ExecShared {
+            queue: Mutex::new(ExecQueue { jobs: VecDeque::new(), shutdown: false }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+            cap: queue_cap.max(1),
+            depth: Gauge::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let state = state.clone();
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("corrsh-exec-{i}"))
+                    .spawn(move || exec_worker(state, shared, workers))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Arc::new(Executor { state, shared, workers: Mutex::new(handles) })
+    }
+
+    pub fn state(&self) -> &Arc<State> {
+        &self.state
+    }
+
+    pub fn queue_depth(&self) -> u64 {
+        self.shared.depth.get()
+    }
+
+    pub fn queue_cap(&self) -> usize {
+        self.shared.cap
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    /// Submit one bare v1 request object and block for its flattened
+    /// response (the legacy call surface; benches and tests use it).
+    pub fn submit(&self, req: Value) -> Value {
+        self.submit_env(proto::v1_envelope(&req))
+    }
+
+    /// Submit one envelope and block for its final wire frame. Applies
+    /// backpressure (blocks) while the bounded queue is full; after
+    /// shutdown, returns the shaped error immediately.
+    pub fn submit_env(&self, env: Envelope) -> Value {
+        let slot = Arc::new(ResponseSlot::default());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            loop {
+                if q.shutdown {
+                    return proto::wire_final(&env, Err(OpError::shutting_down()));
+                }
+                if q.jobs.len() < self.shared.cap {
+                    break;
+                }
+                q = self.shared.space.wait(q).unwrap();
+            }
+            q.jobs.push_back(ExecJob { env, responder: Responder::Slot(slot.clone()) });
+            self.shared.depth.inc();
+        }
+        self.shared.ready.notify_one();
+        slot.wait()
+    }
+
+    /// Non-blocking submission for the event loop: enqueue with a frame
+    /// callback, or hand the envelope back with the refusal reason so the
+    /// caller can shape the load-shed response itself.
+    pub(crate) fn try_submit(
+        &self,
+        env: Envelope,
+        cb: Box<dyn FnMut(Value, bool) + Send>,
+    ) -> Result<(), (Envelope, SubmitError)> {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.shutdown {
+                return Err((env, SubmitError::ShuttingDown));
+            }
+            if q.jobs.len() >= self.shared.cap {
+                return Err((env, SubmitError::Overloaded));
+            }
+            q.jobs.push_back(ExecJob { env, responder: Responder::Callback(cb) });
+            self.shared.depth.inc();
+        }
+        self.shared.ready.notify_one();
+        Ok(())
+    }
+
+    /// Stop accepting new work, drain already-queued requests, join the
+    /// workers. Idempotent.
+    pub fn shutdown(&self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.ready.notify_all();
+        self.shared.space.notify_all();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn exec_worker(state: Arc<State>, shared: Arc<ExecShared>, workers: usize) {
+    let mut q = shared.queue.lock().unwrap();
+    loop {
+        match q.jobs.pop_front() {
+            Some(mut job) => {
+                shared.depth.dec();
+                drop(q);
+                shared.space.notify_one();
+                run_job(&state, &shared, workers, &mut job);
+                q = shared.queue.lock().unwrap();
+            }
+            None if q.shutdown => return,
+            None => q = shared.ready.wait(q).unwrap(),
+        }
+    }
+}
+
+fn run_job(state: &State, shared: &ExecShared, workers: usize, job: &mut ExecJob) {
+    let env: &Envelope = &job.env;
+    let responder = &mut job.responder;
+    let mut seq = 0u64;
+    // A panicking handler must neither kill this worker nor leave the
+    // caller without a final frame.
+    let outcome = {
+        let streaming = env.v >= 2;
+        let mut sink = |payload: Value| {
+            // Partial frames are v2-only: v1 clients read responses in
+            // order and would misparse interleaved frames.
+            if streaming {
+                responder.send(proto::wire_partial(env, seq, payload), false);
+                seq += 1;
+            }
+        };
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            state.execute(env, &mut sink)
+        }))
+    };
+    let mut result = outcome.unwrap_or_else(|_| {
+        state.errors.fetch_add(1, Ordering::Relaxed);
+        Err(OpError::internal("internal error: request handler panicked"))
+    });
+    // Executor-level numbers are merged here (the pure State doesn't know
+    // about queues).
+    if env.op == "metrics" {
+        if let Ok(Value::Object(obj)) = &mut result {
+            obj.insert(
+                "executor".to_string(),
+                Value::from_pairs(vec![
+                    ("queue_depth", shared.depth.get().into()),
+                    ("queue_cap", shared.cap.into()),
+                    ("workers", workers.into()),
+                ]),
+            );
+        }
+    }
+    responder.send(proto::wire_final(env, result), true);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn req(s: &str) -> Value {
+        json::parse(s).unwrap()
+    }
+
+    fn register_toy(state: &State, name: &str) {
+        let r = state.handle(&req(&format!(
+            r#"{{"op":"register","name":"{name}","kind":"gaussian","n":200,"dim":8,"seed":4}}"#
+        )));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "register failed: {r}");
+    }
+
+    #[test]
+    fn executor_roundtrip_and_shutdown() {
+        let state = State::new();
+        register_toy(&state, "toy");
+        let exec = Executor::new(state, 2, 4);
+        assert_eq!(exec.workers(), 2);
+        let r = exec.submit(req(r#"{"op":"ping"}"#));
+        assert_eq!(r.get("pong").as_bool(), Some(true));
+        let r = exec.submit(req(r#"{"op":"medoid","dataset":"toy","seed":1}"#));
+        assert_eq!(r.get("ok").as_bool(), Some(true));
+        // metrics through the executor gains the executor sub-object
+        let m = exec.submit(req(r#"{"op":"metrics"}"#));
+        assert_eq!(m.get("executor").get("queue_cap").as_usize(), Some(4));
+        assert_eq!(m.get("executor").get("workers").as_usize(), Some(2));
+        assert_eq!(m.get("executor").get("queue_depth").as_u64(), Some(0));
+        exec.shutdown();
+        let r = exec.submit(req(r#"{"op":"ping"}"#));
+        assert_eq!(r.get("ok").as_bool(), Some(false));
+        assert!(r.get("error").as_str().unwrap().contains("shutting down"));
+        exec.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn executor_handles_concurrent_submitters_with_tiny_queue() {
+        let state = State::new();
+        let exec = Executor::new(state, 1, 1);
+        std::thread::scope(|s| {
+            for _ in 0..6 {
+                let exec = &exec;
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        let r = exec.submit(json::parse(r#"{"op":"ping"}"#).unwrap());
+                        assert_eq!(r.get("pong").as_bool(), Some(true));
+                    }
+                });
+            }
+        });
+        assert_eq!(exec.queue_depth(), 0);
+        assert_eq!(exec.state().requests.load(Ordering::Relaxed), 60);
+        exec.shutdown();
+    }
+
+    #[test]
+    fn v2_envelopes_round_trip_and_stream_partials() {
+        let state = State::new();
+        register_toy(&state, "toy");
+        let exec = Executor::new(state, 1, 8);
+
+        // blocking v2 submission: enveloped final, partials dropped
+        let env = proto::parse_request(
+            r#"{"v":2,"id":42,"op":"medoid","params":{"dataset":"toy","seed":1,"stream":true}}"#,
+        )
+        .unwrap();
+        let r = exec.submit_env(env);
+        assert_eq!(r.get("id").as_u64(), Some(42));
+        assert_eq!(r.get("ok").as_bool(), Some(true));
+        assert_eq!(r.get("result").get("medoid").as_usize(), Some(0));
+
+        // callback v2 submission: partial frames precede the final one
+        let (tx, rx) = std::sync::mpsc::channel::<(Value, bool)>();
+        let env = proto::parse_request(
+            r#"{"v":2,"id":7,"op":"medoid","params":{"dataset":"toy","seed":1,"stream":true}}"#,
+        )
+        .unwrap();
+        exec.try_submit(env, Box::new(move |frame, fin| tx.send((frame, fin)).unwrap()))
+            .expect("queue has room");
+        let mut frames = Vec::new();
+        loop {
+            let (frame, fin) = rx.recv().unwrap();
+            frames.push(frame);
+            if fin {
+                break;
+            }
+        }
+        assert!(frames.len() >= 2, "expected partial frames, got {}", frames.len());
+        for (i, f) in frames[..frames.len() - 1].iter().enumerate() {
+            assert_eq!(f.get("partial").as_bool(), Some(true));
+            assert_eq!(f.get("seq").as_u64(), Some(i as u64));
+            assert_eq!(f.get("id").as_u64(), Some(7));
+            assert!(f.get("result").get("survivors").as_u64().is_some());
+        }
+        let last = frames.last().unwrap();
+        assert!(matches!(last.get("partial"), Value::Null));
+        assert_eq!(last.get("result").get("medoid").as_usize(), Some(0));
+
+        // after shutdown, try_submit refuses with the reason
+        exec.shutdown();
+        let env = proto::parse_request(r#"{"v":2,"id":1,"op":"ping"}"#).unwrap();
+        let err = exec.try_submit(env, Box::new(|_, _| {})).unwrap_err();
+        assert_eq!(err.1, SubmitError::ShuttingDown);
+        assert_eq!(err.0.op, "ping");
+    }
+}

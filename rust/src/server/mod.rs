@@ -1,1245 +1,43 @@
-//! Medoid service: a small deployable front-end for the library.
+//! A line-delimited JSON protocol server exposing medoid queries over TCP.
 //!
-//! Line-delimited JSON over TCP (std::net threads; tokio is outside the
-//! offline dependency closure). Datasets are registered once (generated or
-//! loaded); prepared engine sessions are cached per `(dataset, metric)` in
-//! an [`EngineCache`], so only the *first* query on a dataset pays the
-//! O(n·d) preparation pass; and all request execution funnels through a
-//! bounded-queue [`Executor`] whose workers run on top of the persistent
-//! worker pool — connection threads only parse and write lines.
+//! Layering (one file per concern):
+//!
+//! - [`proto`] — the protocol surface: v2 envelopes, the v1 compat shim,
+//!   error codes, and the incremental newline [`proto::Framer`] with its
+//!   request-size cap. Pure functions over bytes and JSON values.
+//! - [`ops`] — request handlers: the dataset registry, the prepared-engine
+//!   session cache, and envelope→result dispatch ([`State`]).
+//! - [`exec`] — the bounded worker pool that runs ops off the I/O path and
+//!   serializes wire frames ([`Executor`]).
+//! - [`net`] — the transport: a raw epoll event loop (Linux) with
+//!   nonblocking accept, pipelining, backpressure, and multi-tenant
+//!   admission control; a thread-per-connection fallback elsewhere.
+//!
+//! Protocol v2 (one JSON object per line; responses to pipelined requests
+//! are id-matched and may arrive out of order):
 //!
 //! ```text
-//! → {"op":"register","name":"cells","kind":"rnaseq","n":2000,"dim":256,"seed":1}
-//! ← {"ok":true,"name":"cells","n":2000,"metric":"l1","sharded":false}
-//! → {"op":"register","name":"big","path":"/data/shards/manifest.json"}
-//!                                            # shard manifest: no loading —
-//! ← {"ok":true,"name":"big","n":1000000,...} # rows stream from disk on demand
-//! → {"op":"medoid","dataset":"cells","algo":"corrsh","pulls_per_arm":24,"seed":7}
-//! ← {"ok":true,"medoid":412,"pulls":52000,"wall_ms":8.3,"seed":7,"algo":"corrsh"}
-//! → {"op":"medoid_batch","dataset":"cells","seeds":[1,2,3],"pulls_per_arm":24}
-//! ← {"ok":true,"jobs":3,"pulls":156000,"results":[{"seed":1,...},...]}
-//! → {"op":"kmedoids","dataset":"cells","k":5,"seed":7}   # BUILD/SWAP clustering
-//! ← {"ok":true,"medoids":[0,412,...],"cluster_sizes":[...],"loss":1.93,
-//!    "pulls":184000,"build_pulls":...,"swap_pulls":...,"polish_pulls":...}
-//! → {"op":"stats","dataset":"cells"}         # Δ/ρ/H₂ summary
-//! → {"op":"metrics"}                         # counters, cache, queue depth
-//! → {"op":"list"}                            # registered datasets
-//! → {"op":"unregister","name":"cells"}
-//! → {"op":"ping"}
-//! → {"op":"shutdown"}                        # drain + clean exit
+//! → {"v":2,"id":1,"op":"register","params":{"name":"toy","kind":"gaussian","n":10000,"dim":32}}
+//! ← {"id":1,"ok":true,"result":{"registered":"toy","n":10000,...}}
+//! → {"v":2,"id":2,"op":"kmedoids","params":{"dataset":"toy","k":8,"stream":true}}
+//! ← {"id":2,"ok":true,"partial":true,"seq":0,"result":{"phase":"build","step":0,"loss":...}}
+//! ← {"id":2,"ok":true,"result":{"medoids":[...],...}}
+//! → {"v":2,"id":3,"op":"medoid","params":{"dataset":"nope"}}
+//! ← {"id":3,"ok":false,"error":{"code":"unknown_dataset","message":"..."}}
 //! ```
 //!
-//! Big seeds: JSON numbers are f64, exact only to 2⁵³ — send full-width
-//! seeds as strings (`"seed":"18446744073709551615"`); see
-//! [`Value::as_u64`].
-
-use std::collections::{HashMap, VecDeque};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
-
-use crate::bandits::MedoidAlgorithm;
-use crate::config::{AlgoConfig, KMedoidsConfig, ServerConfig};
-use crate::kmedoids::ClusteringAlgorithm;
-use crate::data::synth::{Kind, SynthConfig};
-use crate::data::Data;
-use crate::distance::Metric;
-use crate::engine::{EngineCache, NativeEngine};
-use crate::metrics::{Counter, Gauge};
-use crate::util::error::{Context, Result};
-use crate::util::json::{self, Value};
-use crate::util::rng::Rng;
-use crate::util::threads;
-
-struct Entry {
-    data: Arc<Data>,
-    metric: Metric,
-    /// Monotone registry counter for this binding of the name to data —
-    /// part of the engine-cache key, so a re-register racing an in-flight
-    /// query can never leave a stale session serving the new name.
-    generation: u64,
-}
-
-/// Shared server state: the dataset registry, the prepared-engine session
-/// cache, and request counters. `handle` is pure request→response (no
-/// I/O), so the whole protocol is unit-testable without sockets.
-#[derive(Default)]
-pub struct State {
-    datasets: Mutex<HashMap<String, Arc<Entry>>>,
-    cache: EngineCache,
-    generation: AtomicU64,
-    pub requests: AtomicU64,
-    pub errors: AtomicU64,
-    pulls: Counter,
-    /// Completed `kmedoids` runs (the clustering workload's op counter).
-    kmedoids_runs: Counter,
-    shutdown: AtomicBool,
-}
-
-impl State {
-    pub fn new() -> Arc<Self> {
-        Arc::new(State::default())
-    }
-
-    /// True once a `shutdown` request has been accepted.
-    pub fn shutting_down(&self) -> bool {
-        self.shutdown.load(Ordering::Acquire)
-    }
-
-    /// The prepared-engine session cache (hit/miss counters feed the
-    /// `metrics` op).
-    pub fn engine_cache(&self) -> &EngineCache {
-        &self.cache
-    }
-
-    fn get(&self, name: &str) -> Result<Arc<Entry>> {
-        self.datasets
-            .lock()
-            .unwrap()
-            .get(name)
-            .cloned()
-            .with_context(|| format!("dataset {name:?} not registered"))
-    }
-
-    /// Cached-session engine: O(n·d) preparation only on the first call
-    /// per `(dataset, generation, metric)`.
-    fn engine(&self, name: &str, entry: &Entry) -> NativeEngine {
-        let prepared =
-            self.cache.get_or_prepare(name, entry.generation, entry.metric, &entry.data);
-        NativeEngine::from_prepared(prepared, threads::default_threads())
-    }
-
-    /// Handle one request object → response object.
-    pub fn handle(&self, req: &Value) -> Value {
-        self.requests.fetch_add(1, Ordering::Relaxed);
-        match self.dispatch(req) {
-            Ok(v) => v,
-            Err(e) => {
-                self.errors.fetch_add(1, Ordering::Relaxed);
-                Value::from_pairs(vec![
-                    ("ok", false.into()),
-                    ("error", format!("{e:#}").into()),
-                ])
-            }
-        }
-    }
-
-    fn dispatch(&self, req: &Value) -> Result<Value> {
-        match req.get("op").as_str().context("missing op")? {
-            "ping" => Ok(Value::from_pairs(vec![("ok", true.into()), ("pong", true.into())])),
-            "list" => {
-                let names: Vec<Value> = self
-                    .datasets
-                    .lock()
-                    .unwrap()
-                    .keys()
-                    .map(|k| Value::Str(k.clone()))
-                    .collect();
-                Ok(Value::from_pairs(vec![
-                    ("ok", true.into()),
-                    ("datasets", Value::Array(names)),
-                ]))
-            }
-            "register" => {
-                let name = req.get("name").as_str().context("missing name")?.to_string();
-                // Two sources: `path` (a .npy/.csr file, or a shard
-                // manifest — the latter registers *without loading*, rows
-                // stream from disk on demand) or `kind` (a generator).
-                let (data, metric) = if let Some(path) = req.get("path").as_str() {
-                    let data = crate::data::loader::load(path)?;
-                    let metric: Metric = match req.get("metric").as_str() {
-                        Some(m) => m.parse()?,
-                        None if data.is_sparse() => Metric::L1,
-                        None => Metric::L2,
-                    };
-                    crate::ensure!(data.n() >= 2, "register: dataset has n = {}", data.n());
-                    (Arc::new(data), metric)
-                } else {
-                    let kind: Kind =
-                        req.get("kind").as_str().context("missing kind (or path)")?.parse()?;
-                    let mut cfg = SynthConfig {
-                        n: req.get("n").as_usize().unwrap_or(1000),
-                        dim: req.get("dim").as_usize().unwrap_or(256),
-                        seed: req.get("seed").as_u64().unwrap_or(0),
-                        ..Default::default()
-                    };
-                    if let Some(c) = req.get("clusters").as_usize() {
-                        crate::ensure!(c >= 1, "register: clusters must be >= 1");
-                        cfg.clusters = c;
-                    }
-                    crate::ensure!(cfg.n >= 2, "register: n must be >= 2 (got {})", cfg.n);
-                    crate::ensure!(cfg.dim >= 1, "register: dim must be >= 1");
-                    let metric = match req.get("metric").as_str() {
-                        Some(m) => m.parse()?,
-                        None => kind.default_metric(),
-                    };
-                    (Arc::new(kind.generate(&cfg)), metric)
-                };
-                let n = data.n();
-                let sharded = matches!(&*data, Data::Sharded(_));
-                // Stale sessions for the old binding of this name are
-                // swept here (memory hygiene); correctness against the
-                // re-register race comes from the generation cache key.
-                self.cache.invalidate(&name);
-                let generation = self.generation.fetch_add(1, Ordering::Relaxed);
-                let entry = Arc::new(Entry { data, metric, generation });
-                self.datasets.lock().unwrap().insert(name.clone(), entry.clone());
-                // Optional eager warmup so the first query is already hot.
-                if req.get("prepare").as_bool() == Some(true) {
-                    let _ = self.engine(&name, &entry);
-                }
-                Ok(Value::from_pairs(vec![
-                    ("ok", true.into()),
-                    ("name", name.into()),
-                    ("n", n.into()),
-                    ("metric", metric.name().into()),
-                    ("sharded", sharded.into()),
-                ]))
-            }
-            "unregister" => {
-                let name = req
-                    .get("name")
-                    .as_str()
-                    .or(req.get("dataset").as_str())
-                    .context("missing name")?;
-                let removed = self.datasets.lock().unwrap().remove(name);
-                self.cache.invalidate(name);
-                crate::ensure!(removed.is_some(), "dataset {name:?} not registered");
-                Ok(Value::from_pairs(vec![
-                    ("ok", true.into()),
-                    ("name", name.into()),
-                    ("removed", true.into()),
-                ]))
-            }
-            "medoid" => {
-                let name = req.get("dataset").as_str().context("missing dataset")?;
-                let entry = self.get(name)?;
-                let algo = build_algo(req, entry.data.n())?;
-                let seed = req.get("seed").as_u64().unwrap_or(0);
-                let engine = self.engine(name, &entry);
-                let mut rng = Rng::seeded(seed);
-                let res = algo.run(&engine, &mut rng);
-                self.pulls.add(res.pulls);
-                Ok(Value::from_pairs(vec![
-                    ("ok", true.into()),
-                    ("medoid", res.best.into()),
-                    ("pulls", res.pulls.into()),
-                    ("wall_ms", (res.wall.as_secs_f64() * 1e3).into()),
-                    ("algo", algo.name().into()),
-                    ("seed", seed_value(seed)),
-                ]))
-            }
-            "medoid_batch" => self.medoid_batch(req),
-            "kmedoids" => {
-                let name = req.get("dataset").as_str().context("missing dataset")?;
-                let entry = self.get(name)?;
-                let n = entry.data.n();
-                let cfg = KMedoidsConfig::from_json_value(req)?;
-                crate::ensure!(cfg.k <= n, "kmedoids: k = {} exceeds dataset size n = {n}", cfg.k);
-                let seed = req.get("seed").as_u64().unwrap_or(0);
-                let engine = self.engine(name, &entry);
-                let mut rng = Rng::seeded(seed);
-                let res = cfg.build().run(&engine, &mut rng);
-                self.pulls.add(res.pulls());
-                self.kmedoids_runs.add(1);
-                let medoids: Vec<Value> = res.medoids.iter().map(|&m| Value::from(m)).collect();
-                let sizes: Vec<Value> =
-                    res.cluster_sizes().iter().map(|&s| Value::from(s)).collect();
-                let mut pairs = vec![
-                    ("ok", true.into()),
-                    ("algo", "bandit-kmedoids".into()),
-                    ("k", res.medoids.len().into()),
-                    ("medoids", Value::Array(medoids)),
-                    ("cluster_sizes", Value::Array(sizes)),
-                    ("loss", res.loss.into()),
-                    ("pulls", res.pulls().into()),
-                    ("build_pulls", res.build_pulls.into()),
-                    ("swap_pulls", res.swap_pulls.into()),
-                    ("polish_pulls", res.polish_pulls.into()),
-                    ("swap_rounds", res.swap_rounds.into()),
-                    ("swaps_accepted", res.swaps_accepted.into()),
-                    ("wall_ms", (res.wall.as_secs_f64() * 1e3).into()),
-                    ("seed", seed_value(seed)),
-                ];
-                // Full per-point assignments are O(n) on the wire — opt-in.
-                if req.get("assignments").as_bool() == Some(true) {
-                    let a: Vec<Value> = res.assignments.iter().map(|&x| Value::from(x)).collect();
-                    pairs.push(("assignments", Value::Array(a)));
-                }
-                Ok(Value::from_pairs(pairs))
-            }
-            "stats" => {
-                let name = req.get("dataset").as_str().context("missing dataset")?;
-                let entry = self.get(name)?;
-                let engine = self.engine(name, &entry);
-                let mut rng = Rng::seeded(0);
-                let st = crate::stats::instance_stats(
-                    &engine,
-                    256.min(entry.data.n()),
-                    &mut rng,
-                );
-                Ok(Value::from_pairs(vec![
-                    ("ok", true.into()),
-                    ("medoid", st.medoid.into()),
-                    ("sigma", st.sigma.into()),
-                    ("h2", st.h2.into()),
-                    ("h2_tilde", st.h2_tilde.into()),
-                    ("gain_ratio", st.gain_ratio().into()),
-                ]))
-            }
-            "metrics" => Ok(Value::from_pairs(vec![
-                ("ok", true.into()),
-                ("requests", self.requests.load(Ordering::Relaxed).into()),
-                ("errors", self.errors.load(Ordering::Relaxed).into()),
-                ("pulls", self.pulls.get().into()),
-                ("kmedoids_runs", self.kmedoids_runs.get().into()),
-                ("datasets", self.datasets.lock().unwrap().len().into()),
-                (
-                    "engine_cache",
-                    Value::from_pairs(vec![
-                        ("entries", self.cache.len().into()),
-                        ("hits", self.cache.hits().into()),
-                        ("misses", self.cache.misses().into()),
-                        ("nan_pulls", self.cache.nan_pulls().into()),
-                    ]),
-                ),
-                (
-                    // Shard-store traffic (process-global): monotone
-                    // hit/miss counters plus the pinned-bytes gauge, so
-                    // "the million-point dataset stayed inside its cache
-                    // budget" is observable, not assumed (DESIGN.md §12).
-                    "shard_cache",
-                    {
-                        let s = crate::data::store::cache_stats();
-                        Value::from_pairs(vec![
-                            ("hits", s.hits().into()),
-                            ("misses", s.misses().into()),
-                            ("pinned_bytes", s.pinned_bytes().into()),
-                        ])
-                    },
-                ),
-            ])),
-            "shutdown" => {
-                self.shutdown.store(true, Ordering::Release);
-                Ok(Value::from_pairs(vec![
-                    ("ok", true.into()),
-                    ("shutting_down", true.into()),
-                ]))
-            }
-            other => crate::bail!("unknown op {other:?}"),
-        }
-    }
-
-    /// Many seeds (and optionally per-seed budgets) against one dataset,
-    /// answered in a single sweep over one cached session: the engine is
-    /// fetched once and the jobs fan out over the worker pool.
-    fn medoid_batch(&self, req: &Value) -> Result<Value> {
-        let name = req.get("dataset").as_str().context("missing dataset")?;
-        let entry = self.get(name)?;
-        let n = entry.data.n();
-        const MAX_JOBS: usize = 4096;
-        let seeds: Vec<u64> = match req.get("seeds").as_array() {
-            Some(arr) => {
-                crate::ensure!(
-                    arr.len() <= MAX_JOBS,
-                    "medoid_batch: at most {MAX_JOBS} jobs per request (got {})",
-                    arr.len()
-                );
-                arr.iter()
-                    .map(|v| v.as_u64().context("seeds entries must be non-negative integers"))
-                    .collect::<Result<_>>()?
-            }
-            None => {
-                let s0 = req.get("seed").as_u64().unwrap_or(0);
-                let count = req.get("count").as_usize().unwrap_or(1);
-                // Cap BEFORE materializing: `count` is client-controlled
-                // and would otherwise size an allocation directly.
-                crate::ensure!(
-                    count <= MAX_JOBS,
-                    "medoid_batch: at most {MAX_JOBS} jobs per request (got count {count})"
-                );
-                (0..count as u64).map(|i| s0.wrapping_add(i)).collect()
-            }
-        };
-        crate::ensure!(!seeds.is_empty(), "medoid_batch: empty seed list");
-        let mut budgets: Vec<Option<f64>> = vec![None; seeds.len()];
-        if let Some(arr) = req.get("budgets").as_array() {
-            crate::ensure!(
-                arr.len() == seeds.len(),
-                "medoid_batch: budgets len {} != seeds len {}",
-                arr.len(),
-                seeds.len()
-            );
-            for (slot, v) in budgets.iter_mut().zip(arr) {
-                *slot = Some(v.as_f64().context("budgets entries must be numbers")?);
-            }
-        }
-        // Validate every job's algorithm config up front so a bad job fails
-        // the whole request instead of surfacing mid-sweep.
-        let jobs: Vec<(u64, AlgoConfig)> = seeds
-            .iter()
-            .zip(&budgets)
-            .map(|(&seed, &budget)| Ok((seed, algo_config(req, n, budget)?)))
-            .collect::<Result<_>>()?;
-        let engine = self.engine(name, &entry);
-        let t0 = Instant::now();
-        let workers = threads::default_threads().min(jobs.len()).max(1);
-        let outcomes: Vec<(Value, u64)> = threads::parallel_map(jobs.len(), workers, |i| {
-            let (seed, cfg) = &jobs[i];
-            let mut rng = Rng::seeded(*seed);
-            let res = cfg.build(n).run(&engine, &mut rng);
-            let v = Value::from_pairs(vec![
-                ("seed", seed_value(*seed)),
-                ("algo", cfg.name().into()),
-                ("medoid", res.best.into()),
-                ("pulls", res.pulls.into()),
-                ("wall_ms", (res.wall.as_secs_f64() * 1e3).into()),
-            ]);
-            (v, res.pulls)
-        });
-        let total_pulls: u64 = outcomes.iter().map(|(_, p)| p).sum();
-        self.pulls.add(total_pulls);
-        let results: Vec<Value> = outcomes.into_iter().map(|(v, _)| v).collect();
-        Ok(Value::from_pairs(vec![
-            ("ok", true.into()),
-            ("dataset", name.into()),
-            ("jobs", results.len().into()),
-            ("pulls", total_pulls.into()),
-            ("wall_ms", (t0.elapsed().as_secs_f64() * 1e3).into()),
-            ("results", Value::Array(results)),
-        ]))
-    }
-}
-
-/// Algorithm selection from a request, with PR-2 fixes: `refs_per_arm`
-/// clamps to n (the old default of 1000 asked RAND for more distinct
-/// references than small datasets have) and seeds/caps read through the
-/// lossless [`Value::as_u64`]. `budget` overrides the algorithm's primary
-/// knob (per-job budgets in `medoid_batch`).
-fn algo_config(req: &Value, n: usize, budget: Option<f64>) -> Result<AlgoConfig> {
-    let name = req.get("algo").as_str().unwrap_or("corrsh");
-    let ppa = |d: f64| budget.or(req.get("pulls_per_arm").as_f64()).unwrap_or(d);
-    let cfg = match name {
-        "corrsh" => AlgoConfig::CorrSh { pulls_per_arm: ppa(24.0) },
-        "sh" | "seq-halving" => AlgoConfig::SeqHalving { pulls_per_arm: ppa(24.0) },
-        "meddit" => AlgoConfig::Meddit {
-            delta: req.get("delta").as_f64().unwrap_or(0.0),
-            cap: budget.map(|b| b.max(0.0) as u64).or(req.get("cap").as_u64()).unwrap_or(0),
-        },
-        "rand" => AlgoConfig::Rand {
-            refs_per_arm: budget
-                .map(|b| b.max(0.0) as usize)
-                .or(req.get("refs_per_arm").as_usize())
-                .unwrap_or(1000)
-                .min(n),
-        },
-        "toprank" => AlgoConfig::TopRank {
-            phase1_refs: budget
-                .map(|b| b.max(0.0) as usize)
-                .or(req.get("phase1_refs").as_usize())
-                .unwrap_or(1000)
-                .min(n),
-        },
-        "exact" => AlgoConfig::Exact,
-        other => crate::bail!("unknown algo {other:?}"),
-    };
-    Ok(cfg)
-}
-
-fn build_algo(req: &Value, n: usize) -> Result<Box<dyn MedoidAlgorithm>> {
-    Ok(algo_config(req, n, None)?.build(n))
-}
-
-fn error_response(msg: &str) -> Value {
-    Value::from_pairs(vec![("ok", false.into()), ("error", msg.into())])
-}
-
-/// Echo a seed losslessly: numbers up to 2⁵³ stay JSON numbers; larger
-/// values go back out as the decimal-string form the request path accepts
-/// (`Value::as_u64`), so an echoed seed always reproduces the same run.
-fn seed_value(seed: u64) -> Value {
-    if seed <= (1u64 << 53) {
-        seed.into()
-    } else {
-        Value::Str(seed.to_string())
-    }
-}
-
-/// One queued request plus the slot its response lands in.
-struct ExecJob {
-    req: Value,
-    slot: Arc<ResponseSlot>,
-}
-
-#[derive(Default)]
-struct ResponseSlot {
-    value: Mutex<Option<Value>>,
-    ready: Condvar,
-}
-
-impl ResponseSlot {
-    fn fill(&self, v: Value) {
-        *self.value.lock().unwrap() = Some(v);
-        self.ready.notify_all();
-    }
-
-    fn wait(&self) -> Value {
-        let mut v = self.value.lock().unwrap();
-        while v.is_none() {
-            v = self.ready.wait(v).unwrap();
-        }
-        v.take().expect("slot filled")
-    }
-}
-
-struct ExecQueue {
-    jobs: VecDeque<ExecJob>,
-    shutdown: bool,
-}
-
-struct ExecShared {
-    queue: Mutex<ExecQueue>,
-    /// Workers wait here for jobs.
-    ready: Condvar,
-    /// Submitters wait here while the bounded queue is full.
-    space: Condvar,
-    cap: usize,
-    depth: Gauge,
-}
-
-/// Bounded-queue request executor: a fixed set of workers drains a
-/// capacity-capped queue of protocol requests. Connection threads only
-/// parse lines and block in [`Executor::submit`] — heavy work (engine
-/// queries, which themselves fan out on the worker pool) happens on
-/// executor workers, so a burst of clients applies backpressure instead of
-/// spawning a compute avalanche.
-pub struct Executor {
-    state: Arc<State>,
-    shared: Arc<ExecShared>,
-    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
-}
-
-impl Executor {
-    /// `workers == 0` means `threads::default_threads()`.
-    pub fn new(state: Arc<State>, workers: usize, queue_cap: usize) -> Arc<Self> {
-        let workers = if workers == 0 { threads::default_threads() } else { workers };
-        let shared = Arc::new(ExecShared {
-            queue: Mutex::new(ExecQueue { jobs: VecDeque::new(), shutdown: false }),
-            ready: Condvar::new(),
-            space: Condvar::new(),
-            cap: queue_cap.max(1),
-            depth: Gauge::new(),
-        });
-        let handles = (0..workers)
-            .map(|i| {
-                let state = state.clone();
-                let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("corrsh-exec-{i}"))
-                    .spawn(move || exec_worker(state, shared))
-                    .expect("spawn executor worker")
-            })
-            .collect();
-        Arc::new(Executor { state, shared, workers: Mutex::new(handles) })
-    }
-
-    pub fn state(&self) -> &Arc<State> {
-        &self.state
-    }
-
-    pub fn queue_depth(&self) -> u64 {
-        self.shared.depth.get()
-    }
-
-    pub fn queue_cap(&self) -> usize {
-        self.shared.cap
-    }
-
-    pub fn workers(&self) -> usize {
-        self.workers.lock().unwrap().len()
-    }
-
-    /// Submit one request and block for its response. Applies backpressure
-    /// (blocks) while the bounded queue is full; after shutdown, returns an
-    /// error response immediately.
-    pub fn submit(&self, req: Value) -> Value {
-        let is_metrics = req.get("op").as_str() == Some("metrics");
-        let slot = Arc::new(ResponseSlot::default());
-        {
-            let mut q = self.shared.queue.lock().unwrap();
-            loop {
-                if q.shutdown {
-                    return error_response("server shutting down");
-                }
-                if q.jobs.len() < self.shared.cap {
-                    break;
-                }
-                q = self.shared.space.wait(q).unwrap();
-            }
-            q.jobs.push_back(ExecJob { req, slot: slot.clone() });
-            self.shared.depth.inc();
-        }
-        self.shared.ready.notify_one();
-        let mut resp = slot.wait();
-        if is_metrics {
-            // Executor-level numbers are merged here (the pure State
-            // doesn't know about queues).
-            if let Value::Object(obj) = &mut resp {
-                obj.insert(
-                    "executor".to_string(),
-                    Value::from_pairs(vec![
-                        ("queue_depth", self.queue_depth().into()),
-                        ("queue_cap", self.shared.cap.into()),
-                        ("workers", self.workers().into()),
-                    ]),
-                );
-            }
-        }
-        resp
-    }
-
-    /// Stop accepting new work, drain already-queued requests, join the
-    /// workers. Idempotent.
-    pub fn shutdown(&self) {
-        self.shared.queue.lock().unwrap().shutdown = true;
-        self.shared.ready.notify_all();
-        self.shared.space.notify_all();
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
-        for h in handles {
-            let _ = h.join();
-        }
-    }
-}
-
-fn exec_worker(state: Arc<State>, shared: Arc<ExecShared>) {
-    let mut q = shared.queue.lock().unwrap();
-    loop {
-        match q.jobs.pop_front() {
-            Some(job) => {
-                shared.depth.dec();
-                drop(q);
-                shared.space.notify_one();
-                // A panicking handler must neither kill this worker nor
-                // leave the submitter blocked on an unfilled slot forever.
-                let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    state.handle(&job.req)
-                }))
-                .unwrap_or_else(|_| {
-                    state.errors.fetch_add(1, Ordering::Relaxed);
-                    error_response("internal error: request handler panicked")
-                });
-                job.slot.fill(resp);
-                q = shared.queue.lock().unwrap();
-            }
-            None if q.shutdown => return,
-            None => q = shared.ready.wait(q).unwrap(),
-        }
-    }
-}
-
-fn client_loop(exec: Arc<Executor>, stream: TcpStream) {
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    // Our side of the connection = the listener's address; used to wake the
-    // accept loop after a shutdown request.
-    let local = stream.local_addr().ok();
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = match json::parse(&line) {
-            Ok(req) => exec.submit(req),
-            Err(e) => error_response(&format!("bad json: {e}")),
-        };
-        let mut out = json::to_string(&resp);
-        out.push('\n');
-        if writer.write_all(out.as_bytes()).is_err() {
-            break;
-        }
-        if exec.state().shutting_down() {
-            if let Some(addr) = local {
-                let _ = TcpStream::connect(addr);
-            }
-            break;
-        }
-    }
-}
-
-fn accept_loop(exec: &Arc<Executor>, listener: TcpListener) {
-    for stream in listener.incoming() {
-        if exec.state().shutting_down() {
-            break;
-        }
-        match stream {
-            Ok(s) => {
-                let e = exec.clone();
-                std::thread::spawn(move || client_loop(e, s));
-            }
-            Err(e) => eprintln!("accept error: {e}"),
-        }
-    }
-}
-
-/// Serve until a `shutdown` request arrives (e.g. on "127.0.0.1:7878"),
-/// with the default executor shape. One thread per connection; execution
-/// bounded by the executor.
-pub fn serve(state: Arc<State>, addr: &str) -> Result<()> {
-    let cfg = ServerConfig { addr: addr.to_string(), ..Default::default() };
-    serve_with(state, &cfg)
-}
-
-/// Serve with an explicit [`ServerConfig`] (address, executor workers,
-/// queue capacity). Returns cleanly after a `shutdown` request: the accept
-/// loop stops and the executor drains and joins.
-pub fn serve_with(state: Arc<State>, cfg: &ServerConfig) -> Result<()> {
-    let listener =
-        TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
-    eprintln!("corrsh-serve listening on {}", listener.local_addr()?);
-    let exec = Executor::new(state, cfg.workers, cfg.queue_cap);
-    accept_loop(&exec, listener);
-    exec.shutdown();
-    Ok(())
-}
-
-/// Bind to an ephemeral port and serve in a background thread (tests/demo).
-pub fn serve_background(state: Arc<State>) -> Result<std::net::SocketAddr> {
-    serve_background_with(state, &ServerConfig::default())
-}
-
-/// `serve_background` with an explicit executor shape (the configured
-/// `addr` is ignored — the port is always ephemeral).
-pub fn serve_background_with(
-    state: Arc<State>,
-    cfg: &ServerConfig,
-) -> Result<std::net::SocketAddr> {
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
-    let exec = Executor::new(state, cfg.workers, cfg.queue_cap);
-    std::thread::spawn(move || {
-        accept_loop(&exec, listener);
-        exec.shutdown();
-    });
-    Ok(addr)
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn req(s: &str) -> Value {
-        json::parse(s).unwrap()
-    }
-
-    fn register_toy(state: &State, name: &str) {
-        let r = state.handle(&req(&format!(
-            r#"{{"op":"register","name":"{name}","kind":"gaussian","n":200,"dim":8,"seed":4}}"#
-        )));
-        assert_eq!(r.get("ok").as_bool(), Some(true), "register failed: {r}");
-    }
-
-    #[test]
-    fn protocol_register_and_query() {
-        let state = State::new();
-        let r = state.handle(&req(
-            r#"{"op":"register","name":"toy","kind":"gaussian","n":200,"dim":8,"seed":4}"#,
-        ));
-        assert_eq!(r.get("ok").as_bool(), Some(true));
-        assert_eq!(r.get("n").as_usize(), Some(200));
-        assert_eq!(r.get("metric").as_str(), Some("l2"));
-
-        let r = state.handle(&req(
-            r#"{"op":"medoid","dataset":"toy","algo":"corrsh","pulls_per_arm":48,"seed":1}"#,
-        ));
-        assert_eq!(r.get("ok").as_bool(), Some(true));
-        assert_eq!(r.get("medoid").as_usize(), Some(0), "planted medoid");
-        assert!(r.get("pulls").as_f64().unwrap() > 0.0);
-        assert_eq!(r.get("seed").as_u64(), Some(1));
-
-        let r = state.handle(&req(r#"{"op":"list"}"#));
-        assert_eq!(r.get("datasets").idx(0).as_str(), Some("toy"));
-    }
-
-    #[test]
-    fn protocol_errors_are_reported() {
-        let state = State::new();
-        let r = state.handle(&req(r#"{"op":"medoid","dataset":"nope"}"#));
-        assert_eq!(r.get("ok").as_bool(), Some(false));
-        assert!(r.get("error").as_str().unwrap().contains("not registered"));
-        let r = state.handle(&req(r#"{"op":"frobnicate"}"#));
-        assert_eq!(r.get("ok").as_bool(), Some(false));
-        assert_eq!(state.errors.load(Ordering::Relaxed), 2);
-    }
-
-    #[test]
-    fn rand_defaults_clamp_to_n() {
-        let state = State::new();
-        register_toy(&state, "toy");
-        // Old default asked RAND for 1000 distinct references on n=200;
-        // the honest default is m = n → an exact sweep of n*m pulls.
-        let r = state.handle(&req(r#"{"op":"medoid","dataset":"toy","algo":"rand","seed":2}"#));
-        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
-        assert_eq!(r.get("pulls").as_u64(), Some(200 * 200));
-        // Explicit oversized values clamp too.
-        let r = state.handle(&req(
-            r#"{"op":"medoid","dataset":"toy","algo":"rand","refs_per_arm":5000,"seed":2}"#,
-        ));
-        assert_eq!(r.get("pulls").as_u64(), Some(200 * 200));
-    }
-
-    #[test]
-    fn register_accepts_string_seed_beyond_f64() {
-        let state = State::new();
-        let r = state.handle(&req(
-            r#"{"op":"register","name":"big","kind":"gaussian","n":64,"dim":4,
-                "seed":"18446744073709551615"}"#,
-        ));
-        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
-        assert_eq!(r.get("n").as_usize(), Some(64));
-        // A big query seed is echoed losslessly (string form), so feeding
-        // the echo back reproduces the same run.
-        let r = state.handle(&req(
-            r#"{"op":"medoid","dataset":"big","pulls_per_arm":8,"seed":"18446744073709551615"}"#,
-        ));
-        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
-        assert_eq!(r.get("seed").as_u64(), Some(u64::MAX));
-        assert_eq!(r.get("seed").as_str(), Some("18446744073709551615"));
-    }
-
-    #[test]
-    fn register_by_path_matches_generator_registration() {
-        // The same bytes registered three ways — generator, resident .npy,
-        // shard manifest — must give identical medoid answers, and the
-        // manifest registration must report sharded:true.
-        let dir = std::env::temp_dir().join("corrsh-server-tests").join("register-path");
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        let cfg = crate::data::synth::SynthConfig { n: 150, dim: 8, seed: 4, ..Default::default() };
-        let data = Kind::Gaussian.generate(&cfg);
-        let npy = dir.join("toy.npy");
-        crate::data::loader::save_dense_npy(&npy, &data.to_dense()).unwrap();
-        let manifest = crate::data::store::write_sharded(&data, dir.join("shards"), 32).unwrap();
-
-        let state = State::new();
-        let r = state.handle(&req(
-            r#"{"op":"register","name":"gen","kind":"gaussian","n":150,"dim":8,"seed":4}"#,
-        ));
-        assert_eq!(r.get("sharded").as_bool(), Some(false));
-        let r = state.handle(&req(&format!(
-            r#"{{"op":"register","name":"npy","path":{:?},"metric":"l2"}}"#,
-            npy.to_str().unwrap()
-        )));
-        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
-        assert_eq!(r.get("sharded").as_bool(), Some(false));
-        let r = state.handle(&req(&format!(
-            r#"{{"op":"register","name":"shards","path":{:?},"metric":"l2"}}"#,
-            manifest.to_str().unwrap()
-        )));
-        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
-        assert_eq!(r.get("sharded").as_bool(), Some(true));
-        assert_eq!(r.get("n").as_usize(), Some(150));
-
-        let answers: Vec<(Option<usize>, Option<u64>)> = ["gen", "npy", "shards"]
-            .iter()
-            .map(|name| {
-                let r = state.handle(&req(&format!(
-                    r#"{{"op":"medoid","dataset":"{name}","pulls_per_arm":32,"seed":7}}"#
-                )));
-                assert_eq!(r.get("ok").as_bool(), Some(true), "{name}: {r}");
-                (r.get("medoid").as_usize(), r.get("pulls").as_u64())
-            })
-            .collect();
-        assert_eq!(answers[0], answers[1], "generator vs npy");
-        assert_eq!(answers[1], answers[2], "npy vs shard manifest");
-
-        // shard_cache gauges are exported and the manifest dataset moved them
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        let sc = m.get("shard_cache");
-        assert!(sc.get("hits").as_u64().is_some() && sc.get("misses").as_u64().is_some());
-        // registering a bogus path fails cleanly
-        let r = state.handle(&req(r#"{"op":"register","name":"x","path":"/no/such.npy"}"#));
-        assert_eq!(r.get("ok").as_bool(), Some(false));
-    }
-
-    #[test]
-    fn register_rejects_degenerate_shapes() {
-        let state = State::new();
-        for bad in [
-            r#"{"op":"register","name":"z","kind":"gaussian","n":0,"dim":4}"#,
-            r#"{"op":"register","name":"z","kind":"gaussian","n":1,"dim":4}"#,
-            r#"{"op":"register","name":"z","kind":"gaussian","n":10,"dim":0}"#,
-        ] {
-            let r = state.handle(&req(bad));
-            assert_eq!(r.get("ok").as_bool(), Some(false), "should fail: {bad}");
-        }
-        let l = state.handle(&req(r#"{"op":"list"}"#));
-        assert_eq!(l.get("datasets").as_array().unwrap().len(), 0);
-    }
-
-    #[test]
-    fn second_query_hits_the_session_cache() {
-        // The PR's acceptance check: the second medoid request on a
-        // registered dataset performs zero engine preparation, observable
-        // through the metrics op.
-        let state = State::new();
-        register_toy(&state, "toy");
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("engine_cache").get("misses").as_u64(), Some(0));
-        assert_eq!(m.get("engine_cache").get("entries").as_u64(), Some(0));
-
-        let r = state.handle(&req(r#"{"op":"medoid","dataset":"toy","seed":1}"#));
-        assert_eq!(r.get("ok").as_bool(), Some(true));
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("engine_cache").get("misses").as_u64(), Some(1));
-        assert_eq!(m.get("engine_cache").get("hits").as_u64(), Some(0));
-
-        let r2 = state.handle(&req(r#"{"op":"medoid","dataset":"toy","seed":1}"#));
-        assert_eq!(r2.get("medoid").as_usize(), r.get("medoid").as_usize());
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("engine_cache").get("misses").as_u64(), Some(1), "no re-preparation");
-        assert_eq!(m.get("engine_cache").get("hits").as_u64(), Some(1));
-        assert_eq!(m.get("engine_cache").get("entries").as_u64(), Some(1));
-        assert!(m.get("pulls").as_u64().unwrap() > 0);
-        assert!(m.get("requests").as_u64().unwrap() >= 5);
-        assert_eq!(m.get("datasets").as_u64(), Some(1));
-    }
-
-    #[test]
-    fn reregister_invalidates_stale_sessions() {
-        let state = State::new();
-        register_toy(&state, "x");
-        state.handle(&req(r#"{"op":"medoid","dataset":"x","seed":0}"#));
-        // Same name, different data: the cached session must not survive.
-        let r = state.handle(&req(
-            r#"{"op":"register","name":"x","kind":"gaussian","n":150,"dim":8,"seed":99}"#,
-        ));
-        assert_eq!(r.get("ok").as_bool(), Some(true));
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("engine_cache").get("entries").as_u64(), Some(0));
-        state.handle(&req(r#"{"op":"medoid","dataset":"x","seed":0}"#));
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("engine_cache").get("misses").as_u64(), Some(2));
-    }
-
-    #[test]
-    fn register_prepare_flag_warms_cache() {
-        let state = State::new();
-        let r = state.handle(&req(
-            r#"{"op":"register","name":"warm","kind":"gaussian","n":100,"dim":8,
-                "seed":1,"prepare":true}"#,
-        ));
-        assert_eq!(r.get("ok").as_bool(), Some(true));
-        // The first query is already a cache hit.
-        state.handle(&req(r#"{"op":"medoid","dataset":"warm","seed":0}"#));
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("engine_cache").get("hits").as_u64(), Some(1));
-        assert_eq!(m.get("engine_cache").get("misses").as_u64(), Some(1));
-    }
-
-    #[test]
-    fn medoid_batch_matches_individual_queries() {
-        let state = State::new();
-        register_toy(&state, "toy");
-        let mut expect = Vec::new();
-        for seed in [3u64, 7, 11, 42] {
-            let r = state.handle(&req(&format!(
-                r#"{{"op":"medoid","dataset":"toy","pulls_per_arm":48,"seed":{seed}}}"#
-            )));
-            expect.push((r.get("medoid").as_usize().unwrap(), r.get("pulls").as_u64().unwrap()));
-        }
-        let b = state.handle(&req(
-            r#"{"op":"medoid_batch","dataset":"toy","pulls_per_arm":48,"seeds":[3,7,11,42]}"#,
-        ));
-        assert_eq!(b.get("ok").as_bool(), Some(true), "{b}");
-        assert_eq!(b.get("jobs").as_usize(), Some(4));
-        let results = b.get("results").as_array().unwrap();
-        assert_eq!(results.len(), 4);
-        for (i, (medoid, pulls)) in expect.iter().enumerate() {
-            assert_eq!(results[i].get("medoid").as_usize(), Some(*medoid), "seed #{i}");
-            assert_eq!(results[i].get("pulls").as_u64(), Some(*pulls), "seed #{i}");
-        }
-        let total: u64 = expect.iter().map(|&(_, p)| p).sum();
-        assert_eq!(b.get("pulls").as_u64(), Some(total));
-    }
-
-    #[test]
-    fn medoid_batch_seed_count_and_budgets() {
-        let state = State::new();
-        register_toy(&state, "toy");
-        // seed+count shorthand
-        let b = state.handle(&req(
-            r#"{"op":"medoid_batch","dataset":"toy","seed":5,"count":3,"pulls_per_arm":16}"#,
-        ));
-        assert_eq!(b.get("jobs").as_usize(), Some(3));
-        assert_eq!(b.get("results").idx(1).get("seed").as_u64(), Some(6));
-        // per-job budgets change per-job pull counts
-        let b = state.handle(&req(
-            r#"{"op":"medoid_batch","dataset":"toy","seeds":[1,1],"budgets":[8,64]}"#,
-        ));
-        assert_eq!(b.get("ok").as_bool(), Some(true), "{b}");
-        let lo = b.get("results").idx(0).get("pulls").as_u64().unwrap();
-        let hi = b.get("results").idx(1).get("pulls").as_u64().unwrap();
-        assert!(lo < hi, "budget 8 ({lo} pulls) must cost less than 64 ({hi})");
-    }
-
-    #[test]
-    fn medoid_batch_error_paths() {
-        let state = State::new();
-        register_toy(&state, "toy");
-        for bad in [
-            r#"{"op":"medoid_batch","dataset":"toy","seeds":[]}"#,
-            r#"{"op":"medoid_batch","dataset":"toy","seeds":[1,2],"budgets":[8]}"#,
-            r#"{"op":"medoid_batch","dataset":"toy","seeds":[1],"algo":"nope"}"#,
-            r#"{"op":"medoid_batch","dataset":"missing","seeds":[1]}"#,
-            r#"{"op":"medoid_batch","dataset":"toy","seeds":[-1]}"#,
-            // count is capped BEFORE the seed vector is materialized
-            r#"{"op":"medoid_batch","dataset":"toy","seed":0,"count":200000000000}"#,
-        ] {
-            let r = state.handle(&req(bad));
-            assert_eq!(r.get("ok").as_bool(), Some(false), "should fail: {bad}");
-        }
-    }
-
-    #[test]
-    fn kmedoids_op_recovers_planted_cluster_medoids() {
-        // The PR's server-side acceptance check: k = 5 planted clusters on
-        // n = 2000, ≥ 4/5 exact-medoid agreement at ≤ 5% of the exact
-        // BUILD sweep (k·n² pulls), over a cached engine session.
-        let state = State::new();
-        let r = state.handle(&req(
-            r#"{"op":"register","name":"mix","kind":"mixture","n":2000,"dim":16,
-                "seed":42,"clusters":5}"#,
-        ));
-        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
-        let r = state.handle(&req(r#"{"op":"kmedoids","dataset":"mix","k":5,"seed":1}"#));
-        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
-        let medoids = r.get("medoids").as_array().unwrap();
-        assert_eq!(medoids.len(), 5);
-        let hits = medoids.iter().filter(|m| m.as_usize().unwrap() < 5).count();
-        assert!(hits >= 4, "planted-center agreement {hits}/5: {r}");
-        let pulls = r.get("pulls").as_u64().unwrap();
-        let exact = 5 * 2000u64 * 2000;
-        assert!(pulls * 20 <= exact, "{pulls} pulls > 5% of exact {exact}");
-        assert_eq!(
-            pulls,
-            r.get("build_pulls").as_u64().unwrap()
-                + r.get("swap_pulls").as_u64().unwrap()
-                + r.get("polish_pulls").as_u64().unwrap()
-        );
-        let sizes = r.get("cluster_sizes").as_array().unwrap();
-        let total: usize = sizes.iter().map(|s| s.as_usize().unwrap()).sum();
-        assert_eq!(total, 2000);
-        assert!(matches!(r.get("assignments"), Value::Null), "assignments are opt-in");
-
-        // Determinism through the cached session: same seed, same answer.
-        let r2 = state.handle(&req(r#"{"op":"kmedoids","dataset":"mix","k":5,"seed":1}"#));
-        assert_eq!(
-            r2.get("medoids").as_array().unwrap(),
-            medoids,
-            "cached-session rerun diverged"
-        );
-
-        // Opt-in assignments round-trip, and the run counter advances.
-        let r3 = state.handle(&req(
-            r#"{"op":"kmedoids","dataset":"mix","k":3,"seed":0,"assignments":true}"#,
-        ));
-        assert_eq!(r3.get("assignments").as_array().unwrap().len(), 2000);
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("kmedoids_runs").as_u64(), Some(3));
-        assert_eq!(m.get("engine_cache").get("nan_pulls").as_u64(), Some(0));
-        assert_eq!(m.get("engine_cache").get("misses").as_u64(), Some(1), "one preparation");
-    }
-
-    #[test]
-    fn kmedoids_op_error_paths() {
-        let state = State::new();
-        register_toy(&state, "toy");
-        for bad in [
-            r#"{"op":"kmedoids","dataset":"missing","k":3}"#,
-            r#"{"op":"kmedoids","dataset":"toy","k":0}"#,
-            r#"{"op":"kmedoids","dataset":"toy","k":5000}"#,
-            r#"{"op":"kmedoids","dataset":"toy","k":3,"build_pulls_per_arm":-1}"#,
-        ] {
-            let r = state.handle(&req(bad));
-            assert_eq!(r.get("ok").as_bool(), Some(false), "should fail: {bad}");
-        }
-    }
-
-    #[test]
-    fn stats_and_unregister_flow() {
-        let state = State::new();
-        register_toy(&state, "toy");
-        let s = state.handle(&req(r#"{"op":"stats","dataset":"toy"}"#));
-        assert_eq!(s.get("ok").as_bool(), Some(true));
-        assert_eq!(s.get("medoid").as_usize(), Some(0));
-        assert!(s.get("gain_ratio").as_f64().unwrap() > 0.0);
-
-        let u = state.handle(&req(r#"{"op":"unregister","name":"toy"}"#));
-        assert_eq!(u.get("ok").as_bool(), Some(true));
-        assert_eq!(u.get("removed").as_bool(), Some(true));
-        let r = state.handle(&req(r#"{"op":"medoid","dataset":"toy","seed":0}"#));
-        assert!(r.get("error").as_str().unwrap().contains("not registered"));
-        let l = state.handle(&req(r#"{"op":"list"}"#));
-        assert_eq!(l.get("datasets").as_array().unwrap().len(), 0);
-        // double-unregister is an error
-        let u2 = state.handle(&req(r#"{"op":"unregister","name":"toy"}"#));
-        assert_eq!(u2.get("ok").as_bool(), Some(false));
-        // cache entries for the name are gone
-        let m = state.handle(&req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("engine_cache").get("entries").as_u64(), Some(0));
-    }
-
-    #[test]
-    fn executor_roundtrip_and_shutdown() {
-        let state = State::new();
-        register_toy(&state, "toy");
-        let exec = Executor::new(state, 2, 4);
-        assert_eq!(exec.workers(), 2);
-        let r = exec.submit(req(r#"{"op":"ping"}"#));
-        assert_eq!(r.get("pong").as_bool(), Some(true));
-        let r = exec.submit(req(r#"{"op":"medoid","dataset":"toy","seed":1}"#));
-        assert_eq!(r.get("ok").as_bool(), Some(true));
-        // metrics through the executor gains the executor sub-object
-        let m = exec.submit(req(r#"{"op":"metrics"}"#));
-        assert_eq!(m.get("executor").get("queue_cap").as_usize(), Some(4));
-        assert_eq!(m.get("executor").get("workers").as_usize(), Some(2));
-        assert_eq!(m.get("executor").get("queue_depth").as_u64(), Some(0));
-        exec.shutdown();
-        let r = exec.submit(req(r#"{"op":"ping"}"#));
-        assert_eq!(r.get("ok").as_bool(), Some(false));
-        assert!(r.get("error").as_str().unwrap().contains("shutting down"));
-        exec.shutdown(); // idempotent
-    }
-
-    #[test]
-    fn executor_handles_concurrent_submitters_with_tiny_queue() {
-        let state = State::new();
-        let exec = Executor::new(state, 1, 1);
-        std::thread::scope(|s| {
-            for _ in 0..6 {
-                let exec = &exec;
-                s.spawn(move || {
-                    for _ in 0..10 {
-                        let r = exec.submit(json::parse(r#"{"op":"ping"}"#).unwrap());
-                        assert_eq!(r.get("pong").as_bool(), Some(true));
-                    }
-                });
-            }
-        });
-        assert_eq!(exec.queue_depth(), 0);
-        assert_eq!(exec.state().requests.load(Ordering::Relaxed), 60);
-        exec.shutdown();
-    }
-
-    #[test]
-    fn tcp_roundtrip() {
-        let state = State::new();
-        state.handle(&req(
-            r#"{"op":"register","name":"t","kind":"gaussian","n":100,"dim":4,"seed":0}"#,
-        ));
-        let addr = serve_background(state).unwrap();
-        let mut sock = TcpStream::connect(addr).unwrap();
-        sock.write_all(b"{\"op\":\"ping\"}\nnot json\n{\"op\":\"medoid\",\"dataset\":\"t\",\"seed\":3}\n")
-            .unwrap();
-        let mut reader = BufReader::new(sock.try_clone().unwrap());
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.contains("pong"));
-        line.clear();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.contains("bad json"));
-        line.clear();
-        reader.read_line(&mut line).unwrap();
-        let resp = json::parse(line.trim()).unwrap();
-        assert_eq!(resp.get("ok").as_bool(), Some(true));
-        assert_eq!(resp.get("medoid").as_usize(), Some(0));
-    }
-
-    #[test]
-    fn tcp_concurrent_clients_are_deterministic_per_seed() {
-        // ≥4 concurrent clients, each with its own seed; every response
-        // must equal the single-threaded reference answer for that seed.
-        let reference = State::new();
-        register_toy(&reference, "toy");
-        let mut expect = Vec::new();
-        for seed in 0u64..4 {
-            let r = reference.handle(&req(&format!(
-                r#"{{"op":"medoid","dataset":"toy","pulls_per_arm":48,"seed":{seed}}}"#
-            )));
-            expect.push((r.get("medoid").as_usize().unwrap(), r.get("pulls").as_u64().unwrap()));
-        }
-
-        let state = State::new();
-        register_toy(&state, "toy");
-        let cfg = ServerConfig { workers: 4, queue_cap: 8, ..Default::default() };
-        let addr = serve_background_with(state, &cfg).unwrap();
-        std::thread::scope(|s| {
-            for (seed, (medoid, pulls)) in expect.iter().enumerate() {
-                s.spawn(move || {
-                    let mut sock = TcpStream::connect(addr).unwrap();
-                    let mut reader = BufReader::new(sock.try_clone().unwrap());
-                    let mut line = String::new();
-                    for _ in 0..3 {
-                        sock.write_all(
-                            format!(
-                                "{{\"op\":\"medoid\",\"dataset\":\"toy\",\
-                                 \"pulls_per_arm\":48,\"seed\":{seed}}}\n"
-                            )
-                            .as_bytes(),
-                        )
-                        .unwrap();
-                        line.clear();
-                        reader.read_line(&mut line).unwrap();
-                        let resp = json::parse(line.trim()).unwrap();
-                        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp}");
-                        assert_eq!(resp.get("medoid").as_usize(), Some(*medoid), "seed {seed}");
-                        assert_eq!(resp.get("pulls").as_u64(), Some(*pulls), "seed {seed}");
-                    }
-                });
-            }
-        });
-    }
-
-    #[test]
-    fn tcp_shutdown_op_stops_the_server() {
-        let state = State::new();
-        let addr = serve_background(state.clone()).unwrap();
-        let mut sock = TcpStream::connect(addr).unwrap();
-        let mut reader = BufReader::new(sock.try_clone().unwrap());
-        sock.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
-        let mut line = String::new();
-        reader.read_line(&mut line).unwrap();
-        assert!(line.contains("shutting_down"));
-        assert!(state.shutting_down());
-        // The accept loop exits and the listener is dropped: within a
-        // bounded window new connections must stop being served.
-        let mut stopped = false;
-        for _ in 0..100 {
-            match TcpStream::connect(addr) {
-                Err(_) => {
-                    stopped = true;
-                    break;
-                }
-                Ok(mut probe) => {
-                    // Connection may still land in the accept backlog; a
-                    // served probe would get a response, an unserved one
-                    // gets EOF.
-                    let _ = probe.write_all(b"{\"op\":\"ping\"}\n");
-                    let mut r = BufReader::new(probe);
-                    let mut l = String::new();
-                    if matches!(r.read_line(&mut l), Ok(0)) {
-                        stopped = true;
-                        break;
-                    }
-                }
-            }
-            std::thread::sleep(std::time::Duration::from_millis(20));
-        }
-        assert!(stopped, "server kept serving after shutdown op");
-    }
-}
+//! Bare v1 requests (`{"op":"ping"}`) keep working through a compat shim
+//! that infers the envelope and flattens responses to the legacy in-order
+//! shape; the `ping` reply carries a deprecation note.
+
+pub mod exec;
+pub mod net;
+pub mod ops;
+pub mod proto;
+
+pub use exec::{Executor, SubmitError};
+pub use net::{
+    event_loop_supported, raise_nofile_limit, serve, serve_background, serve_background_with,
+    serve_with,
+};
+pub use ops::State;

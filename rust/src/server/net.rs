@@ -1,0 +1,1202 @@
+//! Transport: a raw epoll event loop (zero-dep syscalls, like
+//! `data/store/reader.rs`) serving the line-delimited protocol.
+//!
+//! One thread owns every socket: nonblocking accept, per-connection
+//! read/write buffers with incremental newline framing ([`proto::Framer`]),
+//! request pipelining (many in-flight per connection; v2 responses are
+//! id-matched and may return out of order), and backpressure that drops
+//! `EPOLLIN` interest on a socket whose write buffer or v1 queue is full.
+//! Compute runs on the bounded [`Executor`]; workers serialize wire frames
+//! off-loop and hand them back through a completion queue + wake pipe.
+//!
+//! Admission control (v2 requests): per-connection and per-dataset
+//! in-flight quotas, a queue-depth watermark, and the executor's own
+//! bounded queue all shed with a structured `overloaded` error instead of
+//! stalling the loop. v1 requests are never shed — the legacy contract is
+//! serial, in-order responses, so v1 frames queue per connection, execute
+//! one at a time, and defer (pause) rather than fail when quotas are hot.
+//!
+//! On non-Linux (or non-x86_64/aarch64) hosts the same protocol is served
+//! by a thread-per-connection blocking fallback; `event_loop_supported()`
+//! tells tests and benches which engine is underneath.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+
+use crate::config::ServerConfig;
+use crate::server::exec::Executor;
+use crate::server::ops::State;
+use crate::util::error::{Context, Result};
+
+/// True when this build serves connections from the epoll event loop
+/// (Linux on x86_64/aarch64); false means the blocking fallback.
+pub fn event_loop_supported() -> bool {
+    cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))
+}
+
+/// Best-effort: raise the process soft fd limit to the hard cap and return
+/// the resulting soft limit. The soak bench opens thousands of sockets in
+/// one process; everything else ignores this.
+pub fn raise_nofile_limit() -> u64 {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        sys::raise_nofile_limit()
+    }
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    {
+        1024
+    }
+}
+
+/// Serve until a `shutdown` request arrives (e.g. on "127.0.0.1:7878"),
+/// with the default server shape.
+pub fn serve(state: Arc<State>, addr: &str) -> Result<()> {
+    let cfg = ServerConfig { addr: addr.to_string(), ..Default::default() };
+    serve_with(state, &cfg)
+}
+
+/// Serve with an explicit [`ServerConfig`]. Returns cleanly after a
+/// `shutdown` request: in-flight work drains, write buffers flush, and the
+/// executor joins.
+pub fn serve_with(state: Arc<State>, cfg: &ServerConfig) -> Result<()> {
+    let listener =
+        TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+    eprintln!("corrsh-serve listening on {}", listener.local_addr()?);
+    serve_on(state, cfg, listener)
+}
+
+/// Bind to an ephemeral port and serve in a background thread (tests/demo).
+pub fn serve_background(state: Arc<State>) -> Result<std::net::SocketAddr> {
+    serve_background_with(state, &ServerConfig::default())
+}
+
+/// `serve_background` with an explicit server shape (the configured
+/// `addr` is ignored — the port is always ephemeral).
+pub fn serve_background_with(
+    state: Arc<State>,
+    cfg: &ServerConfig,
+) -> Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let cfg = cfg.clone();
+    std::thread::spawn(move || {
+        if let Err(e) = serve_on(state, &cfg, listener) {
+            eprintln!("server error: {e:#}");
+        }
+    });
+    Ok(addr)
+}
+
+fn serve_on(state: Arc<State>, cfg: &ServerConfig, listener: TcpListener) -> Result<()> {
+    let exec = Executor::new(state, cfg.workers, cfg.queue_cap);
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    epoll::EventLoop::new(exec.clone(), cfg, listener)?.run()?;
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    blocking::accept_loop(&exec, listener, cfg);
+    exec.shutdown();
+    Ok(())
+}
+
+/// Raw epoll bindings (Linux x86_64/aarch64), following the syscall idiom
+/// of `data/store/reader.rs`. `epoll_pwait` is used on both arches because
+/// aarch64 Linux has no plain `epoll_wait` syscall.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod sys {
+    use std::io;
+    use std::os::fd::RawFd;
+
+    /// Kernel `struct epoll_event`: packed on x86_64 only. Fields must be
+    /// read by value — references into a packed struct are ill-formed.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+    pub const EPOLLET: u32 = 1 << 31;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const EPOLL_CREATE1: usize = 291;
+        pub const EPOLL_CTL: usize = 233;
+        pub const EPOLL_PWAIT: usize = 281;
+        pub const PRLIMIT64: usize = 302;
+    }
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const EPOLL_CREATE1: usize = 20;
+        pub const EPOLL_CTL: usize = 21;
+        pub const EPOLL_PWAIT: usize = 22;
+        pub const PRLIMIT64: usize = 261;
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall6(
+        nr: usize,
+        a: usize,
+        b: usize,
+        c: usize,
+        d: usize,
+        e: usize,
+        f: usize,
+    ) -> isize {
+        let mut ret: isize = nr as isize;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") ret,
+            in("rdi") a,
+            in("rsi") b,
+            in("rdx") c,
+            in("r10") d,
+            in("r8") e,
+            in("r9") f,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall6(
+        nr: usize,
+        a: usize,
+        b: usize,
+        c: usize,
+        d: usize,
+        e: usize,
+        f: usize,
+    ) -> isize {
+        let mut ret: isize = a as isize;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") nr,
+            inlateout("x0") ret,
+            in("x1") b,
+            in("x2") c,
+            in("x3") d,
+            in("x4") e,
+            in("x5") f,
+            options(nostack),
+        );
+        ret
+    }
+
+    fn check(ret: isize) -> io::Result<isize> {
+        if (-4095..0).contains(&ret) {
+            Err(io::Error::from_raw_os_error(-ret as i32))
+        } else {
+            Ok(ret)
+        }
+    }
+
+    pub fn epoll_create1() -> io::Result<RawFd> {
+        // flag = EPOLL_CLOEXEC (== O_CLOEXEC)
+        let ret = unsafe { syscall6(nr::EPOLL_CREATE1, 0o2000000, 0, 0, 0, 0, 0) };
+        check(ret).map(|fd| fd as RawFd)
+    }
+
+    pub fn epoll_ctl(
+        epfd: RawFd,
+        op: i32,
+        fd: RawFd,
+        event: Option<&mut EpollEvent>,
+    ) -> io::Result<()> {
+        let ptr = event.map_or(0, |e| e as *mut EpollEvent as usize);
+        let ret =
+            unsafe { syscall6(nr::EPOLL_CTL, epfd as usize, op as usize, fd as usize, ptr, 0, 0) };
+        check(ret).map(|_| ())
+    }
+
+    /// `epoll_pwait` with a NULL sigmask; retries on EINTR.
+    pub fn epoll_wait(
+        epfd: RawFd,
+        events: &mut [EpollEvent],
+        timeout_ms: i32,
+    ) -> io::Result<usize> {
+        loop {
+            let ret = unsafe {
+                syscall6(
+                    nr::EPOLL_PWAIT,
+                    epfd as usize,
+                    events.as_mut_ptr() as usize,
+                    events.len(),
+                    timeout_ms as usize,
+                    0, // sigmask = NULL
+                    8, // sigsetsize
+                )
+            };
+            match check(ret) {
+                Ok(n) => return Ok(n as usize),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    #[repr(C)]
+    struct RLimit64 {
+        cur: u64,
+        max: u64,
+    }
+
+    pub fn raise_nofile_limit() -> u64 {
+        const RLIMIT_NOFILE: usize = 7;
+        let mut lim = RLimit64 { cur: 0, max: 0 };
+        let ret = unsafe {
+            syscall6(nr::PRLIMIT64, 0, RLIMIT_NOFILE, 0, &mut lim as *mut RLimit64 as usize, 0, 0)
+        };
+        if check(ret).is_err() {
+            return 1024;
+        }
+        let want = RLimit64 { cur: lim.max, max: lim.max };
+        let ret = unsafe {
+            syscall6(nr::PRLIMIT64, 0, RLIMIT_NOFILE, &want as *const RLimit64 as usize, 0, 0, 0)
+        };
+        if check(ret).is_ok() {
+            lim.max
+        } else {
+            lim.cur
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod epoll {
+    use std::collections::{HashMap, VecDeque};
+    use std::io::{self, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::{AsRawFd, FromRawFd, OwnedFd};
+    use std::os::unix::net::UnixStream;
+    use std::sync::{Arc, Mutex};
+    use std::time::{Duration, Instant};
+
+    use super::sys::{self, EpollEvent};
+    use crate::config::ServerConfig;
+    use crate::server::exec::{Executor, SubmitError};
+    use crate::server::proto::{self, Envelope, Frame, Framer, OpError};
+    use crate::util::json::{self, Value};
+
+    const TOKEN_LISTENER: u64 = u64::MAX;
+    const TOKEN_WAKE: u64 = u64::MAX - 1;
+    /// v1 requests queued (not yet submitted) per connection before the
+    /// loop stops reading that socket.
+    const V1_PENDING_MAX: usize = 32;
+    /// Loop tick: bounds idle-sweep latency and shutdown polling.
+    const TICK_MS: i32 = 250;
+    const IDLE_SWEEP_EVERY: Duration = Duration::from_millis(500);
+    const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+    /// One finished (or partial) wire frame, serialized by an executor
+    /// worker, heading back to the loop thread.
+    struct Completion {
+        token: u64,
+        line: String,
+        fin: bool,
+        /// Dataset quota key to release on `fin` — carried here so the
+        /// count is released even if the connection died mid-request.
+        dataset: Option<String>,
+        v1: bool,
+    }
+
+    /// Worker→loop channel: a mutex'd vec plus a wake pipe. The byte is
+    /// written only on empty→non-empty so the pipe can't fill up.
+    struct Shared {
+        completions: Mutex<Vec<Completion>>,
+        wake_tx: UnixStream,
+    }
+
+    impl Shared {
+        fn push(&self, c: Completion) {
+            let was_empty = {
+                let mut q = self.completions.lock().unwrap();
+                let was = q.is_empty();
+                q.push(c);
+                was
+            };
+            if was_empty {
+                let _ = (&self.wake_tx).write(&[1u8]);
+            }
+        }
+    }
+
+    /// A v1 queue item: either a request awaiting serial execution, or a
+    /// response already shaped on the loop thread (parse errors), held in
+    /// line so v1 responses keep arriving in request order.
+    enum V1Item {
+        Req(Envelope),
+        Resolved(Value),
+    }
+
+    struct Conn {
+        stream: TcpStream,
+        token: u64,
+        framer: Framer,
+        wbuf: Vec<u8>,
+        wpos: usize,
+        /// Epoll interest mask currently installed for this fd.
+        interest: u32,
+        /// Requests submitted to the executor, not yet finished.
+        in_flight: usize,
+        v1_pending: VecDeque<V1Item>,
+        /// A v1 request is executing; the next one waits (serial order).
+        v1_busy: bool,
+        /// Once a connection speaks v2, un-attributable errors (bad JSON,
+        /// oversized frames) are shaped as v2 envelopes with `id:null`.
+        saw_v2: bool,
+        peer_closed: bool,
+        last_activity: Instant,
+    }
+
+    impl Conn {
+        fn new(stream: TcpStream, token: u64, max_request_bytes: usize) -> Self {
+            Conn {
+                stream,
+                token,
+                framer: Framer::new(max_request_bytes),
+                wbuf: Vec::new(),
+                wpos: 0,
+                interest: sys::EPOLLIN,
+                in_flight: 0,
+                v1_pending: VecDeque::new(),
+                v1_busy: false,
+                saw_v2: false,
+                peer_closed: false,
+                last_activity: Instant::now(),
+            }
+        }
+
+        fn queue(&mut self, resp: &Value) {
+            let mut line = json::to_string(resp);
+            line.push('\n');
+            self.wbuf.extend_from_slice(line.as_bytes());
+        }
+
+        fn write_pending(&self) -> usize {
+            self.wbuf.len() - self.wpos
+        }
+    }
+
+    /// Write as much of the buffered output as the socket accepts.
+    /// Returns false when the connection is dead.
+    fn flush_conn(conn: &mut Conn) -> bool {
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => return false,
+                Ok(n) => conn.wpos += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if conn.wpos == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+        } else if conn.wpos > 64 * 1024 {
+            conn.wbuf.drain(..conn.wpos);
+            conn.wpos = 0;
+        }
+        true
+    }
+
+    /// Resolved admission-control limits (config defaults applied).
+    struct Limits {
+        max_request_bytes: usize,
+        max_connections: usize,
+        max_inflight_per_conn: usize,
+        max_inflight_per_dataset: usize,
+        shed_watermark: usize,
+        idle_timeout: Option<Duration>,
+        write_buf_bytes: usize,
+    }
+
+    pub(super) struct EventLoop {
+        exec: Arc<Executor>,
+        limits: Limits,
+        epfd: OwnedFd,
+        listener: Option<TcpListener>,
+        wake_rx: UnixStream,
+        shared: Arc<Shared>,
+        conns: Vec<Option<Conn>>,
+        epochs: Vec<u32>,
+        free: Vec<usize>,
+        open: usize,
+        /// Live per-dataset in-flight counts (admission quota).
+        dataset_inflight: HashMap<String, usize>,
+        /// All submitted-but-unfinished requests, across live and dead
+        /// connections (the drain barrier).
+        unfinished: usize,
+        /// Connections whose v1 queue should be pumped this iteration.
+        v1_retry: Vec<u64>,
+        draining: bool,
+        drain_deadline: Option<Instant>,
+        last_sweep: Instant,
+    }
+
+    impl EventLoop {
+        pub(super) fn new(
+            exec: Arc<Executor>,
+            cfg: &ServerConfig,
+            listener: TcpListener,
+        ) -> io::Result<Self> {
+            listener.set_nonblocking(true)?;
+            let raw = sys::epoll_create1()?;
+            let epfd = unsafe { OwnedFd::from_raw_fd(raw) };
+            // Edge-triggered listener: accept drains to WouldBlock, so a
+            // full backlog under EMFILE can't busy-spin the loop.
+            let mut ev =
+                EpollEvent { events: sys::EPOLLIN | sys::EPOLLET, data: TOKEN_LISTENER };
+            sys::epoll_ctl(
+                epfd.as_raw_fd(),
+                sys::EPOLL_CTL_ADD,
+                listener.as_raw_fd(),
+                Some(&mut ev),
+            )?;
+            let (wake_tx, wake_rx) = UnixStream::pair()?;
+            wake_tx.set_nonblocking(true)?;
+            wake_rx.set_nonblocking(true)?;
+            let mut ev = EpollEvent { events: sys::EPOLLIN, data: TOKEN_WAKE };
+            sys::epoll_ctl(
+                epfd.as_raw_fd(),
+                sys::EPOLL_CTL_ADD,
+                wake_rx.as_raw_fd(),
+                Some(&mut ev),
+            )?;
+            let limits = Limits {
+                max_request_bytes: cfg.max_request_bytes.max(1),
+                max_connections: cfg.max_connections.max(1),
+                max_inflight_per_conn: cfg.max_inflight_per_conn.max(1),
+                max_inflight_per_dataset: cfg.max_inflight_per_dataset.max(1),
+                shed_watermark: if cfg.shed_watermark == 0 {
+                    exec.queue_cap()
+                } else {
+                    cfg.shed_watermark
+                },
+                idle_timeout: (cfg.idle_timeout_ms > 0)
+                    .then(|| Duration::from_millis(cfg.idle_timeout_ms)),
+                write_buf_bytes: cfg.write_buf_bytes.max(1),
+            };
+            Ok(EventLoop {
+                exec,
+                limits,
+                epfd,
+                listener: Some(listener),
+                wake_rx,
+                shared: Arc::new(Shared { completions: Mutex::new(Vec::new()), wake_tx }),
+                conns: Vec::new(),
+                epochs: Vec::new(),
+                free: Vec::new(),
+                open: 0,
+                dataset_inflight: HashMap::new(),
+                unfinished: 0,
+                v1_retry: Vec::new(),
+                draining: false,
+                drain_deadline: None,
+                last_sweep: Instant::now(),
+            })
+        }
+
+        pub(super) fn run(&mut self) -> io::Result<()> {
+            let mut events = vec![EpollEvent { events: 0, data: 0 }; 1024];
+            loop {
+                let n = sys::epoll_wait(self.epfd.as_raw_fd(), &mut events, TICK_MS)?;
+                for ev in &events[..n] {
+                    // copy fields out of the (possibly packed) struct
+                    let (bits, data) = { (ev.events, ev.data) };
+                    match data {
+                        TOKEN_LISTENER => self.accept_ready(),
+                        TOKEN_WAKE => self.drain_wake(),
+                        token => self.conn_ready(token, bits),
+                    }
+                }
+                self.drain_completions();
+                self.pump_v1_retries();
+                self.sweep_idle();
+                if !self.draining && self.exec.state().shutting_down() {
+                    self.begin_drain();
+                }
+                if self.draining && self.drain_complete() {
+                    return Ok(());
+                }
+            }
+        }
+
+        fn token_for(&self, slot: usize) -> u64 {
+            (slot as u64) | ((self.epochs[slot] as u64) << 32)
+        }
+
+        fn take_conn(&mut self, token: u64) -> Option<Conn> {
+            let slot = (token & 0xFFFF_FFFF) as usize;
+            let conn = self.conns.get_mut(slot)?.take()?;
+            if conn.token != token {
+                self.conns[slot] = Some(conn);
+                return None;
+            }
+            Some(conn)
+        }
+
+        fn retire(&mut self, conn: Conn) {
+            let slot = (conn.token & 0xFFFF_FFFF) as usize;
+            self.open -= 1;
+            self.exec.state().net.connections.dec();
+            self.epochs[slot] = self.epochs[slot].wrapping_add(1);
+            self.free.push(slot);
+            drop(conn);
+        }
+
+        /// Flush, maybe close, refresh epoll interest, and return the
+        /// connection to its slot.
+        fn finish_io(&mut self, mut conn: Conn) {
+            if !flush_conn(&mut conn) {
+                self.retire(conn);
+                return;
+            }
+            let drained = conn.write_pending() == 0;
+            if conn.peer_closed
+                && drained
+                && conn.in_flight == 0
+                && conn.v1_pending.is_empty()
+            {
+                self.retire(conn);
+                return;
+            }
+            if self.update_interest(&mut conn).is_err() {
+                self.retire(conn);
+                return;
+            }
+            let slot = (conn.token & 0xFFFF_FFFF) as usize;
+            self.conns[slot] = Some(conn);
+        }
+
+        fn update_interest(&self, conn: &mut Conn) -> io::Result<()> {
+            let mut desired = 0u32;
+            if conn.write_pending() > 0 {
+                desired |= sys::EPOLLOUT;
+            }
+            // Backpressure: stop reading when this connection's output or
+            // v1 queue is saturated (or the server is draining).
+            let paused = self.draining
+                || conn.peer_closed
+                || conn.write_pending() > self.limits.write_buf_bytes
+                || conn.v1_pending.len() >= V1_PENDING_MAX;
+            if !paused {
+                desired |= sys::EPOLLIN;
+            }
+            if desired != conn.interest {
+                let mut ev = EpollEvent { events: desired, data: conn.token };
+                sys::epoll_ctl(
+                    self.epfd.as_raw_fd(),
+                    sys::EPOLL_CTL_MOD,
+                    conn.stream.as_raw_fd(),
+                    Some(&mut ev),
+                )?;
+                conn.interest = desired;
+            }
+            Ok(())
+        }
+
+        fn accept_ready(&mut self) {
+            loop {
+                let Some(listener) = &self.listener else { return };
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if self.draining {
+                            continue; // dropped: we are going away
+                        }
+                        if self.open >= self.limits.max_connections {
+                            // Best-effort structured refusal, then drop.
+                            let e = OpError::overloaded(format!(
+                                "max_connections ({}) reached",
+                                self.limits.max_connections
+                            ));
+                            let mut line =
+                                json::to_string(&proto::wire_error(1, &Value::Null, &e));
+                            line.push('\n');
+                            let _ = (&stream).write(line.as_bytes());
+                            self.exec.state().net.shed.add(1);
+                            continue;
+                        }
+                        if stream.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = stream.set_nodelay(true);
+                        let slot = self.free.pop().unwrap_or_else(|| {
+                            self.conns.push(None);
+                            self.epochs.push(0);
+                            self.conns.len() - 1
+                        });
+                        let token = self.token_for(slot);
+                        let mut ev = EpollEvent { events: sys::EPOLLIN, data: token };
+                        if sys::epoll_ctl(
+                            self.epfd.as_raw_fd(),
+                            sys::EPOLL_CTL_ADD,
+                            stream.as_raw_fd(),
+                            Some(&mut ev),
+                        )
+                        .is_err()
+                        {
+                            self.free.push(slot);
+                            continue;
+                        }
+                        self.conns[slot] =
+                            Some(Conn::new(stream, token, self.limits.max_request_bytes));
+                        self.open += 1;
+                        let net = &self.exec.state().net;
+                        net.accepted.add(1);
+                        net.connections.inc();
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        eprintln!("accept error: {e}");
+                        return;
+                    }
+                }
+            }
+        }
+
+        fn drain_wake(&mut self) {
+            let mut buf = [0u8; 256];
+            loop {
+                match (&self.wake_rx).read(&mut buf) {
+                    Ok(0) => return,
+                    Ok(_) => continue,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => return,
+                }
+            }
+        }
+
+        fn conn_ready(&mut self, token: u64, bits: u32) {
+            let Some(mut conn) = self.take_conn(token) else { return };
+            if bits & (sys::EPOLLERR | sys::EPOLLHUP) != 0 {
+                self.retire(conn);
+                return;
+            }
+            if bits & sys::EPOLLIN != 0 && !self.read_ready(&mut conn) {
+                self.retire(conn);
+                return;
+            }
+            self.finish_io(conn);
+        }
+
+        /// One read per readiness event (level-triggered re-arms for the
+        /// rest), then frame/parse/dispatch everything it completed.
+        fn read_ready(&mut self, conn: &mut Conn) -> bool {
+            let mut buf = [0u8; 16 * 1024];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.peer_closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.last_activity = Instant::now();
+                        conn.framer.push(&buf[..n]);
+                        break;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => return false,
+                }
+            }
+            self.process_frames(conn);
+            true
+        }
+
+        fn process_frames(&mut self, conn: &mut Conn) {
+            while let Some(frame) = conn.framer.next_frame() {
+                match frame {
+                    Frame::Line(line) => match proto::parse_request(&line) {
+                        Ok(env) if env.v >= 2 => {
+                            conn.saw_v2 = true;
+                            self.admit_v2(conn, env);
+                        }
+                        Ok(env) => {
+                            conn.v1_pending.push_back(V1Item::Req(env));
+                        }
+                        Err(pe) => {
+                            // Parse failures are answered on the loop
+                            // thread and (for v1) held in queue order; the
+                            // State request/error counters are untouched,
+                            // matching the old blocking server.
+                            let v = if pe.v >= 2 || conn.saw_v2 { 2 } else { 1 };
+                            let resp = proto::wire_error(v, &pe.id, &pe.err);
+                            if v >= 2 {
+                                conn.queue(&resp);
+                            } else {
+                                conn.v1_pending.push_back(V1Item::Resolved(resp));
+                            }
+                        }
+                    },
+                    Frame::Oversized { len } => {
+                        self.exec.state().net.oversized.add(1);
+                        let e = OpError::bad_request(format!(
+                            "request of {len} bytes exceeds max_request_bytes ({})",
+                            self.limits.max_request_bytes
+                        ));
+                        let v = if conn.saw_v2 { 2 } else { 1 };
+                        let resp = proto::wire_error(v, &Value::Null, &e);
+                        if v >= 2 {
+                            conn.queue(&resp);
+                        } else {
+                            conn.v1_pending.push_back(V1Item::Resolved(resp));
+                        }
+                    }
+                    Frame::Invalid => {
+                        let e = OpError::bad_request("request is not valid UTF-8");
+                        let v = if conn.saw_v2 { 2 } else { 1 };
+                        let resp = proto::wire_error(v, &Value::Null, &e);
+                        if v >= 2 {
+                            conn.queue(&resp);
+                        } else {
+                            conn.v1_pending.push_back(V1Item::Resolved(resp));
+                        }
+                    }
+                }
+            }
+            self.pump_v1(conn);
+        }
+
+        fn completion_cb(
+            &self,
+            token: u64,
+            dataset: Option<String>,
+            v1: bool,
+        ) -> Box<dyn FnMut(Value, bool) + Send> {
+            let shared = self.shared.clone();
+            Box::new(move |frame, fin| {
+                let mut line = json::to_string(&frame);
+                line.push('\n');
+                shared.push(Completion { token, line, fin, dataset: dataset.clone(), v1 });
+            })
+        }
+
+        fn book_submit(&mut self, conn: &mut Conn, dataset: Option<String>) {
+            conn.in_flight += 1;
+            self.unfinished += 1;
+            self.exec.state().net.in_flight.inc();
+            if let Some(ds) = dataset {
+                *self.dataset_inflight.entry(ds).or_insert(0) += 1;
+            }
+        }
+
+        fn dataset_saturated(&self, dataset: Option<&String>) -> bool {
+            dataset.is_some_and(|ds| {
+                self.dataset_inflight.get(ds).copied().unwrap_or(0)
+                    >= self.limits.max_inflight_per_dataset
+            })
+        }
+
+        /// v2 admission: quotas and watermarks shed with structured
+        /// `overloaded` errors; accepted requests pipeline freely.
+        fn admit_v2(&mut self, conn: &mut Conn, env: Envelope) {
+            let state = self.exec.state().clone();
+            if self.draining || state.shutting_down() {
+                conn.queue(&proto::wire_error(2, &env.id, &OpError::shutting_down()));
+                return;
+            }
+            if conn.in_flight >= self.limits.max_inflight_per_conn {
+                state.net.shed.add(1);
+                let e = OpError::overloaded(format!(
+                    "per-connection in-flight quota ({}) exceeded",
+                    self.limits.max_inflight_per_conn
+                ));
+                conn.queue(&proto::wire_error(2, &env.id, &e));
+                return;
+            }
+            let dataset = proto::dataset_of(&env).map(str::to_string);
+            if self.dataset_saturated(dataset.as_ref()) {
+                state.net.shed.add(1);
+                let e = OpError::overloaded(format!(
+                    "dataset {:?} in-flight quota ({}) exceeded",
+                    dataset.as_deref().unwrap_or(""),
+                    self.limits.max_inflight_per_dataset
+                ));
+                conn.queue(&proto::wire_error(2, &env.id, &e));
+                return;
+            }
+            if self.exec.queue_depth() as usize >= self.limits.shed_watermark {
+                state.net.shed.add(1);
+                let e = OpError::overloaded(format!(
+                    "queue depth watermark ({}) reached",
+                    self.limits.shed_watermark
+                ));
+                conn.queue(&proto::wire_error(2, &env.id, &e));
+                return;
+            }
+            let cb = self.completion_cb(conn.token, dataset.clone(), false);
+            match self.exec.try_submit(env, cb) {
+                Ok(()) => self.book_submit(conn, dataset),
+                Err((env, SubmitError::Overloaded)) => {
+                    state.net.shed.add(1);
+                    let e = OpError::overloaded("executor queue full");
+                    conn.queue(&proto::wire_error(2, &env.id, &e));
+                }
+                Err((env, SubmitError::ShuttingDown)) => {
+                    conn.queue(&proto::wire_error(2, &env.id, &OpError::shutting_down()));
+                }
+            }
+        }
+
+        /// v1 pump: submit the queue head when idle. v1 requests are never
+        /// shed — on quota or queue pressure the head is deferred and the
+        /// connection's reads pause instead.
+        fn pump_v1(&mut self, conn: &mut Conn) {
+            while !conn.v1_busy {
+                let Some(item) = conn.v1_pending.pop_front() else { break };
+                let env = match item {
+                    V1Item::Resolved(resp) => {
+                        conn.queue(&resp);
+                        continue;
+                    }
+                    V1Item::Req(env) => env,
+                };
+                if self.draining || self.exec.state().shutting_down() {
+                    conn.queue(&proto::wire_error(1, &Value::Null, &OpError::shutting_down()));
+                    continue;
+                }
+                let dataset = proto::dataset_of(&env).map(str::to_string);
+                if self.dataset_saturated(dataset.as_ref()) {
+                    conn.v1_pending.push_front(V1Item::Req(env));
+                    self.v1_retry.push(conn.token);
+                    break;
+                }
+                let cb = self.completion_cb(conn.token, dataset.clone(), true);
+                match self.exec.try_submit(env, cb) {
+                    Ok(()) => {
+                        conn.v1_busy = true;
+                        self.book_submit(conn, dataset);
+                    }
+                    Err((env, SubmitError::Overloaded)) => {
+                        conn.v1_pending.push_front(V1Item::Req(env));
+                        self.v1_retry.push(conn.token);
+                        break;
+                    }
+                    Err((_, SubmitError::ShuttingDown)) => {
+                        conn.queue(&proto::wire_error(
+                            1,
+                            &Value::Null,
+                            &OpError::shutting_down(),
+                        ));
+                    }
+                }
+            }
+        }
+
+        fn pump_v1_retries(&mut self) {
+            if self.v1_retry.is_empty() {
+                return;
+            }
+            let tokens = std::mem::take(&mut self.v1_retry);
+            for token in tokens {
+                let Some(mut conn) = self.take_conn(token) else { continue };
+                self.pump_v1(&mut conn);
+                self.finish_io(conn);
+            }
+        }
+
+        fn drain_completions(&mut self) {
+            let items = std::mem::take(&mut *self.shared.completions.lock().unwrap());
+            for c in items {
+                if c.fin {
+                    self.unfinished = self.unfinished.saturating_sub(1);
+                    self.exec.state().net.in_flight.dec();
+                    if let Some(ds) = &c.dataset {
+                        if let Some(count) = self.dataset_inflight.get_mut(ds) {
+                            *count = count.saturating_sub(1);
+                            if *count == 0 {
+                                self.dataset_inflight.remove(ds);
+                            }
+                        }
+                    }
+                }
+                let Some(mut conn) = self.take_conn(c.token) else { continue };
+                conn.wbuf.extend_from_slice(c.line.as_bytes());
+                if c.fin {
+                    conn.in_flight = conn.in_flight.saturating_sub(1);
+                    conn.last_activity = Instant::now();
+                    if c.v1 {
+                        conn.v1_busy = false;
+                        self.v1_retry.push(c.token);
+                    }
+                }
+                self.finish_io(conn);
+            }
+        }
+
+        fn sweep_idle(&mut self) {
+            let Some(timeout) = self.limits.idle_timeout else { return };
+            if self.last_sweep.elapsed() < IDLE_SWEEP_EVERY {
+                return;
+            }
+            self.last_sweep = Instant::now();
+            let mut stale = Vec::new();
+            for conn in self.conns.iter().flatten() {
+                if conn.in_flight == 0
+                    && conn.v1_pending.is_empty()
+                    && conn.write_pending() == 0
+                    && conn.last_activity.elapsed() >= timeout
+                {
+                    stale.push(conn.token);
+                }
+            }
+            for token in stale {
+                if let Some(conn) = self.take_conn(token) {
+                    self.exec.state().net.idle_closed.add(1);
+                    self.retire(conn);
+                }
+            }
+        }
+
+        /// First tick after a `shutdown` request: stop accepting (dropping
+        /// the listener refuses new connects and resets the backlog), then
+        /// answer queued v1 requests with `shutting_down`.
+        fn begin_drain(&mut self) {
+            self.draining = true;
+            self.drain_deadline = Some(Instant::now() + DRAIN_GRACE);
+            self.listener = None;
+            for conn in self.conns.iter().flatten() {
+                self.v1_retry.push(conn.token);
+            }
+        }
+
+        /// Done when every submitted request finished and every response
+        /// byte was flushed — or the grace period expired.
+        fn drain_complete(&mut self) -> bool {
+            if self.drain_deadline.is_some_and(|d| Instant::now() >= d) {
+                return true;
+            }
+            self.unfinished == 0
+                && self
+                    .conns
+                    .iter()
+                    .flatten()
+                    .all(|c| c.write_pending() == 0 && c.v1_pending.is_empty())
+        }
+    }
+}
+
+/// Thread-per-connection fallback for hosts without the raw epoll
+/// bindings: same framing, size cap, and v1/v2 envelopes; no pipelining
+/// (requests on one socket execute serially) and no partial frames.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod blocking {
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::Arc;
+
+    use crate::config::ServerConfig;
+    use crate::server::exec::Executor;
+    use crate::server::proto::{self, Frame, Framer, OpError};
+    use crate::util::json::{self, Value};
+
+    pub(super) fn accept_loop(exec: &Arc<Executor>, listener: TcpListener, cfg: &ServerConfig) {
+        let max_request_bytes = cfg.max_request_bytes.max(1);
+        for stream in listener.incoming() {
+            if exec.state().shutting_down() {
+                break;
+            }
+            match stream {
+                Ok(s) => {
+                    let e = exec.clone();
+                    std::thread::spawn(move || client_loop(e, s, max_request_bytes));
+                }
+                Err(e) => eprintln!("accept error: {e}"),
+            }
+        }
+    }
+
+    fn client_loop(exec: Arc<Executor>, mut stream: TcpStream, max_request_bytes: usize) {
+        let state = exec.state().clone();
+        state.net.accepted.add(1);
+        state.net.connections.inc();
+        // Our side of the connection = the listener's address; used to
+        // wake the accept loop after a shutdown request.
+        let local = stream.local_addr().ok();
+        let mut framer = Framer::new(max_request_bytes);
+        let mut buf = [0u8; 16 * 1024];
+        let mut saw_v2 = false;
+        'outer: loop {
+            let n = match stream.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => n,
+            };
+            framer.push(&buf[..n]);
+            while let Some(frame) = framer.next_frame() {
+                let resp = match frame {
+                    Frame::Line(line) => match proto::parse_request(&line) {
+                        Ok(env) => {
+                            saw_v2 |= env.v >= 2;
+                            exec.submit_env(env)
+                        }
+                        Err(pe) => {
+                            let v = if pe.v >= 2 || saw_v2 { 2 } else { 1 };
+                            proto::wire_error(v, &pe.id, &pe.err)
+                        }
+                    },
+                    Frame::Oversized { len } => {
+                        state.net.oversized.add(1);
+                        let e = OpError::bad_request(format!(
+                            "request of {len} bytes exceeds max_request_bytes ({max_request_bytes})"
+                        ));
+                        proto::wire_error(if saw_v2 { 2 } else { 1 }, &Value::Null, &e)
+                    }
+                    Frame::Invalid => {
+                        let e = OpError::bad_request("request is not valid UTF-8");
+                        proto::wire_error(if saw_v2 { 2 } else { 1 }, &Value::Null, &e)
+                    }
+                };
+                let mut out = json::to_string(&resp);
+                out.push('\n');
+                if stream.write_all(out.as_bytes()).is_err() {
+                    break 'outer;
+                }
+                if state.shutting_down() {
+                    if let Some(addr) = local {
+                        let _ = TcpStream::connect(addr);
+                    }
+                    break 'outer;
+                }
+            }
+        }
+        state.net.connections.dec();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    use super::*;
+    use crate::util::json::{self, Value};
+
+    fn req(s: &str) -> Value {
+        json::parse(s).unwrap()
+    }
+
+    fn register_toy(state: &State, name: &str) {
+        let r = state.handle(&req(&format!(
+            r#"{{"op":"register","name":"{name}","kind":"gaussian","n":200,"dim":8,"seed":4}}"#
+        )));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "register failed: {r}");
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let state = State::new();
+        state.handle(&req(
+            r#"{"op":"register","name":"t","kind":"gaussian","n":100,"dim":4,"seed":0}"#,
+        ));
+        let addr = serve_background(state).unwrap();
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all(
+            b"{\"op\":\"ping\"}\nnot json\n{\"op\":\"medoid\",\"dataset\":\"t\",\"seed\":3}\n",
+        )
+        .unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("pong"));
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("bad json"));
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true));
+        assert_eq!(resp.get("medoid").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn tcp_concurrent_clients_are_deterministic_per_seed() {
+        // ≥4 concurrent clients, each with its own seed; every response
+        // must equal the single-threaded reference answer for that seed.
+        let reference = State::new();
+        register_toy(&reference, "toy");
+        let mut expect = Vec::new();
+        for seed in 0u64..4 {
+            let r = reference.handle(&req(&format!(
+                r#"{{"op":"medoid","dataset":"toy","pulls_per_arm":48,"seed":{seed}}}"#
+            )));
+            expect.push((r.get("medoid").as_usize().unwrap(), r.get("pulls").as_u64().unwrap()));
+        }
+
+        let state = State::new();
+        register_toy(&state, "toy");
+        let cfg = crate::config::ServerConfig { workers: 4, queue_cap: 8, ..Default::default() };
+        let addr = serve_background_with(state, &cfg).unwrap();
+        std::thread::scope(|s| {
+            for (seed, (medoid, pulls)) in expect.iter().enumerate() {
+                s.spawn(move || {
+                    let mut sock = TcpStream::connect(addr).unwrap();
+                    let mut reader = BufReader::new(sock.try_clone().unwrap());
+                    let mut line = String::new();
+                    for _ in 0..3 {
+                        sock.write_all(
+                            format!(
+                                "{{\"op\":\"medoid\",\"dataset\":\"toy\",\
+                                 \"pulls_per_arm\":48,\"seed\":{seed}}}\n"
+                            )
+                            .as_bytes(),
+                        )
+                        .unwrap();
+                        line.clear();
+                        reader.read_line(&mut line).unwrap();
+                        let resp = json::parse(line.trim()).unwrap();
+                        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp}");
+                        assert_eq!(resp.get("medoid").as_usize(), Some(*medoid), "seed {seed}");
+                        assert_eq!(resp.get("pulls").as_u64(), Some(*pulls), "seed {seed}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn tcp_shutdown_op_stops_the_server() {
+        let state = State::new();
+        let addr = serve_background(state.clone()).unwrap();
+        let mut sock = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(sock.try_clone().unwrap());
+        sock.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("shutting_down"));
+        assert!(state.shutting_down());
+        // The event loop drains and the listener is dropped: within a
+        // bounded window new connections must stop being served.
+        let mut stopped = false;
+        for _ in 0..100 {
+            match TcpStream::connect(addr) {
+                Err(_) => {
+                    stopped = true;
+                    break;
+                }
+                Ok(mut probe) => {
+                    // Connection may still land in the accept backlog; a
+                    // served probe would get a response, an unserved one
+                    // gets EOF.
+                    let _ = probe.write_all(b"{\"op\":\"ping\"}\n");
+                    let mut r = BufReader::new(probe);
+                    let mut l = String::new();
+                    if matches!(r.read_line(&mut l), Ok(0)) {
+                        stopped = true;
+                        break;
+                    }
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        assert!(stopped, "server kept serving after shutdown op");
+    }
+}

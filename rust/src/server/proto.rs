@@ -1,0 +1,540 @@
+//! Protocol envelope: parse/serialize for the versioned request/response
+//! envelope, the v1 compat shim, and the incremental newline framer.
+//!
+//! v2 requests are `{"v":2,"id":<u64>,"op":"...","params":{...}}`; every v2
+//! response carries the request id so pipelined responses may return out of
+//! order: `{"id":...,"ok":true,"result":{...}}`,
+//! `{"id":...,"ok":true,"partial":true,"seq":N,"result":{...}}` for
+//! streaming frames, or `{"id":...,"ok":false,"error":{"code":...,
+//! "message":...}}`. Bare v1 requests (no `"v"` key) keep working: the shim
+//! infers `v:1`, treats the whole object as params, and flattens responses
+//! to the legacy one-object shapes.
+//!
+//! Everything here is pure bytes/values — no sockets, no state — so the
+//! corpus test below can hammer the parser in isolation.
+
+use std::collections::VecDeque;
+
+use crate::util::json::{self, Value};
+
+/// Default cap on one framed request line (see `ServerConfig`).
+pub const DEFAULT_MAX_REQUEST_BYTES: usize = 1 << 20;
+
+/// Deprecation note attached to v1 `ping` replies.
+pub const V1_DEPRECATION: &str =
+    "v1 protocol is deprecated; send {\"v\":2,\"id\":N,\"op\":\"...\",\"params\":{...}}";
+
+/// Structured error classification for the v2 envelope. v1 responses carry
+/// only the message (stringly, as before).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadRequest,
+    UnknownDataset,
+    Overloaded,
+    ShuttingDown,
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownDataset => "unknown_dataset",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::ShuttingDown => "shutting_down",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// A failed operation: code for machines, message for humans. Messages use
+/// the crate error's full context chain so v1 error strings are unchanged.
+#[derive(Clone, Debug)]
+pub struct OpError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl OpError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> Self {
+        OpError { code, message: message.into() }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn overloaded(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::Overloaded, message)
+    }
+
+    pub fn shutting_down() -> Self {
+        Self::new(ErrorCode::ShuttingDown, "server shutting down")
+    }
+
+    pub fn internal(message: impl Into<String>) -> Self {
+        Self::new(ErrorCode::Internal, message)
+    }
+
+    /// Classify a crate error from an op body. Dataset-lookup failures are
+    /// the one family with a dedicated code; everything else a handler
+    /// reports is a caller mistake.
+    pub fn classify(e: crate::util::error::Error) -> Self {
+        let message = format!("{e:#}");
+        let code = if message.contains("not registered") {
+            ErrorCode::UnknownDataset
+        } else {
+            ErrorCode::BadRequest
+        };
+        OpError { code, message }
+    }
+}
+
+/// A parsed request, normalized across protocol versions: v1 requests get
+/// `v:1`, a `Null` id, and the whole request object as `params`.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub v: u8,
+    /// Raw id value, echoed verbatim in every response (`Null` for v1).
+    pub id: Value,
+    /// Op name; empty when a v1 request had no `"op"` key (dispatch then
+    /// reports the legacy "missing op" error).
+    pub op: String,
+    pub params: Value,
+}
+
+/// Infallible v1 shim: any JSON object becomes an envelope; bad shapes
+/// surface through dispatch so v1 error strings stay byte-identical.
+pub fn v1_envelope(req: &Value) -> Envelope {
+    Envelope {
+        v: 1,
+        id: Value::Null,
+        op: req.get("op").as_str().unwrap_or("").to_string(),
+        params: req.clone(),
+    }
+}
+
+/// What to echo when a request can't even be parsed into an [`Envelope`]:
+/// best-effort version and id (v2 only when a well-formed `"v":2` + id were
+/// present) plus the error itself.
+#[derive(Debug)]
+pub struct ParseError {
+    pub v: u8,
+    pub id: Value,
+    pub err: OpError,
+}
+
+impl ParseError {
+    fn v1(err: OpError) -> Self {
+        ParseError { v: 1, id: Value::Null, err }
+    }
+}
+
+/// Parse one request line into an [`Envelope`].
+pub fn parse_request(line: &str) -> Result<Envelope, ParseError> {
+    let req = match json::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Err(ParseError::v1(OpError::bad_request(format!("bad json: {e}")))),
+    };
+    match req.get("v") {
+        Value::Null => Ok(v1_envelope(&req)),
+        v if v.as_u64() == Some(1) => Ok(v1_envelope(&req)),
+        v if v.as_u64() == Some(2) => {
+            let id = req.get("id").clone();
+            if id.as_u64().is_none() {
+                return Err(ParseError::v1(OpError::bad_request(
+                    "v2 request requires a non-negative integer id",
+                )));
+            }
+            let op = match req.get("op").as_str() {
+                Some(op) => op.to_string(),
+                None => {
+                    return Err(ParseError {
+                        v: 2,
+                        id,
+                        err: OpError::bad_request("missing op"),
+                    })
+                }
+            };
+            let params = match req.get("params") {
+                Value::Null => Value::from_pairs(vec![]),
+                p => p.clone(),
+            };
+            Ok(Envelope { v: 2, id, op, params })
+        }
+        v => Err(ParseError::v1(OpError::bad_request(format!(
+            "unsupported protocol version {v}"
+        )))),
+    }
+}
+
+/// The dataset a request touches, if any — the per-dataset admission quota
+/// key (`dataset` for queries, `name` for registry ops).
+pub fn dataset_of(env: &Envelope) -> Option<&str> {
+    match env.params.get("dataset").as_str() {
+        Some(d) => Some(d),
+        None => env.params.get("name").as_str(),
+    }
+}
+
+/// Serialize the final response for a request: v2 envelope, or the legacy
+/// flattened v1 object (op results already carry `"ok":true`; v1 `ping`
+/// replies gain the deprecation note).
+pub fn wire_final(env: &Envelope, result: Result<Value, OpError>) -> Value {
+    match result {
+        Ok(mut r) => {
+            if env.v >= 2 {
+                Value::from_pairs(vec![
+                    ("id", env.id.clone()),
+                    ("ok", true.into()),
+                    ("result", r),
+                ])
+            } else {
+                if env.op == "ping" {
+                    if let Value::Object(obj) = &mut r {
+                        obj.insert("note".to_string(), V1_DEPRECATION.into());
+                    }
+                }
+                r
+            }
+        }
+        Err(e) => wire_error(env.v, &env.id, &e),
+    }
+}
+
+/// One streaming frame (v2 only): same id, `partial:true`, a monotone `seq`.
+pub fn wire_partial(env: &Envelope, seq: u64, result: Value) -> Value {
+    Value::from_pairs(vec![
+        ("id", env.id.clone()),
+        ("ok", true.into()),
+        ("partial", true.into()),
+        ("seq", seq.into()),
+        ("result", result),
+    ])
+}
+
+/// An error response at either protocol version.
+pub fn wire_error(v: u8, id: &Value, e: &OpError) -> Value {
+    if v >= 2 {
+        Value::from_pairs(vec![
+            ("id", id.clone()),
+            ("ok", false.into()),
+            (
+                "error",
+                Value::from_pairs(vec![
+                    ("code", e.code.as_str().into()),
+                    ("message", e.message.as_str().into()),
+                ]),
+            ),
+        ])
+    } else {
+        Value::from_pairs(vec![("ok", false.into()), ("error", e.message.as_str().into())])
+    }
+}
+
+/// One framed unit off the wire.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// A complete request line (newline stripped, UTF-8, non-blank).
+    Line(String),
+    /// A line that exceeded the size cap; `len` is its full byte length.
+    /// The framer resynchronizes at the next newline, so one oversized
+    /// request costs one error response, not the connection.
+    Oversized { len: usize },
+    /// A complete line that was not valid UTF-8.
+    Invalid,
+}
+
+/// Incremental newline framer with a hard per-line size cap: feed raw
+/// socket chunks with [`Framer::push`], drain complete frames with
+/// [`Framer::next_frame`]. Lines longer than the cap are discarded as they
+/// stream in (bounded memory) and surface as one [`Frame::Oversized`].
+pub struct Framer {
+    buf: Vec<u8>,
+    max: usize,
+    /// Inside an over-cap line, counting bytes until the next newline.
+    discarding: bool,
+    discarded: usize,
+    ready: VecDeque<Frame>,
+}
+
+impl Framer {
+    pub fn new(max_request_bytes: usize) -> Self {
+        Framer {
+            buf: Vec::new(),
+            max: max_request_bytes.max(1),
+            discarding: false,
+            discarded: 0,
+            ready: VecDeque::new(),
+        }
+    }
+
+    /// Bytes currently buffered for the incomplete tail line.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn push(&mut self, chunk: &[u8]) {
+        let mut rest = chunk;
+        while !rest.is_empty() {
+            match rest.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    let (head, tail) = rest.split_at(pos);
+                    rest = &tail[1..];
+                    if self.discarding {
+                        self.ready
+                            .push_back(Frame::Oversized { len: self.discarded + head.len() });
+                        self.discarding = false;
+                        self.discarded = 0;
+                    } else if self.buf.len() + head.len() > self.max {
+                        self.ready
+                            .push_back(Frame::Oversized { len: self.buf.len() + head.len() });
+                        self.buf.clear();
+                    } else {
+                        self.buf.extend_from_slice(head);
+                        let complete = std::mem::take(&mut self.buf);
+                        match String::from_utf8(complete) {
+                            Ok(s) if s.trim().is_empty() => {}
+                            Ok(s) => self.ready.push_back(Frame::Line(s)),
+                            Err(_) => self.ready.push_back(Frame::Invalid),
+                        }
+                    }
+                }
+                None => {
+                    if self.discarding {
+                        self.discarded += rest.len();
+                    } else if self.buf.len() + rest.len() > self.max {
+                        self.discarding = true;
+                        self.discarded = self.buf.len() + rest.len();
+                        self.buf.clear();
+                    } else {
+                        self.buf.extend_from_slice(rest);
+                    }
+                    rest = &[];
+                }
+            }
+        }
+    }
+
+    pub fn next_frame(&mut self) -> Option<Frame> {
+        self.ready.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn frames(framer: &mut Framer) -> Vec<Frame> {
+        std::iter::from_fn(|| framer.next_frame()).collect()
+    }
+
+    #[test]
+    fn v1_requests_infer_the_shim_envelope() {
+        let env = parse_request(r#"{"op":"ping"}"#).unwrap();
+        assert_eq!((env.v, env.op.as_str()), (1, "ping"));
+        assert!(matches!(env.id, Value::Null));
+        assert_eq!(env.params.get("op").as_str(), Some("ping"));
+        // explicit v:1 behaves identically
+        let env = parse_request(r#"{"v":1,"op":"list"}"#).unwrap();
+        assert_eq!((env.v, env.op.as_str()), (1, "list"));
+        // a v1 request without an op still parses; dispatch reports it
+        let env = parse_request(r#"{"dataset":"x"}"#).unwrap();
+        assert_eq!(env.op, "");
+    }
+
+    #[test]
+    fn v2_requests_parse_and_validate() {
+        let env =
+            parse_request(r#"{"v":2,"id":7,"op":"medoid","params":{"dataset":"t"}}"#).unwrap();
+        assert_eq!((env.v, env.op.as_str()), (2, "medoid"));
+        assert_eq!(env.id.as_u64(), Some(7));
+        assert_eq!(dataset_of(&env), Some("t"));
+        // params are optional
+        let env = parse_request(r#"{"v":2,"id":0,"op":"ping"}"#).unwrap();
+        assert!(env.params.as_object().unwrap().is_empty());
+
+        // id must be a non-negative integer
+        let e = parse_request(r#"{"v":2,"op":"ping"}"#).unwrap_err();
+        assert_eq!(e.err.code, ErrorCode::BadRequest);
+        let e = parse_request(r#"{"v":2,"id":-1,"op":"ping"}"#).unwrap_err();
+        assert!(e.err.message.contains("id"));
+        // missing op echoes the id at v2
+        let e = parse_request(r#"{"v":2,"id":9}"#).unwrap_err();
+        assert_eq!((e.v, e.id.as_u64()), (2, Some(9)));
+        assert_eq!(e.err.message, "missing op");
+        // unknown versions are rejected
+        let e = parse_request(r#"{"v":3,"id":1,"op":"ping"}"#).unwrap_err();
+        assert!(e.err.message.contains("unsupported protocol version"));
+        // garbage is a bad_request with the parser's message
+        let e = parse_request("not json").unwrap_err();
+        assert!(e.err.message.starts_with("bad json: "));
+    }
+
+    #[test]
+    fn wire_shapes_round_trip() {
+        let v2 = parse_request(r#"{"v":2,"id":3,"op":"ping"}"#).unwrap();
+        let ok = wire_final(&v2, Ok(Value::from_pairs(vec![("pong", true.into())])));
+        assert_eq!(ok.get("id").as_u64(), Some(3));
+        assert_eq!(ok.get("ok").as_bool(), Some(true));
+        assert_eq!(ok.get("result").get("pong").as_bool(), Some(true));
+        assert!(matches!(ok.get("partial"), Value::Null));
+
+        let part = wire_partial(&v2, 2, Value::from_pairs(vec![("loss", 1.5.into())]));
+        assert_eq!(part.get("partial").as_bool(), Some(true));
+        assert_eq!(part.get("seq").as_u64(), Some(2));
+        assert_eq!(part.get("id").as_u64(), Some(3));
+
+        let err = wire_final(&v2, Err(OpError::overloaded("queue full")));
+        assert_eq!(err.get("ok").as_bool(), Some(false));
+        assert_eq!(err.get("error").get("code").as_str(), Some("overloaded"));
+        assert_eq!(err.get("error").get("message").as_str(), Some("queue full"));
+
+        // v1 flattening: the result object passes through unchanged...
+        let v1 = parse_request(r#"{"op":"list"}"#).unwrap();
+        let flat = wire_final(
+            &v1,
+            Ok(Value::from_pairs(vec![("ok", true.into()), ("datasets", Value::Array(vec![]))])),
+        );
+        assert!(matches!(flat.get("id"), Value::Null));
+        assert_eq!(flat.get("ok").as_bool(), Some(true));
+        // ...errors flatten to the stringly legacy shape...
+        let flat = wire_final(&v1, Err(OpError::bad_request("missing op")));
+        assert_eq!(flat.get("error").as_str(), Some("missing op"));
+        // ...and ping gains the deprecation note.
+        let ping = parse_request(r#"{"op":"ping"}"#).unwrap();
+        let flat = wire_final(
+            &ping,
+            Ok(Value::from_pairs(vec![("ok", true.into()), ("pong", true.into())])),
+        );
+        assert!(flat.get("note").as_str().unwrap().contains("deprecated"));
+    }
+
+    #[test]
+    fn framer_splits_reassembles_and_caps() {
+        let mut f = Framer::new(64);
+        f.push(b"{\"op\":\"ping\"}\n");
+        assert_eq!(frames(&mut f), vec![Frame::Line("{\"op\":\"ping\"}".into())]);
+
+        // split across arbitrary read boundaries
+        f.push(b"{\"op\":");
+        assert!(f.next_frame().is_none());
+        f.push(b"\"list\"}");
+        f.push(b"\n{\"op\":\"x\"}\n\n  \n");
+        assert_eq!(
+            frames(&mut f),
+            vec![Frame::Line("{\"op\":\"list\"}".into()), Frame::Line("{\"op\":\"x\"}".into())]
+        );
+
+        // an oversized line is dropped with bounded memory, and the framer
+        // resynchronizes on the next newline
+        let big = vec![b'x'; 200];
+        f.push(&big);
+        assert!(f.pending_bytes() == 0, "over-cap bytes must not be buffered");
+        f.push(&big);
+        f.push(b"\n{\"op\":\"after\"}\n");
+        assert_eq!(
+            frames(&mut f),
+            vec![Frame::Oversized { len: 400 }, Frame::Line("{\"op\":\"after\"}".into())]
+        );
+
+        // a single push containing an over-cap line mid-chunk
+        let mut f = Framer::new(8);
+        f.push(b"0123456789ABCDEF\nok\n");
+        assert_eq!(
+            frames(&mut f),
+            vec![Frame::Oversized { len: 16 }, Frame::Line("ok".into())]
+        );
+
+        // invalid UTF-8 surfaces as its own frame
+        let mut f = Framer::new(64);
+        f.push(&[0xff, 0xfe, b'\n']);
+        assert_eq!(frames(&mut f), vec![Frame::Invalid]);
+    }
+
+    /// Deterministic fuzz-style corpus: random envelopes — valid v1/v2,
+    /// truncated, garbage, oversized, split across arbitrary chunk
+    /// boundaries — must never panic, and every complete valid line must
+    /// parse to the same envelope it does unsplit.
+    #[test]
+    fn corpus_of_malformed_and_split_envelopes() {
+        let mut rng = Rng::seeded(0xC0FFEE);
+        let cap = 256;
+        let mut corpus: Vec<Vec<u8>> = Vec::new();
+        for i in 0..200u64 {
+            let kind = rng.below(6);
+            let line: Vec<u8> = match kind {
+                0 => format!(r#"{{"op":"ping","tag":{i}}}"#).into_bytes(),
+                1 => format!(r#"{{"v":2,"id":{i},"op":"medoid","params":{{"dataset":"d"}}}}"#)
+                    .into_bytes(),
+                2 => {
+                    // truncated prefix of a valid request
+                    let full = format!(r#"{{"v":2,"id":{i},"op":"list","params":{{}}}}"#);
+                    let cut = 1 + rng.below(full.len() as u64 - 1) as usize;
+                    full.into_bytes()[..cut].to_vec()
+                }
+                3 => (0..rng.below(40) + 1)
+                    .map(|_| match rng.below(256) as u8 {
+                        b'\n' => b'x', // newlines would change the framing
+                        b => b,
+                    })
+                    .collect(),
+                4 => vec![b'z'; cap + 1 + rng.below(200) as usize],
+                _ => format!(r#"{{"v":{},"id":1,"op":"ping"}}"#, rng.below(9)).into_bytes(),
+            };
+            corpus.push(line);
+        }
+
+        // Reference pass: whole lines, one frame each.
+        let mut expect: Vec<Option<bool>> = Vec::new(); // Some(parsed ok) per surviving frame
+        for line in &corpus {
+            let mut f = Framer::new(cap);
+            f.push(line);
+            f.push(b"\n");
+            match f.next_frame() {
+                Some(Frame::Line(s)) => expect.push(Some(parse_request(&s).is_ok())),
+                Some(Frame::Oversized { len }) => {
+                    assert_eq!(len, line.len());
+                    expect.push(None);
+                }
+                Some(Frame::Invalid) => expect.push(None),
+                None => expect.push(None), // blank line
+            }
+            assert!(f.next_frame().is_none());
+        }
+
+        // Split pass: the same corpus as one byte stream, pushed in random
+        // chunk sizes — classification must be identical.
+        let mut stream: Vec<u8> = Vec::new();
+        for line in &corpus {
+            stream.extend_from_slice(line);
+            stream.push(b'\n');
+        }
+        let mut f = Framer::new(cap);
+        let mut off = 0;
+        while off < stream.len() {
+            let take = 1 + rng.below(17) as usize;
+            let end = (off + take).min(stream.len());
+            f.push(&stream[off..end]);
+            off = end;
+        }
+        let mut got: Vec<Option<bool>> = Vec::new();
+        while let Some(frame) = f.next_frame() {
+            got.push(match frame {
+                Frame::Line(s) => Some(parse_request(&s).is_ok()),
+                _ => None,
+            });
+        }
+        // Blank lines produce no frame in either pass; align by dropping
+        // the reference's placeholder entries for blanks.
+        let mut aligned = Vec::new();
+        for (line, e) in corpus.iter().zip(&expect) {
+            let blank = line.iter().all(|b| b.is_ascii_whitespace());
+            if !blank {
+                aligned.push(*e);
+            }
+        }
+        assert_eq!(got, aligned, "split-across-read classification diverged");
+    }
+}

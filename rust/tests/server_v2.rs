@@ -1,0 +1,430 @@
+//! Protocol v2 integration tests over real TCP connections: the v1/v2
+//! compat matrix, request pipelining with out-of-order id-matched
+//! responses, deterministic admission-control sheds, the request size cap,
+//! streaming partial results, and idle-connection timeouts.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use corrsh::config::ServerConfig;
+use corrsh::server::{event_loop_supported, serve_background_with, State};
+use corrsh::util::json::{self, Value};
+
+fn req(s: &str) -> Value {
+    json::parse(s).unwrap()
+}
+
+/// One in-order request/response exchange on an established connection.
+fn rpc(sock: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> Value {
+    sock.write_all(line.as_bytes()).unwrap();
+    sock.write_all(b"\n").unwrap();
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    json::parse(resp.trim()).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}"))
+}
+
+fn connect(addr: std::net::SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let sock = TcpStream::connect(addr).unwrap();
+    let reader = BufReader::new(sock.try_clone().unwrap());
+    (sock, reader)
+}
+
+/// Recursively drop the fields that legitimately differ between two runs
+/// (timings), between protocol versions (the v1 deprecation note), or
+/// between processes (global shard-cache traffic, transport counters).
+fn strip(v: &Value) -> Value {
+    match v {
+        Value::Object(o) => Value::Object(
+            o.iter()
+                .filter(|(k, _)| {
+                    !matches!(k.as_str(), "wall_ms" | "note" | "shard_cache" | "net")
+                })
+                .map(|(k, v)| (k.clone(), strip(v)))
+                .collect(),
+        ),
+        Value::Array(a) => Value::Array(a.iter().map(strip).collect()),
+        other => other.clone(),
+    }
+}
+
+/// Flatten a v2 response to the v1 shape: ok responses unwrap `result`
+/// (which carries its own `"ok":true`), errors become the legacy flat
+/// `{"ok":false,"error":"<message>"}`.
+fn flatten_v2(resp: &Value) -> Value {
+    if resp.get("ok").as_bool() == Some(true) {
+        resp.get("result").clone()
+    } else {
+        Value::from_pairs(vec![
+            ("ok", false.into()),
+            ("error", resp.get("error").get("message").clone()),
+        ])
+    }
+}
+
+/// The compat matrix: every op (happy path and error path) run twice — as
+/// bare v1 against one server and as a v2 envelope against an identically
+/// configured second server — must produce canonically equal responses
+/// after flattening, modulo `wall_ms`/`note`/process-global counters.
+#[test]
+fn v1_v2_compat_matrix_over_every_op() {
+    // (op, request fields) — executed in order on both servers, so request
+    // counters and cache hit/miss sequences line up exactly.
+    let matrix: &[(&str, &str)] = &[
+        ("ping", ""),
+        ("register", r#""name":"toy","kind":"gaussian","n":300,"dim":8,"seed":4"#),
+        ("list", ""),
+        ("medoid", r#""dataset":"toy","pulls_per_arm":48,"seed":3"#),
+        ("medoid", r#""dataset":"toy","algo":"exact","seed":0"#),
+        ("medoid_batch", r#""dataset":"toy","pulls_per_arm":16,"seeds":[1,2]"#),
+        ("stats", r#""dataset":"toy""#),
+        ("kmedoids", r#""dataset":"toy","k":3,"seed":1"#),
+        ("metrics", ""),
+        ("frobnicate", ""),
+        ("medoid", r#""dataset":"missing""#),
+        ("register", r#""name":"bad","kind":"gaussian","n":0,"dim":4"#),
+        ("unregister", r#""name":"toy""#),
+        ("shutdown", ""),
+    ];
+    let cfg = ServerConfig { workers: 2, queue_cap: 32, ..Default::default() };
+    let v1_addr = serve_background_with(State::new(), &cfg).unwrap();
+    let v2_addr = serve_background_with(State::new(), &cfg).unwrap();
+    let (mut s1, mut r1) = connect(v1_addr);
+    let (mut s2, mut r2) = connect(v2_addr);
+
+    for (i, (op, fields)) in matrix.iter().enumerate() {
+        let sep = if fields.is_empty() { "" } else { "," };
+        let v1_line = format!(r#"{{"op":"{op}"{sep}{fields}}}"#);
+        let v2_line = format!(r#"{{"v":2,"id":{i},"op":"{op}","params":{{{fields}}}}}"#);
+        let v1_resp = rpc(&mut s1, &mut r1, &v1_line);
+        let v2_resp = rpc(&mut s2, &mut r2, &v2_line);
+        assert_eq!(v2_resp.get("id").as_usize(), Some(i), "id echo for {v2_line}");
+        let flat = json::to_string(&strip(&flatten_v2(&v2_resp)));
+        let legacy = json::to_string(&strip(&v1_resp));
+        assert_eq!(flat, legacy, "op {op:?} (step {i}) diverged between v1 and v2");
+        if *op == "ping" {
+            // The deprecation note is a v1-shim artifact: present on the
+            // bare request, absent from the v2 envelope.
+            assert!(v1_resp.get("note").as_str().unwrap().contains("deprecated"));
+            assert!(matches!(v2_resp.get("result").get("note"), Value::Null));
+        }
+        if matches!(*op, "frobnicate") {
+            assert_eq!(v2_resp.get("error").get("code").as_str(), Some("bad_request"));
+        }
+        if *op == "medoid" && fields.contains("missing") {
+            assert_eq!(v2_resp.get("error").get("code").as_str(), Some("unknown_dataset"));
+        }
+    }
+}
+
+/// Pipelining: many requests written in one burst on one socket; responses
+/// may come back in any order but must be id-matched and each must equal
+/// the blocking single-threaded baseline for its seed.
+#[test]
+fn pipelined_requests_return_id_matched_responses() {
+    let reference = State::new();
+    reference.handle(&req(
+        r#"{"op":"register","name":"toy","kind":"gaussian","n":400,"dim":8,"seed":4}"#,
+    ));
+    let mut expect = Vec::new();
+    for seed in 0u64..8 {
+        let r = reference.handle(&req(&format!(
+            r#"{{"op":"medoid","dataset":"toy","pulls_per_arm":48,"seed":{seed}}}"#
+        )));
+        expect.push((r.get("medoid").as_usize().unwrap(), r.get("pulls").as_u64().unwrap()));
+    }
+
+    let state = State::new();
+    state.handle(&req(
+        r#"{"op":"register","name":"toy","kind":"gaussian","n":400,"dim":8,"seed":4}"#,
+    ));
+    let cfg = ServerConfig { workers: 4, queue_cap: 32, ..Default::default() };
+    let addr = serve_background_with(state, &cfg).unwrap();
+    let (mut sock, mut reader) = connect(addr);
+
+    let mut burst = String::new();
+    for seed in 0u64..8 {
+        let id = 10 + seed;
+        burst.push_str(&format!(
+            "{{\"v\":2,\"id\":{id},\"op\":\"medoid\",\
+             \"params\":{{\"dataset\":\"toy\",\"pulls_per_arm\":48,\"seed\":{seed}}}}}\n"
+        ));
+    }
+    sock.write_all(burst.as_bytes()).unwrap();
+
+    let mut seen = vec![false; 8];
+    for _ in 0..8 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp}");
+        let id = resp.get("id").as_u64().unwrap();
+        let seed = (id - 10) as usize;
+        assert!(!seen[seed], "duplicate response for id {id}");
+        seen[seed] = true;
+        let (medoid, pulls) = expect[seed];
+        assert_eq!(resp.get("result").get("medoid").as_usize(), Some(medoid), "seed {seed}");
+        assert_eq!(resp.get("result").get("pulls").as_u64(), Some(pulls), "seed {seed}");
+    }
+    assert!(seen.iter().all(|&s| s), "missing responses: {seen:?}");
+}
+
+/// Admission control, per-connection quota: one burst of 8 requests on a
+/// connection capped at 2 in flight, against a single slow worker — the
+/// first 2 are admitted and answered, the other 6 are shed `overloaded`
+/// in the same batch (deterministically: no completion can interleave).
+#[test]
+fn per_connection_quota_sheds_deterministically() {
+    if !event_loop_supported() {
+        return; // admission control lives in the event loop
+    }
+    let reference = State::new();
+    reference.handle(&req(
+        r#"{"op":"register","name":"big","kind":"gaussian","n":3000,"dim":8,"seed":1}"#,
+    ));
+    let expected =
+        reference.handle(&req(r#"{"op":"medoid","dataset":"big","algo":"exact"}"#));
+    let medoid = expected.get("medoid").as_usize().unwrap();
+
+    let state = State::new();
+    state.handle(&req(
+        r#"{"op":"register","name":"big","kind":"gaussian","n":3000,"dim":8,"seed":1}"#,
+    ));
+    let cfg = ServerConfig {
+        workers: 1,
+        queue_cap: 64,
+        max_inflight_per_conn: 2,
+        idle_timeout_ms: 0,
+        ..Default::default()
+    };
+    let addr = serve_background_with(state, &cfg).unwrap();
+    let (mut sock, mut reader) = connect(addr);
+
+    let mut burst = String::new();
+    for id in 1..=8 {
+        burst.push_str(&format!(
+            "{{\"v\":2,\"id\":{id},\"op\":\"medoid\",\
+             \"params\":{{\"dataset\":\"big\",\"algo\":\"exact\"}}}}\n"
+        ));
+    }
+    sock.write_all(burst.as_bytes()).unwrap();
+
+    let mut ok_ids = Vec::new();
+    let mut shed_ids = Vec::new();
+    for _ in 0..8 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        let id = resp.get("id").as_u64().unwrap();
+        if resp.get("ok").as_bool() == Some(true) {
+            assert_eq!(resp.get("result").get("medoid").as_usize(), Some(medoid));
+            ok_ids.push(id);
+        } else {
+            assert_eq!(resp.get("error").get("code").as_str(), Some("overloaded"), "{resp}");
+            assert!(resp.get("error").get("message").as_str().unwrap().contains("quota"));
+            shed_ids.push(id);
+        }
+    }
+    ok_ids.sort_unstable();
+    shed_ids.sort_unstable();
+    assert_eq!(ok_ids, vec![1, 2], "exactly the first two requests are admitted");
+    assert_eq!(shed_ids, vec![3, 4, 5, 6, 7, 8]);
+
+    let m = rpc(&mut sock, &mut reader, r#"{"v":2,"id":99,"op":"metrics"}"#);
+    assert_eq!(m.get("result").get("net").get("shed").as_u64(), Some(6));
+    // The metrics request itself is the only thing in flight at snapshot time.
+    assert_eq!(m.get("result").get("net").get("in_flight").as_u64(), Some(1));
+}
+
+/// Admission control, per-dataset quota: the quota is keyed by dataset, so
+/// a burst saturating dataset A still admits a request for dataset B.
+#[test]
+fn per_dataset_quota_is_keyed_by_dataset() {
+    if !event_loop_supported() {
+        return;
+    }
+    let state = State::new();
+    state.handle(&req(
+        r#"{"op":"register","name":"a","kind":"gaussian","n":3000,"dim":8,"seed":1}"#,
+    ));
+    state.handle(&req(
+        r#"{"op":"register","name":"b","kind":"gaussian","n":3000,"dim":8,"seed":2}"#,
+    ));
+    let cfg = ServerConfig {
+        workers: 1,
+        queue_cap: 64,
+        max_inflight_per_dataset: 1,
+        idle_timeout_ms: 0,
+        ..Default::default()
+    };
+    let addr = serve_background_with(state, &cfg).unwrap();
+    let (mut sock, mut reader) = connect(addr);
+
+    let mut burst = String::new();
+    for id in 1..=4 {
+        burst.push_str(&format!(
+            "{{\"v\":2,\"id\":{id},\"op\":\"medoid\",\
+             \"params\":{{\"dataset\":\"a\",\"algo\":\"exact\"}}}}\n"
+        ));
+    }
+    burst.push_str(
+        "{\"v\":2,\"id\":5,\"op\":\"medoid\",\
+         \"params\":{\"dataset\":\"b\",\"algo\":\"exact\"}}\n",
+    );
+    sock.write_all(burst.as_bytes()).unwrap();
+
+    let mut ok_ids = Vec::new();
+    let mut shed_ids = Vec::new();
+    for _ in 0..5 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        let id = resp.get("id").as_u64().unwrap();
+        if resp.get("ok").as_bool() == Some(true) {
+            ok_ids.push(id);
+        } else {
+            assert_eq!(resp.get("error").get("code").as_str(), Some("overloaded"), "{resp}");
+            shed_ids.push(id);
+        }
+    }
+    ok_ids.sort_unstable();
+    shed_ids.sort_unstable();
+    assert_eq!(ok_ids, vec![1, 5], "one per dataset admitted");
+    assert_eq!(shed_ids, vec![2, 3, 4]);
+}
+
+/// The framing-layer size cap: an oversized line is answered with
+/// `bad_request` and the connection keeps working; the counter advances.
+#[test]
+fn oversized_frames_get_bad_request_and_the_connection_survives() {
+    let state = State::new();
+    let cfg = ServerConfig { max_request_bytes: 256, ..Default::default() };
+    let addr = serve_background_with(state, &cfg).unwrap();
+
+    // v2-speaking connection: the error is a v2 envelope with a null id.
+    let (mut sock, mut reader) = connect(addr);
+    let p = rpc(&mut sock, &mut reader, r#"{"v":2,"id":1,"op":"ping"}"#);
+    assert_eq!(p.get("ok").as_bool(), Some(true));
+    let huge = format!(r#"{{"v":2,"id":2,"op":"ping","params":{{"pad":"{}"}}}}"#, "x".repeat(500));
+    let e = rpc(&mut sock, &mut reader, &huge);
+    assert_eq!(e.get("ok").as_bool(), Some(false));
+    assert_eq!(e.get("error").get("code").as_str(), Some("bad_request"), "{e}");
+    assert!(e.get("error").get("message").as_str().unwrap().contains("max_request_bytes"));
+    assert!(matches!(e.get("id"), Value::Null), "oversized frames have no parseable id");
+    let p = rpc(&mut sock, &mut reader, r#"{"v":2,"id":3,"op":"ping"}"#);
+    assert_eq!(p.get("ok").as_bool(), Some(true), "connection must survive the cap");
+    assert_eq!(p.get("id").as_u64(), Some(3));
+    let m = rpc(&mut sock, &mut reader, r#"{"v":2,"id":4,"op":"metrics"}"#);
+    assert_eq!(m.get("result").get("net").get("oversized").as_u64(), Some(1));
+
+    // v1 connection: flat legacy error string, in order.
+    let (mut sock, mut reader) = connect(addr);
+    let e = rpc(&mut sock, &mut reader, &format!(r#"{{"op":"ping","pad":"{}"}}"#, "x".repeat(500)));
+    assert_eq!(e.get("ok").as_bool(), Some(false));
+    assert!(e.get("error").as_str().unwrap().contains("max_request_bytes"), "{e}");
+    let p = rpc(&mut sock, &mut reader, r#"{"op":"ping"}"#);
+    assert_eq!(p.get("pong").as_bool(), Some(true));
+}
+
+/// Streaming partial results: a long k-medoids run with `"stream":true`
+/// emits `"partial":true` frames carrying the per-phase loss trajectory
+/// before the final frame, and the final medoids equal the blocking
+/// baseline; a streaming medoid query replays its halving rounds.
+#[test]
+fn streaming_partials_carry_the_loss_trajectory() {
+    if !event_loop_supported() {
+        return; // the blocking fallback answers with final frames only
+    }
+    let reference = State::new();
+    reference.handle(&req(
+        r#"{"op":"register","name":"mix","kind":"mixture","n":600,"dim":8,"seed":7,"clusters":3}"#,
+    ));
+    let baseline = reference.handle(&req(r#"{"op":"kmedoids","dataset":"mix","k":3,"seed":1}"#));
+    assert_eq!(baseline.get("ok").as_bool(), Some(true), "{baseline}");
+
+    let state = State::new();
+    state.handle(&req(
+        r#"{"op":"register","name":"mix","kind":"mixture","n":600,"dim":8,"seed":7,"clusters":3}"#,
+    ));
+    let addr = serve_background_with(state, &ServerConfig::default()).unwrap();
+    let (mut sock, mut reader) = connect(addr);
+    sock.write_all(
+        b"{\"v\":2,\"id\":5,\"op\":\"kmedoids\",\
+          \"params\":{\"dataset\":\"mix\",\"k\":3,\"seed\":1,\"stream\":true}}\n",
+    )
+    .unwrap();
+
+    let mut partials = Vec::new();
+    let fin = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("id").as_u64(), Some(5));
+        assert_eq!(resp.get("ok").as_bool(), Some(true), "{resp}");
+        if resp.get("partial").as_bool() == Some(true) {
+            partials.push(resp);
+        } else {
+            break resp;
+        }
+    };
+    assert!(partials.len() >= 3, "BUILD alone contributes k=3 trajectory points");
+    for (i, p) in partials.iter().enumerate() {
+        assert_eq!(p.get("seq").as_usize(), Some(i), "contiguous seq numbers");
+        let phase = p.get("result").get("phase").as_str().unwrap();
+        assert!(matches!(phase, "build" | "swap" | "polish"), "unknown phase {phase}");
+        assert!(p.get("result").get("loss").as_f64().is_some());
+    }
+    let last_loss = partials.last().unwrap().get("result").get("loss").as_f64().unwrap();
+    let final_loss = fin.get("result").get("loss").as_f64().unwrap();
+    assert!((last_loss - final_loss).abs() <= 1e-6 * final_loss.abs().max(1.0));
+    assert_eq!(
+        fin.get("result").get("medoids"),
+        baseline.get("medoids"),
+        "streamed run diverged from the blocking baseline"
+    );
+
+    // Streaming medoid: per-round survivor counts from the halving trace.
+    sock.write_all(
+        b"{\"v\":2,\"id\":6,\"op\":\"medoid\",\
+          \"params\":{\"dataset\":\"mix\",\"pulls_per_arm\":48,\"seed\":2,\"stream\":true}}\n",
+    )
+    .unwrap();
+    let mut rounds = Vec::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = json::parse(line.trim()).unwrap();
+        assert_eq!(resp.get("id").as_u64(), Some(6));
+        if resp.get("partial").as_bool() == Some(true) {
+            rounds.push(resp.get("result").get("survivors").as_usize().unwrap());
+        } else {
+            assert!(resp.get("result").get("medoid").as_usize().is_some());
+            break;
+        }
+    }
+    assert!(!rounds.is_empty(), "halving rounds were not streamed");
+    for w in rounds.windows(2) {
+        assert!(w[1] <= w[0], "survivors must shrink round over round: {rounds:?}");
+    }
+}
+
+/// Idle connections are closed once `idle_timeout_ms` passes with nothing
+/// in flight and nothing buffered.
+#[test]
+fn idle_connections_are_closed_by_the_timeout() {
+    if !event_loop_supported() {
+        return; // the blocking fallback has no idle sweep
+    }
+    let state = State::new();
+    let cfg = ServerConfig { idle_timeout_ms: 300, ..Default::default() };
+    let addr = serve_background_with(state, &cfg).unwrap();
+    let (mut sock, mut reader) = connect(addr);
+    let p = rpc(&mut sock, &mut reader, r#"{"v":2,"id":1,"op":"ping"}"#);
+    assert_eq!(p.get("ok").as_bool(), Some(true));
+    sock.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+    let mut line = String::new();
+    match reader.read_line(&mut line) {
+        Ok(0) => {} // clean EOF: the server closed the idle connection
+        Ok(n) => panic!("unexpected {n}-byte frame on an idle connection: {line:?}"),
+        Err(e) => panic!("idle connection was not closed within 5s: {e}"),
+    }
+}
