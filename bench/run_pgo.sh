@@ -1,0 +1,90 @@
+#!/usr/bin/env bash
+# Profile-guided-optimization pipeline for the pull-engine hot loops
+# (EXPERIMENTS.md §Perf #8, bench/perf.md):
+#
+#   1. baseline   `cargo bench --bench engine` → save BENCH_engine.json
+#   2. instrument rebuild with -Cprofile-generate, run the engine + e2e
+#                 benches as the profile workload (the corrSH round shape
+#                 is the distribution that matters — not a synthetic loop)
+#   3. merge      llvm-profdata merge → corrsh.profdata
+#   4. rebuild    -Cprofile-use, re-run the engine bench with
+#                 CORRSH_PGO=1 and CORRSH_PGO_BASELINE pointing at the
+#                 saved baseline so BENCH_engine.json gains the pgo/*
+#                 before/after rows CI greps.
+#
+# Usage: bench/run_pgo.sh [--check] [--bench-secs N]
+#   --check       validate the toolchain + print the plan, run nothing
+#                 (CI smoke: proves the pipeline stays runnable without
+#                 paying for a full double rebuild on every push)
+#   --bench-secs  per-benchmark wall budget (CORRSH_BENCH_SECS, default 3)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+CHECK=0
+BENCH_SECS="${CORRSH_BENCH_SECS:-3}"
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --check) CHECK=1 ;;
+        --bench-secs) BENCH_SECS="$2"; shift ;;
+        *) echo "usage: bench/run_pgo.sh [--check] [--bench-secs N]" >&2; exit 2 ;;
+    esac
+    shift
+done
+
+HOST="$(rustc -vV | sed -n 's/^host: //p')"
+LLVM_PROFDATA="$(rustc --print sysroot)/lib/rustlib/${HOST}/bin/llvm-profdata"
+if [ ! -x "$LLVM_PROFDATA" ]; then
+    # rustup layouts vary; fall back to whatever is on PATH.
+    if command -v llvm-profdata >/dev/null 2>&1; then
+        LLVM_PROFDATA="$(command -v llvm-profdata)"
+    else
+        echo "error: llvm-profdata not found (try: rustup component add llvm-tools)" >&2
+        exit 1
+    fi
+fi
+
+PGO_DIR="target/pgo"
+PROFRAW_DIR="${PGO_DIR}/profraw"
+PROFDATA="${PGO_DIR}/corrsh.profdata"
+BASELINE="${PGO_DIR}/baseline.json"
+
+echo "host:           ${HOST}"
+echo "llvm-profdata:  ${LLVM_PROFDATA}"
+echo "profile dir:    ${PROFRAW_DIR}"
+echo "bench budget:   ${BENCH_SECS}s per benchmark"
+if [ "$CHECK" = 1 ]; then
+    echo "--check: toolchain OK, skipping the instrument/rebuild cycle"
+    exit 0
+fi
+
+rm -rf "$PROFRAW_DIR"
+mkdir -p "$PROFRAW_DIR"
+
+echo "== [1/4] baseline bench (no PGO) =="
+CORRSH_BENCH_SECS="$BENCH_SECS" cargo bench --bench engine
+cp BENCH_engine.json "$BASELINE"
+
+echo "== [2/4] instrumented build + profile workload =="
+# Separate target dir: -C flags change the crate hash, and sharing
+# ./target would thrash the non-PGO incremental cache.
+RUSTFLAGS="-Cprofile-generate=$(pwd)/${PROFRAW_DIR}" \
+    CARGO_TARGET_DIR="${PGO_DIR}/target-gen" \
+    CORRSH_BENCH_SECS="$BENCH_SECS" \
+    cargo bench --bench engine --bench e2e
+
+echo "== [3/4] merge profiles =="
+"$LLVM_PROFDATA" merge -o "$PROFDATA" "$PROFRAW_DIR"
+
+echo "== [4/4] PGO rebuild + before/after bench =="
+RUSTFLAGS="-Cprofile-use=$(pwd)/${PROFDATA}" \
+    CARGO_TARGET_DIR="${PGO_DIR}/target-use" \
+    CORRSH_BENCH_SECS="$BENCH_SECS" \
+    CORRSH_PGO=1 \
+    CORRSH_PGO_BASELINE="$BASELINE" \
+    cargo bench --bench engine
+
+echo "== pgo rows =="
+grep -o '"name":"pgo/[^"]*","iters":[0-9]*,"mean_s":[0-9.e-]*' BENCH_engine.json \
+    || { echo "error: BENCH_engine.json has no pgo/* rows" >&2; exit 1; }
+echo "done: BENCH_engine.json now carries pgo/active + pgo/speedup_block_* (baseline kept at ${BASELINE})"

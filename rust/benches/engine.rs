@@ -5,7 +5,10 @@
 use std::sync::Arc;
 
 use corrsh::data::synth::{mnist, netflix, rnaseq, SynthConfig};
-use corrsh::distance::Metric;
+use corrsh::data::Data;
+use corrsh::distance::{dense, Metric};
+use corrsh::engine::kernel::DenseTileCtx;
+use corrsh::engine::simd::{self, Variant};
 use corrsh::engine::{NativeEngine, PullEngine};
 use corrsh::util::bench::Bencher;
 use corrsh::util::rng::Rng;
@@ -94,6 +97,81 @@ fn main() {
             });
             let new_m = b.last_mean_s().unwrap();
             b.record_metric(&format!("speedup/matrix_{metric}"), old_m / new_m.max(1e-12), "x");
+        }
+    }
+
+    // ---- simd micro-kernels: scalar reference vs dispatched vector path ------
+    // Same geometry as the dense-tiles group, but pinned at the tile-session
+    // layer (`DenseTileCtx::with_variant`) so both sides run the identical
+    // packing/threading path and the delta is the micro-kernel alone. The
+    // group name is exactly "simd" so the row names CI greps
+    // (`simd/speedup_block_*`) come out of the group-prefix join.
+    b.group("simd");
+    let active = simd::active();
+    b.record_metric("variant_code", active.code() as f64, active.name());
+    {
+        let d = match &*tile_data {
+            Data::Dense(d) => d,
+            _ => unreachable!("mnist is dense"),
+        };
+        let norms: Vec<f32> = (0..d.n).map(|i| dense::norm(d.row(i))).collect();
+        let sq: Vec<f64> = (0..d.n).map(|i| dense::sqnorm_f64(d.row(i))).collect();
+        let threads = corrsh::util::threads::default_threads();
+        for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+            let scalar_ctx = DenseTileCtx::new(d, metric, Some(&norms[..]), Some(&sq[..]))
+                .with_variant(Variant::Scalar);
+            let simd_ctx = DenseTileCtx::new(d, metric, Some(&norms[..]), Some(&sq[..]))
+                .with_variant(active);
+            b.bench_items(&format!("block_scalar_{metric}"), pairs, || {
+                scalar_ctx.block_sums(&tile_arms, &tile_refs, threads, &mut tile_out);
+                tile_out[0]
+            });
+            let old = b.last_mean_s().unwrap();
+            b.bench_items(&format!("block_simd_{metric}"), pairs, || {
+                simd_ctx.block_sums(&tile_arms, &tile_refs, threads, &mut tile_out);
+                tile_out[0]
+            });
+            let new = b.last_mean_s().unwrap();
+            b.record_metric(&format!("speedup_block_{metric}"), old / new.max(1e-12), "x");
+        }
+    }
+
+    // ---- pgo pipeline rows (bench/run_pgo.sh) --------------------------------
+    // `pgo/active` is always present (1.0 only under the -Cprofile-use
+    // rebuild, which exports CORRSH_PGO=1); the speedup rows compare this
+    // run's simd/block_simd_* means against the baseline BENCH_engine.json
+    // the pipeline saved before instrumenting.
+    b.group("pgo");
+    let pgo_active = std::env::var("CORRSH_PGO").map(|v| v == "1").unwrap_or(false);
+    b.record_metric("active", if pgo_active { 1.0 } else { 0.0 }, "flag");
+    if let Ok(path) = std::env::var("CORRSH_PGO_BASELINE") {
+        let doc = std::fs::read_to_string(&path)
+            .map_err(|e| e.to_string())
+            .and_then(|t| corrsh::util::json::parse(&t).map_err(|e| format!("{e:#}")));
+        match doc {
+            Ok(doc) => {
+                let results = doc.get("results").as_array().unwrap_or(&[]);
+                for metric in [Metric::L1, Metric::L2, Metric::Cosine] {
+                    let row = format!("block_simd_{metric}");
+                    let base = results
+                        .iter()
+                        .find(|r| {
+                            r.get("name").as_str().map(|n| n.ends_with(&row)).unwrap_or(false)
+                        })
+                        .and_then(|r| r.get("mean_s").as_f64());
+                    match (base, b.mean_s_of(&row)) {
+                        (Some(base), Some(cur)) => {
+                            b.record_metric(
+                                &format!("speedup_block_{metric}"),
+                                base / cur.max(1e-12),
+                                "x",
+                            );
+                        }
+                        _ => eprintln!("warn: pgo baseline row {row} missing in {path}"),
+                    }
+                }
+            }
+            Err(e) => eprintln!("warn: CORRSH_PGO_BASELINE {path} unreadable: {e}"),
         }
     }
 

@@ -28,6 +28,41 @@ impl<'a> SparseRow<'a> {
     }
 }
 
+/// Iterator over maximal runs of *consecutive* column indices in a sorted
+/// CSR index list, yielded as `(start_position, run_length)` pairs. Within
+/// a run, the values and any densified reference row are both contiguous,
+/// which is what lets the engine's correction walks (`engine::simd`) go
+/// vector-wide without gathers. Segmentation depends only on the indices,
+/// so every kernel variant sees identical run boundaries.
+pub fn index_runs(indices: &[u32]) -> IndexRuns<'_> {
+    IndexRuns { indices, pos: 0 }
+}
+
+/// See [`index_runs`].
+pub struct IndexRuns<'a> {
+    indices: &'a [u32],
+    pos: usize,
+}
+
+impl Iterator for IndexRuns<'_> {
+    type Item = (usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize)> {
+        let start = self.pos;
+        if start >= self.indices.len() {
+            return None;
+        }
+        let mut len = 1usize;
+        while start + len < self.indices.len()
+            && self.indices[start + len] as u64 == self.indices[start] as u64 + len as u64
+        {
+            len += 1;
+        }
+        self.pos = start + len;
+        Some((start, len))
+    }
+}
+
 /// Σ |a_k − b_k| via merge-walk; indices absent from both contribute 0.
 pub fn l1_sparse(a: SparseRow<'_>, b: SparseRow<'_>) -> f32 {
     let (mut i, mut j) = (0usize, 0usize);
@@ -176,6 +211,31 @@ mod tests {
         assert_eq!(dot_sparse(a, b), 0.0);
         assert_eq!(l1_sparse(a, b), 4.0);
         assert_eq!(cosine_sparse(a, b, a.norm(), b.norm()), 1.0);
+    }
+
+    #[test]
+    fn index_runs_segments_consecutive_spans() {
+        let runs = |idx: &[u32]| index_runs(idx).collect::<Vec<_>>();
+        assert_eq!(runs(&[]), vec![]);
+        assert_eq!(runs(&[7]), vec![(0, 1)]);
+        assert_eq!(runs(&[0, 1, 2, 3]), vec![(0, 4)]);
+        assert_eq!(runs(&[0, 2, 4]), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(runs(&[3, 4, 5, 9, 10, 20]), vec![(0, 3), (3, 2), (5, 1)]);
+        // positions cover the whole support exactly once, in order
+        let mut rng = Rng::seeded(8);
+        for _ in 0..50 {
+            let (idx, _) = random_sparse(&mut rng, 300, 0.2);
+            let mut covered = 0usize;
+            for (start, len) in index_runs(&idx) {
+                assert_eq!(start, covered, "runs must tile the support");
+                assert!(len >= 1);
+                for t in 1..len {
+                    assert_eq!(idx[start + t], idx[start] + t as u32);
+                }
+                covered += len;
+            }
+            assert_eq!(covered, idx.len());
+        }
     }
 
     #[test]

@@ -42,15 +42,17 @@
 use crate::coordinator::planner::shard_aligned_chunk;
 use crate::data::{DenseData, ShardedData};
 use crate::distance::{dense, Metric};
+use crate::engine::simd::{self, Variant};
 use crate::util::threads;
+
+// The micro-kernels themselves (scalar reference + AVX2/NEON mirrors,
+// runtime-dispatched) live in `engine::simd`; this layer owns packing,
+// blocking and the metric combine step. Re-exported so geometry constants
+// keep their historical `kernel::` paths.
+pub use crate::engine::simd::{REF_LANES, SEG_LEN};
 
 /// Arms per register micro-tile (broadcast operands).
 pub const ARM_TILE: usize = 4;
-/// Reference rows per packed tile (one 8-wide f32 vector per feature).
-pub const REF_LANES: usize = 8;
-/// Features per f32 accumulation segment before folding into f64. Bounds
-/// the f32 chain error at ~`SEG_LEN · ε` worst-case regardless of `dim`.
-const SEG_LEN: usize = 64;
 /// Packed floats kept resident per ref block (256 KiB — L2-sized).
 const BLOCK_BUDGET_F32: usize = 1 << 16;
 /// Norm-trick cancellation guard: fall back to the direct kernel when
@@ -59,53 +61,6 @@ const BLOCK_BUDGET_F32: usize = 1 << 16;
 /// path within 1e-5 relative of the scalar reference; below it the rows
 /// are near-duplicates and `Σ(a−b)²` is both cheap (rare) and exact.
 const L2_CANCEL_REL: f64 = 0.1;
-
-/// The shared micro-kernel: per-(arm, lane) f32 chains of `op(a, y)` over
-/// one packed 8-lane ref tile, folded to f64 every [`SEG_LEN`] features.
-/// Each (i, l) chain is independent, so values don't depend on MR or tile
-/// membership. `op` is monomorphized and inlined, so [`dot_tile`] and
-/// [`l1_tile`] compile to the same loop shape with only the lane op
-/// swapped — one place owns the segment/fold structure.
-fn lane_tile<const MR: usize>(
-    rows: &[&[f32]; MR],
-    packed: &[f32],
-    op: impl Fn(f32, f32) -> f32 + Copy,
-) -> [[f64; REF_LANES]; MR] {
-    let dim = rows[0].len();
-    debug_assert_eq!(packed.len(), dim * REF_LANES);
-    let mut wide = [[0f64; REF_LANES]; MR];
-    let mut k0 = 0usize;
-    while k0 < dim {
-        let k1 = (k0 + SEG_LEN).min(dim);
-        let mut acc = [[0f32; REF_LANES]; MR];
-        let seg = &packed[k0 * REF_LANES..k1 * REF_LANES];
-        for (k, y) in seg.chunks_exact(REF_LANES).enumerate() {
-            for i in 0..MR {
-                let a = rows[i][k0 + k];
-                for (lane, &yv) in acc[i].iter_mut().zip(y) {
-                    *lane += op(a, yv);
-                }
-            }
-        }
-        for i in 0..MR {
-            for (w, &narrow) in wide[i].iter_mut().zip(&acc[i]) {
-                *w += narrow as f64;
-            }
-        }
-        k0 = k1;
-    }
-    wide
-}
-
-/// Σ_k a_i[k] · y_l[k] (the L2/cosine norm-trick operand).
-fn dot_tile<const MR: usize>(rows: &[&[f32]; MR], packed: &[f32]) -> [[f64; REF_LANES]; MR] {
-    lane_tile(rows, packed, |a, y| a * y)
-}
-
-/// Σ_k |a_i[k] − y_l[k]|.
-fn l1_tile<const MR: usize>(rows: &[&[f32]; MR], packed: &[f32]) -> [[f64; REF_LANES]; MR] {
-    lane_tile(rows, packed, |a, y| (a - y).abs())
-}
 
 /// Row source for the tile kernels: a resident dense matrix or an on-disk
 /// shard store. Rows come out bitwise identical either way — resident and
@@ -214,6 +169,12 @@ pub struct DenseTileCtx<'a> {
     /// Packed ref tiles visited per cache block (tests override this to
     /// pin determinism across blockings; see [`Self::with_block_tiles`]).
     block_tiles: usize,
+    /// Micro-kernel variant the sweeps dispatch to. Defaults to the
+    /// process-wide [`simd::active`] choice; differential tests and the
+    /// SIMD benches pin it via [`Self::with_variant`]. Safe to force
+    /// anywhere: the dispatch layer re-verifies the CPU feature and
+    /// degrades to scalar rather than trusting the value.
+    variant: Variant,
 }
 
 impl<'a> DenseTileCtx<'a> {
@@ -235,13 +196,21 @@ impl<'a> DenseTileCtx<'a> {
             "l2 tile kernel needs precomputed squared norms"
         );
         let block_tiles = (BLOCK_BUDGET_F32 / (REF_LANES * rows.dim().max(1))).clamp(1, 64);
-        DenseTileCtx { rows, metric, norms, sq_norms, block_tiles }
+        DenseTileCtx { rows, metric, norms, sq_norms, block_tiles, variant: simd::active() }
     }
 
     /// Override the ref cache-block size (in packed tiles). Results are
     /// bitwise independent of this — pinned by the determinism tests.
     pub fn with_block_tiles(mut self, tiles: usize) -> Self {
         self.block_tiles = tiles.max(1);
+        self
+    }
+
+    /// Pin the micro-kernel variant instead of the process-wide dispatch
+    /// choice. Results are bitwise independent of this too — that is the
+    /// SIMD contract, pinned by the differential property tests.
+    pub fn with_variant(mut self, variant: Variant) -> Self {
+        self.variant = variant;
         self
     }
 
@@ -261,7 +230,7 @@ impl<'a> DenseTileCtx<'a> {
         let rows: [&[f32]; MR] = std::array::from_fn(|i| arm_rows[i]);
         match self.metric {
             Metric::L1 => {
-                let sums = l1_tile::<MR>(&rows, packed);
+                let sums = simd::l1_tile::<MR>(self.variant, &rows, packed);
                 for i in 0..MR {
                     for (o, &s) in out[i][..tile_refs.len()].iter_mut().zip(&sums[i]) {
                         *o = s as f32;
@@ -269,7 +238,7 @@ impl<'a> DenseTileCtx<'a> {
                 }
             }
             Metric::L2 => {
-                let dots = dot_tile::<MR>(&rows, packed);
+                let dots = simd::dot_tile::<MR>(self.variant, &rows, packed);
                 let sq = self.sq_norms.expect("checked in new()");
                 for i in 0..MR {
                     let sa = sq[arm_ids[i]];
@@ -296,7 +265,7 @@ impl<'a> DenseTileCtx<'a> {
                 }
             }
             Metric::Cosine => {
-                let dots = dot_tile::<MR>(&rows, packed);
+                let dots = simd::dot_tile::<MR>(self.variant, &rows, packed);
                 let norms = self.norms.expect("checked in new()");
                 for i in 0..MR {
                     let na = norms[arm_ids[i]];

@@ -19,12 +19,18 @@
 //!   artifacts through the PJRT runtime, batching (arm×ref) tiles into
 //!   bucket-shaped jobs (see `runtime/` and `coordinator/planner`).
 //! * [`CountingEngine`] — decorator adding atomic pull accounting.
+//!
+//! The micro-kernels under both native hot paths live in [`simd`]:
+//! explicit AVX2/NEON kernels behind one-time runtime dispatch
+//! (`CORRSH_KERNEL` override), with the scalar reference kept
+//! bitwise-authoritative (DESIGN.md §14).
 
 pub mod cache;
 pub mod kernel;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod simd;
 
 pub use cache::EngineCache;
 pub use native::{NativeEngine, PreparedEngine};

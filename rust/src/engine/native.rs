@@ -11,7 +11,7 @@ use crate::coordinator::planner;
 use crate::data::{Data, ShardedData, SparseData};
 use crate::distance::{dense, Metric, SparseRow};
 use crate::engine::kernel::{self, DenseRows, DenseTileCtx};
-use crate::engine::PullEngine;
+use crate::engine::{simd, PullEngine};
 use crate::metrics::Counter;
 use crate::util::threads;
 
@@ -326,6 +326,11 @@ impl NativeEngine {
         let metric = self.prepared.metric;
         let norms = self.prepared.norms.as_deref().map(|v| v.as_slice());
         let redux = self.prepared.row_reduction.as_deref().map(|v| v.as_slice());
+        // One dispatch decision per call, shared by every worker: the
+        // correction walks (`engine::simd`) vectorize runs of consecutive
+        // support indices against the densified reference — gather-free,
+        // because within a run both sides are contiguous.
+        let variant = simd::active();
 
         threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
             let mut scratch = vec![0f32; dim];
@@ -343,22 +348,18 @@ impl NativeEngine {
                         scratch[c as usize] = v;
                     }
                 });
-                // `corr` accumulates in f64: the `(av−yv)² − yv²` and
-                // `|av−yv| − |yv|` corrections cancel almost exactly at
+                // The corrections accumulate in f64: the `(av−yv)² − yv²`
+                // and `|av−yv| − |yv|` terms cancel almost exactly at
                 // large magnitudes, and an f32 running sum re-introduced
                 // the chain error the f64 round-sum policy (DESIGN.md §9)
-                // exists to exclude.
+                // exists to exclude. The walks themselves live in
+                // `engine::simd` (run-vectorized, variant-dispatched).
                 match metric {
                     Metric::L1 => {
                         let y_abs = redux.unwrap()[j];
                         for (k, a) in acc.iter_mut().enumerate() {
                             let corr = s.with_row_cached(&mut arm_cur, arms[start + k], |row| {
-                                let mut corr = 0f64;
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    let yv = scratch[c as usize];
-                                    corr += ((av - yv).abs() - yv.abs()) as f64;
-                                }
-                                corr
+                                simd::sparse_l1_corr(variant, row.indices, row.values, &scratch)
                             });
                             *a += corr + y_abs;
                         }
@@ -367,13 +368,7 @@ impl NativeEngine {
                         let y_sq = redux.unwrap()[j];
                         for (k, a) in acc.iter_mut().enumerate() {
                             let corr = s.with_row_cached(&mut arm_cur, arms[start + k], |row| {
-                                let mut corr = 0f64;
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    let yv = scratch[c as usize];
-                                    let d = (av - yv) as f64;
-                                    corr += d * d - yv as f64 * yv as f64;
-                                }
-                                corr
+                                simd::sparse_l2_corr(variant, row.indices, row.values, &scratch)
                             });
                             *a += nan_safe_clamp_sqrt(corr + y_sq);
                         }
@@ -383,11 +378,7 @@ impl NativeEngine {
                         for (k, a) in acc.iter_mut().enumerate() {
                             let arm = arms[start + k];
                             let dot = s.with_row_cached(&mut arm_cur, arm, |row| {
-                                let mut dot = 0f64;
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    dot += av as f64 * scratch[c as usize] as f64;
-                                }
-                                dot
+                                simd::sparse_dot(variant, row.indices, row.values, &scratch)
                             });
                             let denom = norms.unwrap()[arm] * ny;
                             *a += if denom <= 1e-24 { 1.0 } else { 1.0 - dot / denom as f64 };
@@ -420,6 +411,7 @@ impl NativeEngine {
         // Average-nnz FLOP cutoff, same rationale as `sparse_block`.
         let threads = threads::plan_threads(self.threads, out.len(), s.avg_nnz());
         let chunk = (arms.len().div_ceil(threads.max(1)).max(1)) * m;
+        let variant = simd::active();
         threads::parallel_chunks_mut(out, chunk, threads, |start, slot| {
             debug_assert_eq!(start % m, 0);
             let arm0 = start / m;
@@ -436,37 +428,29 @@ impl NativeEngine {
                 });
                 for k in 0..n_arms {
                     let arm = arms[arm0 + k];
-                    // f64 `corr`, same rationale as `sparse_block`: the
-                    // correction terms cancel at large magnitudes and must
-                    // not pick up f32 chain error.
-                    let d = s.with_row_cached(&mut arm_cur, arm, |row| {
-                        let mut corr = 0f64;
-                        match metric {
-                            Metric::L1 => {
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    let yv = scratch[c as usize];
-                                    corr += ((av - yv).abs() - yv.abs()) as f64;
-                                }
-                                (corr + redux.unwrap()[r]) as f32
-                            }
-                            Metric::L2 => {
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    let yv = scratch[c as usize];
-                                    let dd = (av - yv) as f64;
-                                    corr += dd * dd - yv as f64 * yv as f64;
-                                }
-                                nan_safe_clamp_sqrt(corr + redux.unwrap()[r]) as f32
-                            }
-                            Metric::Cosine => {
-                                for (&c, &av) in row.indices.iter().zip(row.values) {
-                                    corr += av as f64 * scratch[c as usize] as f64;
-                                }
-                                let denom = norms.unwrap()[arm] * norms.unwrap()[r];
-                                if denom <= 1e-24 {
-                                    1.0
-                                } else {
-                                    (1.0 - corr / denom as f64) as f32
-                                }
+                    // f64 corrections, same rationale as `sparse_block`:
+                    // the terms cancel at large magnitudes and must not
+                    // pick up f32 chain error. Same `engine::simd` walks,
+                    // so both sparse entry points share every bit.
+                    let d = s.with_row_cached(&mut arm_cur, arm, |row| match metric {
+                        Metric::L1 => {
+                            let corr =
+                                simd::sparse_l1_corr(variant, row.indices, row.values, &scratch);
+                            (corr + redux.unwrap()[r]) as f32
+                        }
+                        Metric::L2 => {
+                            let corr =
+                                simd::sparse_l2_corr(variant, row.indices, row.values, &scratch);
+                            nan_safe_clamp_sqrt(corr + redux.unwrap()[r]) as f32
+                        }
+                        Metric::Cosine => {
+                            let dot =
+                                simd::sparse_dot(variant, row.indices, row.values, &scratch);
+                            let denom = norms.unwrap()[arm] * norms.unwrap()[r];
+                            if denom <= 1e-24 {
+                                1.0
+                            } else {
+                                (1.0 - dot / denom as f64) as f32
                             }
                         }
                     });

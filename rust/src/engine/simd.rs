@@ -1,0 +1,794 @@
+//! Explicit SIMD micro-kernels with one-time runtime dispatch (DESIGN.md §14).
+//!
+//! PR 4's tiled kernels arranged the dense pull path so LLVM *could*
+//! auto-vectorize it; this module makes the vector shape explicit —
+//! AVX2 on x86_64, NEON on aarch64 — and keeps the scalar `lane_tile`
+//! as the authoritative bitwise reference. The dispatch decision is made
+//! once per process (a [`std::sync::OnceLock`], seeded from CPU feature
+//! detection or the `CORRSH_KERNEL` env override) and every hot loop
+//! branches on the cached [`Variant`].
+//!
+//! ## The bitwise contract
+//!
+//! Every vector kernel reproduces the scalar reference chain *exactly*:
+//!
+//! * **Dense tiles.** The packed ref layout (`packed[k·8 + lane]`, see
+//!   `kernel::pack_block`) already holds one 8-wide f32 vector per feature
+//!   index, so an AVX2 ymm (or a NEON float32x4 pair) *is* the scalar
+//!   `acc[i][lane]` array — per-(arm, lane) f32 chains, folded into f64
+//!   every [`SEG_LEN`] features via `cvtps→pd` (an exact conversion) in
+//!   the same segment order. There is no k-tail in the vector dimension:
+//!   tiles are zero-padded to [`REF_LANES`] lanes by construction.
+//! * **No FMA.** The scalar reference rounds the multiply and the add
+//!   separately (`*lane += a * y` is two rounded f32 ops). A fused
+//!   multiply-add skips the intermediate rounding and would diverge by
+//!   an ulp on the pull path — so the kernels deliberately use separate
+//!   `mul` + `add` intrinsics. The win here is width and port pressure,
+//!   not fusion.
+//! * **Sparse corrections.** The densified-reference walk in
+//!   `native::sparse_block` is vectorized over *runs* of consecutive
+//!   column indices (no gathers — where the index run aligns, the values
+//!   and the scratch row are both contiguous). Runs of at least
+//!   [`RUN_MIN`] elements go through a 4-lane f64 kernel whose scalar
+//!   mirror ([`sparse_run_scalar`]) uses the identical lane/fold order,
+//!   so scalar, AVX2 and NEON walks agree bitwise *with each other* (the
+//!   lane split is a deliberate, tested reassociation of the old
+//!   sequential f64 sum; engine-level sparse tests compare against exact
+//!   oracles with tolerances, DESIGN.md §14).
+//!
+//! ## Unsafe policy
+//!
+//! All `unsafe` on the compute path lives in this module (CI gates this):
+//! `#[target_feature]` kernels plus the guarded dispatch calls into them.
+//! Every call site re-checks the CPU feature (std caches the cpuid probe
+//! in an atomic, so the guard costs one relaxed load) — a [`Variant`]
+//! value alone is never trusted as proof the instruction set exists, so
+//! forcing e.g. `Avx2` through a test hook on unsupported hardware safely
+//! degrades to the scalar kernel instead of executing illegal
+//! instructions. No raw pointer escapes the module; every offset is
+//! bounded by slice-length assertions on kernel entry.
+
+use std::sync::OnceLock;
+
+/// Reference rows per packed tile — one 8-wide f32 vector per feature.
+pub const REF_LANES: usize = 8;
+/// Features per f32 accumulation segment before folding into f64. Bounds
+/// the f32 chain error at ~`SEG_LEN · ε` worst-case regardless of `dim`.
+pub const SEG_LEN: usize = 64;
+/// Minimum consecutive-index run length worth entering the 4-lane sparse
+/// kernel; shorter runs stay on the element loop (same elem order).
+pub const RUN_MIN: usize = 8;
+
+/// A dispatched kernel implementation. `Scalar` is the authoritative
+/// reference; the vector variants are bitwise-equal accelerations of it
+/// (property-gated in `tests/dense_tiles.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Portable reference kernels (always available, always correct).
+    Scalar,
+    /// x86_64 AVX2 (256-bit f32 / f64 vectors). Never uses FMA — see the
+    /// module docs for why fusion would break the bitwise contract.
+    Avx2,
+    /// aarch64 NEON (128-bit vector pairs mirroring the AVX2 structure).
+    Neon,
+}
+
+impl Variant {
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Scalar => "scalar",
+            Variant::Avx2 => "avx2",
+            Variant::Neon => "neon",
+        }
+    }
+
+    /// Stable numeric code for bench/metrics rows (0 scalar, 1 avx2, 2 neon).
+    pub fn code(self) -> u8 {
+        match self {
+            Variant::Scalar => 0,
+            Variant::Avx2 => 1,
+            Variant::Neon => 2,
+        }
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Probe the CPU once and pick the widest variant it supports.
+pub fn detect() -> Variant {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Variant::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Variant::Neon;
+        }
+    }
+    Variant::Scalar
+}
+
+/// Resolve a requested kernel name (`CORRSH_KERNEL`) against this host.
+/// `None`/`"auto"` → [`detect`]; forcing a variant the host cannot run is
+/// a hard error, not a silent fallback — a forced run that quietly
+/// downgraded would invalidate whatever the force was for.
+pub fn resolve(requested: Option<&str>) -> Result<Variant, String> {
+    match requested {
+        None | Some("auto") => Ok(detect()),
+        Some("scalar") => Ok(Variant::Scalar),
+        Some("avx2") => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2") {
+                    return Ok(Variant::Avx2);
+                }
+            }
+            Err("CORRSH_KERNEL=avx2: AVX2 is not available on this host".to_string())
+        }
+        Some("neon") => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                if std::arch::is_aarch64_feature_detected!("neon") {
+                    return Ok(Variant::Neon);
+                }
+            }
+            Err("CORRSH_KERNEL=neon: NEON is not available on this host".to_string())
+        }
+        Some(other) => Err(format!(
+            "invalid CORRSH_KERNEL value {other:?} (expected scalar|avx2|neon|auto)"
+        )),
+    }
+}
+
+static ACTIVE: OnceLock<Variant> = OnceLock::new();
+
+/// The process-wide dispatched variant, resolved once on first use from
+/// `CORRSH_KERNEL` (default `auto`). An invalid override is a hard error;
+/// CLIs and the server validate eagerly via [`startup_check`] so the
+/// failure is a clean exit rather than a mid-pull panic.
+pub fn active() -> Variant {
+    *ACTIVE.get_or_init(|| match resolve(env_override().as_deref()) {
+        Ok(v) => v,
+        Err(e) => panic!("{e}"),
+    })
+}
+
+/// Eager validation of the `CORRSH_KERNEL` override for process startup.
+pub fn startup_check() -> crate::util::error::Result<Variant> {
+    resolve(env_override().as_deref()).map_err(crate::util::error::Error::msg)
+}
+
+fn env_override() -> Option<String> {
+    std::env::var("CORRSH_KERNEL").ok()
+}
+
+/// One-line dispatch report for `corrsh kernelinfo` and debugging.
+pub fn kernel_info() -> String {
+    let source = if env_override().is_some() { "env" } else { "auto" };
+    format!(
+        "kernel_variant={} source={} detected={} arch={} ref_lanes={} seg_len={} run_min={}",
+        active(),
+        source,
+        detect(),
+        std::env::consts::ARCH,
+        REF_LANES,
+        SEG_LEN,
+        RUN_MIN
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Dense tile kernels
+// ---------------------------------------------------------------------------
+
+/// The scalar reference micro-kernel: per-(arm, lane) f32 chains of
+/// `op(a, y)` over one packed 8-lane ref tile, folded to f64 every
+/// [`SEG_LEN`] features. Each (i, l) chain is independent, so values don't
+/// depend on MR or tile membership. Full segments come out of
+/// `chunks_exact` and the tail out of its explicit `remainder()`, so the
+/// fold boundary is structural rather than an arithmetic bound — the SIMD
+/// kernels reproduce exactly this segmentation.
+pub fn lane_tile_scalar<const MR: usize>(
+    rows: &[&[f32]; MR],
+    packed: &[f32],
+    op: impl Fn(f32, f32) -> f32 + Copy,
+) -> [[f64; REF_LANES]; MR] {
+    let dim = rows[0].len();
+    debug_assert_eq!(packed.len(), dim * REF_LANES);
+    let mut wide = [[0f64; REF_LANES]; MR];
+    let mut segs = packed.chunks_exact(SEG_LEN * REF_LANES);
+    let mut k0 = 0usize;
+    for seg in segs.by_ref() {
+        fold_segment(rows, k0, seg, op, &mut wide);
+        k0 += SEG_LEN;
+    }
+    let tail = segs.remainder();
+    if !tail.is_empty() {
+        fold_segment(rows, k0, tail, op, &mut wide);
+    }
+    wide
+}
+
+/// One f32 accumulation segment (≤ [`SEG_LEN`] features starting at `k0`)
+/// folded into the f64 accumulators, in lane order.
+#[inline]
+fn fold_segment<const MR: usize>(
+    rows: &[&[f32]; MR],
+    k0: usize,
+    seg: &[f32],
+    op: impl Fn(f32, f32) -> f32 + Copy,
+    wide: &mut [[f64; REF_LANES]; MR],
+) {
+    let mut acc = [[0f32; REF_LANES]; MR];
+    for (k, y) in seg.chunks_exact(REF_LANES).enumerate() {
+        for i in 0..MR {
+            let a = rows[i][k0 + k];
+            for (lane, &yv) in acc[i].iter_mut().zip(y) {
+                *lane += op(a, yv);
+            }
+        }
+    }
+    for i in 0..MR {
+        for (w, &narrow) in wide[i].iter_mut().zip(&acc[i]) {
+            *w += narrow as f64;
+        }
+    }
+}
+
+/// Σ_k a_i[k] · y_l[k] (the L2/cosine norm-trick operand), dispatched.
+pub fn dot_tile<const MR: usize>(
+    v: Variant,
+    rows: &[&[f32]; MR],
+    packed: &[f32],
+) -> [[f64; REF_LANES]; MR] {
+    match v {
+        #[cfg(target_arch = "x86_64")]
+        Variant::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: the match guard just verified AVX2 on this CPU, and
+            // the kernel asserts all slice bounds on entry.
+            unsafe { x86::lane_tile::<MR, true>(rows, packed) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Variant::Neon if std::arch::is_aarch64_feature_detected!("neon") => {
+            // SAFETY: the match guard just verified NEON on this CPU, and
+            // the kernel asserts all slice bounds on entry.
+            unsafe { neon::lane_tile::<MR, true>(rows, packed) }
+        }
+        _ => lane_tile_scalar(rows, packed, |a, y| a * y),
+    }
+}
+
+/// Σ_k |a_i[k] − y_l[k]|, dispatched.
+pub fn l1_tile<const MR: usize>(
+    v: Variant,
+    rows: &[&[f32]; MR],
+    packed: &[f32],
+) -> [[f64; REF_LANES]; MR] {
+    match v {
+        #[cfg(target_arch = "x86_64")]
+        Variant::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: the match guard just verified AVX2 on this CPU, and
+            // the kernel asserts all slice bounds on entry.
+            unsafe { x86::lane_tile::<MR, false>(rows, packed) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        Variant::Neon if std::arch::is_aarch64_feature_detected!("neon") => {
+            // SAFETY: the match guard just verified NEON on this CPU, and
+            // the kernel asserts all slice bounds on entry.
+            unsafe { neon::lane_tile::<MR, false>(rows, packed) }
+        }
+        _ => lane_tile_scalar(rows, packed, |a, y| (a - y).abs()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse correction walks (densified-reference fast path)
+// ---------------------------------------------------------------------------
+
+pub(crate) const OP_L1: u8 = 0;
+pub(crate) const OP_L2: u8 = 1;
+pub(crate) const OP_DOT: u8 = 2;
+
+/// One element of a sparse correction term, in f64 (matches the scalar
+/// loops these walks replaced in `native::sparse_block`).
+#[inline]
+fn elem<const OP: u8>(a: f32, y: f32) -> f64 {
+    if OP == OP_L1 {
+        ((a - y).abs() - y.abs()) as f64
+    } else if OP == OP_L2 {
+        let d = (a - y) as f64;
+        d * d - y as f64 * y as f64
+    } else {
+        a as f64 * y as f64
+    }
+}
+
+/// The scalar mirror of the vector run kernels: 4 independent f64 lanes
+/// over `chunks_exact(4)`, folded `(l0 + l1) + (l2 + l3)`, scalar tail
+/// appended — the same shape `distance::dense` uses. AVX2/NEON reproduce
+/// this chain exactly, so every variant agrees bitwise.
+fn sparse_run_scalar<const OP: u8>(av: &[f32], yv: &[f32]) -> f64 {
+    debug_assert_eq!(av.len(), yv.len());
+    let mut lane = [0f64; 4];
+    for (a, y) in av.chunks_exact(4).zip(yv.chunks_exact(4)) {
+        for l in 0..4 {
+            lane[l] += elem::<OP>(a[l], y[l]);
+        }
+    }
+    let mut s = (lane[0] + lane[1]) + (lane[2] + lane[3]);
+    let tail = av.len() / 4 * 4;
+    for (&a, &y) in av[tail..].iter().zip(&yv[tail..]) {
+        s += elem::<OP>(a, y);
+    }
+    s
+}
+
+/// Run-segmented sparse correction walk: maximal runs of consecutive
+/// column indices are contiguous in both `values` and the densified
+/// `scratch` row, so runs of ≥ [`RUN_MIN`] elements take a gather-free
+/// 4-lane kernel; short runs and stragglers stay on the element loop.
+/// Run segmentation depends only on `indices`, never on the variant.
+fn sparse_corr<const OP: u8>(v: Variant, indices: &[u32], values: &[f32], scratch: &[f32]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    let mut acc = 0f64;
+    for (start, len) in crate::distance::sparse::index_runs(indices) {
+        let c0 = indices[start] as usize;
+        if len >= RUN_MIN {
+            let av = &values[start..start + len];
+            let yv = &scratch[c0..c0 + len];
+            acc += match v {
+                #[cfg(target_arch = "x86_64")]
+                Variant::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+                    // SAFETY: the match guard just verified AVX2 on this
+                    // CPU; the kernel asserts `av.len() == yv.len()`.
+                    unsafe { x86::sparse_run::<OP>(av, yv) }
+                }
+                #[cfg(target_arch = "aarch64")]
+                Variant::Neon if std::arch::is_aarch64_feature_detected!("neon") => {
+                    // SAFETY: the match guard just verified NEON on this
+                    // CPU; the kernel asserts `av.len() == yv.len()`.
+                    unsafe { neon::sparse_run::<OP>(av, yv) }
+                }
+                _ => sparse_run_scalar::<OP>(av, yv),
+            };
+        } else {
+            for t in 0..len {
+                acc += elem::<OP>(values[start + t], scratch[c0 + t]);
+            }
+        }
+    }
+    acc
+}
+
+/// L1 correction of a densified reference: `Σ (|a−y| − |y|)` over the
+/// arm's support (added to the ref's precomputed |·| row reduction).
+pub fn sparse_l1_corr(v: Variant, indices: &[u32], values: &[f32], scratch: &[f32]) -> f64 {
+    sparse_corr::<OP_L1>(v, indices, values, scratch)
+}
+
+/// L2 correction: `Σ ((a−y)² − y²)` in f64 over the arm's support.
+pub fn sparse_l2_corr(v: Variant, indices: &[u32], values: &[f32], scratch: &[f32]) -> f64 {
+    sparse_corr::<OP_L2>(v, indices, values, scratch)
+}
+
+/// Sparse dot product `Σ a·y` in f64 over the arm's support (cosine).
+pub fn sparse_dot(v: Variant, indices: &[u32], values: &[f32], scratch: &[f32]) -> f64 {
+    sparse_corr::<OP_DOT>(v, indices, values, scratch)
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 kernels (x86_64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 mirrors of the scalar reference kernels. Deliberately no FMA
+    //! (see the module docs): `mul` + `add` keep the scalar rounding
+    //! sequence, the 256-bit width and the halved loop overhead are the
+    //! entire win. `_mm256_cvtps_pd` is an exact widening conversion, so
+    //! the per-segment f64 folds match the scalar `as f64` casts bitwise.
+
+    use super::{elem, REF_LANES, SEG_LEN};
+    use core::arch::x86_64::*;
+
+    // SAFETY: callers verify `avx2` via `is_x86_feature_detected!` before
+    // every call; all pointer offsets below stay inside the slice lengths
+    // asserted on entry (packed holds dim·8 floats, each row holds dim).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lane_tile<const MR: usize, const DOT: bool>(
+        rows: &[&[f32]; MR],
+        packed: &[f32],
+    ) -> [[f64; REF_LANES]; MR] {
+        let dim = rows[0].len();
+        assert_eq!(packed.len(), dim * REF_LANES);
+        for r in rows.iter() {
+            assert_eq!(r.len(), dim);
+        }
+        let sign = _mm256_set1_ps(-0.0);
+        // f64 accumulators: low/high 4 lanes of each arm's 8-lane tile.
+        let mut lo = [_mm256_setzero_pd(); MR];
+        let mut hi = [_mm256_setzero_pd(); MR];
+        let mut k0 = 0usize;
+        while k0 < dim {
+            let k1 = (k0 + SEG_LEN).min(dim);
+            let mut acc = [_mm256_setzero_ps(); MR];
+            for k in k0..k1 {
+                let y = _mm256_loadu_ps(packed.as_ptr().add(k * REF_LANES));
+                for i in 0..MR {
+                    let a = _mm256_set1_ps(*rows[i].get_unchecked(k));
+                    let t = if DOT {
+                        _mm256_mul_ps(a, y)
+                    } else {
+                        _mm256_andnot_ps(sign, _mm256_sub_ps(a, y))
+                    };
+                    acc[i] = _mm256_add_ps(acc[i], t);
+                }
+            }
+            for i in 0..MR {
+                let narrow_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(acc[i]));
+                let narrow_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(acc[i]));
+                lo[i] = _mm256_add_pd(lo[i], narrow_lo);
+                hi[i] = _mm256_add_pd(hi[i], narrow_hi);
+            }
+            k0 = k1;
+        }
+        let mut wide = [[0f64; REF_LANES]; MR];
+        for i in 0..MR {
+            _mm256_storeu_pd(wide[i].as_mut_ptr(), lo[i]);
+            _mm256_storeu_pd(wide[i].as_mut_ptr().add(4), hi[i]);
+        }
+        wide
+    }
+
+    // SAFETY: callers verify `avx2` before every call; `av`/`yv` lengths
+    // are asserted equal on entry and every offset stays below that
+    // length (n4·4 ≤ len for the vector body, then the scalar tail).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sparse_run<const OP: u8>(av: &[f32], yv: &[f32]) -> f64 {
+        use super::{OP_L1, OP_L2};
+        assert_eq!(av.len(), yv.len());
+        let n4 = av.len() / 4;
+        let sign = _mm_set1_ps(-0.0);
+        let mut lane = _mm256_setzero_pd();
+        for c in 0..n4 {
+            let a = _mm_loadu_ps(av.as_ptr().add(c * 4));
+            let y = _mm_loadu_ps(yv.as_ptr().add(c * 4));
+            let term = if OP == OP_L1 {
+                let d = _mm_andnot_ps(sign, _mm_sub_ps(a, y));
+                _mm256_cvtps_pd(_mm_sub_ps(d, _mm_andnot_ps(sign, y)))
+            } else if OP == OP_L2 {
+                let d = _mm256_cvtps_pd(_mm_sub_ps(a, y));
+                let yd = _mm256_cvtps_pd(y);
+                _mm256_sub_pd(_mm256_mul_pd(d, d), _mm256_mul_pd(yd, yd))
+            } else {
+                _mm256_mul_pd(_mm256_cvtps_pd(a), _mm256_cvtps_pd(y))
+            };
+            lane = _mm256_add_pd(lane, term);
+        }
+        let mut l = [0f64; 4];
+        _mm256_storeu_pd(l.as_mut_ptr(), lane);
+        let mut s = (l[0] + l[1]) + (l[2] + l[3]);
+        for t in n4 * 4..av.len() {
+            s += elem::<OP>(*av.get_unchecked(t), *yv.get_unchecked(t));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON kernels (aarch64)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON mirrors of the AVX2 kernels: each 8-lane f32 tile is a
+    //! float32x4 pair, each 4-lane f64 accumulator a float64x2 pair, with
+    //! the identical mul/add (never fused) and cvt-fold sequence. Kept a
+    //! strict structural mirror of `x86::*` — x86_64 CI never type-checks
+    //! this module, so reviewability *is* the correctness story here
+    //! (plus the differential property on aarch64 hosts).
+
+    use super::{elem, REF_LANES, SEG_LEN};
+    use core::arch::aarch64::*;
+
+    // SAFETY: callers verify `neon` via `is_aarch64_feature_detected!`
+    // before every call; all pointer offsets below stay inside the slice
+    // lengths asserted on entry.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn lane_tile<const MR: usize, const DOT: bool>(
+        rows: &[&[f32]; MR],
+        packed: &[f32],
+    ) -> [[f64; REF_LANES]; MR] {
+        let dim = rows[0].len();
+        assert_eq!(packed.len(), dim * REF_LANES);
+        for r in rows.iter() {
+            assert_eq!(r.len(), dim);
+        }
+        // f64 accumulators: four 2-lane quarters of each 8-lane tile.
+        let mut wide_v = [[vdupq_n_f64(0.0); 4]; MR];
+        let mut k0 = 0usize;
+        while k0 < dim {
+            let k1 = (k0 + SEG_LEN).min(dim);
+            // f32 accumulators: low/high 4 lanes of each 8-lane tile.
+            let mut acc = [[vdupq_n_f32(0.0); 2]; MR];
+            for k in k0..k1 {
+                let p = packed.as_ptr().add(k * REF_LANES);
+                let y0 = vld1q_f32(p);
+                let y1 = vld1q_f32(p.add(4));
+                for i in 0..MR {
+                    let a = vdupq_n_f32(*rows[i].get_unchecked(k));
+                    let (t0, t1) = if DOT {
+                        (vmulq_f32(a, y0), vmulq_f32(a, y1))
+                    } else {
+                        (vabsq_f32(vsubq_f32(a, y0)), vabsq_f32(vsubq_f32(a, y1)))
+                    };
+                    acc[i][0] = vaddq_f32(acc[i][0], t0);
+                    acc[i][1] = vaddq_f32(acc[i][1], t1);
+                }
+            }
+            for i in 0..MR {
+                wide_v[i][0] = vaddq_f64(wide_v[i][0], vcvt_f64_f32(vget_low_f32(acc[i][0])));
+                wide_v[i][1] = vaddq_f64(wide_v[i][1], vcvt_f64_f32(vget_high_f32(acc[i][0])));
+                wide_v[i][2] = vaddq_f64(wide_v[i][2], vcvt_f64_f32(vget_low_f32(acc[i][1])));
+                wide_v[i][3] = vaddq_f64(wide_v[i][3], vcvt_f64_f32(vget_high_f32(acc[i][1])));
+            }
+            k0 = k1;
+        }
+        let mut wide = [[0f64; REF_LANES]; MR];
+        for i in 0..MR {
+            for (q, quarter) in wide_v[i].iter().enumerate() {
+                vst1q_f64(wide[i].as_mut_ptr().add(q * 2), *quarter);
+            }
+        }
+        wide
+    }
+
+    // SAFETY: callers verify `neon` before every call; `av`/`yv` lengths
+    // are asserted equal on entry and every offset stays below that
+    // length (n4·4 ≤ len for the vector body, then the scalar tail).
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sparse_run<const OP: u8>(av: &[f32], yv: &[f32]) -> f64 {
+        use super::{OP_L1, OP_L2};
+        assert_eq!(av.len(), yv.len());
+        let n4 = av.len() / 4;
+        // lanes 0–1 and 2–3 of the scalar mirror's 4-lane accumulator.
+        let mut l01 = vdupq_n_f64(0.0);
+        let mut l23 = vdupq_n_f64(0.0);
+        for c in 0..n4 {
+            let a = vld1q_f32(av.as_ptr().add(c * 4));
+            let y = vld1q_f32(yv.as_ptr().add(c * 4));
+            if OP == OP_L1 {
+                let t = vsubq_f32(vabsq_f32(vsubq_f32(a, y)), vabsq_f32(y));
+                l01 = vaddq_f64(l01, vcvt_f64_f32(vget_low_f32(t)));
+                l23 = vaddq_f64(l23, vcvt_f64_f32(vget_high_f32(t)));
+            } else if OP == OP_L2 {
+                let d = vsubq_f32(a, y);
+                let d_lo = vcvt_f64_f32(vget_low_f32(d));
+                let d_hi = vcvt_f64_f32(vget_high_f32(d));
+                let y_lo = vcvt_f64_f32(vget_low_f32(y));
+                let y_hi = vcvt_f64_f32(vget_high_f32(y));
+                l01 = vaddq_f64(l01, vsubq_f64(vmulq_f64(d_lo, d_lo), vmulq_f64(y_lo, y_lo)));
+                l23 = vaddq_f64(l23, vsubq_f64(vmulq_f64(d_hi, d_hi), vmulq_f64(y_hi, y_hi)));
+            } else {
+                let a_lo = vcvt_f64_f32(vget_low_f32(a));
+                let a_hi = vcvt_f64_f32(vget_high_f32(a));
+                let y_lo = vcvt_f64_f32(vget_low_f32(y));
+                let y_hi = vcvt_f64_f32(vget_high_f32(y));
+                l01 = vaddq_f64(l01, vmulq_f64(a_lo, y_lo));
+                l23 = vaddq_f64(l23, vmulq_f64(a_hi, y_hi));
+            }
+        }
+        let mut s = (vgetq_lane_f64::<0>(l01) + vgetq_lane_f64::<1>(l01))
+            + (vgetq_lane_f64::<0>(l23) + vgetq_lane_f64::<1>(l23));
+        for t in n4 * 4..av.len() {
+            s += elem::<OP>(*av.get_unchecked(t), *yv.get_unchecked(t));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The pre-refactor `lane_tile` formulation: segment bounds from the
+    /// `k1 = min(k0 + SEG_LEN, dim)` arithmetic instead of `chunks_exact`
+    /// + remainder. The restructured scalar kernel must match it bitwise —
+    /// this pins the fold boundary the SIMD kernels also reproduce.
+    fn lane_tile_k1_bound<const MR: usize>(
+        rows: &[&[f32]; MR],
+        packed: &[f32],
+        op: impl Fn(f32, f32) -> f32 + Copy,
+    ) -> [[f64; REF_LANES]; MR] {
+        let dim = rows[0].len();
+        let mut wide = [[0f64; REF_LANES]; MR];
+        let mut k0 = 0usize;
+        while k0 < dim {
+            let k1 = (k0 + SEG_LEN).min(dim);
+            let mut acc = [[0f32; REF_LANES]; MR];
+            let seg = &packed[k0 * REF_LANES..k1 * REF_LANES];
+            for (k, y) in seg.chunks_exact(REF_LANES).enumerate() {
+                for i in 0..MR {
+                    let a = rows[i][k0 + k];
+                    for (lane, &yv) in acc[i].iter_mut().zip(y) {
+                        *lane += op(a, yv);
+                    }
+                }
+            }
+            for i in 0..MR {
+                for (w, &narrow) in wide[i].iter_mut().zip(&acc[i]) {
+                    *w += narrow as f64;
+                }
+            }
+            k0 = k1;
+        }
+        wide
+    }
+
+    fn random_tile(rng: &mut Rng, dim: usize) -> (Vec<f32>, Vec<f32>) {
+        let rows: Vec<f32> = (0..4 * dim).map(|_| rng.gaussian() as f32).collect();
+        let packed: Vec<f32> = (0..dim * REF_LANES).map(|_| rng.gaussian() as f32).collect();
+        (rows, packed)
+    }
+
+    #[test]
+    fn fold_boundary_pinned_at_segment_edges() {
+        let mut rng = Rng::seeded(91);
+        for dim in [1, SEG_LEN - 1, SEG_LEN, SEG_LEN + 1, 2 * SEG_LEN, 2 * SEG_LEN + 7] {
+            let (rows_raw, packed) = random_tile(&mut rng, dim);
+            let rows: [&[f32]; 4] = std::array::from_fn(|i| &rows_raw[i * dim..(i + 1) * dim]);
+            let ops: [fn(f32, f32) -> f32; 2] = [|a, y| a * y, |a, y| (a - y).abs()];
+            for op in ops {
+                let got = lane_tile_scalar::<4>(&rows, &packed, op);
+                let want = lane_tile_k1_bound::<4>(&rows, &packed, op);
+                assert_eq!(got, want, "fold boundary moved at dim={dim}");
+            }
+            let rows1: [&[f32]; 1] = [rows[0]];
+            let got = lane_tile_scalar::<1>(&rows1, &packed, |a, y| a * y);
+            let want = lane_tile_k1_bound::<1>(&rows1, &packed, |a, y| a * y);
+            assert_eq!(got, want, "MR=1 fold boundary moved at dim={dim}");
+        }
+    }
+
+    #[test]
+    fn resolve_validates_requests() {
+        assert_eq!(resolve(None), Ok(detect()));
+        assert_eq!(resolve(Some("auto")), Ok(detect()));
+        assert_eq!(resolve(Some("scalar")), Ok(Variant::Scalar));
+        assert!(resolve(Some("avx512")).unwrap_err().contains("invalid CORRSH_KERNEL"));
+        assert!(resolve(Some("")).unwrap_err().contains("invalid CORRSH_KERNEL"));
+        assert!(resolve(Some("Scalar")).unwrap_err().contains("invalid CORRSH_KERNEL"));
+        // Forcing the other architecture's variant is a hard error, and
+        // forcing this one's succeeds exactly when the CPU supports it.
+        #[cfg(target_arch = "x86_64")]
+        {
+            assert!(resolve(Some("neon")).is_err());
+            if detect() == Variant::Avx2 {
+                assert_eq!(resolve(Some("avx2")), Ok(Variant::Avx2));
+            } else {
+                assert!(resolve(Some("avx2")).is_err());
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            assert!(resolve(Some("avx2")).is_err());
+            assert_eq!(resolve(Some("neon")), Ok(Variant::Neon));
+        }
+    }
+
+    #[test]
+    fn kernel_info_reports_active_variant() {
+        let line = kernel_info();
+        assert!(line.contains(&format!("kernel_variant={}", active())));
+        assert!(line.contains("seg_len=64"));
+    }
+
+    /// Dense tile kernels: detected-variant output must be bitwise equal
+    /// to the scalar reference across fold boundaries and all MR widths.
+    /// (The full engine-level property lives in tests/dense_tiles.rs.)
+    #[test]
+    fn dense_simd_tiles_bitwise_equal_scalar() {
+        let v = detect();
+        let mut rng = Rng::seeded(17);
+        for dim in [1, 3, 8, 63, 64, 65, 127, 128, 129, 200] {
+            let (rows_raw, packed) = random_tile(&mut rng, dim);
+            let rows: [&[f32]; 4] = std::array::from_fn(|i| &rows_raw[i * dim..(i + 1) * dim]);
+            assert_eq!(
+                dot_tile::<4>(v, &rows, &packed),
+                dot_tile::<4>(Variant::Scalar, &rows, &packed),
+                "dot dim={dim}"
+            );
+            assert_eq!(
+                l1_tile::<4>(v, &rows, &packed),
+                l1_tile::<4>(Variant::Scalar, &rows, &packed),
+                "l1 dim={dim}"
+            );
+            let rows2: [&[f32]; 2] = [rows[0], rows[3]];
+            assert_eq!(
+                dot_tile::<2>(v, &rows2, &packed),
+                dot_tile::<2>(Variant::Scalar, &rows2, &packed),
+                "MR=2 dot dim={dim}"
+            );
+        }
+    }
+
+    /// Sparse correction walks: the detected variant must agree bitwise
+    /// with the scalar mirror, and (reassociation aside) with a direct
+    /// sequential f64 oracle, across supports mixing long runs, short
+    /// runs, and isolated indices.
+    #[test]
+    fn sparse_runs_bitwise_equal_scalar_and_near_oracle() {
+        let v = detect();
+        let dim = 257;
+        let mut rng = Rng::seeded(23);
+        for case in 0..40 {
+            let scratch: Vec<f32> = (0..dim).map(|_| rng.gaussian() as f32).collect();
+            let mut indices: Vec<u32> = Vec::new();
+            let mut c = rng.below(4) as u32;
+            while (c as usize) < dim {
+                // run lengths 1..=24 straddle RUN_MIN on both sides
+                let run = 1 + rng.below(24);
+                for t in 0..run {
+                    if (c as usize + t) < dim {
+                        indices.push(c + t as u32);
+                    }
+                }
+                c += (run + 1 + rng.below(9)) as u32;
+            }
+            let values: Vec<f32> = indices.iter().map(|_| rng.gaussian() as f32).collect();
+            for op in 0..3u8 {
+                let walk = |variant| match op {
+                    0 => sparse_l1_corr(variant, &indices, &values, &scratch),
+                    1 => sparse_l2_corr(variant, &indices, &values, &scratch),
+                    _ => sparse_dot(variant, &indices, &values, &scratch),
+                };
+                let got = walk(v);
+                let reference = walk(Variant::Scalar);
+                assert_eq!(got.to_bits(), reference.to_bits(), "case {case} op {op}");
+                let oracle: f64 = indices
+                    .iter()
+                    .zip(&values)
+                    .map(|(&ci, &av)| {
+                        let yv = scratch[ci as usize];
+                        match op {
+                            0 => ((av - yv).abs() - yv.abs()) as f64,
+                            1 => {
+                                let d = (av - yv) as f64;
+                                d * d - yv as f64 * yv as f64
+                            }
+                            _ => av as f64 * yv as f64,
+                        }
+                    })
+                    .sum();
+                let tol = 1e-9 * oracle.abs().max(1.0);
+                assert!(
+                    (got - oracle).abs() <= tol,
+                    "case {case} op {op}: {got} vs oracle {oracle}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_walk_handles_empty_and_nan() {
+        let v = detect();
+        assert_eq!(sparse_dot(v, &[], &[], &[1.0, 2.0]), 0.0);
+        let scratch = vec![1.0f32; 32];
+        let indices: Vec<u32> = (0..16).collect();
+        let mut values = vec![0.5f32; 16];
+        values[9] = f32::NAN;
+        let walks: [fn(Variant, &[u32], &[f32], &[f32]) -> f64; 3] =
+            [sparse_l1_corr, sparse_l2_corr, sparse_dot];
+        for walk in walks {
+            assert!(walk(v, &indices, &values, &scratch).is_nan());
+        }
+    }
+}

@@ -9,6 +9,7 @@
 //! corrsh gen      --kind rnaseq --n 2000 --dim 256 --out data.npy
 //! corrsh shard    data.npy shards/ --rows-per-shard 65536
 //! corrsh shard    --kind gaussian --n 1000000 --dim 128 --out shards/
+//! corrsh kernelinfo
 //! ```
 
 use corrsh::util::error::{Context, Result};
@@ -20,7 +21,7 @@ use corrsh::server;
 use corrsh::util::cli::Args;
 use corrsh::util::rng::Rng;
 
-const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen|shard> [flags]
+const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen|shard|kernelinfo> [flags]
   medoid:   --preset P | --config file.json [--scale N] [--algo A] [--budget X]
             [--engine native|pjrt] [--seed S] [--trials T]
   kmedoids: --preset P | --config file.json | --kind K [--n N --dim D --clusters C]
@@ -34,7 +35,8 @@ const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen|shard> [flags
             [--max-inflight-per-dataset N] [--shed-watermark N] [--idle-timeout-ms MS]
   gen:      --kind K --n N --dim D [--seed S] --out FILE.npy
   shard:    <in.npy|in.csr|manifest.json> <out-dir> [--rows-per-shard N]
-            | --kind K --n N --dim D [--seed S] --out DIR (streams at scale)";
+            | --kind K --n N --dim D [--seed S] --out DIR (streams at scale)
+  kernelinfo: print the dispatched distance micro-kernel (CORRSH_KERNEL)";
 
 fn main() {
     let args = match Args::from_env() {
@@ -44,6 +46,12 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // Validate CORRSH_KERNEL before any command runs: an invalid override
+    // must be a hard startup error, not a panic deep inside the first pull.
+    if let Err(e) = corrsh::engine::simd::startup_check() {
+        eprintln!("error: {e:#}");
+        std::process::exit(2);
+    }
     let cmd = args.command.clone().unwrap_or_default();
     let result = match cmd.as_str() {
         "medoid" => cmd_medoid(&args),
@@ -53,6 +61,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "gen" => cmd_gen(&args),
         "shard" => cmd_shard(&args),
+        "kernelinfo" => cmd_kernelinfo(&args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -422,6 +431,16 @@ fn cmd_shard(args: &Args) -> Result<()> {
         rows_per_shard,
         if data.is_sparse() { "sparse" } else { "dense" }
     );
+    Ok(())
+}
+
+/// `corrsh kernelinfo` — report which distance micro-kernel the process
+/// dispatched (scalar reference vs AVX2/NEON), where the decision came
+/// from (auto-detect vs `CORRSH_KERNEL`), and the layout constants the
+/// bitwise contract pins (DESIGN.md §14).
+fn cmd_kernelinfo(args: &Args) -> Result<()> {
+    args.finish()?;
+    println!("{}", corrsh::engine::simd::kernel_info());
     Ok(())
 }
 

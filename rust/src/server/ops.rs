@@ -356,6 +356,9 @@ impl State {
                         ("hits", self.cache.hits().into()),
                         ("misses", self.cache.misses().into()),
                         ("nan_pulls", self.cache.nan_pulls().into()),
+                        // Dispatched micro-kernel variant every cached
+                        // session's hot paths run on (engine::simd).
+                        ("kernel_variant", crate::engine::simd::active().name().into()),
                     ]),
                 ),
                 (
@@ -844,6 +847,11 @@ mod tests {
         let m = state.handle(&req(r#"{"op":"metrics"}"#));
         assert_eq!(m.get("kmedoids_runs").as_u64(), Some(3));
         assert_eq!(m.get("engine_cache").get("nan_pulls").as_u64(), Some(0));
+        assert_eq!(
+            m.get("engine_cache").get("kernel_variant").as_str(),
+            Some(crate::engine::simd::active().name()),
+            "metrics must export the dispatched kernel variant"
+        );
         assert_eq!(m.get("engine_cache").get("misses").as_u64(), Some(1), "one preparation");
     }
 

@@ -155,6 +155,17 @@ impl Bencher {
         self.results.last().map(|s| s.mean.as_secs_f64())
     }
 
+    /// Mean seconds of the most recent result whose full name ends with
+    /// `suffix` — lets the PGO stage of `benches/engine.rs` look up the
+    /// timings it just produced by row name instead of call order.
+    pub fn mean_s_of(&self, suffix: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .rev()
+            .find(|s| s.name.ends_with(suffix))
+            .map(|s| s.mean.as_secs_f64())
+    }
+
     /// Record a pre-measured scalar (e.g. pulls/arm from an experiment run)
     /// so it lands in the JSONL alongside timings.
     pub fn record_metric(&mut self, name: &str, value: f64, unit: &str) -> &mut Self {
@@ -244,6 +255,8 @@ mod tests {
         assert!(b.results[0].iters >= 5);
         assert!(b.results[1].throughput.unwrap() > 0.0);
         assert_eq!(b.last_mean_s(), Some(b.results[1].mean.as_secs_f64()));
+        assert_eq!(b.mean_s_of("unit/noop"), Some(b.results[0].mean.as_secs_f64()));
+        assert_eq!(b.mean_s_of("no-such-row"), None);
         std::env::remove_var("CORRSH_BENCH_SECS");
     }
 

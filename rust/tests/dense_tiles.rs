@@ -9,7 +9,9 @@ use std::sync::Arc;
 
 use corrsh::data::synth::{gaussian, mnist, SynthConfig};
 use corrsh::data::{Data, DenseData};
-use corrsh::distance::Metric;
+use corrsh::distance::{dense, Metric};
+use corrsh::engine::kernel::DenseTileCtx;
+use corrsh::engine::simd::{self, Variant};
 use corrsh::engine::{NativeEngine, PullEngine};
 use corrsh::util::rng::Rng;
 use corrsh::util::testing;
@@ -152,6 +154,71 @@ fn tiled_block_bitwise_deterministic_across_workers() {
             e.pull_matrix(&arms, &refs, &mut mat);
             if mat != base_mat {
                 return Err(format!("{metric}: matrix diverged at {threads} workers"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simd_kernels_bitwise_equal_scalar_reference() {
+    // DESIGN.md §14 contract at the engine-facing layer: for every metric,
+    // dim (fold boundaries included), and off-grid arm/ref geometry, the
+    // runtime-detected vector kernel must reproduce the scalar reference
+    // *bitwise* — both the f64 block sums and the f32 matrix cells. On
+    // hardware without AVX2/NEON, detect() is Scalar and this pins the
+    // dispatch plumbing instead of vector lanes — never a false pass.
+    let detected = simd::detect();
+    // Fold boundaries (63/64/65, 127/128/129, ...) plus small dims and one
+    // past the last full segment; drawn per case.
+    let dims: [usize; 20] = [
+        1, 2, 3, 5, 8, 31, 63, 64, 65, 96, 127, 128, 129, 191, 192, 193, 255, 256, 257, 300,
+    ];
+    testing::check(
+        "engine-simd-bitwise-parity",
+        (testing::default_cases() / 4).max(12),
+        |rng| {
+            let dim = dims[rng.below(dims.len())];
+            let n_arms = 1 + rng.below(30); // straddles the ARM_TILE grid
+            let n_refs = 1 + rng.below(37); // straddles the 8-lane grid
+            let threads = 1 + rng.below(4);
+            let seed = rng.below(1 << 30) as u64;
+            (dim, n_arms, n_refs, threads, seed)
+        },
+        |&(dim, n_arms, n_refs, threads, seed), rng| {
+            let n = 50;
+            let data = gaussian::generate(&SynthConfig { n, dim, seed, ..Default::default() });
+            let data = match &data {
+                Data::Dense(d) => d,
+                _ => unreachable!("gaussian is dense"),
+            };
+            let norms: Vec<f32> = (0..n).map(|i| dense::norm(data.row(i))).collect();
+            let sq: Vec<f64> = (0..n).map(|i| dense::sqnorm_f64(data.row(i))).collect();
+            let arms: Vec<usize> = (0..n_arms).map(|_| rng.below(n)).collect();
+            let refs: Vec<usize> = (0..n_refs).map(|_| rng.below(n)).collect();
+            for metric in Metric::ALL {
+                let base = DenseTileCtx::new(data, metric, Some(&norms[..]), Some(&sq[..]));
+                let scalar = base.with_variant(Variant::Scalar);
+                let simd_ctx = DenseTileCtx::new(data, metric, Some(&norms[..]), Some(&sq[..]))
+                    .with_variant(detected);
+                let mut s_sums = vec![0f64; n_arms];
+                let mut v_sums = vec![0f64; n_arms];
+                scalar.block_sums(&arms, &refs, threads, &mut s_sums);
+                simd_ctx.block_sums(&arms, &refs, threads, &mut v_sums);
+                if s_sums != v_sums {
+                    return Err(format!(
+                        "{metric} d={dim}: {detected} block sums diverged from scalar"
+                    ));
+                }
+                let mut s_mat = vec![0f32; n_arms * n_refs];
+                let mut v_mat = vec![0f32; n_arms * n_refs];
+                scalar.matrix(&arms, &refs, threads, &mut s_mat);
+                simd_ctx.matrix(&arms, &refs, threads, &mut v_mat);
+                if s_mat != v_mat {
+                    return Err(format!(
+                        "{metric} d={dim}: {detected} matrix diverged from scalar"
+                    ));
+                }
             }
             Ok(())
         },

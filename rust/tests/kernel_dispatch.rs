@@ -1,0 +1,85 @@
+//! `CORRSH_KERNEL` dispatch contract, in its own test binary: the env
+//! override is read exactly once into the process-wide `OnceLock` in
+//! `engine::simd`, so forcing it requires a process where *nothing* has
+//! touched `simd::active()` yet — which the in-crate unit tests (one
+//! shared binary, arbitrary test order) cannot guarantee.
+
+use std::sync::Arc;
+
+use corrsh::data::synth::{mnist, netflix, SynthConfig};
+use corrsh::data::Data;
+use corrsh::distance::Metric;
+use corrsh::engine::kernel::DenseTileCtx;
+use corrsh::engine::simd::{self, Variant};
+use corrsh::engine::{NativeEngine, PullEngine};
+
+#[test]
+fn forced_scalar_env_agrees_with_detected_kernels() {
+    // One #[test] on purpose: the harness runs separate tests on separate
+    // threads, and the override must be in place before the first
+    // `active()` call anywhere in the process.
+    std::env::set_var("CORRSH_KERNEL", "scalar");
+    assert_eq!(simd::active(), Variant::Scalar);
+    let info = simd::kernel_info();
+    assert!(
+        info.contains("kernel_variant=scalar") && info.contains("source=env"),
+        "kernel_info must reflect the env override: {info}"
+    );
+
+    // Dense: full engine outputs under the env-forced scalar dispatch vs a
+    // tile session pinned to the *detected* vector variant — bitwise equal
+    // on both APIs for every metric (DESIGN.md §14).
+    let detected = simd::detect();
+    let n = 64;
+    let cfg = SynthConfig { n, dim: 97, seed: 11, ..Default::default() };
+    let data = Arc::new(mnist::generate(&cfg));
+    let arms: Vec<usize> = (0..n - 3).collect(); // off the ARM_TILE grid
+    let refs: Vec<usize> = (0..27).map(|r| (r * 7 + 1) % n).collect(); // off the 8-lane grid
+    for metric in Metric::ALL {
+        let e = NativeEngine::with_threads(data.clone(), metric, 3);
+        let d = match &*data {
+            Data::Dense(d) => d,
+            _ => unreachable!("mnist is dense"),
+        };
+        let ctx = DenseTileCtx::new(d, metric, e.prepared().norms(), e.prepared().sq_norms())
+            .with_variant(detected);
+        let mut env_sums = vec![0f64; arms.len()];
+        let mut simd_sums = vec![0f64; arms.len()];
+        e.pull_block(&arms, &refs, &mut env_sums);
+        ctx.block_sums(&arms, &refs, 3, &mut simd_sums);
+        assert_eq!(env_sums, simd_sums, "{metric}: forced-scalar block != {detected}");
+        let mut env_mat = vec![0f32; arms.len() * refs.len()];
+        let mut simd_mat = vec![0f32; arms.len() * refs.len()];
+        e.pull_matrix(&arms, &refs, &mut env_mat);
+        ctx.matrix(&arms, &refs, 3, &mut simd_mat);
+        assert_eq!(env_mat, simd_mat, "{metric}: forced-scalar matrix != {detected}");
+    }
+
+    // Sparse: the forced-scalar run walks must still serve the engine
+    // block path — finite sums that match the per-pull merge-walk oracle
+    // (different algorithm, so tolerance not bitwise; the scalar/vector
+    // bitwise identity itself is pinned by the `engine::simd` unit tests).
+    let sdata = Arc::new(netflix::generate(&SynthConfig {
+        n: 60,
+        dim: 300,
+        seed: 7,
+        density: 0.2,
+        ..Default::default()
+    }));
+    let sarms: Vec<usize> = (0..60).collect();
+    let srefs: Vec<usize> = (0..31).collect();
+    for metric in Metric::ALL {
+        let e = NativeEngine::with_threads(sdata.clone(), metric, 2);
+        let mut sums = vec![0f64; sarms.len()];
+        e.pull_block(&sarms, &srefs, &mut sums);
+        for (k, &a) in sarms.iter().enumerate() {
+            assert!(sums[k].is_finite(), "{metric} arm {k}: non-finite sum {}", sums[k]);
+            let oracle: f64 = srefs.iter().map(|&r| e.pull(a, r) as f64).sum();
+            assert!(
+                (sums[k] - oracle).abs() <= 1e-4 * oracle.abs().max(1.0),
+                "{metric} arm {k}: forced-scalar block {} vs per-pull {oracle}",
+                sums[k]
+            );
+        }
+    }
+}
