@@ -14,16 +14,30 @@
 //!   shard writer so the matrix never materializes; records wall seconds,
 //!   pulls/arm and the process peak-RSS, and fails loudly if resident
 //!   memory exceeded 2 GiB (the ISSUE's acceptance envelope).
+//!
+//! Distributed rows (EXPERIMENTS.md §Perf #9): `dist/workers_{1,2,4}` run
+//! the same corrSH workload through a coordinator fanning `worker.pull`
+//! to real loopback worker servers; `dist/speedup` is single-process mean
+//! over the 4-worker mean, and `dist/redispatch_ms` times the first
+//! full-range block after one of three workers is killed mid-session.
+//! Loopback workers share the host's cores, so speedup ≈ 1 here — the
+//! rows exist to track protocol/coordination overhead and failure-path
+//! latency, not to claim multi-host scaling.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 
 use corrsh::bandits::{CorrSh, MedoidAlgorithm};
-use corrsh::config::RunConfig;
+use corrsh::config::{RunConfig, ServerConfig};
 use corrsh::data::store::{ShardedData, StoreOptions};
 use corrsh::data::synth::{Kind, SynthConfig};
 use corrsh::data::Data;
+use corrsh::engine::{DistConfig, DistributedEngine};
 use corrsh::experiments::runner;
+use corrsh::server::{serve_background_with, State};
 use corrsh::util::bench::Bencher;
+use corrsh::util::json::{self, Value};
 use corrsh::util::rng::Rng;
 
 /// Peak resident set size of this process in bytes (linux VmHWM; 0 where
@@ -42,6 +56,34 @@ fn peak_rss_bytes() -> u64 {
         }
     }
     0
+}
+
+/// Spawn `n` in-process worker servers on ephemeral loopback ports.
+fn spawn_workers(n: usize) -> Vec<String> {
+    let cfg = ServerConfig {
+        workers: 2,
+        queue_cap: 64,
+        max_request_bytes: 1 << 26,
+        ..Default::default()
+    };
+    (0..n).map(|_| serve_background_with(State::new(), &cfg).unwrap().to_string()).collect()
+}
+
+/// Register params the coordinator replays on every worker.
+fn register_params(manifest: &std::path::Path) -> Value {
+    json::parse(&format!(
+        r#"{{"name":"d","path":{:?},"metric":"l2"}}"#,
+        manifest.to_str().unwrap()
+    ))
+    .unwrap()
+}
+
+/// Kill a worker for real (its own shutdown op, not just connection loss).
+fn kill_worker(endpoint: &str) {
+    let mut sock = TcpStream::connect(endpoint).unwrap();
+    sock.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(sock).read_line(&mut line).unwrap();
 }
 
 fn main() {
@@ -117,6 +159,69 @@ fn main() {
         b.record_metric("sharded_vs_resident", resident_s / sharded_s, "x rel throughput");
     }
 
+    // ---- distributed scale-out (EXPERIMENTS.md §Perf #9) ----------------
+    b.group("e2e distributed (coordinator + loopback workers)");
+    {
+        let n: usize = std::env::var("CORRSH_E2E_DIST_N")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(8_000);
+        let dim = 64;
+        let rows = (n / 16).max(1);
+        let dir = std::env::temp_dir().join("corrsh-e2e-bench").join("dist-shards");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SynthConfig { n, dim, seed: 0, ..Default::default() };
+        let data = Kind::Gaussian.generate(&cfg);
+        let manifest = corrsh::data::store::write_sharded(&data, &dir, rows).unwrap();
+        let reg = register_params(&manifest);
+        let endpoints = spawn_workers(4);
+
+        let local = corrsh::engine::NativeEngine::with_threads(
+            Arc::new(data),
+            corrsh::distance::Metric::L2,
+            corrsh::util::threads::default_threads(),
+        );
+        let mut local_best = 0usize;
+        b.bench_items(&format!("dist/single_process/n={n}"), n as u64, || {
+            local_best = CorrSh::with_pulls_per_arm(24.0).run(&local, &mut Rng::seeded(3)).best;
+            local_best
+        });
+        let single_s = b.last_mean_s().unwrap();
+
+        let mut four_s = single_s;
+        for w in [1usize, 2, 4] {
+            let dcfg = DistConfig { segments: 8, shard_rows: rows, ..Default::default() };
+            let eng = DistributedEngine::connect(&endpoints[..w], "d", &reg, dcfg).unwrap();
+            let mut best = 0usize;
+            b.bench_items(&format!("dist/workers_{w}/n={n}"), n as u64, || {
+                best = CorrSh::with_pulls_per_arm(24.0).run(&eng, &mut Rng::seeded(3)).best;
+                best
+            });
+            assert_eq!(best, local_best, "fleet of {w} workers disagreed on the medoid");
+            if w == 4 {
+                four_s = b.last_mean_s().unwrap();
+            }
+        }
+        b.record_metric("dist/speedup", single_s / four_s, "x vs single process");
+
+        // Failure path: kill one of three workers, then time the first
+        // full-range block — re-detect + re-dispatch + survivor recompute.
+        let eps = spawn_workers(3);
+        let dcfg = DistConfig { segments: 9, shard_rows: rows, ..Default::default() };
+        let eng = DistributedEngine::connect(&eps, "d", &reg, dcfg).unwrap();
+        let arms = [0usize, 1, 2, 3];
+        let refs: Vec<usize> = (0..n).collect();
+        let mut out = vec![0f64; arms.len()];
+        eng.pull_block(&arms, &refs, &mut out); // warm: every conn live
+        kill_worker(&eps[2]);
+        let t = std::time::Instant::now();
+        eng.pull_block(&arms, &refs, &mut out);
+        let redispatch_ms = t.elapsed().as_secs_f64() * 1e3;
+        assert!(eng.redispatches() >= 1, "killed worker was never re-dispatched");
+        b.record_metric("dist/redispatch_ms", redispatch_ms, "ms");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     // ---- the million-point acceptance run (opt-in: slow + 0.5 GB disk) --
     if std::env::var("CORRSH_E2E_MILLION").map(|v| v == "1").unwrap_or(false) {
         b.group("e2e million (sharded, d=128)");
@@ -153,6 +258,23 @@ fn main() {
         );
         b.record_metric("e2e_million/peak_rss_gib", gib, "GiB");
         println!("e2e million: medoid={} pulls={} rss={gib:.3} GiB", res.best, res.pulls);
+        // Distributed variant over the same manifest: four loopback
+        // workers stream the shards themselves (register-by-path), one
+        // full corrSH run, wall-clock only. Separately gated — each worker
+        // re-prepares the million-row session, which is minutes of extra
+        // wall on a shared runner.
+        if std::env::var("CORRSH_E2E_MILLION_DIST").map(|v| v == "1").unwrap_or(false) {
+            let reg = register_params(&manifest);
+            let endpoints = spawn_workers(4);
+            let dcfg = DistConfig { segments: 16, shard_rows: 16_384, ..Default::default() };
+            let eng = DistributedEngine::connect(&endpoints, "d", &reg, dcfg).unwrap();
+            let t2 = std::time::Instant::now();
+            let dres = CorrSh::with_pulls_per_arm(24.0).run(&eng, &mut Rng::seeded(0));
+            let dist_s = t2.elapsed().as_secs_f64();
+            assert_eq!(dres.best, res.best, "distributed million run disagreed on the medoid");
+            b.record_metric("e2e_million/dist_workers_4_wall_s", dist_s, "s");
+            b.record_metric("e2e_million/dist_speedup", run_s / dist_s, "x vs single process");
+        }
         let _ = std::fs::remove_dir_all(&dir);
         if rss > 0 {
             assert!(

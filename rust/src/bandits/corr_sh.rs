@@ -87,6 +87,12 @@ pub struct HalvingOutcome {
     pub best: usize,
     /// Pulls charged by the schedule ledger (`Σ_r |S_r|·t_r`).
     pub pulls: u64,
+    /// Pulls the executing engine *reported* doing, aggregated by the
+    /// ledger from each block's report (saturating). Equal to `pulls` for
+    /// local engines; in the distributed path it is what workers actually
+    /// charged — still equal in steady state, since re-dispatched segments
+    /// are only counted once (DESIGN.md §15).
+    pub reported_pulls: u64,
     pub rounds: Vec<RoundLog>,
     /// Estimates for the arms still tracked at exit.
     pub estimates: Vec<(usize, f64)>,
@@ -118,12 +124,33 @@ pub fn correlated_halving_argmin(
     rng: &mut Rng,
     score_block: &mut dyn FnMut(&[usize], &[usize], &mut [f64]),
 ) -> HalvingOutcome {
+    correlated_halving_argmin_reported(n_arms, n_refs, total_budget, rng, &mut |arms, refs, out| {
+        score_block(arms, refs, out);
+        (arms.len() * refs.len()) as u64
+    })
+}
+
+/// [`correlated_halving_argmin`] with pull *reporting*: `score_block`
+/// additionally returns how many pulls its engine actually executed for the
+/// block, and the ledger aggregates those reports (saturating) alongside
+/// the scheduled charges. This is the distributed hook — worker report
+/// frames flow through here so budget accounting reflects remote reality —
+/// while local callers use the plain wrapper, which reports the scheduled
+/// `|arms|·|refs|` per block.
+pub fn correlated_halving_argmin_reported(
+    n_arms: usize,
+    n_refs: usize,
+    total_budget: u64,
+    rng: &mut Rng,
+    score_block: &mut dyn FnMut(&[usize], &[usize], &mut [f64]) -> u64,
+) -> HalvingOutcome {
     assert!(n_refs >= 1, "correlated_halving_argmin: empty reference universe");
     assert!(n_arms >= 1, "correlated_halving_argmin: empty arm space");
     if n_arms == 1 {
         return HalvingOutcome {
             best: 0,
             pulls: 0,
+            reported_pulls: 0,
             rounds: vec![],
             estimates: vec![(0, 0.0)],
             exact_exit: false,
@@ -147,7 +174,8 @@ pub fn correlated_halving_argmin(
         let refs = rng.sample_without_replacement(n_refs, t);
 
         let out = &mut sums[..survivors.len()];
-        score_block(&survivors, &refs, out);
+        let reported = score_block(&survivors, &refs, out);
+        ledger.report_remote(reported);
 
         round_logs.push(RoundLog { r, survivors: survivors.len(), t, pulls });
         last_estimates = survivors
@@ -162,6 +190,7 @@ pub fn correlated_halving_argmin(
             return HalvingOutcome {
                 best: last_estimates[k].0,
                 pulls: ledger.spent(),
+                reported_pulls: ledger.remote_reported(),
                 rounds: round_logs,
                 estimates: last_estimates,
                 exact_exit: true,
@@ -187,6 +216,7 @@ pub fn correlated_halving_argmin(
     HalvingOutcome {
         best: survivors[0],
         pulls: ledger.spent(),
+        reported_pulls: ledger.remote_reported(),
         rounds: round_logs,
         estimates: last_estimates,
         exact_exit: false,
@@ -230,9 +260,19 @@ impl MedoidAlgorithm for CorrSh {
             };
         }
         let total = self.budget.total(n);
-        let outcome = correlated_halving_argmin(n, n, total, rng, &mut |arms, refs, out| {
-            engine.pull_block(arms, refs, out);
-        });
+        let outcome =
+            correlated_halving_argmin_reported(n, n, total, rng, &mut |arms, refs, out| {
+                // Engines fed by remote report frames (the distributed
+                // coordinator) expose a monotone reported-pull counter; the
+                // delta across the block is what workers actually charged.
+                // Local engines report the scheduled block size.
+                let before = engine.reported_pulls();
+                engine.pull_block(arms, refs, out);
+                match (before, engine.reported_pulls()) {
+                    (Some(b), Some(a)) => a.saturating_sub(b),
+                    _ => (arms.len() * refs.len()) as u64,
+                }
+            });
         MedoidResult {
             best: outcome.best,
             pulls: outcome.pulls,
@@ -440,6 +480,41 @@ mod tests {
         assert!(outcome.exact_exit, "budget covers t = n_refs");
         assert_eq!(outcome.best, 5);
         assert!(outcome.rounds.iter().all(|r| r.t <= 40));
+    }
+
+    #[test]
+    fn reported_pulls_aggregate_from_score_blocks() {
+        // The reported total is the ledger's saturating aggregate of what
+        // each block said it executed — here each block over-reports by one
+        // pull (as a re-dispatching engine legitimately can), so the
+        // reported total is scheduled + rounds while `pulls` stays exactly
+        // the schedule.
+        let outcome = correlated_halving_argmin_reported(
+            32,
+            32,
+            32 * 8,
+            &mut Rng::seeded(2),
+            &mut |arms, refs, out| {
+                for (k, &a) in arms.iter().enumerate() {
+                    out[k] = (a as f64 + 1.0) * refs.len() as f64;
+                }
+                (arms.len() * refs.len()) as u64 + 1
+            },
+        );
+        assert_eq!(outcome.best, 0);
+        assert_eq!(
+            outcome.reported_pulls,
+            outcome.pulls + outcome.rounds.len() as u64,
+            "each round over-reported exactly one pull"
+        );
+        // The plain wrapper reports the schedule: the two totals agree.
+        let mut score = |arms: &[usize], refs: &[usize], out: &mut [f64]| {
+            for (k, &a) in arms.iter().enumerate() {
+                out[k] = (a as f64 + 1.0) * refs.len() as f64;
+            }
+        };
+        let local = correlated_halving_argmin(32, 32, 32 * 8, &mut Rng::seeded(2), &mut score);
+        assert_eq!(local.reported_pulls, local.pulls);
     }
 
     #[test]

@@ -220,6 +220,16 @@ pub struct ServerConfig {
     /// Per-connection buffered-output threshold above which the event loop
     /// stops reading that socket (write backpressure).
     pub write_buf_bytes: usize,
+    /// Run as a coordinator: registrations fan out to `worker_endpoints`
+    /// and medoid queries execute on the distributed engine (DESIGN.md §15).
+    pub coordinator: bool,
+    /// Worker endpoints (`host:port`) the coordinator fans pulls out to.
+    pub worker_endpoints: Vec<String>,
+    /// Minimum segment count of the coordinator's canonical reduction grid
+    /// (0 → the distributed engine's default).
+    pub dist_segments: usize,
+    /// Deadline for `worker.health` probes and connection establishment.
+    pub health_timeout_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -235,6 +245,10 @@ impl Default for ServerConfig {
             shed_watermark: 0,
             idle_timeout_ms: 30_000,
             write_buf_bytes: 1 << 20,
+            coordinator: false,
+            worker_endpoints: Vec::new(),
+            dist_segments: 0,
+            health_timeout_ms: 2_000,
         }
     }
 }
@@ -287,6 +301,30 @@ impl ServerConfig {
             crate::ensure!(b >= 1, "server.write_buf_bytes must be >= 1");
             cfg.write_buf_bytes = b;
         }
+        if let Some(c) = s.get("coordinator").as_bool() {
+            cfg.coordinator = c;
+        }
+        if let Some(eps) = s.get("worker_endpoints").as_array() {
+            cfg.worker_endpoints = eps
+                .iter()
+                .map(|e| {
+                    e.as_str()
+                        .map(str::to_string)
+                        .context("server.worker_endpoints entries must be strings")
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(n) = s.get("dist_segments").as_usize() {
+            cfg.dist_segments = n;
+        }
+        if let Some(t) = s.get("health_timeout_ms").as_u64() {
+            crate::ensure!(t >= 1, "server.health_timeout_ms must be >= 1");
+            cfg.health_timeout_ms = t;
+        }
+        crate::ensure!(
+            !cfg.coordinator || !cfg.worker_endpoints.is_empty(),
+            "server.coordinator requires a non-empty server.worker_endpoints"
+        );
         Ok(cfg)
     }
 }
@@ -550,12 +588,29 @@ mod tests {
         assert_eq!(cfg.shed_watermark, 7);
         assert_eq!(cfg.idle_timeout_ms, 0);
         assert_eq!(cfg.write_buf_bytes, 65536);
+        assert!(!cfg.coordinator, "coordinator defaults off");
+        assert!(cfg.worker_endpoints.is_empty());
+        // coordinator mode parses with its fleet knobs
+        let v = json::parse(
+            r#"{"server": {"coordinator": true, "dist_segments": 16,
+                "health_timeout_ms": 500,
+                "worker_endpoints": ["127.0.0.1:7801", "127.0.0.1:7802"]}}"#,
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_json_value(&v).unwrap();
+        assert!(cfg.coordinator);
+        assert_eq!(cfg.worker_endpoints, vec!["127.0.0.1:7801", "127.0.0.1:7802"]);
+        assert_eq!(cfg.dist_segments, 16);
+        assert_eq!(cfg.health_timeout_ms, 500);
         for bad in [
             r#"{"server": {"queue_cap": 0}}"#,
             r#"{"server": {"max_request_bytes": 0}}"#,
             r#"{"server": {"max_connections": 0}}"#,
             r#"{"server": {"max_inflight_per_conn": 0}}"#,
             r#"{"server": {"max_inflight_per_dataset": 0}}"#,
+            r#"{"server": {"health_timeout_ms": 0}}"#,
+            r#"{"server": {"coordinator": true}}"#,
+            r#"{"server": {"worker_endpoints": [7801]}}"#,
         ] {
             let v = json::parse(bad).unwrap();
             assert!(ServerConfig::from_json_value(&v).is_err(), "accepted {bad}");

@@ -1,0 +1,324 @@
+//! Placement and outstanding-request tracking for the distributed engine.
+//!
+//! The coordinator splits the reference axis into a **canonical segment
+//! grid** that depends only on the dataset shape and the configured segment
+//! count — never on how many workers are currently alive. Worker ownership
+//! is a second, mutable layer on top: each alive worker owns a contiguous
+//! run of segments (assigned in ascending worker-index order), and when a
+//! worker dies or rejoins only the ownership layer moves; the grid itself is
+//! frozen at registration.
+//!
+//! That split is what makes the distributed reduction bitwise-deterministic
+//! (DESIGN.md §15): workers return one f64 partial sum per (arm, segment),
+//! and the coordinator folds segments in ascending canonical order. Since
+//! segment boundaries and the fold order are worker-count-independent, the
+//! reduced sums are bit-identical across 1, 2, or N workers, and across any
+//! sequence of failures and re-dispatches.
+//!
+//! Segment widths come from [`planner::shard_aligned_chunk`] so that, when
+//! the dataset is served from a shard manifest, segment boundaries land on
+//! shard boundaries and a worker sweeping its range touches whole shards.
+//!
+//! Everything here is pure bookkeeping — no sockets, no I/O — so the
+//! invariants are unit-testable without spinning up processes. The wire
+//! layer lives in `engine::distributed`.
+
+use crate::coordinator::planner;
+
+/// Canonical segment grid plus the current segment → worker assignment.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    n: usize,
+    width: usize,
+    /// Per-segment owning worker slot.
+    owner: Vec<usize>,
+}
+
+impl Placement {
+    /// Freeze the canonical grid for `n` reference rows cut into about
+    /// `segments` runs, shard-aligned when `shard_rows > 0` (0 = resident
+    /// data, plain split). All segments start owned by worker 0; call
+    /// [`Placement::assign`] to spread them over the alive set.
+    pub fn new(n: usize, segments: usize, shard_rows: usize) -> crate::Result<Self> {
+        crate::ensure!(n >= 1, "placement over an empty dataset");
+        crate::ensure!(segments >= 1, "placement needs at least one segment");
+        let width = planner::shard_aligned_chunk(n, segments, 1, shard_rows);
+        let count = n.div_ceil(width);
+        Ok(Placement { n, width, owner: vec![0; count] })
+    }
+
+    /// Number of canonical segments (fixed for the lifetime of the grid).
+    pub fn segments(&self) -> usize {
+        self.owner.len()
+    }
+
+    /// Rows per segment (the tail segment may be shorter).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Half-open row range `[lo, hi)` of segment `s`.
+    pub fn bounds(&self, s: usize) -> (usize, usize) {
+        (s * self.width, ((s + 1) * self.width).min(self.n))
+    }
+
+    /// Canonical segment owning row `row`.
+    pub fn seg_of(&self, row: usize) -> usize {
+        row / self.width
+    }
+
+    /// Worker slot currently owning segment `s`.
+    pub fn owner_of(&self, s: usize) -> usize {
+        self.owner[s]
+    }
+
+    /// Re-spread segment ownership over the alive workers: contiguous runs
+    /// of segments, assigned in ascending worker-index order. The canonical
+    /// grid is untouched — only ownership moves, so a rebalance (worker
+    /// death or rejoin) never perturbs reduction results.
+    pub fn assign(&mut self, alive: &[bool]) -> crate::Result<()> {
+        let alive_idx: Vec<usize> =
+            alive.iter().enumerate().filter(|(_, &a)| a).map(|(i, _)| i).collect();
+        crate::ensure!(!alive_idx.is_empty(), "no alive workers to assign segments to");
+        let per = self.owner.len().div_ceil(alive_idx.len());
+        for (s, o) in self.owner.iter_mut().enumerate() {
+            *o = alive_idx[s / per];
+        }
+        Ok(())
+    }
+
+    /// Partition reference *positions* by owning segment, preserving the
+    /// caller's order inside each segment. `idx[s]` holds indices into
+    /// `refs` whose row falls in segment `s` — order preservation is what
+    /// keeps each worker-side partial sum bitwise-stable, and positions
+    /// (rather than row values) are what the matrix path scatters by.
+    pub fn split_idx(&self, refs: &[usize]) -> Vec<Vec<usize>> {
+        let mut idx: Vec<Vec<usize>> = vec![Vec::new(); self.owner.len()];
+        for (j, &r) in refs.iter().enumerate() {
+            idx[self.seg_of(r)].push(j);
+        }
+        idx
+    }
+}
+
+/// One in-flight request on a worker channel.
+#[derive(Clone, Debug)]
+pub struct Pending {
+    /// Protocol v2 request id.
+    pub id: u64,
+    /// Canonical segments the request covers (for re-dispatch on failure).
+    pub segs: Vec<usize>,
+}
+
+/// Outstanding-request tracker: at most one in-flight request per worker
+/// channel (the engine writes one `worker.pull` per worker per block, then
+/// reads responses in worker-index order). On failure the tracker hands the
+/// dead worker's segment list back for re-dispatch to a survivor.
+#[derive(Clone, Debug, Default)]
+pub struct Outstanding {
+    pending: Vec<Option<Pending>>,
+}
+
+impl Outstanding {
+    pub fn new(workers: usize) -> Self {
+        Outstanding { pending: vec![None; workers] }
+    }
+
+    /// Record a request issued to `worker`. Errors if one is already
+    /// outstanding there — the engine protocol is strictly one-at-a-time
+    /// per channel, so a double-issue is a coordinator bug.
+    pub fn issue(&mut self, worker: usize, id: u64, segs: Vec<usize>) -> crate::Result<()> {
+        crate::ensure!(
+            self.pending[worker].is_none(),
+            "worker {worker} already has an outstanding request"
+        );
+        self.pending[worker] = Some(Pending { id, segs });
+        Ok(())
+    }
+
+    /// Settle the outstanding request on `worker` (response arrived or the
+    /// channel died); returns it for result-filling or re-dispatch.
+    pub fn take(&mut self, worker: usize) -> Option<Pending> {
+        self.pending[worker].take()
+    }
+
+    pub fn is_pending(&self, worker: usize) -> bool {
+        self.pending[worker].is_some()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.pending.iter().filter(|p| p.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing;
+
+    #[test]
+    fn bounds_partition_all_rows() {
+        testing::check(
+            "placement-bounds",
+            testing::default_cases(),
+            |rng| {
+                let n = 1 + rng.below(5000);
+                let segments = 1 + rng.below(16);
+                let shard_rows = [0, 100, 77, 61][rng.below(4)];
+                (n, segments, shard_rows)
+            },
+            |&(n, segments, shard_rows), _| {
+                let p = Placement::new(n, segments, shard_rows).unwrap();
+                let mut pos = 0;
+                for s in 0..p.segments() {
+                    let (lo, hi) = p.bounds(s);
+                    if lo != pos || hi <= lo {
+                        return Err(format!("segment {s} = [{lo},{hi}) breaks cover at {pos}"));
+                    }
+                    pos = hi;
+                }
+                if pos != n {
+                    return Err(format!("segments end at {pos} != n = {n}"));
+                }
+                for row in [0, n / 2, n - 1] {
+                    let s = p.seg_of(row);
+                    let (lo, hi) = p.bounds(s);
+                    if row < lo || row >= hi {
+                        return Err(format!("row {row} mapped to segment {s} = [{lo},{hi})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn grid_is_independent_of_worker_count() {
+        // The canonical grid is a function of (n, segments, shard_rows)
+        // only; assigning to different alive sets must never move bounds.
+        let mut a = Placement::new(1000, 8, 100).unwrap();
+        let mut b = a.clone();
+        a.assign(&[true]).unwrap();
+        b.assign(&[true, true, true, true]).unwrap();
+        assert_eq!(a.segments(), b.segments());
+        for s in 0..a.segments() {
+            assert_eq!(a.bounds(s), b.bounds(s));
+        }
+    }
+
+    #[test]
+    fn assign_is_contiguous_and_alive_only() {
+        testing::check(
+            "placement-assign",
+            testing::default_cases(),
+            |rng| {
+                let n = 1 + rng.below(3000);
+                let workers = 1 + rng.below(6);
+                let mut alive: Vec<bool> = (0..workers).map(|_| rng.chance(0.7)).collect();
+                if !alive.iter().any(|&a| a) {
+                    alive[rng.below(workers)] = true;
+                }
+                let segments = workers + rng.below(16);
+                (n, segments, alive)
+            },
+            |(n, segments, alive), _| {
+                let mut p = Placement::new(*n, *segments, 0).unwrap();
+                p.assign(alive).unwrap();
+                let owners: Vec<usize> = (0..p.segments()).map(|s| p.owner_of(s)).collect();
+                for &o in &owners {
+                    if !alive[o] {
+                        return Err(format!("segment assigned to dead worker {o}"));
+                    }
+                }
+                // Contiguity: ascending worker order along the segment axis.
+                for w in owners.windows(2) {
+                    if w[1] < w[0] {
+                        return Err(format!("ownership not ascending: {owners:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rebalance_moves_ownership_not_bounds() {
+        let mut p = Placement::new(800, 8, 100).unwrap();
+        p.assign(&[true, true, true, true]).unwrap();
+        let before: Vec<(usize, usize)> = (0..p.segments()).map(|s| p.bounds(s)).collect();
+        let owned_by_1: Vec<usize> =
+            (0..p.segments()).filter(|&s| p.owner_of(s) == 1).collect();
+        assert!(!owned_by_1.is_empty());
+        // worker 1 dies: its segments must land on survivors, bounds frozen.
+        p.assign(&[true, false, true, true]).unwrap();
+        for s in 0..p.segments() {
+            assert_ne!(p.owner_of(s), 1, "segment {s} still on the dead worker");
+            assert_eq!(p.bounds(s), before[s], "rebalance moved segment {s}");
+        }
+        // rejoin: worker 1 is assignable again.
+        p.assign(&[true, true, true, true]).unwrap();
+        assert!((0..p.segments()).any(|s| p.owner_of(s) == 1));
+    }
+
+    #[test]
+    fn split_idx_partitions_and_preserves_order() {
+        testing::check(
+            "placement-split",
+            testing::default_cases(),
+            |rng| {
+                let n = 10 + rng.below(2000);
+                let k = 1 + rng.below(200.min(n));
+                let refs = rng.sample_without_replacement(n, k);
+                (n, refs)
+            },
+            |(n, refs), _| {
+                let p = Placement::new(*n, 8, 77).unwrap();
+                let idx = p.split_idx(refs);
+                let mut seen = vec![false; refs.len()];
+                for (s, group) in idx.iter().enumerate() {
+                    let (lo, hi) = p.bounds(s);
+                    for w in group.windows(2) {
+                        if w[1] <= w[0] {
+                            return Err("order not preserved inside a segment".into());
+                        }
+                    }
+                    for &j in group {
+                        if refs[j] < lo || refs[j] >= hi {
+                            return Err(format!("ref {} outside its segment {s}", refs[j]));
+                        }
+                        if seen[j] {
+                            return Err(format!("ref position {j} in two segments"));
+                        }
+                        seen[j] = true;
+                    }
+                }
+                if !seen.iter().all(|&s| s) {
+                    return Err("a ref position was dropped".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn outstanding_lifecycle() {
+        let mut o = Outstanding::new(3);
+        assert_eq!(o.in_flight(), 0);
+        o.issue(1, 7, vec![0, 1]).unwrap();
+        assert!(o.is_pending(1) && !o.is_pending(0));
+        assert_eq!(o.in_flight(), 1);
+        // double-issue on a busy channel is a coordinator bug
+        assert!(o.issue(1, 8, vec![2]).is_err());
+        let p = o.take(1).unwrap();
+        assert_eq!((p.id, p.segs.as_slice()), (7, &[0usize, 1][..]));
+        assert_eq!(o.in_flight(), 0);
+        assert!(o.take(1).is_none());
+        // after settling, the channel is reusable (re-dispatch path)
+        o.issue(1, 9, vec![2]).unwrap();
+        assert!(o.is_pending(1));
+    }
+}

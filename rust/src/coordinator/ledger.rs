@@ -14,13 +14,19 @@ pub struct BudgetLedger {
     /// Σ_r ⌈|S_r|⌉ ≤ 2n + ⌈log₂ n⌉ (ceil-halving).
     slack: u64,
     spent: u64,
+    /// Pulls *reported* by the engine that executed each round — equal to
+    /// the scheduled charge for local engines, but sourced from worker
+    /// report frames in the distributed path, where the coordinator must
+    /// account what remote processes actually computed (including pulls
+    /// repeated on re-dispatch after a worker death).
+    remote_reported: u64,
     rounds: Vec<(usize, u64)>,
 }
 
 impl BudgetLedger {
     pub fn new(budget: u64, n: usize) -> Self {
         let slack = 2 * n as u64 + crate::coordinator::rounds::ceil_log2(n) as u64 + 1;
-        BudgetLedger { budget, slack, spent: 0, rounds: Vec::new() }
+        BudgetLedger { budget, slack, spent: 0, remote_reported: 0, rounds: Vec::new() }
     }
 
     pub fn budget(&self) -> u64 {
@@ -49,6 +55,19 @@ impl BudgetLedger {
         self.spent += pulls;
         self.rounds.push((round, pulls));
         Ok(())
+    }
+
+    /// Aggregate pulls charged by the executing engine's report frames.
+    /// Saturating: a misbehaving remote cannot wrap the counter and forge a
+    /// tiny total. Call once per scored block with that block's reported
+    /// count (for local engines, the scheduled `|S_r| · t_r`).
+    pub fn report_remote(&mut self, pulls: u64) {
+        self.remote_reported = self.remote_reported.saturating_add(pulls);
+    }
+
+    /// Total pulls aggregated from report frames (see [`Self::report_remote`]).
+    pub fn remote_reported(&self) -> u64 {
+        self.remote_reported
     }
 
     /// Per-round history (round index, pulls).
@@ -81,6 +100,25 @@ mod tests {
         assert!(l.charge_round(0, 115).is_err());
         assert!(l.charge_round(0, 114).is_ok());
         assert!(l.charge_round(1, 1).is_err());
+    }
+
+    #[test]
+    fn remote_reports_aggregate_and_saturate() {
+        let mut l = BudgetLedger::new(100, 10);
+        assert_eq!(l.remote_reported(), 0);
+        l.report_remote(40);
+        l.report_remote(30);
+        // reports mirror local charges when the engine computes locally
+        l.charge_round(0, 70).unwrap();
+        assert_eq!(l.remote_reported(), l.spent());
+        // a worker re-dispatch can legitimately report more than scheduled…
+        l.report_remote(5);
+        assert_eq!(l.remote_reported(), 75);
+        // …and a hostile/buggy report can never wrap the accumulator
+        l.report_remote(u64::MAX);
+        assert_eq!(l.remote_reported(), u64::MAX);
+        l.report_remote(1);
+        assert_eq!(l.remote_reported(), u64::MAX);
     }
 
     #[test]

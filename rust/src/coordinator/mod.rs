@@ -8,16 +8,23 @@
 //!   total never exceeds `T` plus the ≤1-pull-per-arm initialization slack.
 //! * [`rounds`] — the halving schedule `|S_{r+1}| = ⌈|S_r|/2⌉` with the
 //!   early-exit rule when `t_r = n` (exact centrality ⇒ zero uncertainty).
+//! * [`dispatch`] — the distributed layer's bookkeeping: the canonical
+//!   segment grid (worker-count-independent, shard-aligned) plus the
+//!   outstanding-request tracker the coordinator re-dispatches from when a
+//!   worker dies (DESIGN.md §15). Pure logic; the sockets live in
+//!   `engine::distributed`.
 //!
 //! The Correlated Sequential Halving *algorithm* (`bandits::corr_sh`) is a
 //! thin loop over these pieces plus an engine; the correlation itself is the
 //! planner guaranteeing every arm in a round is scored against the **same**
 //! reference set `J_r`.
 
+pub mod dispatch;
 pub mod ledger;
 pub mod planner;
 pub mod rounds;
 
+pub use dispatch::{Outstanding, Placement};
 pub use ledger::BudgetLedger;
 pub use planner::{BatchPlanner, Job};
 pub use rounds::{halving_rounds, RoundPlan};

@@ -1,0 +1,813 @@
+//! Distributed pull engine: fan `pull_block`/`pull_matrix` out to worker
+//! processes and reduce the partial sums exactly (DESIGN.md §15).
+//!
+//! Workers are plain `corrsh` servers (the `corrsh worker` mode is a shape
+//! preset, not a different binary) speaking protocol v2 over the same
+//! newline-framed JSON the service uses, so the coordinator's channel layer
+//! is [`proto::Framer`] reused verbatim. Each worker registers the **full
+//! dataset** (the coordinator forwards its own `register` params and
+//! cross-checks the [`PreparedEngine::digest`] fingerprint), which is what
+//! makes failure handling simple: any worker can compute any segment, so a
+//! death re-dispatches row ranges without data movement.
+//!
+//! # Exact reduction
+//!
+//! f64 addition is not associative, so "split refs across workers and add
+//! the partials" would change results with the worker count. Instead the
+//! reference axis is cut into a **canonical segment grid**
+//! ([`Placement`]) that depends only on the dataset and the configured
+//! segment count. Workers return one f64 partial per (arm, segment) —
+//! computed by their local [`NativeEngine::pull_block`] over the segment's
+//! refs in the caller's order — and the coordinator folds segments in
+//! ascending canonical order. Summation boundaries and fold order are both
+//! worker-count-independent, so the reduced sums are **bitwise identical**
+//! across worker counts {1, 2, N} and across any failure/re-dispatch
+//! history. Partials travel as f64 *bit patterns* (see [`bits_value`]), so
+//! NaN poisoning and signed zeros survive JSON.
+//!
+//! # Failure handling
+//!
+//! One `worker.pull` per involved worker per block: write all requests,
+//! read responses in worker-index order. A channel error, read timeout, or
+//! malformed/`ok:false` response marks the worker dead and hands its
+//! segment list to the [`Outstanding`] tracker for re-dispatch to the first
+//! surviving worker; ownership is then rebalanced for subsequent blocks.
+//! Dead workers are probed again at each block entry and rejoin (with the
+//! same digest handshake) when their process comes back. Pull accounting
+//! only counts *absorbed* responses, so a block's reported pulls equal
+//! `|arms| · |refs|` no matter how many re-dispatches it took.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::dispatch::{Outstanding, Placement};
+use crate::distance::Metric;
+use crate::engine::PullEngine;
+use crate::server::proto::{Frame, Framer};
+use crate::util::error::Context;
+use crate::util::json::{self, Value};
+
+/// Shape of the distributed session.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Canonical reduction segments (clamped up to the worker count at
+    /// connect). More segments = finer re-dispatch granularity; the grid is
+    /// frozen per dataset, so this must not change between runs that are
+    /// expected to agree bitwise.
+    pub segments: usize,
+    /// Rows per shard of the served manifest (0 = resident data): segment
+    /// boundaries land on shard boundaries when possible.
+    pub shard_rows: usize,
+    /// Read deadline for `register`/`worker.pull` responses — generous,
+    /// because it must cover the worker-side compute of a whole round.
+    pub request_timeout_ms: u64,
+    /// Deadline for connect probes and `worker.health` pings.
+    pub health_timeout_ms: u64,
+    /// Channel frame cap for worker responses (a round 0 matrix pull over a
+    /// big segment is far larger than a service request).
+    pub max_response_bytes: usize,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            segments: 8,
+            shard_rows: 0,
+            request_timeout_ms: 120_000,
+            health_timeout_ms: 2_000,
+            max_response_bytes: 1 << 30,
+        }
+    }
+}
+
+/// Lossless JSON encoding of an f64/u64 bit pattern: values up to 2⁵³ ride
+/// as JSON numbers (exact in the parser's f64), wider ones as decimal
+/// strings — `Value::as_u64` accepts both. The *bits* travel, never the
+/// float, so NaN, infinities and signed zeros cross the wire intact.
+pub fn bits_value(bits: u64) -> Value {
+    if bits <= (1u64 << 53) {
+        Value::Num(bits as f64)
+    } else {
+        Value::Str(bits.to_string())
+    }
+}
+
+/// One worker channel: a blocking TCP stream plus the shared line framer.
+struct Conn {
+    stream: TcpStream,
+    framer: Framer,
+    next_id: u64,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    fn open(endpoint: &str, cfg: &DistConfig) -> crate::Result<Conn> {
+        let addr: SocketAddr = endpoint
+            .to_socket_addrs()
+            .with_context(|| format!("resolve worker endpoint {endpoint}"))?
+            .next()
+            .with_context(|| format!("worker endpoint {endpoint} resolves to nothing"))?;
+        let stream = TcpStream::connect_timeout(
+            &addr,
+            Duration::from_millis(cfg.health_timeout_ms.max(1)),
+        )
+        .with_context(|| format!("connect worker {endpoint}"))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(Duration::from_millis(cfg.request_timeout_ms.max(1))))
+            .with_context(|| format!("set read timeout on worker {endpoint}"))?;
+        Ok(Conn {
+            stream,
+            framer: Framer::new(cfg.max_response_bytes),
+            next_id: 1,
+            buf: vec![0u8; 64 * 1024],
+        })
+    }
+
+    /// Write one v2 request line; returns its id for [`Conn::recv`].
+    fn send(&mut self, op: &str, params: Value) -> crate::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Value::from_pairs(vec![
+            ("v", 2usize.into()),
+            ("id", id.into()),
+            ("op", op.into()),
+            ("params", params),
+        ]);
+        let mut line = json::to_string(&req);
+        line.push('\n');
+        self.stream.write_all(line.as_bytes()).context("write to worker")?;
+        Ok(id)
+    }
+
+    /// Read frames until the final response for `id`; streamed partials
+    /// (`"partial":true`) are skipped. Returns the envelope's `result`.
+    fn recv(&mut self, id: u64) -> crate::Result<Value> {
+        loop {
+            while let Some(frame) = self.framer.next_frame() {
+                let line = match frame {
+                    Frame::Line(l) => l,
+                    Frame::Oversized { len } => {
+                        crate::bail!("worker response oversized ({len} bytes)")
+                    }
+                    Frame::Invalid => crate::bail!("invalid frame from worker"),
+                };
+                let v = match json::parse(&line) {
+                    Ok(v) => v,
+                    Err(e) => crate::bail!("worker sent unparseable JSON: {e}"),
+                };
+                if v.get("id").as_u64() != Some(id)
+                    || v.get("partial").as_bool() == Some(true)
+                {
+                    continue;
+                }
+                return match v.get("ok").as_bool() {
+                    Some(true) => Ok(v.get("result").clone()),
+                    _ => crate::bail!(
+                        "worker error: {}",
+                        v.get("error").get("message").as_str().unwrap_or("unknown")
+                    ),
+                };
+            }
+            let n = self.stream.read(&mut self.buf).context("read from worker")?;
+            crate::ensure!(n > 0, "worker closed the connection");
+            self.framer.push(&self.buf[..n]);
+        }
+    }
+
+    fn rpc(&mut self, op: &str, params: Value) -> crate::Result<Value> {
+        let id = self.send(op, params)?;
+        self.recv(id)
+    }
+}
+
+const LATENCY_RING: usize = 512;
+
+struct Worker {
+    endpoint: String,
+    conn: Option<Conn>,
+    pulls: u64,
+    restarts: u64,
+    latencies_ms: Vec<f64>,
+    lat_pos: usize,
+}
+
+impl Worker {
+    fn record_latency(&mut self, ms: f64) {
+        if self.latencies_ms.len() < LATENCY_RING {
+            self.latencies_ms.push(ms);
+        } else {
+            self.latencies_ms[self.lat_pos] = ms;
+            self.lat_pos = (self.lat_pos + 1) % LATENCY_RING;
+        }
+    }
+
+    fn p99_ms(&self) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(f64::total_cmp);
+        v[((v.len() * 99).div_ceil(100) - 1).min(v.len() - 1)]
+    }
+}
+
+/// Per-worker status snapshot (the `metrics` op's `workers` rows).
+#[derive(Clone, Debug)]
+pub struct WorkerRow {
+    pub endpoint: String,
+    pub alive: bool,
+    pub pulls: u64,
+    pub in_flight: usize,
+    pub restarts: u64,
+    pub p99_ms: f64,
+}
+
+struct Inner {
+    workers: Vec<Worker>,
+    placement: Placement,
+    outstanding: Outstanding,
+}
+
+/// Gathered per-segment bit patterns for one block.
+struct Gathered {
+    /// Positions into `refs`, per canonical segment (order-preserving).
+    groups: Vec<Vec<usize>>,
+    /// Per segment: arm-major bit patterns (block: one f64 per arm;
+    /// matrix: `|arms| × |group|` f32 bits widened to u64).
+    bits: Vec<Vec<u64>>,
+}
+
+/// [`PullEngine`] over N worker processes with exact canonical reduction.
+pub struct DistributedEngine {
+    dataset: String,
+    /// Forwarded `register` params, re-sent verbatim when a worker rejoins.
+    register: Value,
+    n: usize,
+    dim: usize,
+    metric: Metric,
+    digest: u64,
+    cfg: DistConfig,
+    inner: Mutex<Inner>,
+    remote_pulls: AtomicU64,
+    redispatches: AtomicU64,
+}
+
+impl DistributedEngine {
+    /// Connect every endpoint, forward the dataset registration, and
+    /// cross-check the prepared-session digests: all workers must serve
+    /// bit-identical data or the session is refused outright — a silently
+    /// divergent worker would otherwise corrupt sums only on *its*
+    /// segments, the worst kind of wrong answer.
+    pub fn connect(
+        endpoints: &[String],
+        dataset: &str,
+        register: &Value,
+        cfg: DistConfig,
+    ) -> crate::Result<Self> {
+        crate::ensure!(!endpoints.is_empty(), "distributed engine needs at least one worker");
+        let mut workers = Vec::with_capacity(endpoints.len());
+        let mut shape: Option<(usize, usize, Metric, u64)> = None;
+        for ep in endpoints {
+            let mut conn = Conn::open(ep, &cfg)?;
+            let (n, dim, metric, digest) = Self::handshake(&mut conn, dataset, register)
+                .with_context(|| format!("register dataset {dataset:?} on worker {ep}"))?;
+            if let Some((n0, dim0, m0, d0)) = shape {
+                crate::ensure!(
+                    (n, dim, metric) == (n0, dim0, m0),
+                    "worker {ep} sees a different dataset: n={n} dim={dim} metric={metric} \
+                     (expected n={n0} dim={dim0} metric={m0})"
+                );
+                crate::ensure!(
+                    digest == d0,
+                    "worker {ep} prepared a divergent session: digest {digest:#018x} != \
+                     {d0:#018x} — all workers must serve identical data"
+                );
+            } else {
+                shape = Some((n, dim, metric, digest));
+            }
+            workers.push(Worker {
+                endpoint: ep.clone(),
+                conn: Some(conn),
+                pulls: 0,
+                restarts: 0,
+                latencies_ms: Vec::new(),
+                lat_pos: 0,
+            });
+        }
+        let (n, dim, metric, digest) = shape.unwrap();
+        let mut placement = Placement::new(n, cfg.segments.max(workers.len()), cfg.shard_rows)?;
+        placement.assign(&vec![true; workers.len()])?;
+        let outstanding = Outstanding::new(workers.len());
+        Ok(DistributedEngine {
+            dataset: dataset.to_string(),
+            register: register.clone(),
+            n,
+            dim,
+            metric,
+            digest,
+            cfg,
+            inner: Mutex::new(Inner { workers, placement, outstanding }),
+            remote_pulls: AtomicU64::new(0),
+            redispatches: AtomicU64::new(0),
+        })
+    }
+
+    fn handshake(
+        conn: &mut Conn,
+        dataset: &str,
+        register: &Value,
+    ) -> crate::Result<(usize, usize, Metric, u64)> {
+        conn.rpc("register", register.clone())?;
+        let prep =
+            conn.rpc("worker.prepare", Value::from_pairs(vec![("dataset", dataset.into())]))?;
+        let n = prep.get("n").as_usize().context("worker.prepare: missing n")?;
+        let dim = prep.get("dim").as_usize().context("worker.prepare: missing dim")?;
+        let metric: Metric =
+            prep.get("metric").as_str().context("worker.prepare: missing metric")?.parse()?;
+        let digest = prep.get("digest").as_u64().context("worker.prepare: missing digest")?;
+        Ok((n, dim, metric, digest))
+    }
+
+    /// Total pulls reported by worker responses (the report frames the
+    /// budget ledger aggregates). Monotone; only absorbed responses count.
+    pub fn remote_pulls(&self) -> u64 {
+        self.remote_pulls.load(Ordering::Relaxed)
+    }
+
+    /// Re-dispatch events survived so far (one per failed request handed to
+    /// a survivor).
+    pub fn redispatches(&self) -> u64 {
+        self.redispatches.load(Ordering::Relaxed)
+    }
+
+    /// Canonical segment count of the frozen reduction grid.
+    pub fn segments(&self) -> usize {
+        self.lock().placement.segments()
+    }
+
+    /// Alive worker channels right now.
+    pub fn alive_workers(&self) -> usize {
+        self.lock().workers.iter().filter(|w| w.conn.is_some()).count()
+    }
+
+    /// Per-worker status rows, in worker-index order.
+    pub fn worker_rows(&self) -> Vec<WorkerRow> {
+        let inner = self.lock();
+        inner
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(i, w)| WorkerRow {
+                endpoint: w.endpoint.clone(),
+                alive: w.conn.is_some(),
+                pulls: w.pulls,
+                in_flight: usize::from(inner.outstanding.is_pending(i)),
+                restarts: w.restarts,
+                p99_ms: w.p99_ms(),
+            })
+            .collect()
+    }
+
+    /// Ping every alive worker with `worker.health` under the health
+    /// deadline; unresponsive workers are marked dead and their segments
+    /// rebalanced. Returns the alive mask after the sweep.
+    pub fn health_check(&self) -> Vec<bool> {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        let health = Duration::from_millis(self.cfg.health_timeout_ms.max(1));
+        let request = Duration::from_millis(self.cfg.request_timeout_ms.max(1));
+        let mut died = false;
+        for w in inner.workers.iter_mut() {
+            let Some(conn) = w.conn.as_mut() else { continue };
+            conn.stream.set_read_timeout(Some(health)).ok();
+            let ok = conn.rpc("worker.health", Value::from_pairs(Vec::new())).is_ok();
+            conn.stream.set_read_timeout(Some(request)).ok();
+            if !ok {
+                w.conn = None;
+                died = true;
+            }
+        }
+        let alive: Vec<bool> = inner.workers.iter().map(|w| w.conn.is_some()).collect();
+        if died && alive.iter().any(|&a| a) {
+            let _ = inner.placement.assign(&alive);
+        }
+        alive
+    }
+
+    /// Test/bench hook: drop the channel to worker `w` as if its process
+    /// vanished mid-run. The next block revives it (process still up) or
+    /// re-dispatches its segments (process gone).
+    pub fn drop_connection(&self, w: usize) {
+        self.lock().workers[w].conn = None;
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        // A panic while holding the lock (worker all-dead bail unwinding
+        // through a caller) must not wedge every later query.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Probe dead workers and rebalance if any rejoined. Rejoin repeats the
+    /// full registration handshake: a *different* process listening on the
+    /// old endpoint is only admitted if it serves the same digest.
+    fn revive(&self, inner: &mut Inner) {
+        let mut changed = false;
+        for w in inner.workers.iter_mut() {
+            if w.conn.is_some() {
+                continue;
+            }
+            let Ok(mut conn) = Conn::open(&w.endpoint, &self.cfg) else { continue };
+            match Self::handshake(&mut conn, &self.dataset, &self.register) {
+                Ok(shape) if shape == (self.n, self.dim, self.metric, self.digest) => {
+                    w.conn = Some(conn);
+                    w.restarts += 1;
+                    changed = true;
+                }
+                _ => {}
+            }
+        }
+        if changed {
+            let alive: Vec<bool> = inner.workers.iter().map(|w| w.conn.is_some()).collect();
+            let _ = inner.placement.assign(&alive);
+        }
+    }
+
+    fn pull_params(
+        &self,
+        arms: &[usize],
+        refs: &[usize],
+        groups: &[Vec<usize>],
+        segs: &[usize],
+        matrix: bool,
+    ) -> Value {
+        let ref_groups: Vec<Value> = segs
+            .iter()
+            .map(|&s| Value::Array(groups[s].iter().map(|&j| refs[j].into()).collect()))
+            .collect();
+        let mut pairs = vec![
+            ("dataset", Value::from(self.dataset.as_str())),
+            ("ref_groups", Value::Array(ref_groups)),
+        ];
+        // Round 0 pulls every arm: send the contiguous range instead of a
+        // million-element id array.
+        let contiguous = arms.len() > 1 && arms.windows(2).all(|w| w[1] == w[0] + 1);
+        if contiguous {
+            pairs.push((
+                "arms_range",
+                Value::Array(vec![arms[0].into(), (arms[arms.len() - 1] + 1).into()]),
+            ));
+        } else {
+            pairs.push(("arms", Value::Array(arms.iter().map(|&a| a.into()).collect())));
+        }
+        if matrix {
+            pairs.push(("matrix", true.into()));
+        }
+        Value::from_pairs(pairs)
+    }
+
+    /// Decode one worker response into the per-segment bit store; returns
+    /// the worker's reported pull count. Any shape violation is treated by
+    /// the caller as a worker failure (re-dispatch), never a partial fill:
+    /// the response is validated group-by-group but only counted on full
+    /// success, and a later re-dispatch overwrites whatever was written.
+    fn absorb(
+        &self,
+        resp: &Value,
+        arms: &[usize],
+        groups: &[Vec<usize>],
+        segs: &[usize],
+        matrix: bool,
+        bits: &mut [Vec<u64>],
+    ) -> crate::Result<u64> {
+        let key = if matrix { "dists" } else { "sums" };
+        let rows = resp
+            .get(key)
+            .as_array()
+            .with_context(|| format!("worker.pull response missing {key:?}"))?;
+        crate::ensure!(
+            rows.len() == segs.len(),
+            "worker returned {} groups, expected {}",
+            rows.len(),
+            segs.len()
+        );
+        for (&s, row) in segs.iter().zip(rows) {
+            let vals = row.as_array().context("worker.pull group is not an array")?;
+            let want = if matrix { arms.len() * groups[s].len() } else { arms.len() };
+            crate::ensure!(
+                vals.len() == want,
+                "worker group for segment {s} has {} values, expected {want}",
+                vals.len()
+            );
+            let mut decoded = Vec::with_capacity(vals.len());
+            for v in vals {
+                decoded.push(v.as_u64().context("worker.pull: bad bit pattern")?);
+            }
+            bits[s] = decoded;
+        }
+        resp.get("pulls").as_u64().context("worker.pull response missing pulls")
+    }
+
+    /// The write-all / read-in-order / re-dispatch state machine shared by
+    /// both pull paths.
+    fn gather(&self, arms: &[usize], refs: &[usize], matrix: bool) -> crate::Result<Gathered> {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        self.revive(inner);
+
+        let groups = inner.placement.split_idx(refs);
+        let mut bits: Vec<Vec<u64>> = vec![Vec::new(); groups.len()];
+        let mut plan: Vec<Vec<usize>> = vec![Vec::new(); inner.workers.len()];
+        for (s, g) in groups.iter().enumerate() {
+            if !g.is_empty() {
+                plan[inner.placement.owner_of(s)].push(s);
+            }
+        }
+
+        let mut failed: Vec<usize> = Vec::new();
+        let mut sent_at: Vec<Option<Instant>> = vec![None; inner.workers.len()];
+
+        // Write phase: one request per involved worker.
+        for w in 0..inner.workers.len() {
+            if plan[w].is_empty() {
+                continue;
+            }
+            let params = self.pull_params(arms, refs, &groups, &plan[w], matrix);
+            match inner.workers[w].conn.as_mut().map(|c| c.send("worker.pull", params)) {
+                Some(Ok(id)) => {
+                    inner.outstanding.issue(w, id, std::mem::take(&mut plan[w]))?;
+                    sent_at[w] = Some(Instant::now());
+                }
+                _ => {
+                    inner.workers[w].conn = None;
+                    failed.append(&mut plan[w]);
+                }
+            }
+        }
+
+        // Read phase, in worker-index order.
+        for w in 0..inner.workers.len() {
+            if !inner.outstanding.is_pending(w) {
+                continue;
+            }
+            let pend = inner.outstanding.take(w).expect("pending checked above");
+            let absorbed = inner.workers[w].conn.as_mut().map(|c| c.recv(pend.id)).and_then(
+                |resp| match resp {
+                    Ok(v) => self.absorb(&v, arms, &groups, &pend.segs, matrix, &mut bits).ok(),
+                    Err(_) => None,
+                },
+            );
+            match absorbed {
+                Some(pulls) => {
+                    let worker = &mut inner.workers[w];
+                    worker.pulls += pulls;
+                    if let Some(t0) = sent_at[w] {
+                        worker.record_latency(t0.elapsed().as_secs_f64() * 1e3);
+                    }
+                    self.remote_pulls.fetch_add(pulls, Ordering::Relaxed);
+                }
+                None => {
+                    inner.workers[w].conn = None;
+                    failed.extend(pend.segs);
+                }
+            }
+        }
+
+        // Re-dispatch: hand the dead workers' segments to the first
+        // survivor; keep going down the line if survivors die too.
+        while !failed.is_empty() {
+            let Some(w) = (0..inner.workers.len()).find(|&i| inner.workers[i].conn.is_some())
+            else {
+                crate::bail!(
+                    "all {} workers for dataset {:?} are dead; pull cannot complete",
+                    inner.workers.len(),
+                    self.dataset
+                );
+            };
+            self.redispatches.fetch_add(1, Ordering::Relaxed);
+            let segs = std::mem::take(&mut failed);
+            let params = self.pull_params(arms, refs, &groups, &segs, matrix);
+            let t0 = Instant::now();
+            let absorbed = inner.workers[w]
+                .conn
+                .as_mut()
+                .and_then(|c| c.rpc("worker.pull", params).ok())
+                .and_then(|v| self.absorb(&v, arms, &groups, &segs, matrix, &mut bits).ok());
+            match absorbed {
+                Some(pulls) => {
+                    let worker = &mut inner.workers[w];
+                    worker.pulls += pulls;
+                    worker.record_latency(t0.elapsed().as_secs_f64() * 1e3);
+                    self.remote_pulls.fetch_add(pulls, Ordering::Relaxed);
+                }
+                None => {
+                    inner.workers[w].conn = None;
+                    failed = segs;
+                }
+            }
+        }
+
+        // Rebalance ownership for subsequent blocks if anyone died.
+        let alive: Vec<bool> = inner.workers.iter().map(|w| w.conn.is_some()).collect();
+        if alive.iter().any(|&a| !a) && alive.iter().any(|&a| a) {
+            let _ = inner.placement.assign(&alive);
+        }
+        Ok(Gathered { groups, bits })
+    }
+}
+
+impl PullEngine for DistributedEngine {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn metric(&self) -> Metric {
+        self.metric
+    }
+
+    fn pull(&self, arm: usize, reference: usize) -> f32 {
+        let mut out = [0f32];
+        self.pull_matrix(&[arm], &[reference], &mut out);
+        out[0]
+    }
+
+    fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
+        assert_eq!(arms.len(), out.len());
+        let g = self.gather(arms, refs, false).expect("distributed pull_block failed");
+        out.fill(0.0);
+        // Canonical fold: ascending segment order, independent of which
+        // worker produced each partial — this is the bitwise guarantee.
+        for (s, group) in g.groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let seg = &g.bits[s];
+            for (o, &b) in out.iter_mut().zip(seg) {
+                *o += f64::from_bits(b);
+            }
+        }
+    }
+
+    fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
+        assert_eq!(arms.len() * refs.len(), out.len());
+        let g = self.gather(arms, refs, true).expect("distributed pull_matrix failed");
+        let rlen = refs.len();
+        for (s, group) in g.groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let seg = &g.bits[s];
+            for k in 0..arms.len() {
+                for (c, &j) in group.iter().enumerate() {
+                    out[k * rlen + j] = f32::from_bits(seg[k * group.len() + c] as u32);
+                }
+            }
+        }
+    }
+
+    fn reported_pulls(&self) -> Option<u64> {
+        Some(self.remote_pulls())
+    }
+}
+
+/// Coordinator-side session book: per-dataset distributed engines over a
+/// fixed endpoint list (what `corrsh serve --coordinator` hangs off its
+/// server state).
+pub struct DistRuntime {
+    endpoints: Vec<String>,
+    cfg: DistConfig,
+    engines: Mutex<HashMap<String, Arc<DistributedEngine>>>,
+}
+
+impl DistRuntime {
+    pub fn new(endpoints: Vec<String>, cfg: DistConfig) -> Self {
+        DistRuntime { endpoints, cfg, engines: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn endpoints(&self) -> &[String] {
+        &self.endpoints
+    }
+
+    /// Forward a dataset registration to every worker and open the
+    /// distributed session (replacing any previous session of that name).
+    pub fn register(
+        &self,
+        dataset: &str,
+        params: &Value,
+        shard_rows: usize,
+    ) -> crate::Result<Arc<DistributedEngine>> {
+        let mut cfg = self.cfg.clone();
+        cfg.shard_rows = shard_rows;
+        let engine = Arc::new(DistributedEngine::connect(&self.endpoints, dataset, params, cfg)?);
+        self.lock().insert(dataset.to_string(), Arc::clone(&engine));
+        Ok(engine)
+    }
+
+    pub fn engine(&self, dataset: &str) -> Option<Arc<DistributedEngine>> {
+        self.lock().get(dataset).cloned()
+    }
+
+    pub fn unregister(&self, dataset: &str) {
+        self.lock().remove(dataset);
+    }
+
+    /// Total re-dispatch events across all sessions.
+    pub fn redispatches(&self) -> u64 {
+        self.sessions().iter().map(|e| e.redispatches()).sum()
+    }
+
+    /// Per-endpoint `metrics` rows, aggregated across sessions: pulls and
+    /// restarts sum, p99 takes the worst session, alive if any session's
+    /// channel is up. Empty-session coordinators report all-dead rows.
+    pub fn worker_rows_value(&self) -> Value {
+        let engines = self.sessions();
+        let rows = self
+            .endpoints
+            .iter()
+            .enumerate()
+            .map(|(i, ep)| {
+                let mut pulls = 0u64;
+                let mut restarts = 0u64;
+                let mut in_flight = 0usize;
+                let mut alive = false;
+                let mut p99: f64 = 0.0;
+                for e in &engines {
+                    let row = &e.worker_rows()[i];
+                    pulls += row.pulls;
+                    restarts += row.restarts;
+                    in_flight += row.in_flight;
+                    alive |= row.alive;
+                    p99 = p99.max(row.p99_ms);
+                }
+                Value::from_pairs(vec![
+                    ("endpoint", ep.as_str().into()),
+                    ("alive", alive.into()),
+                    ("pulls", pulls.into()),
+                    ("in_flight", in_flight.into()),
+                    ("restarts", restarts.into()),
+                    ("p99_ms", p99.into()),
+                ])
+            })
+            .collect();
+        Value::Array(rows)
+    }
+
+    fn sessions(&self) -> Vec<Arc<DistributedEngine>> {
+        self.lock().values().cloned().collect()
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<String, Arc<DistributedEngine>>> {
+        self.engines.lock().unwrap_or_else(|p| p.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing;
+
+    #[test]
+    fn bits_value_roundtrips_every_pattern() {
+        // The wire carries bit patterns, so the property is exact identity
+        // — including NaN payloads, infinities and signed zeros, which a
+        // float-in-JSON encoding would mangle or reject.
+        for x in [0.0f64, -0.0, 1.5, -1.5e308, f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let v = bits_value(x.to_bits());
+            assert_eq!(v.as_u64(), Some(x.to_bits()));
+        }
+        testing::check(
+            "bits-value-roundtrip",
+            testing::default_cases(),
+            |rng| rng.next_u64(),
+            |&bits, _| {
+                let v = bits_value(bits);
+                // the encoding must survive an actual serialize/parse cycle
+                let wire = json::to_string(&Value::Array(vec![v]));
+                let back = json::parse(&wire).map_err(|e| e.to_string())?;
+                match back.idx(0).as_u64() {
+                    Some(b) if b == bits => Ok(()),
+                    other => Err(format!("{bits:#x} came back as {other:?}")),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn f32_bits_always_ride_as_numbers() {
+        for x in [0.0f32, -0.0, 3.25, f32::NAN, f32::INFINITY] {
+            match bits_value(x.to_bits() as u64) {
+                Value::Num(_) => {}
+                v => panic!("f32 bits must encode as a JSON number, got {v:?}"),
+            }
+        }
+    }
+}

@@ -18,6 +18,10 @@
 //! * `PjrtEngine` (feature `pjrt`) — executes the AOT-compiled L1/L2
 //!   artifacts through the PJRT runtime, batching (arm×ref) tiles into
 //!   bucket-shaped jobs (see `runtime/` and `coordinator/planner`).
+//! * [`DistributedEngine`] — fans blocks out to N worker processes over
+//!   the service wire protocol and folds the f64 partials in canonical
+//!   segment order, so results are bitwise-identical at any worker count
+//!   and survive worker death via re-dispatch (DESIGN.md §15).
 //! * [`CountingEngine`] — decorator adding atomic pull accounting.
 //!
 //! The micro-kernels under both native hot paths live in [`simd`]:
@@ -26,6 +30,7 @@
 //! bitwise-authoritative (DESIGN.md §14).
 
 pub mod cache;
+pub mod distributed;
 pub mod kernel;
 pub mod native;
 #[cfg(feature = "pjrt")]
@@ -33,6 +38,7 @@ pub mod pjrt;
 pub mod simd;
 
 pub use cache::EngineCache;
+pub use distributed::{DistConfig, DistRuntime, DistributedEngine, WorkerRow};
 pub use native::{NativeEngine, PreparedEngine};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
@@ -84,6 +90,15 @@ pub trait PullEngine {
             }
         }
     }
+
+    /// Pulls this engine's *remote* backends have reported executing, when
+    /// the engine is fed by report frames ([`DistributedEngine`]); `None`
+    /// for engines that compute locally. The bandit loop uses the delta
+    /// across a block to charge the budget ledger with what workers
+    /// actually did rather than what the schedule assumed.
+    fn reported_pulls(&self) -> Option<u64> {
+        None
+    }
 }
 
 /// Decorator counting every pull that flows through.
@@ -134,6 +149,10 @@ impl<E: PullEngine> PullEngine for CountingEngine<E> {
     fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
         self.counter.add((arms.len() * refs.len()) as u64);
         self.inner.pull_matrix(arms, refs, out);
+    }
+
+    fn reported_pulls(&self) -> Option<u64> {
+        self.inner.reported_pulls()
     }
 }
 

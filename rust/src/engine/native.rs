@@ -132,6 +132,57 @@ impl PreparedEngine {
     pub fn nan_pulls(&self) -> u64 {
         self.nan_pulls.get()
     }
+
+    /// Order-fixed FNV-1a-64 fingerprint of the prepared session: shape,
+    /// metric, every precomputed array (as exact bit patterns), and up to
+    /// 16 evenly-spaced data rows. The distributed coordinator cross-checks
+    /// it across workers at registration and again on rejoin (DESIGN.md
+    /// §15) — the row sample is what still gives content coverage for
+    /// metric/data combinations with no precomputed arrays (dense ℓ₁).
+    ///
+    /// This is a divergence tripwire, not a cryptographic commitment: a
+    /// worker serving different data collides only by accident, which is
+    /// all the failure mode (mismatched files or generator seeds) needs.
+    pub fn digest(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = OFFSET;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h = (h ^ b as u64).wrapping_mul(PRIME);
+            }
+        };
+        let n = self.data.n();
+        eat(&(n as u64).to_le_bytes());
+        eat(&(self.data.dim() as u64).to_le_bytes());
+        eat(self.metric.name().as_bytes());
+        if let Some(norms) = self.norms() {
+            for &x in norms {
+                eat(&x.to_bits().to_le_bytes());
+            }
+        }
+        if let Some(sq) = self.sq_norms() {
+            for &x in sq {
+                eat(&x.to_bits().to_le_bytes());
+            }
+        }
+        if let Some(rr) = self.row_reductions() {
+            for &x in rr {
+                eat(&x.to_bits().to_le_bytes());
+            }
+        }
+        let mut row = vec![0f32; self.data.dim()];
+        let sample = 16.min(n);
+        for k in 0..sample {
+            let i = k * n / sample;
+            self.data.densify_row_into(i, &mut row);
+            eat(&(i as u64).to_le_bytes());
+            for &x in &row {
+                eat(&x.to_bits().to_le_bytes());
+            }
+        }
+        h
+    }
 }
 
 /// Shard-streaming cosine norms: one pass per shard on the worker pool.

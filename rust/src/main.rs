@@ -6,6 +6,8 @@
 //! corrsh repro    --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation [--scale N --trials T]
 //! corrsh stats    --preset mnist --scale 8
 //! corrsh serve    --addr 127.0.0.1:7878
+//! corrsh serve    --coordinator --workers-endpoints 127.0.0.1:7801,127.0.0.1:7802
+//! corrsh worker   --addr 127.0.0.1:7801 [--shards 0..500000]
 //! corrsh gen      --kind rnaseq --n 2000 --dim 256 --out data.npy
 //! corrsh shard    data.npy shards/ --rows-per-shard 65536
 //! corrsh shard    --kind gaussian --n 1000000 --dim 128 --out shards/
@@ -21,7 +23,7 @@ use corrsh::server;
 use corrsh::util::cli::Args;
 use corrsh::util::rng::Rng;
 
-const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen|shard|kernelinfo> [flags]
+const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|worker|gen|shard|kernelinfo> [flags]
   medoid:   --preset P | --config file.json [--scale N] [--algo A] [--budget X]
             [--engine native|pjrt] [--seed S] [--trials T]
   kmedoids: --preset P | --config file.json | --kind K [--n N --dim D --clusters C]
@@ -33,6 +35,9 @@ const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|gen|shard|kerneli
   serve:    [--addr HOST:PORT] [--preload P] [--workers N] [--queue-cap N]
             [--max-request-bytes N] [--max-connections N] [--max-inflight-per-conn N]
             [--max-inflight-per-dataset N] [--shed-watermark N] [--idle-timeout-ms MS]
+            [--coordinator --workers-endpoints H:P,H:P,... [--dist-segments N]
+             [--health-timeout-ms MS]]
+  worker:   [--addr HOST:PORT] [--shards A..B] [--workers N] [--max-request-bytes N]
   gen:      --kind K --n N --dim D [--seed S] --out FILE.npy
   shard:    <in.npy|in.csr|manifest.json> <out-dir> [--rows-per-shard N]
             | --kind K --n N --dim D [--seed S] --out DIR (streams at scale)
@@ -59,6 +64,7 @@ fn main() {
         "repro" => cmd_repro(&args),
         "stats" => cmd_stats(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "gen" => cmd_gen(&args),
         "shard" => cmd_shard(&args),
         "kernelinfo" => cmd_kernelinfo(&args),
@@ -359,6 +365,14 @@ fn cmd_stats(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let defaults = corrsh::config::ServerConfig::default();
+    // Passing worker endpoints implies coordinator mode; the bare
+    // --coordinator switch still demands them so a fleet is never empty.
+    let worker_endpoints: Vec<String> = match args.str_opt("workers-endpoints") {
+        Some(s) => {
+            s.split(',').map(|e| e.trim().to_string()).filter(|e| !e.is_empty()).collect()
+        }
+        None => Vec::new(),
+    };
     let server_cfg = corrsh::config::ServerConfig {
         addr: args.str_or("addr", &defaults.addr),
         workers: args.parse_or("workers", defaults.workers)?,
@@ -372,10 +386,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shed_watermark: args.parse_or("shed-watermark", defaults.shed_watermark)?,
         idle_timeout_ms: args.parse_or("idle-timeout-ms", defaults.idle_timeout_ms)?,
         write_buf_bytes: defaults.write_buf_bytes,
+        coordinator: args.switch("coordinator") || !worker_endpoints.is_empty(),
+        worker_endpoints,
+        dist_segments: args.parse_or("dist-segments", defaults.dist_segments)?,
+        health_timeout_ms: args.parse_or("health-timeout-ms", defaults.health_timeout_ms)?,
     };
     let preload = args.str_opt("preload").map(str::to_string);
     args.finish()?;
+    corrsh::ensure!(
+        !server_cfg.coordinator || !server_cfg.worker_endpoints.is_empty(),
+        "serve --coordinator requires --workers-endpoints HOST:PORT[,HOST:PORT...]"
+    );
     let state = server::State::new();
+    if server_cfg.coordinator {
+        let mut dist_cfg = corrsh::engine::DistConfig::default();
+        if server_cfg.dist_segments > 0 {
+            dist_cfg.segments = server_cfg.dist_segments;
+        }
+        dist_cfg.health_timeout_ms = server_cfg.health_timeout_ms;
+        state.set_distributed(std::sync::Arc::new(corrsh::engine::DistRuntime::new(
+            server_cfg.worker_endpoints.clone(),
+            dist_cfg,
+        )));
+        eprintln!(
+            "coordinator: fanning registrations out to {} worker(s)",
+            server_cfg.worker_endpoints.len()
+        );
+    }
     if let Some(preset) = preload {
         let cfg = RunConfig::preset(&preset)?.scaled_down(20);
         // prepare:true warms the engine-session cache before the first
@@ -391,6 +428,38 @@ fn cmd_serve(args: &Args) -> Result<()> {
         eprintln!("preloaded: {resp}");
     }
     server::serve_with(state, &server_cfg)
+}
+
+/// `corrsh worker` — a shard-scoring worker process: an ordinary server
+/// whose request cap defaults high enough for coordinator fan-in (round-0
+/// requests carry whole reference-segment id lists) and which advertises
+/// its launch-time shard range through `worker.health` and `metrics`.
+/// Workers bind loopback-ephemeral by default; pass `--addr` to place one.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let defaults = corrsh::config::ServerConfig::default();
+    let server_cfg = corrsh::config::ServerConfig {
+        addr: args.str_or("addr", "127.0.0.1:0"),
+        workers: args.parse_or("workers", defaults.workers)?,
+        max_request_bytes: args.parse_or("max-request-bytes", 1 << 28)?,
+        ..defaults
+    };
+    let shards = args.str_opt("shards").map(parse_shards).transpose()?;
+    args.finish()?;
+    let state = server::State::new();
+    state.set_worker_shards(shards);
+    if let Some((a, b)) = shards {
+        eprintln!("worker: serving shard rows {a}..{b}");
+    }
+    server::serve_with(state, &server_cfg)
+}
+
+/// Parse a `--shards A..B` row range (end-exclusive).
+fn parse_shards(s: &str) -> Result<(usize, usize)> {
+    let (a, b) = s.split_once("..").context("--shards expects A..B (end-exclusive rows)")?;
+    let a: usize = a.trim().parse().with_context(|| format!("--shards start {a:?}"))?;
+    let b: usize = b.trim().parse().with_context(|| format!("--shards end {b:?}"))?;
+    corrsh::ensure!(a < b, "--shards range {a}..{b} is empty");
+    Ok((a, b))
 }
 
 /// `corrsh shard <in> <out-dir> [--rows-per-shard N]` — convert an

@@ -29,6 +29,14 @@
 //! Bare v1 requests (`{"op":"ping"}`) keep working through a compat shim
 //! that infers the envelope and flattens responses to the legacy in-order
 //! shape; the `ping` reply carries a deprecation note.
+//!
+//! The same server binary plays two more roles (DESIGN.md §15): `corrsh
+//! worker` runs it as a fleet worker (serving the `worker.prepare` /
+//! `worker.pull` / `worker.health` plane), and `corrsh serve
+//! --coordinator --workers-endpoints …` attaches a
+//! [`crate::engine::DistRuntime`] to [`State`] so `register` fans out to
+//! the fleet and `medoid` runs through the distributed engine with exact
+//! per-segment reduction.
 
 pub mod exec;
 pub mod net;

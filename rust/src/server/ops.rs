@@ -14,7 +14,8 @@ use crate::config::{AlgoConfig, KMedoidsConfig};
 use crate::data::synth::{Kind, SynthConfig};
 use crate::data::Data;
 use crate::distance::Metric;
-use crate::engine::{EngineCache, NativeEngine};
+use crate::engine::distributed::bits_value;
+use crate::engine::{DistRuntime, EngineCache, NativeEngine};
 use crate::kmedoids::ClusteringAlgorithm;
 use crate::metrics::{Counter, Gauge};
 use crate::server::proto::{self, Envelope, OpError};
@@ -78,6 +79,17 @@ pub struct State {
     pulls: Counter,
     /// Completed `kmedoids` runs (the clustering workload's op counter).
     kmedoids_runs: Counter,
+    /// Completed `worker.pull` ops (the distributed data-plane counter).
+    worker_pull_ops: Counter,
+    /// Shard row range `[a, b)` this process was launched to serve when run
+    /// as `corrsh worker --shards a..b`. Informational: workers register the
+    /// full dataset (re-dispatch needs any survivor to be able to score any
+    /// segment); the coordinator's placement decides what each worker is
+    /// actually asked to compute.
+    worker_shards: Mutex<Option<(usize, usize)>>,
+    /// Present on coordinators: the runtime fanning registrations out to
+    /// worker processes and owning per-dataset distributed engines.
+    dist: Mutex<Option<Arc<DistRuntime>>>,
     /// Transport counters (filled in by whichever server fronts this state).
     pub net: NetStats,
     shutdown: AtomicBool,
@@ -97,6 +109,23 @@ impl State {
     /// `metrics` op).
     pub fn engine_cache(&self) -> &EngineCache {
         &self.cache
+    }
+
+    /// Record the shard range this process serves (`corrsh worker` mode);
+    /// surfaced through `worker.health` and the `metrics` op.
+    pub fn set_worker_shards(&self, range: Option<(usize, usize)>) {
+        *self.worker_shards.lock().unwrap() = range;
+    }
+
+    /// Attach a coordinator's distributed runtime: from here on,
+    /// registrations fan out to its workers and `medoid` queries run on the
+    /// distributed engine instead of the local one.
+    pub fn set_distributed(&self, rt: Arc<DistRuntime>) {
+        *self.dist.lock().unwrap() = Some(rt);
+    }
+
+    fn dist(&self) -> Option<Arc<DistRuntime>> {
+        self.dist.lock().unwrap().clone()
     }
 
     fn get(&self, name: &str) -> Result<Arc<Entry>> {
@@ -217,13 +246,39 @@ impl State {
                 if req.get("prepare").as_bool() == Some(true) {
                     let _ = self.engine(&name, &entry);
                 }
-                Ok(Value::from_pairs(vec![
+                let mut pairs = vec![
                     ("ok", true.into()),
-                    ("name", name.into()),
+                    ("name", name.as_str().into()),
                     ("n", n.into()),
                     ("metric", metric.name().into()),
                     ("sharded", sharded.into()),
-                ]))
+                ];
+                // Coordinator mode: fan the registration out to every worker
+                // (they re-run it from the same params) and open the
+                // distributed session. A failed fan-out rolls the local
+                // registration back — a half-registered coordinator would
+                // silently answer locally for a dataset the workers never
+                // admitted.
+                if let Some(rt) = self.dist() {
+                    let shard_rows = match &*entry.data {
+                        Data::Sharded(sd) => sd.rows_per_shard(),
+                        _ => 0,
+                    };
+                    match rt.register(&name, req, shard_rows) {
+                        Ok(dist) => {
+                            pairs.push(("distributed", true.into()));
+                            pairs.push(("workers", dist.alive_workers().into()));
+                        }
+                        Err(e) => {
+                            self.datasets.lock().unwrap().remove(&name);
+                            self.cache.invalidate(&name);
+                            return Err(e).with_context(|| {
+                                format!("register: fan-out to workers failed for {name:?}")
+                            });
+                        }
+                    }
+                }
+                Ok(Value::from_pairs(pairs))
             }
             "unregister" => {
                 let name = req
@@ -233,6 +288,9 @@ impl State {
                     .context("missing name")?;
                 let removed = self.datasets.lock().unwrap().remove(name);
                 self.cache.invalidate(name);
+                if let Some(rt) = self.dist() {
+                    rt.unregister(name);
+                }
                 crate::ensure!(removed.is_some(), "dataset {name:?} not registered");
                 Ok(Value::from_pairs(vec![
                     ("ok", true.into()),
@@ -245,9 +303,16 @@ impl State {
                 let entry = self.get(name)?;
                 let algo = build_algo(req, entry.data.n())?;
                 let seed = req.get("seed").as_u64().unwrap_or(0);
-                let engine = self.engine(name, &entry);
                 let mut rng = Rng::seeded(seed);
-                let res = algo.run(&engine, &mut rng);
+                // Coordinator mode: the same algorithm runs against the
+                // distributed engine — pulls execute on the workers, and
+                // the canonical fold keeps the sums bitwise-identical at
+                // any worker count (DESIGN.md §15).
+                let dist = self.dist().and_then(|rt| rt.engine(name));
+                let res = match &dist {
+                    Some(eng) => algo.run(&**eng, &mut rng),
+                    None => algo.run(&self.engine(name, &entry), &mut rng),
+                };
                 self.pulls.add(res.pulls);
                 if stream {
                     // Replay the halving trace as partial frames: one per
@@ -261,14 +326,20 @@ impl State {
                         ]));
                     }
                 }
-                Ok(Value::from_pairs(vec![
+                let mut pairs = vec![
                     ("ok", true.into()),
                     ("medoid", res.best.into()),
                     ("pulls", res.pulls.into()),
                     ("wall_ms", (res.wall.as_secs_f64() * 1e3).into()),
                     ("algo", algo.name().into()),
                     ("seed", seed_value(seed)),
-                ]))
+                ];
+                if let Some(eng) = &dist {
+                    pairs.push(("distributed", true.into()));
+                    pairs.push(("workers", eng.alive_workers().into()));
+                    pairs.push(("redispatches", eng.redispatches().into()));
+                }
+                Ok(Value::from_pairs(pairs))
             }
             "medoid_batch" => self.medoid_batch(req),
             "kmedoids" => {
@@ -342,44 +413,164 @@ impl State {
                     ("gain_ratio", st.gain_ratio().into()),
                 ]))
             }
-            "metrics" => Ok(Value::from_pairs(vec![
-                ("ok", true.into()),
-                ("requests", self.requests.load(Ordering::Relaxed).into()),
-                ("errors", self.errors.load(Ordering::Relaxed).into()),
-                ("pulls", self.pulls.get().into()),
-                ("kmedoids_runs", self.kmedoids_runs.get().into()),
-                ("datasets", self.datasets.lock().unwrap().len().into()),
-                (
-                    "engine_cache",
-                    Value::from_pairs(vec![
-                        ("entries", self.cache.len().into()),
-                        ("hits", self.cache.hits().into()),
-                        ("misses", self.cache.misses().into()),
-                        ("nan_pulls", self.cache.nan_pulls().into()),
-                        // Dispatched micro-kernel variant every cached
-                        // session's hot paths run on (engine::simd).
-                        ("kernel_variant", crate::engine::simd::active().name().into()),
-                    ]),
-                ),
-                (
-                    // Shard-store traffic (process-global): monotone
-                    // hit/miss counters plus the pinned-bytes gauge, so
-                    // "the million-point dataset stayed inside its cache
-                    // budget" is observable, not assumed (DESIGN.md §12).
-                    "shard_cache",
-                    {
-                        let s = crate::data::store::cache_stats();
+            // Coordinator→worker data plane. Same envelope framing as every
+            // other op; a worker is just a `State` that happens to answer
+            // these three ops fast (DESIGN.md §15).
+            "worker.prepare" => {
+                let name = req.get("dataset").as_str().context("missing dataset")?;
+                let entry = self.get(name)?;
+                let prepared =
+                    self.cache.get_or_prepare(name, entry.generation, entry.metric, &entry.data);
+                Ok(Value::from_pairs(vec![
+                    ("ok", true.into()),
+                    ("n", entry.data.n().into()),
+                    ("dim", entry.data.dim().into()),
+                    ("metric", entry.metric.name().into()),
+                    // Bit pattern, not a float: digests above 2⁵³ must not
+                    // round on the wire (bits_value).
+                    ("digest", bits_value(prepared.digest())),
+                ]))
+            }
+            "worker.pull" => {
+                let name = req.get("dataset").as_str().context("missing dataset")?;
+                let entry = self.get(name)?;
+                let n = entry.data.n();
+                let arms: Vec<usize> = if let Some(r) = req.get("arms_range").as_array() {
+                    crate::ensure!(r.len() == 2, "worker.pull: arms_range must be [lo, hi)");
+                    let lo = r[0].as_usize().context("worker.pull: bad arms_range")?;
+                    let hi = r[1].as_usize().context("worker.pull: bad arms_range")?;
+                    crate::ensure!(
+                        lo < hi && hi <= n,
+                        "worker.pull: arms_range [{lo}, {hi}) out of bounds for n = {n}"
+                    );
+                    (lo..hi).collect()
+                } else {
+                    req.get("arms")
+                        .as_array()
+                        .context("worker.pull: missing arms (or arms_range)")?
+                        .iter()
+                        .map(|v| v.as_usize().context("worker.pull: bad arm index"))
+                        .collect::<Result<_>>()?
+                };
+                crate::ensure!(!arms.is_empty(), "worker.pull: empty arms");
+                crate::ensure!(
+                    arms.iter().all(|&a| a < n),
+                    "worker.pull: arm index out of bounds for n = {n}"
+                );
+                let raw = req.get("ref_groups").as_array().context("missing ref_groups")?;
+                crate::ensure!(!raw.is_empty(), "worker.pull: empty ref_groups");
+                let mut groups: Vec<Vec<usize>> = Vec::with_capacity(raw.len());
+                for g in raw {
+                    let refs: Vec<usize> = g
+                        .as_array()
+                        .context("worker.pull: ref group is not an array")?
+                        .iter()
+                        .map(|v| v.as_usize().context("worker.pull: bad ref index"))
+                        .collect::<Result<_>>()?;
+                    crate::ensure!(!refs.is_empty(), "worker.pull: empty ref group");
+                    crate::ensure!(
+                        refs.iter().all(|&r| r < n),
+                        "worker.pull: ref index out of bounds for n = {n}"
+                    );
+                    groups.push(refs);
+                }
+                let matrix = req.get("matrix").as_bool() == Some(true);
+                let engine = self.engine(name, &entry);
+                let mut pulls = 0u64;
+                // One answer row per request group, in request order — the
+                // coordinator maps rows back to segments positionally. All
+                // payloads are bit patterns (lossless, NaN-safe).
+                let rows: Vec<Value> = groups
+                    .iter()
+                    .map(|refs| {
+                        pulls += (arms.len() * refs.len()) as u64;
+                        if matrix {
+                            let mut buf = vec![0f32; arms.len() * refs.len()];
+                            engine.pull_matrix(&arms, refs, &mut buf);
+                            Value::Array(
+                                buf.iter().map(|d| bits_value(d.to_bits() as u64)).collect(),
+                            )
+                        } else {
+                            let mut out = vec![0f64; arms.len()];
+                            engine.pull_block(&arms, refs, &mut out);
+                            Value::Array(out.iter().map(|s| bits_value(s.to_bits())).collect())
+                        }
+                    })
+                    .collect();
+                self.pulls.add(pulls);
+                self.worker_pull_ops.add(1);
+                Ok(Value::from_pairs(vec![
+                    ("ok", true.into()),
+                    (if matrix { "dists" } else { "sums" }, Value::Array(rows)),
+                    ("pulls", pulls.into()),
+                ]))
+            }
+            "worker.health" => {
+                let mut pairs = vec![
+                    ("ok", true.into()),
+                    ("datasets", self.datasets.lock().unwrap().len().into()),
+                    ("pulls", self.pulls.get().into()),
+                    ("worker_pull_ops", self.worker_pull_ops.get().into()),
+                ];
+                if let Some((a, b)) = *self.worker_shards.lock().unwrap() {
+                    pairs.push(("shards", Value::Array(vec![a.into(), b.into()])));
+                }
+                Ok(Value::from_pairs(pairs))
+            }
+            "metrics" => {
+                let mut pairs = vec![
+                    ("ok", true.into()),
+                    ("requests", self.requests.load(Ordering::Relaxed).into()),
+                    ("errors", self.errors.load(Ordering::Relaxed).into()),
+                    ("pulls", self.pulls.get().into()),
+                    ("kmedoids_runs", self.kmedoids_runs.get().into()),
+                    ("datasets", self.datasets.lock().unwrap().len().into()),
+                    (
+                        "engine_cache",
                         Value::from_pairs(vec![
-                            ("hits", s.hits().into()),
-                            ("misses", s.misses().into()),
-                            ("pinned_bytes", s.pinned_bytes().into()),
-                        ])
-                    },
-                ),
-                // Transport counters (zeros under the blocking fallback
-                // or when querying a bare State).
-                ("net", self.net.to_value()),
-            ])),
+                            ("entries", self.cache.len().into()),
+                            ("hits", self.cache.hits().into()),
+                            ("misses", self.cache.misses().into()),
+                            ("nan_pulls", self.cache.nan_pulls().into()),
+                            // Dispatched micro-kernel variant every cached
+                            // session's hot paths run on (engine::simd).
+                            ("kernel_variant", crate::engine::simd::active().name().into()),
+                        ]),
+                    ),
+                    (
+                        // Shard-store traffic (process-global): monotone
+                        // hit/miss counters plus the pinned-bytes gauge, so
+                        // "the million-point dataset stayed inside its cache
+                        // budget" is observable, not assumed (DESIGN.md §12).
+                        "shard_cache",
+                        {
+                            let s = crate::data::store::cache_stats();
+                            Value::from_pairs(vec![
+                                ("hits", s.hits().into()),
+                                ("misses", s.misses().into()),
+                                ("pinned_bytes", s.pinned_bytes().into()),
+                            ])
+                        },
+                    ),
+                    // Transport counters (zeros under the blocking fallback
+                    // or when querying a bare State).
+                    ("net", self.net.to_value()),
+                ];
+                // Distributed roles: workers export their data-plane
+                // traffic and shard range; coordinators export per-worker
+                // rows (pulls, in_flight, restarts, p99) and the re-dispatch
+                // total, so "the fleet is healthy" is observable.
+                pairs.push(("worker_pull_ops", self.worker_pull_ops.get().into()));
+                if let Some((a, b)) = *self.worker_shards.lock().unwrap() {
+                    pairs.push(("worker_shards", Value::Array(vec![a.into(), b.into()])));
+                }
+                if let Some(rt) = self.dist() {
+                    pairs.push(("coordinator", true.into()));
+                    pairs.push(("workers", rt.worker_rows_value()));
+                    pairs.push(("redispatches", rt.redispatches().into()));
+                }
+                Ok(Value::from_pairs(pairs))
+            }
             "shutdown" => {
                 self.shutdown.store(true, Ordering::Release);
                 Ok(Value::from_pairs(vec![
@@ -907,6 +1098,83 @@ mod tests {
         let p = state.handle(&req(r#"{"op":"ping"}"#));
         assert_eq!(p.get("pong").as_bool(), Some(true));
         assert!(p.get("note").as_str().unwrap().contains("deprecated"), "{p}");
+    }
+
+    #[test]
+    fn worker_ops_answer_the_coordinator_contract() {
+        use crate::engine::PullEngine;
+        let state = State::new();
+        register_toy(&state, "toy");
+
+        // worker.prepare: shape plus a digest that is stable across calls.
+        let p = state.handle(&req(r#"{"op":"worker.prepare","dataset":"toy"}"#));
+        assert_eq!(p.get("ok").as_bool(), Some(true), "{p}");
+        assert_eq!(p.get("n").as_usize(), Some(200));
+        assert_eq!(p.get("dim").as_usize(), Some(8));
+        assert_eq!(p.get("metric").as_str(), Some("l2"));
+        let digest = p.get("digest").as_u64().unwrap();
+        let p2 = state.handle(&req(r#"{"op":"worker.prepare","dataset":"toy"}"#));
+        assert_eq!(p2.get("digest").as_u64(), Some(digest), "digest must be stable");
+
+        // worker.pull sums: bit-for-bit what a local engine computes per
+        // group, in request order, with the exact pull count.
+        let cfg = crate::data::synth::SynthConfig { n: 200, dim: 8, seed: 4, ..Default::default() };
+        let engine = NativeEngine::new(Kind::Gaussian.generate(&cfg), Metric::L2);
+        let r = state.handle(&req(
+            r#"{"op":"worker.pull","dataset":"toy","arms_range":[0,4],
+                "ref_groups":[[0,1,2],[7,5]]}"#,
+        ));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("pulls").as_u64(), Some(4 * 5));
+        let sums = r.get("sums").as_array().unwrap();
+        assert_eq!(sums.len(), 2);
+        for (g, refs) in [vec![0usize, 1, 2], vec![7, 5]].iter().enumerate() {
+            let mut want = vec![0f64; 4];
+            engine.pull_block(&[0, 1, 2, 3], refs, &mut want);
+            for (k, w) in want.iter().enumerate() {
+                assert_eq!(sums[g].idx(k).as_u64(), Some(w.to_bits()), "group {g} arm {k}");
+            }
+        }
+
+        // worker.pull matrix: arm-major f32 bit patterns.
+        let r = state.handle(&req(
+            r#"{"op":"worker.pull","dataset":"toy","arms":[3,1],
+                "ref_groups":[[2,9]],"matrix":true}"#,
+        ));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("pulls").as_u64(), Some(4));
+        let mut want = vec![0f32; 4];
+        engine.pull_matrix(&[3, 1], &[2, 9], &mut want);
+        let dists = r.get("dists").idx(0);
+        for (k, w) in want.iter().enumerate() {
+            assert_eq!(dists.idx(k).as_u64(), Some(w.to_bits() as u64), "cell {k}");
+        }
+
+        // worker.health reports the configured shard range.
+        state.set_worker_shards(Some((0, 100)));
+        let h = state.handle(&req(r#"{"op":"worker.health"}"#));
+        assert_eq!(h.get("ok").as_bool(), Some(true), "{h}");
+        assert_eq!(h.get("shards").idx(0).as_usize(), Some(0));
+        assert_eq!(h.get("shards").idx(1).as_usize(), Some(100));
+        assert_eq!(h.get("worker_pull_ops").as_u64(), Some(2));
+        let m = state.handle(&req(r#"{"op":"metrics"}"#));
+        assert_eq!(m.get("worker_pull_ops").as_u64(), Some(2));
+        assert_eq!(m.get("worker_shards").idx(1).as_usize(), Some(100));
+        assert!(matches!(m.get("coordinator"), Value::Null), "not a coordinator");
+
+        // malformed pulls fail cleanly
+        for bad in [
+            r#"{"op":"worker.pull","dataset":"nope","arms":[0],"ref_groups":[[0]]}"#,
+            r#"{"op":"worker.pull","dataset":"toy","arms":[],"ref_groups":[[0]]}"#,
+            r#"{"op":"worker.pull","dataset":"toy","arms":[200],"ref_groups":[[0]]}"#,
+            r#"{"op":"worker.pull","dataset":"toy","arms":[0],"ref_groups":[[]]}"#,
+            r#"{"op":"worker.pull","dataset":"toy","arms":[0],"ref_groups":[[999]]}"#,
+            r#"{"op":"worker.pull","dataset":"toy","arms_range":[4,2],"ref_groups":[[0]]}"#,
+            r#"{"op":"worker.pull","dataset":"toy","arms":[0]}"#,
+        ] {
+            let r = state.handle(&req(bad));
+            assert_eq!(r.get("ok").as_bool(), Some(false), "should fail: {bad}");
+        }
     }
 
     #[test]

@@ -454,16 +454,20 @@ mod tests {
     }
 
     /// Deterministic fuzz-style corpus: random envelopes — valid v1/v2,
-    /// truncated, garbage, oversized, split across arbitrary chunk
-    /// boundaries — must never panic, and every complete valid line must
-    /// parse to the same envelope it does unsplit.
+    /// worker-plane frames (bit-pattern partial sums, including >2⁵³
+    /// string-encoded bits), truncated, garbage, oversized, split across
+    /// arbitrary chunk boundaries — must never panic, and every complete
+    /// valid line must parse to the same envelope it does unsplit. A final
+    /// pass restarts the framer mid-corpus (a worker reconnect) and must
+    /// classify identically.
     #[test]
     fn corpus_of_malformed_and_split_envelopes() {
+        use crate::engine::distributed::bits_value;
         let mut rng = Rng::seeded(0xC0FFEE);
         let cap = 256;
         let mut corpus: Vec<Vec<u8>> = Vec::new();
         for i in 0..200u64 {
-            let kind = rng.below(6);
+            let kind = rng.below(8);
             let line: Vec<u8> = match kind {
                 0 => format!(r#"{{"op":"ping","tag":{i}}}"#).into_bytes(),
                 1 => format!(r#"{{"v":2,"id":{i},"op":"medoid","params":{{"dataset":"d"}}}}"#)
@@ -481,6 +485,25 @@ mod tests {
                     })
                     .collect(),
                 4 => vec![b'z'; cap + 1 + rng.below(200) as usize],
+                5 => {
+                    // a worker.pull partial-sum response as the worker
+                    // writes it: f64 bit patterns above 2⁵³ ride as decimal
+                    // strings (engine::distributed wire rule)
+                    let sums = Value::Array(vec![Value::Array(vec![
+                        bits_value(rng.next_u64() | (1 << 60)),
+                        bits_value(rng.below(1000)),
+                    ])]);
+                    json::to_string(&Value::from_pairs(vec![
+                        ("id", i.into()),
+                        ("ok", true.into()),
+                        ("result", Value::from_pairs(vec![("sums", sums), ("pulls", 8.into())])),
+                    ]))
+                    .into_bytes()
+                }
+                6 => format!(
+                    r#"{{"v":2,"id":{i},"op":"worker.pull","params":{{"ref_groups":[[1,2]]}}}}"#
+                )
+                .into_bytes(),
                 _ => format!(r#"{{"v":{},"id":1,"op":"ping"}}"#, rng.below(9)).into_bytes(),
             };
             corpus.push(line);
@@ -536,5 +559,30 @@ mod tests {
             }
         }
         assert_eq!(got, aligned, "split-across-read classification diverged");
+
+        // Restart pass: a worker dies mid-corpus and its replacement opens
+        // a fresh framer at a line boundary (the coordinator never splices
+        // half-lines across reconnects — unread bytes die with the socket).
+        // Classifications from the old and new channel concatenate to the
+        // same reference sequence.
+        let boundary: usize = corpus[..100].iter().map(|l| l.len() + 1).sum();
+        let mut after_restart: Vec<Option<bool>> = Vec::new();
+        for part in [&stream[..boundary], &stream[boundary..]] {
+            let mut f = Framer::new(cap);
+            let mut off = 0;
+            while off < part.len() {
+                let take = 1 + rng.below(17) as usize;
+                let end = (off + take).min(part.len());
+                f.push(&part[off..end]);
+                off = end;
+            }
+            while let Some(frame) = f.next_frame() {
+                after_restart.push(match frame {
+                    Frame::Line(s) => Some(parse_request(&s).is_ok()),
+                    _ => None,
+                });
+            }
+        }
+        assert_eq!(after_restart, aligned, "mid-stream framer restart diverged");
     }
 }

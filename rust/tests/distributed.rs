@@ -1,0 +1,280 @@
+//! Distributed coordinator/worker tests (DESIGN.md §15).
+//!
+//! Workers are real servers — each an in-process epoll event loop behind an
+//! ephemeral TCP port — so every pull here crosses the actual protocol-v2
+//! wire path (`worker.prepare` digest handshake, `worker.pull` fan-out,
+//! `bits_value` encoding, canonical segment reduction). The properties:
+//!
+//! * `pull_block` sums and `pull_matrix` rows are **bitwise identical** at
+//!   every worker count {1, 2, 4}, for dense and sparse datasets across
+//!   shard widths (including a prime one that misaligns with the grid).
+//! * CorrSh picks the same medoid with the same pull count whether it runs
+//!   against one process or a fleet.
+//! * Killing a worker mid-session re-dispatches its segments to survivors
+//!   without changing the winner or double-charging the budget ledger.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use corrsh::bandits::{CorrSh, MedoidAlgorithm};
+use corrsh::config::ServerConfig;
+use corrsh::data::loader;
+use corrsh::data::store::write_sharded;
+use corrsh::data::synth::{Kind, SynthConfig};
+use corrsh::distance::Metric;
+use corrsh::engine::{DistConfig, DistRuntime, DistributedEngine, NativeEngine, PullEngine};
+use corrsh::server::{serve_background_with, State};
+use corrsh::util::json::{self, Value};
+use corrsh::util::rng::Rng;
+use corrsh::util::testing;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("corrsh-distributed-tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Spawn `n` worker servers on ephemeral loopback ports; returns endpoints.
+fn spawn_workers(n: usize) -> Vec<String> {
+    let cfg = ServerConfig {
+        workers: 2,
+        queue_cap: 64,
+        max_request_bytes: 1 << 26,
+        ..Default::default()
+    };
+    (0..n).map(|_| serve_background_with(State::new(), &cfg).unwrap().to_string()).collect()
+}
+
+/// Generate a dataset, persist it as an on-disk shard set, and return the
+/// register params every worker will replay (name fixed to `"d"`).
+fn dataset(
+    kind: Kind,
+    metric: Metric,
+    n: usize,
+    dim: usize,
+    seed: u64,
+    dir: &Path,
+    rows_per_shard: usize,
+) -> Value {
+    let cfg = SynthConfig { n, dim, seed, ..Default::default() };
+    let data = kind.generate(&cfg);
+    let manifest = write_sharded(&data, dir.join("shards"), rows_per_shard).unwrap();
+    json::parse(&format!(
+        r#"{{"name":"d","path":{:?},"metric":{:?}}}"#,
+        manifest.to_str().unwrap(),
+        metric.name()
+    ))
+    .unwrap()
+}
+
+/// Single-process reference over the *same manifest* the workers serve.
+fn native_for(register: &Value, metric: Metric) -> NativeEngine {
+    let path = register.get("path").as_str().unwrap();
+    NativeEngine::new(loader::load(path).unwrap(), metric)
+}
+
+/// Random non-empty sorted index subset.
+fn subset(rng: &mut Rng, n: usize, max_len: usize) -> Vec<usize> {
+    let len = 1 + rng.below(max_len);
+    let mut v: Vec<usize> = (0..len).map(|_| rng.below(n)).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Take a worker down for real: connection loss alone is healed by revive,
+/// so the re-dispatch tests use the server's own shutdown op.
+fn shutdown(endpoint: &str) {
+    let mut sock = TcpStream::connect(endpoint).unwrap();
+    sock.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(sock).read_line(&mut line).unwrap();
+    assert!(line.contains("shutting_down"), "unexpected shutdown reply: {line}");
+}
+
+#[test]
+fn reduction_is_bitwise_identical_across_worker_counts() {
+    // Dense and sparse, shard widths that do and do not divide the grid.
+    let cases = [
+        (Kind::Gaussian, Metric::L2, 100usize, "dense-100"),
+        (Kind::Gaussian, Metric::L2, 77, "dense-77"),
+        (Kind::RnaSeq, Metric::L1, 61, "sparse-61"),
+    ];
+    for (kind, metric, rows, tag) in cases {
+        let n = 240;
+        let dir = tmp(&format!("parity-{tag}"));
+        let reg = dataset(kind, metric, n, 24, 9, &dir, rows);
+        let native = native_for(&reg, metric);
+        let endpoints = spawn_workers(4);
+        let engines: Vec<DistributedEngine> = [1usize, 2, 4]
+            .iter()
+            .map(|&w| {
+                let cfg = DistConfig { segments: 8, shard_rows: rows, ..Default::default() };
+                DistributedEngine::connect(&endpoints[..w], "d", &reg, cfg).unwrap()
+            })
+            .collect();
+        for eng in &engines {
+            assert_eq!((eng.n(), eng.dim(), eng.metric()), (n, native.dim(), metric), "{tag}");
+            assert_eq!(eng.segments(), engines[0].segments(), "{tag}: grid depends on fleet size");
+        }
+        testing::check(
+            &format!("dist-parity-{tag}"),
+            testing::cases_from_env(6).min(12),
+            |rng| (subset(rng, n, 40), subset(rng, n, 90)),
+            |case, _| {
+                let (arms, refs) = case;
+                let mut base: Option<Vec<u64>> = None;
+                for (i, eng) in engines.iter().enumerate() {
+                    let mut out = vec![0f64; arms.len()];
+                    eng.pull_block(arms, refs, &mut out);
+                    let bits: Vec<u64> = out.iter().map(|x| x.to_bits()).collect();
+                    match &base {
+                        None => base = Some(bits),
+                        Some(b) if *b != bits => {
+                            return Err(format!("pull_block diverged at engine {i}"));
+                        }
+                        Some(_) => {}
+                    }
+                }
+                // Matrix rows carry raw f32 distances (no reduction), so
+                // they must match the single-process kernels bit for bit.
+                let mut want = vec![0f32; arms.len() * refs.len()];
+                native.pull_matrix(arms, refs, &mut want);
+                for (i, eng) in engines.iter().enumerate() {
+                    let mut got = vec![0f32; arms.len() * refs.len()];
+                    eng.pull_matrix(arms, refs, &mut got);
+                    for (p, (g, w)) in got.iter().zip(&want).enumerate() {
+                        if g.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "pull_matrix cell {p} diverged at engine {i}: {g} vs {w}"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn corrsh_matches_single_process_at_any_worker_count() {
+    let n = 300;
+    let dir = tmp("winner");
+    let reg = dataset(Kind::Gaussian, Metric::L2, n, 16, 3, &dir, 64);
+    let native = native_for(&reg, Metric::L2);
+    let algo = CorrSh::with_total_pulls(n as u64 * 96);
+    let reference = algo.run(&native, &mut Rng::seeded(11));
+
+    let endpoints = spawn_workers(4);
+    let mut first: Option<(usize, u64, Vec<(usize, f64)>)> = None;
+    for w in [1usize, 2, 4] {
+        let cfg = DistConfig { segments: 8, shard_rows: 64, ..Default::default() };
+        let eng = DistributedEngine::connect(&endpoints[..w], "d", &reg, cfg).unwrap();
+        let res = algo.run(&eng, &mut Rng::seeded(11));
+        assert_eq!(res.best, reference.best, "{w} workers picked a different medoid");
+        assert_eq!(res.pulls, reference.pulls, "{w} workers consumed a different budget");
+        // Accounting invariant: workers report exactly the scheduled grid,
+        // so the ledger's remote total equals the algorithm's own count.
+        assert_eq!(eng.reported_pulls(), Some(res.pulls), "{w} workers: report drift");
+        assert_eq!(eng.redispatches(), 0, "{w} workers: no failures expected");
+        match &first {
+            None => first = Some((res.best, res.pulls, res.estimates)),
+            Some((_, _, est)) => {
+                // Estimates fold in canonical segment order, so they are
+                // bitwise reproducible across fleet sizes (not just close).
+                assert_eq!(res.estimates, *est, "{w} workers: estimates diverged");
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_worker_redispatches_without_changing_the_answer() {
+    let n = 260;
+    let dir = tmp("kill");
+    let reg = dataset(Kind::Gaussian, Metric::L2, n, 12, 5, &dir, 50);
+    let algo = CorrSh::with_total_pulls(n as u64 * 80);
+    let cfg = DistConfig { segments: 9, shard_rows: 50, ..Default::default() };
+    let all_refs: Vec<usize> = (0..n).collect();
+    let probe_arms = [0usize, 1, 2, 3];
+
+    // Healthy 3-worker baseline (same probe pulls as the victim run below,
+    // so the remote-report totals stay comparable).
+    let healthy_eps = spawn_workers(3);
+    let healthy = DistributedEngine::connect(&healthy_eps, "d", &reg, cfg.clone()).unwrap();
+    let mut want_probe = vec![0f64; probe_arms.len()];
+    healthy.pull_block(&probe_arms, &all_refs, &mut want_probe);
+    let want = algo.run(&healthy, &mut Rng::seeded(5));
+    assert_eq!(healthy.redispatches(), 0);
+
+    // Victim run: same dataset on a fresh fleet, then take worker 2 down
+    // after the session is established.
+    let eps = spawn_workers(3);
+    let eng = DistributedEngine::connect(&eps, "d", &reg, cfg).unwrap();
+    shutdown(&eps[2]);
+    // A full-range block touches every segment, so the dead worker's share
+    // must be re-dispatched — and the re-assembled sums must still match
+    // the healthy fleet bit for bit.
+    let mut got_probe = vec![0f64; probe_arms.len()];
+    eng.pull_block(&probe_arms, &all_refs, &mut got_probe);
+    assert!(eng.redispatches() >= 1, "victim's segments were never re-dispatched");
+    let want_bits: Vec<u64> = want_probe.iter().map(|x| x.to_bits()).collect();
+    let got_bits: Vec<u64> = got_probe.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(got_bits, want_bits, "re-dispatched sums diverged");
+
+    let got = algo.run(&eng, &mut Rng::seeded(5));
+    assert_eq!(got.best, want.best, "losing a worker changed the medoid");
+    assert_eq!(got.pulls, want.pulls, "losing a worker changed the budget accounting");
+    // Pulls count only on absorbed responses: abandoned requests to the
+    // dead worker never reach the ledger, so the totals stay exact.
+    assert_eq!(eng.reported_pulls(), healthy.reported_pulls(), "re-dispatch double-charged");
+
+    let rows = eng.worker_rows();
+    assert!(!rows[2].alive, "victim still marked alive after failing");
+    assert!(rows[0].alive && rows[1].alive, "survivors were dropped");
+    assert_eq!(eng.health_check(), vec![true, true, false]);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn coordinator_state_fans_out_and_reports_fleet_metrics() {
+    let endpoints = spawn_workers(2);
+    let coord = State::new();
+    coord.set_distributed(Arc::new(DistRuntime::new(
+        endpoints,
+        DistConfig { segments: 8, ..Default::default() },
+    )));
+    let local = State::new();
+
+    // Generator-backed registration: workers replay the same params and
+    // must land on the same digest.
+    let reg = r#"{"op":"register","name":"toy","kind":"gaussian","n":220,"dim":8,"seed":4}"#;
+    let r = coord.handle(&json::parse(reg).unwrap());
+    assert_eq!(r.get("ok").as_bool(), Some(true), "coordinator register failed: {r}");
+    assert_eq!(r.get("distributed").as_bool(), Some(true));
+    assert_eq!(r.get("workers").as_usize(), Some(2));
+    assert_eq!(local.handle(&json::parse(reg).unwrap()).get("ok").as_bool(), Some(true));
+
+    let q = r#"{"op":"medoid","dataset":"toy","algo":"corrsh","pulls_per_arm":48,"seed":1}"#;
+    let a = coord.handle(&json::parse(q).unwrap());
+    let b = local.handle(&json::parse(q).unwrap());
+    assert_eq!(a.get("ok").as_bool(), Some(true), "coordinator medoid failed: {a}");
+    assert_eq!(a.get("medoid").as_usize(), b.get("medoid").as_usize(), "answers diverged");
+    assert_eq!(a.get("pulls").as_f64(), b.get("pulls").as_f64(), "pull accounting diverged");
+    assert_eq!(a.get("distributed").as_bool(), Some(true));
+
+    let m = coord.handle(&json::parse(r#"{"op":"metrics"}"#).unwrap());
+    assert_eq!(m.get("coordinator").as_bool(), Some(true), "metrics lost the coordinator row: {m}");
+    assert_eq!(m.get("redispatches").as_u64(), Some(0));
+    assert_eq!(m.get("workers").idx(0).get("alive").as_bool(), Some(true));
+    assert!(m.get("workers").idx(1).get("endpoint").as_str().is_some(), "missing worker row: {m}");
+
+    let u = coord.handle(&json::parse(r#"{"op":"unregister","name":"toy"}"#).unwrap());
+    assert_eq!(u.get("ok").as_bool(), Some(true), "unregister failed: {u}");
+}
