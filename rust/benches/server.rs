@@ -195,7 +195,7 @@ fn soak(b: &mut Bencher) {
     let mut handles = Vec::with_capacity(active);
     for c in 0..active {
         let baseline = baseline.clone();
-        handles.push(std::thread::spawn(move || {
+        handles.push(corrsh::util::threads::spawn(&format!("corrsh-bench-{c}"), move || {
             let mut sock = TcpStream::connect(addr).unwrap();
             let mut reader = BufReader::new(sock.try_clone().unwrap());
             let mut burst = String::new();

@@ -1,0 +1,432 @@
+//! Token-level Rust lexer for the in-tree lint analyzer.
+//!
+//! This is not a full Rust lexer — it is exactly the subset the invariant
+//! rules in [`super::rules`] need to avoid the false-positive classes that
+//! killed the old grep/awk CI gates:
+//!
+//! - line comments and (nested) block comments are real tokens, so a rule
+//!   can anchor on `// SAFETY:` text and never fire on `partial_cmp`
+//!   mentioned in prose;
+//! - string literals (`"…"`, `r"…"`, `r#"…"#`, `b"…"`, `br#"…"#`, `c"…"`)
+//!   and char/byte-char literals are skipped as single tokens, so `unsafe`
+//!   inside a fixture string is invisible to the rules;
+//! - lifetimes (`'a`) are disambiguated from char literals (`'a'`) so a
+//!   quote never desynchronizes the scan;
+//! - numeric literals carry an `is_float` flag (fraction, exponent, or
+//!   `f32`/`f64` suffix) so the float-comparison rule can match
+//!   literal-adjacent `==`/`!=` without type information.
+//!
+//! The lexer is lossless enough for the rules (every non-whitespace byte
+//! belongs to exactly one token) and never panics on malformed input: an
+//! unterminated literal simply extends to end-of-file.
+
+/// Token classes the rule engine distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Identifier or keyword (`unsafe`, `partial_cmp`, `thread`, …).
+    Ident,
+    /// Numeric literal; `is_float` on the token records float-ness.
+    Num,
+    /// String literal of any flavor, including the quotes and raw hashes.
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`) — *not* a char literal.
+    Lifetime,
+    /// Punctuation; common two-char operators (`==`, `!=`, `::`, …) are
+    /// single tokens, everything else is one byte per token.
+    Punct,
+    /// `// …` up to (not including) the newline.
+    LineComment,
+    /// `/* … */` with nesting; may span lines.
+    BlockComment,
+}
+
+/// One lexed token. `text` borrows from the source; `line` is the 1-based
+/// line of the token's first byte.
+#[derive(Clone, Copy, Debug)]
+pub struct Tok<'s> {
+    pub kind: Kind,
+    pub text: &'s str,
+    pub line: u32,
+    /// For [`Kind::Num`]: literal has a fractional part, exponent, or an
+    /// `f32`/`f64` suffix. Always `false` for other kinds.
+    pub is_float: bool,
+}
+
+impl Tok<'_> {
+    /// Last line the token touches (block comments span lines).
+    pub fn end_line(&self) -> u32 {
+        self.line + self.text.bytes().filter(|&b| b == b'\n').count() as u32
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Two-character operators lexed as single punct tokens. Order matters only
+/// in that every entry is checked before falling back to one byte.
+const TWO_CHAR_OPS: &[&str] = &[
+    "==", "!=", "<=", ">=", "::", "->", "=>", "..", "&&", "||",
+];
+
+/// Lex `src` into tokens, comments included. Never fails: unterminated
+/// literals run to end-of-input.
+pub fn lex(src: &str) -> Vec<Tok<'_>> {
+    Lexer { src, b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'s> {
+    src: &'s str,
+    b: &'s [u8],
+    i: usize,
+    line: u32,
+    out: Vec<Tok<'s>>,
+}
+
+impl<'s> Lexer<'s> {
+    fn run(mut self) -> Vec<Tok<'s>> {
+        while self.i < self.b.len() {
+            let c = self.b[self.i];
+            match c {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                c if c.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.string(self.i, 0, false),
+                b'\'' => self.char_or_lifetime(),
+                c if is_ident_start(c) => self.ident_or_prefixed_literal(),
+                c if c.is_ascii_digit() => self.number(),
+                _ => self.punct(),
+            }
+        }
+        self.out
+    }
+
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, kind: Kind, start: usize, start_line: u32, is_float: bool) {
+        self.out.push(Tok { kind, text: &self.src[start..self.i], line: start_line, is_float });
+    }
+
+    fn line_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        while self.i < self.b.len() && self.b[self.i] != b'\n' {
+            self.i += 1;
+        }
+        self.push(Kind::LineComment, start, line, false);
+    }
+
+    fn block_comment(&mut self) {
+        let (start, line) = (self.i, self.line);
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.b.len() && depth > 0 {
+            match self.b[self.i] {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'/' if self.peek(1) == Some(b'*') => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                b'*' if self.peek(1) == Some(b'/') => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.push(Kind::BlockComment, start, line, false);
+    }
+
+    /// Plain or raw string starting at the current `"`; `hashes` is the raw
+    /// delimiter count (`r#"…"#` → 1); `raw` disables backslash escapes
+    /// (true for `r"…"` even with zero hashes). `start` points at the
+    /// literal's first byte (the prefix if any).
+    fn string(&mut self, start: usize, hashes: usize, raw: bool) {
+        let line = self.line;
+        debug_assert_eq!(self.b[self.i], b'"');
+        self.i += 1;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                b'\\' if !raw => self.i = (self.i + 2).min(self.b.len()),
+                b'"' => {
+                    // A raw string closes only on `"` followed by enough `#`.
+                    let closed = (1..=hashes).all(|k| self.peek(k) == Some(b'#'));
+                    self.i += 1;
+                    if closed {
+                        self.i += hashes;
+                        self.push(Kind::Str, start, line, false);
+                        return;
+                    }
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.push(Kind::Str, start, line, false); // unterminated: to EOF
+    }
+
+    fn char_or_lifetime(&mut self) {
+        let (start, line) = (self.i, self.line);
+        match self.peek(1) {
+            Some(b'\\') => {
+                // Escaped char literal: skip `'\`, the escape payload, and
+                // scan to the closing quote ( covers \n \' \u{…} \x7f ).
+                self.i += 2;
+                if self.i < self.b.len() {
+                    self.i += 1; // escape selector is never the terminator
+                }
+                while self.i < self.b.len() && self.b[self.i] != b'\'' && self.b[self.i] != b'\n' {
+                    self.i += 1;
+                }
+                if self.peek(0) == Some(b'\'') {
+                    self.i += 1;
+                }
+                self.push(Kind::Char, start, line, false);
+            }
+            Some(c) => {
+                // One UTF-8 char then a quote → char literal ('a', '∂');
+                // otherwise an identifier start means a lifetime ('a, 'static).
+                let ch_len = self.src[self.i + 1..]
+                    .chars()
+                    .next()
+                    .map(|ch| ch.len_utf8())
+                    .unwrap_or(1);
+                if self.b.get(self.i + 1 + ch_len) == Some(&b'\'') {
+                    self.i += 2 + ch_len;
+                    self.push(Kind::Char, start, line, false);
+                } else if is_ident_start(c) {
+                    self.i += 2;
+                    while self.i < self.b.len() && is_ident_continue(self.b[self.i]) {
+                        self.i += 1;
+                    }
+                    self.push(Kind::Lifetime, start, line, false);
+                } else {
+                    self.i += 1;
+                    self.push(Kind::Punct, start, line, false);
+                }
+            }
+            None => {
+                self.i += 1;
+                self.push(Kind::Punct, start, line, false);
+            }
+        }
+    }
+
+    fn ident_or_prefixed_literal(&mut self) {
+        let (start, line) = (self.i, self.line);
+        while self.i < self.b.len() && is_ident_continue(self.b[self.i]) {
+            self.i += 1;
+        }
+        let word = &self.src[start..self.i];
+
+        // Literal prefixes: b"…" c"…" r"…" br"…" cr"…" r#"…"# b'…' and the
+        // raw-identifier escape r#ident.
+        let raw = matches!(word, "r" | "br" | "cr");
+        let stringy = raw || matches!(word, "b" | "c");
+        match self.peek(0) {
+            Some(b'"') if stringy => {
+                self.string(start, 0, raw);
+                return;
+            }
+            Some(b'#') if raw => {
+                let mut hashes = 0usize;
+                while self.peek(hashes) == Some(b'#') {
+                    hashes += 1;
+                }
+                if self.peek(hashes) == Some(b'"') {
+                    self.i += hashes;
+                    self.string(start, hashes, true);
+                    return;
+                }
+                if word == "r" && self.peek(1).is_some_and(is_ident_start) {
+                    // raw identifier r#match — lex as one ident token
+                    self.i += 1;
+                    while self.i < self.b.len() && is_ident_continue(self.b[self.i]) {
+                        self.i += 1;
+                    }
+                    self.push(Kind::Ident, start, line, false);
+                    return;
+                }
+            }
+            Some(b'\'') if word == "b" => {
+                // Byte-char literal b'x' / b'\n' — reuse the char scanner,
+                // then widen the token to include the `b` prefix.
+                self.char_or_lifetime();
+                let src = self.src;
+                let end = self.i;
+                if let Some(last) = self.out.last_mut() {
+                    last.kind = Kind::Char;
+                    last.text = &src[start..end];
+                }
+                return;
+            }
+            _ => {}
+        }
+        self.push(Kind::Ident, start, line, false);
+    }
+
+    fn number(&mut self) {
+        let (start, line) = (self.i, self.line);
+        // A number right after `.` is a tuple index (t.0, t.0.1) — never a
+        // float, and its own `.` must not be eaten as a fraction.
+        let after_dot = self
+            .out
+            .last()
+            .is_some_and(|t| t.kind == Kind::Punct && t.text == ".");
+        let mut is_float = false;
+
+        if self.peek(0) == Some(b'0')
+            && matches!(self.peek(1), Some(b'x') | Some(b'o') | Some(b'b'))
+        {
+            self.i += 2;
+            while self
+                .peek(0)
+                .is_some_and(|c| c.is_ascii_hexdigit() || c == b'_')
+            {
+                self.i += 1;
+            }
+        } else {
+            while self.peek(0).is_some_and(|c| c.is_ascii_digit() || c == b'_') {
+                self.i += 1;
+            }
+            if !after_dot
+                && self.peek(0) == Some(b'.')
+                && self.peek(1) != Some(b'.')
+                && !self.peek(1).is_some_and(is_ident_start)
+            {
+                is_float = true;
+                self.i += 1;
+                while self.peek(0).is_some_and(|c| c.is_ascii_digit() || c == b'_') {
+                    self.i += 1;
+                }
+            }
+            if matches!(self.peek(0), Some(b'e') | Some(b'E')) {
+                let sign = matches!(self.peek(1), Some(b'+') | Some(b'-'));
+                let digit_at = if sign { 2 } else { 1 };
+                if self.peek(digit_at).is_some_and(|c| c.is_ascii_digit()) {
+                    is_float = true;
+                    self.i += 1 + usize::from(sign);
+                    while self.peek(0).is_some_and(|c| c.is_ascii_digit() || c == b'_') {
+                        self.i += 1;
+                    }
+                }
+            }
+        }
+        // Type suffix (1u64, 2.5f32, 1f64) — part of the literal token.
+        let suffix_start = self.i;
+        while self.i < self.b.len() && is_ident_continue(self.b[self.i]) {
+            self.i += 1;
+        }
+        if matches!(&self.src[suffix_start..self.i], "f32" | "f64") {
+            is_float = true;
+        }
+        self.push(Kind::Num, start, line, is_float);
+    }
+
+    fn punct(&mut self) {
+        let (start, line) = (self.i, self.line);
+        let two = self
+            .src
+            .get(self.i..self.i + 2)
+            .filter(|p| TWO_CHAR_OPS.contains(p));
+        self.i += if two.is_some() { 2 } else { 1 };
+        self.push(Kind::Punct, start, line, false);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).iter().map(|t| (t.kind, t.text.to_string())).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_single_tokens() {
+        let toks = kinds("a // partial_cmp here\n/* unsafe /* nested */ */ \"x.unwrap()\"");
+        assert_eq!(
+            toks,
+            vec![
+                (Kind::Ident, "a".into()),
+                (Kind::LineComment, "// partial_cmp here".into()),
+                (Kind::BlockComment, "/* unsafe /* nested */ */".into()),
+                (Kind::Str, "\"x.unwrap()\"".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn raw_strings_and_prefixes() {
+        let toks = kinds(r####"r#"has "quote" and unsafe"# br"bytes" b"b" c"c" r#match"####);
+        assert_eq!(toks[0].0, Kind::Str);
+        assert!(toks[0].1.contains("unsafe"));
+        assert_eq!(toks[1].0, Kind::Str);
+        assert_eq!(toks[2].0, Kind::Str);
+        assert_eq!(toks[3].0, Kind::Str);
+        assert_eq!(toks[4], (Kind::Ident, "r#match".into()));
+    }
+
+    #[test]
+    fn chars_vs_lifetimes() {
+        let toks = kinds("'a' 'x 'static b'\\n' '\\u{1F600}' fn f<'b>()");
+        assert_eq!(toks[0].0, Kind::Char);
+        assert_eq!(toks[1], (Kind::Lifetime, "'x".into()));
+        assert_eq!(toks[2], (Kind::Lifetime, "'static".into()));
+        assert_eq!(toks[3].0, Kind::Char);
+        assert_eq!(toks[4].0, Kind::Char);
+        let lt = toks.iter().filter(|t| t.0 == Kind::Lifetime).count();
+        assert_eq!(lt, 3, "'b in the generics is a lifetime");
+    }
+
+    #[test]
+    fn float_detection() {
+        let f = |src: &str| {
+            lex(src)
+                .iter()
+                .filter(|t| t.kind == Kind::Num)
+                .map(|t| t.is_float)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(f("1.0 2 3e5 4f32 5f64 0.25e-3"), vec![true, false, true, true, true, true]);
+        assert_eq!(f("0x1E 1..2 t.0.1 7u64"), vec![false, false, false, false, false, false]);
+        assert_eq!(f("1.max(2)"), vec![false, false], "method call on int, not a float");
+    }
+
+    #[test]
+    fn two_char_ops_coalesce() {
+        let toks = kinds("a == b != c :: d . e");
+        let puncts: Vec<_> =
+            toks.iter().filter(|t| t.0 == Kind::Punct).map(|t| t.1.clone()).collect();
+        assert_eq!(puncts, vec!["==", "!=", "::", "."]);
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let src = "a\n/* two\nlines */\nb \"s1\ns2\"\nc";
+        let toks = lex(src);
+        let find = |txt: &str| toks.iter().find(|t| t.text == txt).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 4);
+        assert_eq!(find("c"), 6);
+        let block = toks.iter().find(|t| t.kind == Kind::BlockComment).unwrap();
+        assert_eq!((block.line, block.end_line()), (2, 3));
+    }
+}

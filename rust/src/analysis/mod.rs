@@ -1,0 +1,165 @@
+//! In-tree static analysis: the `corrsh lint` invariant analyzer.
+//!
+//! The paper's reproducibility claims survive on a handful of repo-wide
+//! invariants (total_cmp-only comparators, audited `unsafe`, panic-free
+//! event loop, waivered float equality — the full table is DESIGN.md §16).
+//! They used to be policed by grep/awk one-liners in CI that could not see
+//! strings, comments, or `#[cfg(test)]` blocks; this module replaces them
+//! with a token-level analyzer built on a small Rust lexer
+//! ([`lexer`]) and a rule engine ([`rules`]), zero dependencies.
+//!
+//! Entry points:
+//! - [`lint_root`] walks `rust/src`, `rust/tests`, `rust/benches`, and
+//!   `examples` under a repo root and returns a [`Report`];
+//! - [`check_source`] lints one (path, source) pair — what the fixture
+//!   corpus in `rust/tests/lint_corpus.rs` drives directly;
+//! - the CLI front-end is `corrsh lint [--ci] [--root DIR] [--out FILE]`.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Value;
+
+pub use rules::{check_source, Finding, RuleInfo, RULES};
+
+/// Bumped when rule semantics change, so CI artifacts and the server
+/// metrics row can tell which analyzer produced a report.
+pub const LINT_VERSION: u64 = 1;
+
+/// Directories under the repo root that `lint_root` scans for `.rs` files.
+pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Outcome of linting a tree: every finding plus scan statistics.
+#[derive(Debug)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable form for `--ci` and the uploaded artifact.
+    pub fn to_json(&self) -> Value {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Value::from_pairs(vec![
+                    ("rule", Value::Str(f.rule.to_string())),
+                    ("file", Value::Str(f.file.clone())),
+                    ("line", Value::Num(f.line as f64)),
+                    ("message", Value::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        Value::from_pairs(vec![
+            ("version", Value::Num(LINT_VERSION as f64)),
+            ("rules", Value::Num(RULES.len() as f64)),
+            ("files_scanned", Value::Num(self.files_scanned as f64)),
+            ("findings", Value::Array(findings)),
+            ("ok", Value::Bool(self.ok())),
+        ])
+    }
+
+    /// Human-readable form: one `file:line: [Rn] message` row per finding.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+        }
+        s.push_str(&format!(
+            "lint v{LINT_VERSION}: {} file(s), {} rule(s), {} finding(s)\n",
+            self.files_scanned,
+            RULES.len(),
+            self.findings.len()
+        ));
+        s
+    }
+}
+
+/// Lint every `.rs` file under [`SCAN_ROOTS`] relative to `root`.
+/// Findings are ordered by (path, line) so reports are deterministic.
+pub fn lint_root(root: &Path) -> Result<Report> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    for dir in SCAN_ROOTS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            collect_rs(&d, &mut files)?;
+        }
+    }
+    files.sort();
+
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src = fs::read_to_string(path)
+            .with_context(|| format!("lint: read {}", path.display()))?;
+        findings.extend(check_source(&rel, &src));
+    }
+    findings.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(Report { findings, files_scanned: files.len() })
+}
+
+/// Repo-relative path with forward slashes (rule scopes are defined on
+/// this form, so reports are identical across platforms).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        fs::read_dir(dir).with_context(|| format!("lint: read_dir {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.with_context(|| format!("lint: entry under {}", dir.display()))?;
+        let p = entry.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_shape() {
+        let rep = Report {
+            findings: vec![Finding {
+                rule: "R1",
+                file: "rust/src/x.rs".into(),
+                line: 3,
+                message: "m".into(),
+            }],
+            files_scanned: 2,
+        };
+        let v = rep.to_json();
+        assert_eq!(v.get("version").as_u64(), Some(LINT_VERSION));
+        assert_eq!(v.get("rules").as_usize(), Some(RULES.len()));
+        assert_eq!(v.get("ok").as_bool(), Some(false));
+        assert_eq!(v.get("findings").idx(0).get("rule").as_str(), Some("R1"));
+        let text = rep.render_text();
+        assert!(text.contains("rust/src/x.rs:3: [R1] m"));
+    }
+
+    #[test]
+    fn rule_table_is_seven_rules() {
+        assert_eq!(RULES.len(), 7);
+        let ids: Vec<_> = RULES.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec!["R1", "R2", "R3", "R4", "R5", "R6", "R7"]);
+    }
+}

@@ -1,0 +1,382 @@
+//! Invariant rules R1–R7 over the token stream from [`super::lexer`].
+//!
+//! Every rule is a token-pattern check, so string literals, comments, and
+//! doc text can never fire a rule (the grep-gate failure mode), and
+//! `#[cfg(test)]` / `#[test]` item bodies are tracked by brace matching so
+//! test-only code can be exempted where a rule says so.
+//!
+//! Scope conventions (paths are repo-relative, forward slashes):
+//! - allowlists name exact files;
+//! - R5's production scope is `rust/src/server/**` plus
+//!   `rust/src/engine/distributed.rs`;
+//! - everything else applies to every scanned `.rs` file.
+
+use super::lexer::{lex, Kind, Tok};
+
+/// One rule violation. `file` is the repo-relative path the caller handed
+/// to [`check_source`]; `line` is 1-based.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// Static descriptor for one rule, surfaced in `lint --ci` JSON and the
+/// server metrics row.
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+/// The rule table. `RULES.len()` is the rule count reported everywhere.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "R1",
+        summary: "no partial_cmp anywhere (total_cmp keeps NaN ordering deterministic)",
+    },
+    RuleInfo {
+        id: "R2",
+        summary: "unsafe only in the audited allowlist, each use within 4 lines of a // SAFETY: comment",
+    },
+    RuleInfo {
+        id: "R3",
+        summary: "raw syscalls / asm! only in data/store/reader.rs and server/net.rs",
+    },
+    RuleInfo {
+        id: "R4",
+        summary: "thread::spawn only in util/pool.rs and util/threads.rs",
+    },
+    RuleInfo {
+        id: "R5",
+        summary: "no unwrap/expect/panic! in non-test server/ and engine/distributed.rs code",
+    },
+    RuleInfo {
+        id: "R6",
+        summary: "no float ==/!= without an inline // lint: float-eq-ok(reason) waiver",
+    },
+    RuleInfo {
+        id: "R7",
+        summary: "std::process::exit only in main.rs",
+    },
+];
+
+/// Files audited to contain `unsafe` (R2). Growing this list is a review
+/// decision, not a code change that happens to compile — see DESIGN.md §16.
+const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/engine/simd.rs",
+    "rust/src/data/store/reader.rs",
+    "rust/src/server/net.rs",
+    "rust/src/util/pool.rs",
+    "rust/src/runtime/mod.rs",
+];
+
+/// Files allowed to issue raw syscalls / `asm!` (R3).
+const SYSCALL_ALLOWLIST: &[&str] = &["rust/src/data/store/reader.rs", "rust/src/server/net.rs"];
+
+/// Files allowed to spawn OS threads (R4); everything else routes through
+/// the pool or `util::threads::spawn`.
+const SPAWN_ALLOWLIST: &[&str] = &["rust/src/util/pool.rs", "rust/src/util/threads.rs"];
+
+/// Files allowed to call `std::process::exit` (R7).
+const EXIT_ALLOWLIST: &[&str] = &["rust/src/main.rs"];
+
+/// Max distance (in lines) from the anchor of a `// SAFETY:` comment run to
+/// the `unsafe` token it covers. A run of consecutive line comments anchors
+/// at its *last* line, so a four-line justification directly above an
+/// `unsafe` block (or separated from it by attributes) still passes.
+const SAFETY_WINDOW: u32 = 4;
+
+fn in_r5_scope(path: &str) -> bool {
+    path.starts_with("rust/src/server/") || path == "rust/src/engine/distributed.rs"
+}
+
+/// A maximal run of adjacent comment lines, anchored at `last`.
+struct CommentRun {
+    last: u32,
+    safety: bool,
+}
+
+/// Run all rules over one file's source. `path` must be repo-relative with
+/// forward slashes (e.g. `rust/src/server/ops.rs`); it selects which
+/// allowlists and scopes apply.
+pub fn check_source(path: &str, src: &str) -> Vec<Finding> {
+    let toks = lex(src);
+
+    // Comment geometry: SAFETY anchor runs and float-eq waiver lines.
+    let mut runs: Vec<CommentRun> = Vec::new();
+    let mut waiver_lines: Vec<u32> = Vec::new();
+    for t in &toks {
+        if !matches!(t.kind, Kind::LineComment | Kind::BlockComment) {
+            continue;
+        }
+        let safety = t.text.contains("SAFETY:");
+        if t.text.contains("lint: float-eq-ok(") {
+            waiver_lines.push(t.end_line());
+        }
+        match runs.last_mut() {
+            Some(run) if t.line <= run.last + 1 => {
+                run.last = t.end_line();
+                run.safety |= safety;
+            }
+            _ => runs.push(CommentRun { last: t.end_line(), safety }),
+        }
+    }
+    let safety_near = |line: u32| {
+        runs.iter()
+            .any(|r| r.safety && r.last <= line && line - r.last <= SAFETY_WINDOW)
+    };
+    let waived = |line: u32| waiver_lines.iter().any(|&w| w == line || w + 1 == line);
+
+    // Code view: comments stripped, with per-token test-scope flags.
+    let code: Vec<&Tok> = toks
+        .iter()
+        .filter(|t| !matches!(t.kind, Kind::LineComment | Kind::BlockComment))
+        .collect();
+    let in_test = test_flags(&code);
+
+    let mut out = Vec::new();
+    let mut fire = |rule: &'static str, line: u32, message: String| {
+        out.push(Finding { rule, file: path.to_string(), line, message });
+    };
+    let ident =
+        |k: usize, s: &str| code.get(k).is_some_and(|t| t.kind == Kind::Ident && t.text == s);
+    let punct =
+        |k: usize, s: &str| code.get(k).is_some_and(|t| t.kind == Kind::Punct && t.text == s);
+    let float = |k: usize| code.get(k).is_some_and(|t| t.kind == Kind::Num && t.is_float);
+
+    for k in 0..code.len() {
+        let t = code[k];
+        if t.kind == Kind::Ident {
+            match t.text {
+                // R1 — everywhere, tests included: a NaN-unsound comparator
+                // in a test still launders the bug class the rule exists for.
+                "partial_cmp" => fire(
+                    "R1",
+                    t.line,
+                    "partial_cmp is banned; use total_cmp (NaN-last) comparators".into(),
+                ),
+                "unsafe" => {
+                    if !UNSAFE_ALLOWLIST.contains(&path) {
+                        fire(
+                            "R2",
+                            t.line,
+                            format!("unsafe outside the audited allowlist ({path})"),
+                        );
+                    } else if !safety_near(t.line) {
+                        fire(
+                            "R2",
+                            t.line,
+                            format!(
+                                "unsafe without a // SAFETY: comment anchored within \
+                                 {SAFETY_WINDOW} lines"
+                            ),
+                        );
+                    }
+                }
+                "asm" if punct(k + 1, "!") && !SYSCALL_ALLOWLIST.contains(&path) => fire(
+                    "R3",
+                    t.line,
+                    "asm! outside the raw-syscall shims (reader.rs / net.rs)".into(),
+                ),
+                s if s.starts_with("syscall") && !SYSCALL_ALLOWLIST.contains(&path) => fire(
+                    "R3",
+                    t.line,
+                    "raw syscall helper outside reader.rs / net.rs".into(),
+                ),
+                "thread"
+                    if punct(k + 1, "::")
+                        && ident(k + 2, "spawn")
+                        && !SPAWN_ALLOWLIST.contains(&path) =>
+                {
+                    fire(
+                        "R4",
+                        t.line,
+                        "thread::spawn outside util/pool.rs|util/threads.rs; \
+                         use util::threads::spawn or the worker pool"
+                            .into(),
+                    )
+                }
+                "panic" if punct(k + 1, "!") && in_r5_scope(path) && !in_test[k] => fire(
+                    "R5",
+                    t.line,
+                    "panic! in event-loop code; return util::error via bail!".into(),
+                ),
+                "unwrap" | "expect"
+                    if punct(k.wrapping_sub(1), ".")
+                        && punct(k + 1, "(")
+                        && in_r5_scope(path)
+                        && !in_test[k] =>
+                {
+                    fire(
+                        "R5",
+                        t.line,
+                        format!(
+                            ".{}() in event-loop code; use util::error::Context \
+                             (or a poison-recovering lock)",
+                            t.text
+                        ),
+                    )
+                }
+                "process"
+                    if punct(k + 1, "::")
+                        && ident(k + 2, "exit")
+                        && !EXIT_ALLOWLIST.contains(&path) =>
+                {
+                    fire(
+                        "R7",
+                        t.line,
+                        "process::exit outside main.rs hides shutdown paths".into(),
+                    )
+                }
+                _ => {}
+            }
+        } else if t.kind == Kind::Punct && (t.text == "==" || t.text == "!=") {
+            // R6 — float-literal-adjacent comparison. `x == -1.0` keeps the
+            // unary minus between the operator and the literal.
+            let rhs_float = float(k + 1) || (punct(k + 1, "-") && float(k + 2));
+            if (float(k.wrapping_sub(1)) || rhs_float) && !waived(t.line) {
+                fire(
+                    "R6",
+                    t.line,
+                    format!(
+                        "float `{}` comparison without a // lint: float-eq-ok(reason) waiver",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Per-token flag: inside a `#[cfg(test)]` or `#[test]` item body.
+///
+/// Brace-matching walk: a test attribute arms the *next* `{` (the item
+/// body); a `;` before any `{` disarms it (out-of-line `mod t;`, statics).
+/// Spans nest and close when their opening depth is popped.
+fn test_flags(code: &[&Tok]) -> Vec<bool> {
+    let mut flags = vec![false; code.len()];
+    let mut depth: u32 = 0;
+    let mut test_open: Vec<u32> = Vec::new();
+    let mut armed = false;
+    let mut k = 0;
+    while k < code.len() {
+        let t = code[k];
+        if t.kind == Kind::Punct && t.text == "#" && code.get(k + 1).is_some_and(|n| n.text == "[")
+        {
+            // Whole attribute, bracket-matched; inspect its inner tokens.
+            let start = k + 2;
+            let mut j = start;
+            let mut b = 1u32;
+            while j < code.len() && b > 0 {
+                match code[j].text {
+                    "[" => b += 1,
+                    "]" => b -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            let inner: Vec<&str> =
+                code[start..j.saturating_sub(1)].iter().map(|t| t.text).collect();
+            if inner == ["test"] || inner == ["cfg", "(", "test", ")"] {
+                armed = true;
+            }
+            let inside = !test_open.is_empty();
+            for f in &mut flags[k..j] {
+                *f = inside;
+            }
+            k = j;
+            continue;
+        }
+        if t.kind == Kind::Punct {
+            match t.text {
+                "{" => {
+                    depth += 1;
+                    if armed {
+                        test_open.push(depth);
+                        armed = false;
+                    }
+                }
+                "}" => {
+                    if test_open.last() == Some(&depth) {
+                        test_open.pop();
+                    }
+                    depth = depth.saturating_sub(1);
+                }
+                ";" if test_open.is_empty() => armed = false,
+                _ => {}
+            }
+        }
+        flags[k] = !test_open.is_empty();
+        k += 1;
+    }
+    flags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(path: &str, src: &str) -> Vec<&'static str> {
+        check_source(path, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn r5_respects_cfg_test_spans() {
+        let src = "
+            fn run(x: Option<u32>) -> u32 { x.expect(\"boom\") }
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn ok() { Some(1).unwrap(); panic!(\"fine in tests\"); }
+            }
+        ";
+        let fired = rules_fired("rust/src/server/ops.rs", src);
+        assert_eq!(fired, vec!["R5"], "only the non-test expect fires");
+    }
+
+    #[test]
+    fn r2_safety_run_anchor() {
+        // Four-line justification + an attribute line still lands within
+        // the window because the run anchors at its last line.
+        let src = "
+            // SAFETY: line one of a long justification,
+            // line two,
+            // line three,
+            // line four.
+            #[allow(clippy::useless_transmute)]
+            unsafe { transmute(x) }
+        ";
+        assert!(rules_fired("rust/src/util/pool.rs", src).is_empty());
+        let bare = "fn f() { unsafe { g() } }";
+        assert_eq!(rules_fired("rust/src/util/pool.rs", bare), vec!["R2"]);
+        assert_eq!(rules_fired("rust/src/server/ops.rs", bare), vec!["R2"]);
+    }
+
+    #[test]
+    fn r6_waiver_same_line_or_above() {
+        let hit = "fn f(x: f64) -> bool { x == 0.0 }";
+        assert_eq!(rules_fired("rust/src/util/json.rs", hit), vec!["R6"]);
+        let same = "fn f(x: f64) -> bool { x == 0.0 } // lint: float-eq-ok(test)";
+        assert!(rules_fired("rust/src/util/json.rs", same).is_empty());
+        let above = "// lint: float-eq-ok(test)\nfn f(x: f64) -> bool { -1.0 != x }";
+        assert!(rules_fired("rust/src/util/json.rs", above).is_empty());
+        let int = "fn f(x: u32) -> bool { x == 0 && x != 3 }";
+        assert!(rules_fired("rust/src/util/json.rs", int).is_empty());
+    }
+
+    #[test]
+    fn paths_select_allowlists() {
+        let spawn = "fn f() { std::thread::spawn(|| ()); }";
+        assert_eq!(rules_fired("rust/benches/server.rs", spawn), vec!["R4"]);
+        assert!(rules_fired("rust/src/util/threads.rs", spawn).is_empty());
+        let exit = "fn f() { std::process::exit(1); }";
+        assert_eq!(rules_fired("rust/src/server/ops.rs", exit), vec!["R7"]);
+        assert!(rules_fired("rust/src/main.rs", exit).is_empty());
+        let asm = "fn f() { unsafe { core::arch::asm!(\"syscall\") } }";
+        let fired = rules_fired("rust/src/engine/simd.rs", asm);
+        assert_eq!(fired, vec!["R2", "R3"], "no SAFETY + asm! off-allowlist");
+    }
+}

@@ -161,6 +161,8 @@ mod mapping {
         }
     }
 
+    // SAFETY: caller must pass a readable fd and a non-zero length no larger
+    // than the file; the raw syscall clobbers only the registers listed.
     #[cfg(target_arch = "x86_64")]
     unsafe fn sys_mmap(len: usize, fd: i32) -> isize {
         let mut ret: isize = 9; // __NR_mmap
@@ -180,6 +182,8 @@ mod mapping {
         ret
     }
 
+    // SAFETY: caller must pass the exact (addr, len) a successful sys_mmap
+    // returned, and no reference into the mapping may outlive the call.
     #[cfg(target_arch = "x86_64")]
     unsafe fn sys_munmap(addr: *const u8, len: usize) {
         let mut _ret: isize = 11; // __NR_munmap
@@ -194,6 +198,8 @@ mod mapping {
         );
     }
 
+    // SAFETY: caller must pass a readable fd and a non-zero length no larger
+    // than the file; svc 0 clobbers only the registers listed.
     #[cfg(target_arch = "aarch64")]
     unsafe fn sys_mmap(len: usize, fd: i32) -> isize {
         let mut ret: isize = 0;
@@ -211,6 +217,8 @@ mod mapping {
         ret
     }
 
+    // SAFETY: caller must pass the exact (addr, len) a successful sys_mmap
+    // returned, and no reference into the mapping may outlive the call.
     #[cfg(target_arch = "aarch64")]
     unsafe fn sys_munmap(addr: *const u8, len: usize) {
         let mut _ret: isize = addr as isize;

@@ -194,7 +194,10 @@ mod tests {
         let cfg = SynthConfig { n: 40, dim: 6, seed: 11, ..Default::default() };
         let mut whole = vec![0f32; 40 * 6];
         fill_rows_streamed(&cfg, 0, &mut whole);
-        assert!(whole[..6].iter().all(|&v| v == 0.0), "row 0 planted at origin");
+        #[allow(clippy::float_cmp)]
+        // lint: float-eq-ok(row 0 is written as literal zeros, not computed)
+        let origin = whole[..6].iter().all(|&v| v == 0.0);
+        assert!(origin, "row 0 planted at origin");
         for (start, rows) in [(0usize, 7usize), (7, 13), (20, 20)] {
             let mut window = vec![0f32; rows * 6];
             fill_rows_streamed(&cfg, start, &mut window);

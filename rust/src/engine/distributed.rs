@@ -255,6 +255,12 @@ pub struct DistributedEngine {
     inner: Mutex<Inner>,
     remote_pulls: AtomicU64,
     redispatches: AtomicU64,
+    /// First gather failure since the last [`Self::take_failure`] call.
+    /// `PullEngine::pull_block`/`pull_matrix` return no `Result`, so a
+    /// total-fleet loss mid-run is recorded here (and the outputs
+    /// zero-filled) instead of panicking through the bandit loop; the
+    /// `medoid` op checks this after the run and fails the request.
+    gather_failure: Mutex<Option<String>>,
 }
 
 impl DistributedEngine {
@@ -299,7 +305,9 @@ impl DistributedEngine {
                 lat_pos: 0,
             });
         }
-        let (n, dim, metric, digest) = shape.unwrap();
+        // The ensure! above guarantees at least one worker handshake ran.
+        let (n, dim, metric, digest) =
+            shape.context("no worker completed the registration handshake")?;
         let mut placement = Placement::new(n, cfg.segments.max(workers.len()), cfg.shard_rows)?;
         placement.assign(&vec![true; workers.len()])?;
         let outstanding = Outstanding::new(workers.len());
@@ -314,6 +322,7 @@ impl DistributedEngine {
             inner: Mutex::new(Inner { workers, placement, outstanding }),
             remote_pulls: AtomicU64::new(0),
             redispatches: AtomicU64::new(0),
+            gather_failure: Mutex::new(None),
         })
     }
 
@@ -410,6 +419,23 @@ impl DistributedEngine {
         // A panic while holding the lock (worker all-dead bail unwinding
         // through a caller) must not wedge every later query.
         self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Record a gather failure (first one wins) for the trait methods that
+    /// have no error channel of their own.
+    fn poison(&self, what: &str, e: &crate::Error) {
+        let mut g = self.gather_failure.lock().unwrap_or_else(|p| p.into_inner());
+        if g.is_none() {
+            *g = Some(format!("{what}: {e:#}"));
+        }
+    }
+
+    /// Take-and-clear the first failure recorded by a `pull_block` /
+    /// `pull_matrix` since the last call. A `Some` means every sum the
+    /// engine produced since then is suspect (zero-filled segments) and the
+    /// enclosing run's answer must be discarded.
+    pub fn take_failure(&self) -> Option<String> {
+        self.gather_failure.lock().unwrap_or_else(|p| p.into_inner()).take()
     }
 
     /// Probe dead workers and rebalance if any rejoined. Rejoin repeats the
@@ -554,7 +580,12 @@ impl DistributedEngine {
             if !inner.outstanding.is_pending(w) {
                 continue;
             }
-            let pend = inner.outstanding.take(w).expect("pending checked above");
+            let Some(pend) = inner.outstanding.take(w) else {
+                // is_pending was checked above; a disagreeing take means the
+                // entry vanished — treat the worker round as failed rather
+                // than panicking mid-reduction.
+                continue;
+            };
             let absorbed = inner.workers[w].conn.as_mut().map(|c| c.recv(pend.id)).and_then(
                 |resp| match resp {
                     Ok(v) => self.absorb(&v, arms, &groups, &pend.segs, matrix, &mut bits).ok(),
@@ -641,7 +672,17 @@ impl PullEngine for DistributedEngine {
 
     fn pull_block(&self, arms: &[usize], refs: &[usize], out: &mut [f64]) {
         assert_eq!(arms.len(), out.len());
-        let g = self.gather(arms, refs, false).expect("distributed pull_block failed");
+        let g = match self.gather(arms, refs, false) {
+            Ok(g) => g,
+            Err(e) => {
+                // No error channel on the trait: zero-fill and poison the
+                // engine so the enclosing request fails instead of the
+                // whole event-loop worker panicking (lint rule R5).
+                self.poison("pull_block", &e);
+                out.fill(0.0);
+                return;
+            }
+        };
         out.fill(0.0);
         // Canonical fold: ascending segment order, independent of which
         // worker produced each partial — this is the bitwise guarantee.
@@ -658,7 +699,14 @@ impl PullEngine for DistributedEngine {
 
     fn pull_matrix(&self, arms: &[usize], refs: &[usize], out: &mut [f32]) {
         assert_eq!(arms.len() * refs.len(), out.len());
-        let g = self.gather(arms, refs, true).expect("distributed pull_matrix failed");
+        let g = match self.gather(arms, refs, true) {
+            Ok(g) => g,
+            Err(e) => {
+                self.poison("pull_matrix", &e);
+                out.fill(0.0);
+                return;
+            }
+        };
         let rlen = refs.len();
         for (s, group) in g.groups.iter().enumerate() {
             if group.is_empty() {

@@ -43,6 +43,7 @@
 //!   real PJRT bindings in place of the in-tree stub backend
 //!   (`runtime::xla`); see `README.md` for the build matrix.
 
+pub mod analysis;
 pub mod bandits;
 pub mod config;
 pub mod coordinator;

@@ -12,6 +12,7 @@
 //! corrsh shard    data.npy shards/ --rows-per-shard 65536
 //! corrsh shard    --kind gaussian --n 1000000 --dim 128 --out shards/
 //! corrsh kernelinfo
+//! corrsh lint     [--ci] [--root DIR] [--out report.json]
 //! ```
 
 use corrsh::util::error::{Context, Result};
@@ -23,7 +24,7 @@ use corrsh::server;
 use corrsh::util::cli::Args;
 use corrsh::util::rng::Rng;
 
-const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|worker|gen|shard|kernelinfo> [flags]
+const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|worker|gen|shard|kernelinfo|lint> [flags]
   medoid:   --preset P | --config file.json [--scale N] [--algo A] [--budget X]
             [--engine native|pjrt] [--seed S] [--trials T]
   kmedoids: --preset P | --config file.json | --kind K [--n N --dim D --clusters C]
@@ -41,7 +42,10 @@ const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|worker|gen|shard|
   gen:      --kind K --n N --dim D [--seed S] --out FILE.npy
   shard:    <in.npy|in.csr|manifest.json> <out-dir> [--rows-per-shard N]
             | --kind K --n N --dim D [--seed S] --out DIR (streams at scale)
-  kernelinfo: print the dispatched distance micro-kernel (CORRSH_KERNEL)";
+  kernelinfo: print the dispatched distance micro-kernel (CORRSH_KERNEL)
+  lint:     [--ci] [--root DIR] [--out report.json]
+            token-level invariant analyzer (rules R1-R7, DESIGN.md §16);
+            exits 1 when any rule fires, --ci prints the JSON report";
 
 fn main() {
     let args = match Args::from_env() {
@@ -68,6 +72,7 @@ fn main() {
         "gen" => cmd_gen(&args),
         "shard" => cmd_shard(&args),
         "kernelinfo" => cmd_kernelinfo(&args),
+        "lint" => cmd_lint(&args),
         "" | "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -510,6 +515,44 @@ fn cmd_shard(args: &Args) -> Result<()> {
 fn cmd_kernelinfo(args: &Args) -> Result<()> {
     args.finish()?;
     println!("{}", corrsh::engine::simd::kernel_info());
+    Ok(())
+}
+
+/// `corrsh lint` — run the token-level invariant analyzer (rules R1–R7,
+/// DESIGN.md §16) over the repo tree and exit non-zero on any finding.
+/// `--ci` prints the machine-readable JSON report to stdout (CI uploads it
+/// as an artifact); `--out FILE` writes the same JSON regardless of mode;
+/// the default mode prints human-readable `file:line: [Rn] message` rows.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = args.str_or("root", ".");
+    let ci = args.switch("ci");
+    let out_path = args.str_opt("out").map(str::to_string);
+    args.finish()?;
+
+    let report = corrsh::analysis::lint_root(std::path::Path::new(&root))
+        .with_context(|| format!("lint --root {root}"))?;
+    corrsh::ensure!(
+        report.files_scanned > 0,
+        "lint: no .rs files under {root} (expected the corrsh repo root; pass --root)"
+    );
+    let json = corrsh::util::json::to_string(&report.to_json());
+    if let Some(path) = &out_path {
+        std::fs::write(path, &json).with_context(|| format!("lint: write {path}"))?;
+    }
+    if ci {
+        println!("{json}");
+    } else {
+        print!("{}", report.render_text());
+    }
+    if !report.ok() {
+        // Structured output above carries the detail; the error exit is the
+        // CI gate (main maps Err to exit code 1).
+        corrsh::bail!(
+            "lint: {} finding(s) across {} file(s)",
+            report.findings.len(),
+            report.files_scanned
+        );
+    }
     Ok(())
 }
 

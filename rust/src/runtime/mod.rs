@@ -59,6 +59,8 @@ impl Executable {
 }
 
 fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    // SAFETY: reinterpreting an f32 slice as its underlying bytes — same
+    // allocation, same length in bytes, and u8 has no alignment requirement.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8, std::mem::size_of_val(data))
     };

@@ -73,16 +73,18 @@ pub(crate) struct ResponseSlot {
 
 impl ResponseSlot {
     fn fill(&self, v: Value) {
-        *self.value.lock().unwrap() = Some(v);
+        *threads::lock(&self.value) = Some(v);
         self.ready.notify_all();
     }
 
     fn wait(&self) -> Value {
-        let mut v = self.value.lock().unwrap();
-        while v.is_none() {
-            v = self.ready.wait(v).unwrap();
+        let mut v = threads::lock(&self.value);
+        loop {
+            if let Some(val) = v.take() {
+                return val;
+            }
+            v = threads::wait(&self.ready, v);
         }
-        v.take().expect("slot filled")
     }
 }
 
@@ -123,10 +125,9 @@ impl Executor {
             .map(|i| {
                 let state = state.clone();
                 let shared = shared.clone();
-                std::thread::Builder::new()
-                    .name(format!("corrsh-exec-{i}"))
-                    .spawn(move || exec_worker(state, shared, workers))
-                    .expect("spawn executor worker")
+                threads::spawn(&format!("corrsh-exec-{i}"), move || {
+                    exec_worker(state, shared, workers)
+                })
             })
             .collect();
         Arc::new(Executor { state, shared, workers: Mutex::new(handles) })
@@ -145,7 +146,7 @@ impl Executor {
     }
 
     pub fn workers(&self) -> usize {
-        self.workers.lock().unwrap().len()
+        threads::lock(&self.workers).len()
     }
 
     /// Submit one bare v1 request object and block for its flattened
@@ -160,7 +161,7 @@ impl Executor {
     pub fn submit_env(&self, env: Envelope) -> Value {
         let slot = Arc::new(ResponseSlot::default());
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = threads::lock(&self.shared.queue);
             loop {
                 if q.shutdown {
                     return proto::wire_final(&env, Err(OpError::shutting_down()));
@@ -168,7 +169,7 @@ impl Executor {
                 if q.jobs.len() < self.shared.cap {
                     break;
                 }
-                q = self.shared.space.wait(q).unwrap();
+                q = threads::wait(&self.shared.space, q);
             }
             q.jobs.push_back(ExecJob { env, responder: Responder::Slot(slot.clone()) });
             self.shared.depth.inc();
@@ -186,7 +187,7 @@ impl Executor {
         cb: Box<dyn FnMut(Value, bool) + Send>,
     ) -> Result<(), (Envelope, SubmitError)> {
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = threads::lock(&self.shared.queue);
             if q.shutdown {
                 return Err((env, SubmitError::ShuttingDown));
             }
@@ -203,10 +204,10 @@ impl Executor {
     /// Stop accepting new work, drain already-queued requests, join the
     /// workers. Idempotent.
     pub fn shutdown(&self) {
-        self.shared.queue.lock().unwrap().shutdown = true;
+        threads::lock(&self.shared.queue).shutdown = true;
         self.shared.ready.notify_all();
         self.shared.space.notify_all();
-        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        let handles: Vec<_> = threads::lock(&self.workers).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -214,7 +215,7 @@ impl Executor {
 }
 
 fn exec_worker(state: Arc<State>, shared: Arc<ExecShared>, workers: usize) {
-    let mut q = shared.queue.lock().unwrap();
+    let mut q = threads::lock(&shared.queue);
     loop {
         match q.jobs.pop_front() {
             Some(mut job) => {
@@ -222,10 +223,10 @@ fn exec_worker(state: Arc<State>, shared: Arc<ExecShared>, workers: usize) {
                 drop(q);
                 shared.space.notify_one();
                 run_job(&state, &shared, workers, &mut job);
-                q = shared.queue.lock().unwrap();
+                q = threads::lock(&shared.queue);
             }
             None if q.shutdown => return,
-            None => q = shared.ready.wait(q).unwrap(),
+            None => q = threads::wait(&shared.ready, q),
         }
     }
 }

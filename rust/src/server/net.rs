@@ -27,6 +27,7 @@ use crate::config::ServerConfig;
 use crate::server::exec::Executor;
 use crate::server::ops::State;
 use crate::util::error::{Context, Result};
+use crate::util::threads;
 
 /// True when this build serves connections from the epoll event loop
 /// (Linux on x86_64/aarch64); false means the blocking fallback.
@@ -79,7 +80,7 @@ pub fn serve_background_with(
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let cfg = cfg.clone();
-    std::thread::spawn(move || {
+    threads::spawn("corrsh-serve", move || {
         if let Err(e) = serve_on(state, &cfg, listener) {
             eprintln!("server error: {e:#}");
         }
@@ -138,6 +139,9 @@ mod sys {
         pub const PRLIMIT64: usize = 261;
     }
 
+    // SAFETY: caller must pass a valid syscall number with argument types
+    // and pointer lifetimes matching that syscall's kernel ABI; the asm
+    // clobbers only rax/rcx/r11 per the x86_64 Linux convention.
     #[cfg(target_arch = "x86_64")]
     unsafe fn syscall6(
         nr: usize,
@@ -165,6 +169,10 @@ mod sys {
         ret
     }
 
+    // SAFETY: caller must pass a valid syscall number with argument types
+    // and pointer lifetimes matching that syscall's kernel ABI; `svc 0`
+    // returns in x0 and preserves everything else per the aarch64
+    // convention.
     #[cfg(target_arch = "aarch64")]
     unsafe fn syscall6(
         nr: usize,
@@ -199,7 +207,8 @@ mod sys {
     }
 
     pub fn epoll_create1() -> io::Result<RawFd> {
-        // flag = EPOLL_CLOEXEC (== O_CLOEXEC)
+        // SAFETY: epoll_create1 takes one integer flag and touches no
+        // memory; flag = EPOLL_CLOEXEC (== O_CLOEXEC).
         let ret = unsafe { syscall6(nr::EPOLL_CREATE1, 0o2000000, 0, 0, 0, 0, 0) };
         check(ret).map(|fd| fd as RawFd)
     }
@@ -211,6 +220,8 @@ mod sys {
         event: Option<&mut EpollEvent>,
     ) -> io::Result<()> {
         let ptr = event.map_or(0, |e| e as *mut EpollEvent as usize);
+        // SAFETY: `ptr` is NULL or a live &mut EpollEvent (repr(C), matching
+        // the kernel struct); the kernel only reads/writes that one event.
         let ret =
             unsafe { syscall6(nr::EPOLL_CTL, epfd as usize, op as usize, fd as usize, ptr, 0, 0) };
         check(ret).map(|_| ())
@@ -223,6 +234,8 @@ mod sys {
         timeout_ms: i32,
     ) -> io::Result<usize> {
         loop {
+            // SAFETY: the events pointer/len name a live &mut [EpollEvent]
+            // the kernel fills up to `len` entries of; sigmask is NULL.
             let ret = unsafe {
                 syscall6(
                     nr::EPOLL_PWAIT,
@@ -251,6 +264,8 @@ mod sys {
     pub fn raise_nofile_limit() -> u64 {
         const RLIMIT_NOFILE: usize = 7;
         let mut lim = RLimit64 { cur: 0, max: 0 };
+        // SAFETY: old_limit points at a live repr(C) RLimit64 the kernel
+        // writes; new_limit is NULL (read-only query), pid 0 = self.
         let ret = unsafe {
             syscall6(nr::PRLIMIT64, 0, RLIMIT_NOFILE, 0, &mut lim as *mut RLimit64 as usize, 0, 0)
         };
@@ -258,6 +273,8 @@ mod sys {
             return 1024;
         }
         let want = RLimit64 { cur: lim.max, max: lim.max };
+        // SAFETY: new_limit points at a live repr(C) RLimit64 the kernel
+        // reads; old_limit is NULL, pid 0 = self.
         let ret = unsafe {
             syscall6(nr::PRLIMIT64, 0, RLIMIT_NOFILE, &want as *const RLimit64 as usize, 0, 0, 0)
         };
@@ -317,7 +334,7 @@ mod epoll {
     impl Shared {
         fn push(&self, c: Completion) {
             let was_empty = {
-                let mut q = self.completions.lock().unwrap();
+                let mut q = crate::util::threads::lock(&self.completions);
                 let was = q.is_empty();
                 q.push(c);
                 was
@@ -449,6 +466,8 @@ mod epoll {
         ) -> io::Result<Self> {
             listener.set_nonblocking(true)?;
             let raw = sys::epoll_create1()?;
+            // SAFETY: `raw` is a freshly created epoll fd we exclusively
+            // own; OwnedFd takes over closing it exactly once.
             let epfd = unsafe { OwnedFd::from_raw_fd(raw) };
             // Edge-triggered listener: accept drains to WouldBlock, so a
             // full backlog under EMFILE can't busy-spin the loop.
@@ -905,7 +924,8 @@ mod epoll {
         }
 
         fn drain_completions(&mut self) {
-            let items = std::mem::take(&mut *self.shared.completions.lock().unwrap());
+            let items =
+                std::mem::take(&mut *crate::util::threads::lock(&self.shared.completions));
             for c in items {
                 if c.fin {
                     self.unfinished = self.unfinished.saturating_sub(1);
@@ -1008,7 +1028,9 @@ mod blocking {
             match stream {
                 Ok(s) => {
                     let e = exec.clone();
-                    std::thread::spawn(move || client_loop(e, s, max_request_bytes));
+                    crate::util::threads::spawn("corrsh-conn", move || {
+                        client_loop(e, s, max_request_bytes)
+                    });
                 }
                 Err(e) => eprintln!("accept error: {e}"),
             }
@@ -1092,6 +1114,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // binds a real TCP socket + raw epoll syscalls
     fn tcp_roundtrip() {
         let state = State::new();
         state.handle(&req(
@@ -1118,6 +1141,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // binds a real TCP socket + raw epoll syscalls
     fn tcp_concurrent_clients_are_deterministic_per_seed() {
         // ≥4 concurrent clients, each with its own seed; every response
         // must equal the single-threaded reference answer for that seed.
@@ -1163,6 +1187,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // binds a real TCP socket + raw epoll syscalls
     fn tcp_shutdown_op_stops_the_server() {
         let state = State::new();
         let addr = serve_background(state.clone()).unwrap();

@@ -114,24 +114,22 @@ impl State {
     /// Record the shard range this process serves (`corrsh worker` mode);
     /// surfaced through `worker.health` and the `metrics` op.
     pub fn set_worker_shards(&self, range: Option<(usize, usize)>) {
-        *self.worker_shards.lock().unwrap() = range;
+        *threads::lock(&self.worker_shards) = range;
     }
 
     /// Attach a coordinator's distributed runtime: from here on,
     /// registrations fan out to its workers and `medoid` queries run on the
     /// distributed engine instead of the local one.
     pub fn set_distributed(&self, rt: Arc<DistRuntime>) {
-        *self.dist.lock().unwrap() = Some(rt);
+        *threads::lock(&self.dist) = Some(rt);
     }
 
     fn dist(&self) -> Option<Arc<DistRuntime>> {
-        self.dist.lock().unwrap().clone()
+        threads::lock(&self.dist).clone()
     }
 
     fn get(&self, name: &str) -> Result<Arc<Entry>> {
-        self.datasets
-            .lock()
-            .unwrap()
+        threads::lock(&self.datasets)
             .get(name)
             .cloned()
             .with_context(|| format!("dataset {name:?} not registered"))
@@ -186,10 +184,7 @@ impl State {
         match op {
             "ping" => Ok(Value::from_pairs(vec![("ok", true.into()), ("pong", true.into())])),
             "list" => {
-                let names: Vec<Value> = self
-                    .datasets
-                    .lock()
-                    .unwrap()
+                let names: Vec<Value> = threads::lock(&self.datasets)
                     .keys()
                     .map(|k| Value::Str(k.clone()))
                     .collect();
@@ -241,7 +236,7 @@ impl State {
                 self.cache.invalidate(&name);
                 let generation = self.generation.fetch_add(1, Ordering::Relaxed);
                 let entry = Arc::new(Entry { data, metric, generation });
-                self.datasets.lock().unwrap().insert(name.clone(), entry.clone());
+                threads::lock(&self.datasets).insert(name.clone(), entry.clone());
                 // Optional eager warmup so the first query is already hot.
                 if req.get("prepare").as_bool() == Some(true) {
                     let _ = self.engine(&name, &entry);
@@ -270,7 +265,7 @@ impl State {
                             pairs.push(("workers", dist.alive_workers().into()));
                         }
                         Err(e) => {
-                            self.datasets.lock().unwrap().remove(&name);
+                            threads::lock(&self.datasets).remove(&name);
                             self.cache.invalidate(&name);
                             return Err(e).with_context(|| {
                                 format!("register: fan-out to workers failed for {name:?}")
@@ -286,7 +281,7 @@ impl State {
                     .as_str()
                     .or(req.get("dataset").as_str())
                     .context("missing name")?;
-                let removed = self.datasets.lock().unwrap().remove(name);
+                let removed = threads::lock(&self.datasets).remove(name);
                 self.cache.invalidate(name);
                 if let Some(rt) = self.dist() {
                     rt.unregister(name);
@@ -313,6 +308,15 @@ impl State {
                     Some(eng) => algo.run(&**eng, &mut rng),
                     None => algo.run(&self.engine(name, &entry), &mut rng),
                 };
+                // The distributed engine has no error channel inside the
+                // bandit loop: a total fleet loss zero-fills pulls and
+                // poisons the engine. Discard such an answer here — a
+                // medoid computed over zeroed segments is silently wrong.
+                if let Some(eng) = &dist {
+                    if let Some(why) = eng.take_failure() {
+                        crate::bail!("distributed medoid on {name:?} failed: {why}");
+                    }
+                }
                 self.pulls.add(res.pulls);
                 if stream {
                     // Replay the halving trace as partial frames: one per
@@ -508,11 +512,11 @@ impl State {
             "worker.health" => {
                 let mut pairs = vec![
                     ("ok", true.into()),
-                    ("datasets", self.datasets.lock().unwrap().len().into()),
+                    ("datasets", threads::lock(&self.datasets).len().into()),
                     ("pulls", self.pulls.get().into()),
                     ("worker_pull_ops", self.worker_pull_ops.get().into()),
                 ];
-                if let Some((a, b)) = *self.worker_shards.lock().unwrap() {
+                if let Some((a, b)) = *threads::lock(&self.worker_shards) {
                     pairs.push(("shards", Value::Array(vec![a.into(), b.into()])));
                 }
                 Ok(Value::from_pairs(pairs))
@@ -524,7 +528,7 @@ impl State {
                     ("errors", self.errors.load(Ordering::Relaxed).into()),
                     ("pulls", self.pulls.get().into()),
                     ("kmedoids_runs", self.kmedoids_runs.get().into()),
-                    ("datasets", self.datasets.lock().unwrap().len().into()),
+                    ("datasets", threads::lock(&self.datasets).len().into()),
                     (
                         "engine_cache",
                         Value::from_pairs(vec![
@@ -555,13 +559,24 @@ impl State {
                     // Transport counters (zeros under the blocking fallback
                     // or when querying a bare State).
                     ("net", self.net.to_value()),
+                    // Invariant analyzer identity: which lint semantics and
+                    // how many rules this binary enforces (`corrsh lint`,
+                    // DESIGN.md §16) — lets CI cross-check that the gate and
+                    // the serving binary agree on the rule set.
+                    (
+                        "lint",
+                        Value::from_pairs(vec![
+                            ("version", crate::analysis::LINT_VERSION.into()),
+                            ("rules", crate::analysis::RULES.len().into()),
+                        ]),
+                    ),
                 ];
                 // Distributed roles: workers export their data-plane
                 // traffic and shard range; coordinators export per-worker
                 // rows (pulls, in_flight, restarts, p99) and the re-dispatch
                 // total, so "the fleet is healthy" is observable.
                 pairs.push(("worker_pull_ops", self.worker_pull_ops.get().into()));
-                if let Some((a, b)) = *self.worker_shards.lock().unwrap() {
+                if let Some((a, b)) = *threads::lock(&self.worker_shards) {
                     pairs.push(("worker_shards", Value::Array(vec![a.into(), b.into()])));
                 }
                 if let Some(rt) = self.dist() {

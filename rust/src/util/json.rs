@@ -25,8 +25,10 @@ impl Value {
             _ => None,
         }
     }
+    #[allow(clippy::float_cmp)]
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
+            // lint: float-eq-ok(fract()==0.0 is the exact integrality test)
             if x >= 0.0 && x.fract() == 0.0 {
                 Some(x as usize)
             } else {
@@ -40,10 +42,12 @@ impl Value {
     /// which this accessor also accepts. Returns `None` for negative,
     /// fractional, or non-exactly-representable numbers instead of silently
     /// truncating the way `as_f64() as u64` did.
+    #[allow(clippy::float_cmp)]
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             // Integral f64s below 2⁶⁴ convert exactly (they carry ≤ 53
             // significant bits by construction).
+            // lint: float-eq-ok(fract()==0.0 is the exact integrality test)
             Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < u64::MAX as f64 => {
                 Some(*x as u64)
             }
@@ -361,11 +365,13 @@ fn escape(s: &str, out: &mut String) {
     out.push('"');
 }
 
+#[allow(clippy::float_cmp)]
 fn write_value(v: &Value, out: &mut String) {
     match v {
         Value::Null => out.push_str("null"),
         Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
         Value::Num(x) => {
+            // lint: float-eq-ok(integral f64s print as integers, exactly)
             if x.fract() == 0.0 && x.abs() < 9e15 {
                 out.push_str(&(*x as i64).to_string());
             } else {

@@ -7,9 +7,43 @@
 //! threads via `std::thread::scope` on every call — workers are long-lived
 //! and a parallel call is one queue push.
 
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 use crate::util::pool;
+
+/// Spawn a named OS thread. Every `thread::spawn` in the crate routes
+/// through here or the worker pool (lint rule R4, DESIGN.md §16), so the
+/// process's thread inventory is auditable in one place and every thread
+/// carries a `corrsh-*` name in stack traces and `/proc`.
+///
+/// Panics only if the OS refuses to create a thread (resource exhaustion) —
+/// the same contract as `std::thread::spawn`.
+pub fn spawn<T, F>(name: &str, f: F) -> std::thread::JoinHandle<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    std::thread::Builder::new()
+        .name(name.to_string())
+        .spawn(f)
+        .unwrap_or_else(|e| panic!("spawn thread {name:?}: {e}"))
+}
+
+/// Lock a mutex, recovering the guard if the lock is poisoned.
+///
+/// Server and distributed-engine code must never `.unwrap()` a lock (lint
+/// rule R5): query jobs run under `catch_unwind` in the executor, so a
+/// panicked job poisons shared metrics/registry mutexes while leaving the
+/// protected data structurally sound — recovering and serving beats
+/// wedging the event loop over a counter.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`] with the same poison-recovery policy as [`lock`].
+pub fn wait<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Number of worker threads to use: `CORRSH_THREADS` env override, else the
 /// available parallelism, else 4.
@@ -64,7 +98,7 @@ where
         .map(|(c, chunk)| Mutex::new(Some((c * chunk_size, chunk))))
         .collect();
     pool::global().run(slots.len(), threads, &|i| {
-        if let Some((start, chunk)) = slots[i].lock().unwrap().take() {
+        if let Some((start, chunk)) = lock(&slots[i]).take() {
             f(start, chunk);
         }
     });
@@ -155,6 +189,27 @@ mod tests {
             let out = parallel_map(64, 4, |i| i + round);
             assert_eq!(out[63], 63 + round);
         }
+    }
+
+    #[test]
+    fn named_spawn_runs_and_joins() {
+        let h = spawn("corrsh-test", || 41 + 1);
+        assert_eq!(h.join().ok(), Some(42));
+    }
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = std::sync::Arc::clone(&m);
+        let _ = spawn("corrsh-poison", move || {
+            let _g = m2.lock();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7, "guard recovered with data intact");
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 8);
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Trap-case corpus for the `corrsh lint` analyzer (DESIGN.md §16).
+//!
+//! Each fixture is a (pretend path, source) pair fed straight into
+//! `analysis::check_source` — the same entry point `corrsh lint` uses per
+//! file — split into traps that MUST fire and look-alikes that MUST NOT
+//! (the false positives the old grep/awk CI gates could not avoid).
+//! The final test lints the shipped tree itself: the repo must be clean
+//! under its own analyzer.
+
+use std::path::Path;
+
+use corrsh::analysis::{check_source, lint_root, Finding, LINT_VERSION, RULES};
+
+fn fired(path: &str, src: &str) -> Vec<&'static str> {
+    let mut rules: Vec<&'static str> =
+        check_source(path, src).into_iter().map(|f: Finding| f.rule).collect();
+    rules.dedup();
+    rules
+}
+
+// ---------------------------------------------------------------- traps --
+
+#[test]
+fn r1_partial_cmp_in_code_fires() {
+    let src = "fn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+    assert_eq!(fired("rust/src/bandits/corr_sh.rs", src), vec!["R1"]);
+    // R1 has no test exemption: a NaN-unsound comparator in a test
+    // launders the same bug class.
+    let in_test = "#[cfg(test)]\nmod t { fn f(a: f64, b: f64) { a.partial_cmp(&b); } }";
+    assert_eq!(fired("rust/src/bandits/corr_sh.rs", in_test), vec!["R1"]);
+}
+
+#[test]
+fn r2_unsafe_off_allowlist_fires() {
+    let src = "fn f() { unsafe { g() } }";
+    assert_eq!(fired("rust/src/bandits/corr_sh.rs", src), vec!["R2"]);
+}
+
+#[test]
+fn r2_unsafe_missing_safety_comment_fires() {
+    // On the allowlist, but no // SAFETY: run within the 4-line window.
+    let src = "fn f() { unsafe { g() } }";
+    assert_eq!(fired("rust/src/engine/simd.rs", src), vec!["R2"]);
+    // A SAFETY anchor 5 lines above is out of the window.
+    let far = "// SAFETY: too far away\n\n\n\n\nfn f() { unsafe { g() } }";
+    assert_eq!(fired("rust/src/engine/simd.rs", far), vec!["R2"]);
+}
+
+#[test]
+fn r3_asm_and_syscall_helpers_off_allowlist_fire() {
+    let asm = "fn f() { unsafe { std::arch::asm!(\"nop\") } }";
+    let rules = fired("rust/src/engine/kernel.rs", asm);
+    assert!(rules.contains(&"R3"), "asm! must fire R3, got {rules:?}");
+    let helper = "fn g() { let r = syscall6(9, 0, 0, 0, 0, 0, 0); }";
+    assert_eq!(fired("rust/src/util/pool.rs", helper), vec!["R3"]);
+}
+
+#[test]
+fn r4_raw_thread_spawn_fires() {
+    let src = "fn f() { std::thread::spawn(|| ()); }";
+    assert_eq!(fired("rust/src/server/exec.rs", src), vec!["R4"]);
+    assert_eq!(fired("examples/rnaseq_clustering.rs", src), vec!["R4"]);
+}
+
+#[test]
+fn r5_unwrap_expect_panic_in_server_code_fire() {
+    let src = r#"
+        fn a(x: Option<u32>) -> u32 { x.unwrap() }
+        fn b(x: Option<u32>) -> u32 { x.expect("msg") }
+        fn c() { panic!("boom"); }
+    "#;
+    assert_eq!(fired("rust/src/server/ops.rs", src), vec!["R5"]);
+    assert_eq!(fired("rust/src/engine/distributed.rs", src), vec!["R5"]);
+    assert_eq!(check_source("rust/src/server/ops.rs", src).len(), 3);
+}
+
+#[test]
+fn r6_unwaivered_float_eq_fires() {
+    let src = "fn f(x: f64) -> bool { x == 0.0 || x != -1.5 }";
+    let findings = check_source("rust/src/stats/mod.rs", src);
+    assert_eq!(findings.len(), 2, "both comparisons fire: {findings:?}");
+    assert!(findings.iter().all(|f| f.rule == "R6"));
+}
+
+#[test]
+fn r7_process_exit_outside_main_fires() {
+    let src = "fn f() { std::process::exit(2); }";
+    assert_eq!(fired("rust/src/server/net.rs", src), vec!["R7"]);
+}
+
+// ---------------------------------------------- look-alikes (no finding) --
+
+#[test]
+fn partial_cmp_in_string_literal_does_not_fire() {
+    // The exact failure mode of `grep -rn partial_cmp`: the banned token
+    // inside string data, not code.
+    let src = r#"fn f() -> &'static str { "use total_cmp, never partial_cmp" }"#;
+    assert!(fired("rust/src/bandits/corr_sh.rs", src).is_empty());
+}
+
+#[test]
+fn partial_cmp_in_comments_does_not_fire() {
+    let doc = "/// Unlike `partial_cmp`, total_cmp orders NaN last.\nfn f() {}";
+    assert!(fired("rust/src/bandits/corr_sh.rs", doc).is_empty());
+    let line = "// a partial_cmp comparator would corrupt the halving order\nfn f() {}";
+    assert!(fired("rust/src/bandits/corr_sh.rs", line).is_empty());
+    let block = "/* partial_cmp /* nested partial_cmp */ */ fn f() {}";
+    assert!(fired("rust/src/bandits/corr_sh.rs", block).is_empty());
+}
+
+#[test]
+fn unsafe_in_raw_string_does_not_fire() {
+    // grep's other blind spot: `unsafe` as string payload, here in a raw
+    // string whose quotes would confuse a regex-based scanner.
+    let src = r##"fn f() -> &'static str { r#"this "unsafe" is data"# }"##;
+    assert!(fired("rust/src/bandits/corr_sh.rs", src).is_empty());
+}
+
+#[test]
+fn safety_comment_run_satisfies_r2_on_allowlist() {
+    // A multi-line justification run anchors at its last line, so an
+    // attribute between the run and the unsafe keyword still passes.
+    let src = "
+        // SAFETY: lanes are in-bounds by construction (len checked above),
+        // and the pointer came from a live slice.
+        #[allow(clippy::needless_range_loop)]
+        unsafe { g() }
+    ";
+    assert!(fired("rust/src/engine/simd.rs", src).is_empty());
+}
+
+#[test]
+fn cfg_test_module_is_exempt_from_r5() {
+    let src = r#"
+        pub fn serve() {}
+        #[cfg(test)]
+        mod tests {
+            #[test]
+            fn t() {
+                Some(1).unwrap();
+                None::<u32>.expect("fine here");
+                panic!("also fine");
+            }
+        }
+    "#;
+    assert!(fired("rust/src/server/ops.rs", src).is_empty());
+}
+
+#[test]
+fn test_attr_fn_is_exempt_from_r5_but_production_code_is_not() {
+    let src = r#"
+        fn prod(x: Option<u32>) -> u32 { x.unwrap() }
+        #[test]
+        fn t() { Some(1).unwrap(); }
+    "#;
+    let findings = check_source("rust/src/server/ops.rs", src);
+    assert_eq!(findings.len(), 1, "only the production unwrap: {findings:?}");
+    assert_eq!(findings[0].rule, "R5");
+    assert_eq!(findings[0].line, 2);
+}
+
+#[test]
+fn float_eq_waivers_and_tuple_indices_do_not_fire() {
+    let same = "fn f(x: f64) -> bool { x == 0.0 } // lint: float-eq-ok(exactness test)";
+    assert!(fired("rust/src/util/json.rs", same).is_empty());
+    let above = "// lint: float-eq-ok(integrality)\nfn f(x: f64) -> bool { x.fract() == 0.0 }";
+    assert!(fired("rust/src/util/json.rs", above).is_empty());
+    // `t.0.1 == q.0` is tuple indexing, not float literals.
+    let tuple = "fn f(t: ((u8, u8), u8), q: (u8,)) -> bool { t.0.1 == q.0 }";
+    assert!(fired("rust/src/util/json.rs", tuple).is_empty());
+}
+
+#[test]
+fn spawn_through_util_threads_does_not_fire_r4() {
+    let src = "fn f() { crate::util::threads::spawn(\"corrsh-x\", || ()); }";
+    assert!(fired("rust/src/server/net.rs", src).is_empty());
+    let builder = "fn f() { std::thread::Builder::new().spawn(|| ()); }";
+    assert!(fired("rust/src/util/threads.rs", builder).is_empty());
+}
+
+// ------------------------------------------------------------ self-check --
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    // CARGO_MANIFEST_DIR is the repo root (Cargo.toml lives there), which
+    // is exactly what `corrsh lint --root` defaults to.
+    let report = lint_root(Path::new(env!("CARGO_MANIFEST_DIR"))).expect("lint walk");
+    assert!(report.files_scanned > 50, "walk found {} files", report.files_scanned);
+    assert!(
+        report.ok(),
+        "shipped tree must be lint-clean, got:\n{}",
+        report.render_text()
+    );
+    let v = report.to_json();
+    assert_eq!(v.get("version").as_u64(), Some(LINT_VERSION));
+    assert_eq!(v.get("rules").as_usize(), Some(RULES.len()));
+}
