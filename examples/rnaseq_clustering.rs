@@ -75,7 +75,7 @@ fn main() {
         let mut best = vec![f32::MAX; n];
         for (c, &m) in medoids.iter().enumerate() {
             engine.pull_matrix(&[m], &all, &mut dist_to);
-            total_pulls += n as u64;
+            total_pulls = total_pulls.saturating_add(n as u64);
             for i in 0..n {
                 if dist_to[i] < best[i] {
                     best[i] = dist_to[i];
@@ -93,7 +93,7 @@ fn main() {
             }
             let sub = SubsetEngine { inner: &engine, rows: &members };
             let res = CorrSh::with_pulls_per_arm(24.0).run(&sub, &mut rng);
-            total_pulls += res.pulls;
+            total_pulls = total_pulls.saturating_add(res.pulls);
             let new_medoid = members[res.best];
             if new_medoid != medoids[c] {
                 moved += 1;

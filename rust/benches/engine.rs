@@ -244,6 +244,39 @@ fn main() {
     #[cfg(not(feature = "pjrt"))]
     println!("(pjrt benches skipped: built without the `pjrt` feature)");
 
+    // ---- medoid algorithm head-to-head ------------------------------------------
+    // Wall-clock view of the three tiers over one engine (the pull-count
+    // view lives in BENCH_kmedoids.json): corrSH's sublinear schedule,
+    // trimed's triangle-inequality elimination, the exact n² sweep.
+    {
+        use corrsh::bandits::{CorrSh, Exact, MedoidAlgorithm, Trimed};
+        use corrsh::data::synth::gaussian;
+
+        b.group("medoid head-to-head (mixture n=2048, d=32)");
+        let mix = Arc::new(gaussian::generate_mixture(&SynthConfig {
+            n: 2_048,
+            dim: 32,
+            seed: 5,
+            clusters: 4,
+            ..Default::default()
+        }));
+        let e = NativeEngine::with_threads(mix, Metric::L2, 4);
+        let algos: [(&str, Box<dyn MedoidAlgorithm>); 3] = [
+            ("corrsh", Box::new(CorrSh::with_pulls_per_arm(24.0))),
+            ("trimed", Box::new(Trimed::new(8))),
+            ("exact", Box::new(Exact::new())),
+        ];
+        for (name, algo) in algos {
+            let mut pulls = 0u64;
+            b.bench_items(&format!("medoid/{name}"), 2_048, || {
+                let res = algo.run(&e, &mut Rng::seeded(9));
+                pulls = res.pulls;
+                res.best
+            });
+            b.record_metric(&format!("medoid/{name}_pulls"), pulls as f64, "pulls");
+        }
+    }
+
     b.write_jsonl();
     // Machine-readable perf baseline for trajectory tracking across PRs.
     b.write_bench_json("engine");

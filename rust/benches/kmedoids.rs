@@ -1,14 +1,18 @@
 //! E12 — k-medoids workload bench: BUILD-only vs full BUILD/SWAP/polish on
 //! a planted Gaussian mixture, plus the pull-budget fraction vs the exact
-//! k·n² BUILD sweep. Emits `BENCH_kmedoids.json` (schema_version 1) as a CI
-//! perf artifact next to `BENCH_engine.json` / `BENCH_server.json`.
+//! k·n² BUILD sweep, the cross-round reuse-cache pull comparison (on vs off
+//! at identical seeds and, by construction, identical results), and the
+//! corrsh/trimed/exact single-medoid head-to-head. Emits
+//! `BENCH_kmedoids.json` (schema_version 1) as a CI perf artifact next to
+//! `BENCH_engine.json` / `BENCH_server.json`.
 
 use std::sync::Arc;
 
+use corrsh::bandits::{CorrSh, Exact, MedoidAlgorithm, Trimed};
 use corrsh::config::KMedoidsConfig;
 use corrsh::data::synth::{gaussian, SynthConfig};
 use corrsh::distance::Metric;
-use corrsh::engine::NativeEngine;
+use corrsh::engine::{CountingEngine, NativeEngine};
 use corrsh::kmedoids::{BanditKMedoids, ClusteringAlgorithm};
 use corrsh::util::bench::Bencher;
 use corrsh::util::rng::Rng;
@@ -71,6 +75,104 @@ fn main() {
         "centers",
     );
     b.record_metric("quality/mean_loss", res.loss, "distance");
+
+    // Cross-round pull reuse (DESIGN.md §17): the same clustering runs with
+    // the reuse cache on and off at equal seeds. The cache is result-neutral
+    // (bitwise-identical medoids and loss — asserted here, pinned by the
+    // property suite), so the only thing that moves is the engine-boundary
+    // pull count; `reuse/speedup_pulls` is the off/on ratio CI greps for.
+    {
+        let counting = CountingEngine::new(NativeEngine::with_threads(
+            Arc::new(gaussian::generate_mixture(&SynthConfig {
+                n,
+                dim: 16,
+                seed: 1,
+                clusters: k,
+                ..Default::default()
+            })),
+            Metric::L2,
+            corrsh::util::threads::default_threads(),
+        ));
+        // More SWAP rounds than the default so consecutive rounds re-score
+        // overlapping candidate sets — the regime the cache exists for.
+        let mut run = |reuse: bool| {
+            let cfg = KMedoidsConfig {
+                k,
+                max_swap_rounds: 8,
+                reuse_cache: reuse,
+                ..Default::default()
+            };
+            counting.reset();
+            let res = BanditKMedoids::new(cfg).run(&counting, &mut Rng::seeded(11));
+            (res, counting.pulls())
+        };
+        let (res_on, pulls_on) = run(true);
+        let (res_off, pulls_off) = run(false);
+        assert_eq!(res_on.medoids, res_off.medoids, "reuse cache changed the medoids");
+        assert_eq!(
+            res_on.loss.to_bits(),
+            res_off.loss.to_bits(),
+            "reuse cache changed the loss"
+        );
+        b.record_metric("reuse/pulls_on", pulls_on as f64, "pulls");
+        b.record_metric("reuse/pulls_off", pulls_off as f64, "pulls");
+        b.record_metric(
+            "reuse/speedup_pulls",
+            pulls_off as f64 / pulls_on.max(1) as f64,
+            "ratio",
+        );
+        b.record_metric(
+            "reuse/swap_pulls_saved_frac",
+            1.0 - res_on.swap_pulls as f64 / res_off.swap_pulls.max(1) as f64,
+            "fraction",
+        );
+    }
+
+    // Single-medoid head-to-head on the same mixture: corrSH (sublinear
+    // bandit), trimed (exact via triangle-inequality elimination), and the
+    // exact n² sweep. `trimed/matches_exact` must be 1 and its pull count
+    // sub-n² on clustered data; corrSH stays the cheapest.
+    {
+        let counting = CountingEngine::new(NativeEngine::with_threads(
+            Arc::new(gaussian::generate_mixture(&SynthConfig {
+                n,
+                dim: 16,
+                seed: 2,
+                clusters: k,
+                ..Default::default()
+            })),
+            Metric::L2,
+            corrsh::util::threads::default_threads(),
+        ));
+        let n2 = (n * n) as f64;
+        let mut best = [0usize; 3];
+        let algos: [(&str, Box<dyn MedoidAlgorithm>); 3] = [
+            ("corrsh", Box::new(CorrSh::with_pulls_per_arm(24.0))),
+            ("trimed", Box::new(Trimed::new(8))),
+            ("exact", Box::new(Exact::new())),
+        ];
+        for (i, (name, algo)) in algos.into_iter().enumerate() {
+            counting.reset();
+            let t0 = std::time::Instant::now();
+            let res = algo.run(&counting, &mut Rng::seeded(3));
+            let wall = t0.elapsed().as_secs_f64();
+            best[i] = res.best;
+            b.record_metric(&format!("{name}/pulls"), res.pulls as f64, "pulls");
+            let frac = res.pulls as f64 / n2;
+            b.record_metric(&format!("{name}/pulls_fraction_of_n2"), frac, "fraction");
+            b.record_metric(&format!("{name}/wall_s"), wall, "s");
+        }
+        b.record_metric(
+            "trimed/matches_exact",
+            (best[1] == best[2]) as u64 as f64,
+            "bool",
+        );
+        b.record_metric(
+            "corrsh/matches_exact",
+            (best[0] == best[2]) as u64 as f64,
+            "bool",
+        );
+    }
 
     b.write_jsonl();
     b.write_bench_json("kmedoids");

@@ -28,7 +28,7 @@ pub use rules::{check_source, Finding, RuleInfo, RULES};
 
 /// Bumped when rule semantics change, so CI artifacts and the server
 /// metrics row can tell which analyzer produced a report.
-pub const LINT_VERSION: u64 = 1;
+pub const LINT_VERSION: u64 = 2;
 
 /// Directories under the repo root that `lint_root` scans for `.rs` files.
 pub const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
@@ -157,9 +157,9 @@ mod tests {
     }
 
     #[test]
-    fn rule_table_is_seven_rules() {
-        assert_eq!(RULES.len(), 7);
+    fn rule_table_is_eight_rules() {
+        assert_eq!(RULES.len(), 8);
         let ids: Vec<_> = RULES.iter().map(|r| r.id).collect();
-        assert_eq!(ids, vec!["R1", "R2", "R3", "R4", "R5", "R6", "R7"]);
+        assert_eq!(ids, vec!["R1", "R2", "R3", "R4", "R5", "R6", "R7", "R8"]);
     }
 }

@@ -1,4 +1,4 @@
-//! Invariant rules R1–R7 over the token stream from [`super::lexer`].
+//! Invariant rules R1–R8 over the token stream from [`super::lexer`].
 //!
 //! Every rule is a token-pattern check, so string literals, comments, and
 //! doc text can never fire a rule (the grep-gate failure mode), and
@@ -60,6 +60,11 @@ pub const RULES: &[RuleInfo] = &[
         id: "R7",
         summary: "std::process::exit only in main.rs",
     },
+    RuleInfo {
+        id: "R8",
+        summary: "no unchecked + on pull-ledger counters in non-test code; \
+                  use saturating_add or a // lint: pull-add-ok(reason) waiver",
+    },
 ];
 
 /// Files audited to contain `unsafe` (R2). Growing this list is a review
@@ -107,6 +112,7 @@ pub fn check_source(path: &str, src: &str) -> Vec<Finding> {
     // Comment geometry: SAFETY anchor runs and float-eq waiver lines.
     let mut runs: Vec<CommentRun> = Vec::new();
     let mut waiver_lines: Vec<u32> = Vec::new();
+    let mut pull_waiver_lines: Vec<u32> = Vec::new();
     for t in &toks {
         if !matches!(t.kind, Kind::LineComment | Kind::BlockComment) {
             continue;
@@ -114,6 +120,9 @@ pub fn check_source(path: &str, src: &str) -> Vec<Finding> {
         let safety = t.text.contains("SAFETY:");
         if t.text.contains("lint: float-eq-ok(") {
             waiver_lines.push(t.end_line());
+        }
+        if t.text.contains("lint: pull-add-ok(") {
+            pull_waiver_lines.push(t.end_line());
         }
         match runs.last_mut() {
             Some(run) if t.line <= run.last + 1 => {
@@ -128,6 +137,7 @@ pub fn check_source(path: &str, src: &str) -> Vec<Finding> {
             .any(|r| r.safety && r.last <= line && line - r.last <= SAFETY_WINDOW)
     };
     let waived = |line: u32| waiver_lines.iter().any(|&w| w == line || w + 1 == line);
+    let pull_waived = |line: u32| pull_waiver_lines.iter().any(|&w| w == line || w + 1 == line);
 
     // Code view: comments stripped, with per-token test-scope flags.
     let code: Vec<&Tok> = toks
@@ -244,6 +254,41 @@ pub fn check_source(path: &str, src: &str) -> Vec<Finding> {
                         "float `{}` comparison without a // lint: float-eq-ok(reason) waiver",
                         t.text
                     ),
+                );
+            }
+        } else if t.kind == Kind::Punct && t.text == "+" && !in_test[k] {
+            // R8 — pull-ledger arithmetic must saturate: a wrapped u64 pull
+            // counter silently corrupts every budget/accounting invariant
+            // downstream. The lexer splits `+=` into `+` `=`, so one anchor
+            // covers both plain addition and compound assignment. An
+            // operand is pull-like when an ident containing "pulls" sits
+            // immediately left of the `+`, or anywhere in the (possibly
+            // `self.`/path-qualified) operand chain to its right.
+            let lhs_hit = code
+                .get(k.wrapping_sub(1))
+                .is_some_and(|p| p.kind == Kind::Ident && p.text.contains("pulls"));
+            let mut j = k + 1;
+            if punct(j, "=") {
+                j += 1; // compound assign: inspect the addend
+            }
+            let mut rhs_hit = false;
+            while let Some(p) = code.get(j) {
+                match p.kind {
+                    Kind::Ident => {
+                        rhs_hit |= p.text.contains("pulls");
+                        j += 1;
+                    }
+                    Kind::Punct if p.text == "." || p.text == "::" => j += 1,
+                    _ => break,
+                }
+            }
+            if (lhs_hit || rhs_hit) && !pull_waived(t.line) {
+                fire(
+                    "R8",
+                    t.line,
+                    "unchecked `+` on a pull counter; use saturating_add \
+                     (or waive: // lint: pull-add-ok(reason))"
+                        .into(),
                 );
             }
         }
@@ -365,6 +410,37 @@ mod tests {
         assert!(rules_fired("rust/src/util/json.rs", above).is_empty());
         let int = "fn f(x: u32) -> bool { x == 0 && x != 3 }";
         assert!(rules_fired("rust/src/util/json.rs", int).is_empty());
+    }
+
+    #[test]
+    fn r8_pull_counter_addition() {
+        // `+=` lexes as `+` `=`: both compound assignment and plain
+        // addition on pull-like idents fire, on either operand side.
+        let lhs = "fn f(mut pulls: u64, t: u64) { pulls += t; }";
+        assert_eq!(rules_fired("rust/src/bandits/x.rs", lhs), vec!["R8"]);
+        let rhs = "fn f(mut spent: u64, pulls: u64) { spent += pulls; }";
+        assert_eq!(rules_fired("rust/src/coordinator/x.rs", rhs), vec!["R8"]);
+        let qualified = "fn f(w: &mut W, row: R) { w.pulls += row.pulls; }";
+        assert_eq!(rules_fired("rust/src/engine/x.rs", qualified), vec!["R8"]);
+        let plain = "fn f(a: u64, o: O) -> u64 { a + o.reported_pulls }";
+        assert_eq!(rules_fired("rust/src/kmedoids/x.rs", plain), vec!["R8"]);
+
+        // saturating_add is the sanctioned form; unrelated counters and
+        // waived lines stay silent; test scope is exempt.
+        let ok = "fn f(mut pulls: u64, t: u64) { pulls = pulls.saturating_add(t); }";
+        assert!(rules_fired("rust/src/bandits/x.rs", ok).is_empty());
+        let other = "fn f(mut hits: u64) { hits += 1; }";
+        assert!(rules_fired("rust/src/bandits/x.rs", other).is_empty());
+        let waived = "fn f(mut pulls: u64) { pulls += 1; } // lint: pull-add-ok(test fixture)";
+        assert!(rules_fired("rust/src/bandits/x.rs", waived).is_empty());
+        let test_scope = "
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn t() { let mut pulls = 0u64; pulls += 3; }
+            }
+        ";
+        assert!(rules_fired("rust/src/bandits/x.rs", test_scope).is_empty());
     }
 
     #[test]

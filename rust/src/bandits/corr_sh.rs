@@ -55,13 +55,16 @@ pub enum Budget {
 impl Budget {
     /// Total pull budget for an `n`-arm instance.
     ///
-    /// `PerArm` is hardened against degenerate knobs: `x ≤ 0` and NaN clamp
-    /// to the floor of one pull per arm (`n`), and `x·n` beyond `u64::MAX`
-    /// (including `x = ∞`) saturates — the result is always in
+    /// Both variants are hardened against degenerate knobs. `PerArm`: `x ≤ 0`
+    /// and NaN clamp to the floor of one pull per arm (`n`), and `x·n` beyond
+    /// `u64::MAX` (including `x = ∞`) saturates. `Total`: a request like
+    /// `{"total": 0}` clamps up to the same floor — round 0 always pays
+    /// `n` pulls anyway (the `t_r ≥ 1` clamp), so a sub-`n` total only ever
+    /// "worked" on `BudgetLedger` slack. The result is always in
     /// `[n, u64::MAX]` instead of wrapping or silently returning 0.
     pub fn total(&self, n: usize) -> u64 {
         match *self {
-            Budget::Total(t) => t,
+            Budget::Total(t) => t.max(n.max(1) as u64),
             Budget::PerArm(x) => {
                 let floor = n.max(1) as u64;
                 if x.is_nan() || x <= 0.0 {
@@ -401,9 +404,18 @@ mod tests {
         // Sane values are unchanged (and never below the floor).
         assert_eq!(Budget::PerArm(2.5).total(10), 25);
         assert_eq!(Budget::PerArm(1e-9).total(10), 10);
-        assert_eq!(Budget::Total(7).total(100), 7);
+        // Total is clamped into [n, u64::MAX] exactly like PerArm: a
+        // sub-n request (e.g. a server `{"total": 0}`) floors at one pull
+        // per arm instead of surviving on ledger slack alone.
+        assert_eq!(Budget::Total(7).total(100), 100);
+        assert_eq!(Budget::Total(0).total(100), 100);
+        assert_eq!(Budget::Total(100).total(100), 100);
+        assert_eq!(Budget::Total(101).total(100), 101);
+        assert_eq!(Budget::Total(u64::MAX).total(100), u64::MAX);
         // n = 0/1 degenerate instances keep a nonzero floor.
         assert_eq!(Budget::PerArm(f64::NAN).total(0), 1);
+        assert_eq!(Budget::Total(0).total(0), 1);
+        assert_eq!(Budget::Total(0).total(1), 1);
     }
 
     #[test]

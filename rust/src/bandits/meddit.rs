@@ -100,7 +100,7 @@ impl MedoidAlgorithm for Meddit {
             for arm in arms.iter_mut() {
                 let refs = rng.sample_with_replacement(n, t);
                 engine.pull_matrix(&[arm.idx], &refs, &mut row);
-                pulls += t as u64;
+                pulls = pulls.saturating_add(t as u64);
                 arm.count = t;
                 arm.mean = row.iter().map(|&x| x as f64).sum::<f64>() / t as f64;
                 if t >= 2 {
@@ -164,7 +164,7 @@ impl MedoidAlgorithm for Meddit {
                     let all: Vec<usize> = (0..n).collect();
                     let mut out = [0f64];
                     engine.pull_block(&[arms[o].idx], &all, &mut out);
-                    pulls += n as u64;
+                    pulls = pulls.saturating_add(n as u64);
                     arms[o].mean = out[0] / n as f64;
                     arms[o].count = n;
                     arms[o].exact = true;
@@ -172,7 +172,7 @@ impl MedoidAlgorithm for Meddit {
                     let refs = rng.sample_with_replacement(n, t);
                     let mut out = [0f64];
                     engine.pull_block(&[arms[o].idx], &refs, &mut out);
-                    pulls += t as u64;
+                    pulls = pulls.saturating_add(t as u64);
                     let total = arms[o].mean * arms[o].count as f64 + out[0];
                     arms[o].count += t;
                     arms[o].mean = total / arms[o].count as f64;

@@ -9,6 +9,7 @@
 //! | [`rand_baseline`] | RAND [2] | non-adaptive baseline |
 //! | [`toprank`] | TOPRANK [10] | related-work baseline |
 //! | [`exact`] | exact O(n²) sweep | ground truth + Table 1 column |
+//! | [`trimed`] | trimed triangle elimination [1605.06950] | exact tier, sub-n² |
 //!
 //! All algorithms see the data only through [`PullEngine`]: one pull = one
 //! distance computation = the unit of the paper's x-axes.
@@ -19,6 +20,7 @@ pub mod meddit;
 pub mod rand_baseline;
 pub mod seq_halving;
 pub mod toprank;
+pub mod trimed;
 
 pub use corr_sh::CorrSh;
 pub use exact::Exact;
@@ -26,6 +28,7 @@ pub use meddit::Meddit;
 pub use rand_baseline::RandBaseline;
 pub use seq_halving::SeqHalving;
 pub use toprank::TopRank;
+pub use trimed::Trimed;
 
 use std::time::Duration;
 
@@ -155,6 +158,7 @@ mod tests {
             (Box::new(RandBaseline::new(200)), true),
             (Box::new(TopRank::new(64)), true),
             (Box::new(Exact::new()), true),
+            (Box::new(Trimed::new(4)), true),
         ];
         for (algo, must_hit) in algos {
             let mut rng = Rng::seeded(1);

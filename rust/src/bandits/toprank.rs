@@ -52,7 +52,7 @@ impl MedoidAlgorithm for TopRank {
         let arms: Vec<usize> = (0..n).collect();
         let mut sums = vec![0f64; n];
         engine.pull_block(&arms, &refs, &mut sums);
-        pulls += (n * m) as u64;
+        pulls = pulls.saturating_add((n * m) as u64);
         let means: Vec<f64> = sums.iter().map(|&s| s / m as f64).collect();
 
         // Hoeffding radius from the empirical distance range (distances are
@@ -87,7 +87,7 @@ impl MedoidAlgorithm for TopRank {
         let mut estimates: Vec<(usize, f64)> = Vec::with_capacity(candidates.len());
         let mut out = vec![0f64; candidates.len()];
         engine.pull_block(&candidates, &all, &mut out);
-        pulls += (candidates.len() * n) as u64;
+        pulls = pulls.saturating_add((candidates.len() * n) as u64);
         for (k, &c) in candidates.iter().enumerate() {
             let theta = out[k] / n as f64;
             estimates.push((c, theta));

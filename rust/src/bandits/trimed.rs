@@ -1,0 +1,263 @@
+//! trimed — triangle-inequality elimination for *exact* medoid
+//! identification (Newling & Fleuret, arXiv 1605.06950), adapted to the
+//! pull-engine substrate as corrSH's verification/fallback tier.
+//!
+//! The idea: pull a handful of **anchor** rows `d(a, ·)` and lower-bound
+//! every candidate's centrality with the triangle inequality,
+//!
+//! ```text
+//! Σ_j d(i, j)  ≥  Σ_j max_a |d(a, i) − d(a, j)|
+//! ```
+//!
+//! then compute exact sums only for candidates (in ascending-bound order)
+//! whose bound still undercuts the best exact sum seen so far. On clustered
+//! data the bound eliminates almost everything and the pull count is far
+//! below the exact sweep's n²; in the worst case (fully concentrated
+//! distances, where no elimination is possible) it degrades to
+//! `n² + anchors·n` — never silently wrong, at most modestly wasteful.
+//!
+//! **Cosine is not a metric**, so the raw triangle inequality does not
+//! hold for it. The chord transform `δ = √(2·d_cos)` *is* one (it is the
+//! Euclidean distance between the normalized vectors), giving
+//! `d_cos(i, j) = δ(i, j)²/2 ≥ (δ(a, i) − δ(a, j))²/2`; anchor rows are
+//! transformed once and the per-pair bound squares the chord gap.
+//!
+//! Exactness contract: candidate sums are computed through the same
+//! `pull_block` f64-sum path [`Exact`] uses (per-arm sums are independent
+//! of arm batching), elimination is strict (`bound > best` — ties always
+//! compute), the running best orders lexicographically by
+//! `(total_cmp, index)`, and NaN is handled conservatively: a NaN bound
+//! never eliminates (NaN loses every `>` comparison) and a NaN sum is
+//! skipped exactly like [`crate::bandits::argmin`] skips it. The property
+//! test in `rust/tests/reuse_trimed.rs` pins medoid identity with `Exact`
+//! across metrics × dense/sparse × shard widths.
+//!
+//! [`Exact`]: crate::bandits::Exact
+
+use std::time::Instant;
+
+use crate::bandits::{MedoidAlgorithm, MedoidResult};
+use crate::distance::Metric;
+use crate::engine::PullEngine;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Trimed {
+    /// Anchor count: more anchors tighten the elimination bound at
+    /// `anchors·n` extra pulls. Evenly spaced over the dataset
+    /// (deterministic — trimed uses no randomness).
+    pub anchors: usize,
+}
+
+impl Default for Trimed {
+    fn default() -> Self {
+        Trimed::new(4)
+    }
+}
+
+impl Trimed {
+    pub fn new(anchors: usize) -> Self {
+        Trimed { anchors: anchors.max(1) }
+    }
+}
+
+impl MedoidAlgorithm for Trimed {
+    fn name(&self) -> &'static str {
+        "trimed"
+    }
+
+    fn run(&self, engine: &dyn PullEngine, _rng: &mut Rng) -> MedoidResult {
+        let start = Instant::now();
+        let n = engine.n();
+        if n <= 1 {
+            return MedoidResult {
+                best: 0,
+                pulls: 0,
+                wall: start.elapsed(),
+                rounds: vec![],
+                estimates: vec![(0, 0.0)],
+            };
+        }
+        let a = self.anchors.clamp(1, n);
+        // i·n/a is strictly increasing for a ≤ n, so anchors are distinct.
+        let anchors: Vec<usize> = (0..a).map(|i| i * n / a).collect();
+        let all: Vec<usize> = (0..n).collect();
+        let mut pulls = 0u64;
+        let cosine = engine.metric() == Metric::Cosine;
+
+        // Anchor rows (chord-transformed for cosine so the triangle
+        // inequality applies).
+        let mut rows: Vec<Vec<f32>> = Vec::with_capacity(a);
+        for &anc in &anchors {
+            let mut row = vec![0f32; n];
+            engine.pull_matrix(&[anc], &all, &mut row);
+            pulls = pulls.saturating_add(n as u64);
+            if cosine {
+                for v in row.iter_mut() {
+                    *v = (2.0 * v.max(0.0)).sqrt();
+                }
+            }
+            rows.push(row);
+        }
+
+        // Lower bounds: lb(i) = Σ_j max_a bound_a(i, j). O(a·n²) flops,
+        // zero pulls. An anchor's own bound is exact (the a = i term is
+        // d(i, j) itself), so anchors sort first among equals and seed the
+        // scan with real sums early. NaN bounds contribute 0 (`>` is false
+        // for NaN), so poisoned rows are never over-eliminated.
+        let mut lb = vec![0f64; n];
+        for (i, l) in lb.iter_mut().enumerate() {
+            let mut acc = 0f64;
+            for j in 0..n {
+                let mut b = 0f32;
+                for row in &rows {
+                    let diff = (row[i] - row[j]).abs();
+                    let bound = if cosine { diff * diff * 0.5 } else { diff };
+                    if bound > b {
+                        b = bound;
+                    }
+                }
+                acc += b as f64;
+            }
+            *l = acc;
+        }
+
+        // Scan in ascending-bound order, computing exact sums through the
+        // same blocked f64 path Exact uses, until every remaining bound
+        // strictly exceeds the best exact sum.
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by(|&x, &y| lb[x].total_cmp(&lb[y]).then(x.cmp(&y)));
+
+        let mut sum_out = [0f64; 1];
+        let mut best: Option<(f64, usize)> = None;
+        let mut estimates: Vec<(usize, f64)> = Vec::new();
+        for &i in &order {
+            if let Some((bs, _)) = best {
+                if lb[i] > bs {
+                    break; // sorted: everything after is eliminated too
+                }
+            }
+            engine.pull_block(&[i], &all, &mut sum_out);
+            pulls = pulls.saturating_add(n as u64);
+            let s = sum_out[0];
+            estimates.push((i, s / n as f64));
+            if s.is_nan() {
+                continue; // argmin semantics: NaN can never be the medoid
+            }
+            best = Some(match best {
+                None => (s, i),
+                Some((bs, bi)) => {
+                    if s.total_cmp(&bs).is_lt() || (s.total_cmp(&bs).is_eq() && i < bi) {
+                        (s, i)
+                    } else {
+                        (bs, bi)
+                    }
+                }
+            });
+        }
+
+        MedoidResult {
+            best: best.map(|(_, i)| i).unwrap_or(0),
+            pulls,
+            wall: start.elapsed(),
+            rounds: vec![],
+            estimates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandits::Exact;
+    use crate::data::synth::{gaussian, netflix, rnaseq, SynthConfig};
+    use crate::engine::{CountingEngine, NativeEngine};
+
+    #[test]
+    fn matches_exact_and_counts_pulls_honestly() {
+        let data = gaussian::generate(&SynthConfig {
+            n: 300,
+            dim: 16,
+            seed: 12,
+            outlier_frac: 0.05,
+            ..Default::default()
+        });
+        let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
+        let truth = Exact::new().run(&engine, &mut Rng::seeded(0)).best;
+        engine.reset();
+        let res = Trimed::new(4).run(&engine, &mut Rng::seeded(0));
+        assert_eq!(res.best, truth, "trimed disagreed with the exact sweep");
+        assert_eq!(res.pulls, engine.pulls(), "ledger vs engine counter");
+    }
+
+    #[test]
+    fn clustered_data_eliminates_most_candidates() {
+        // Well-separated mixture: the anchor bounds put whole far clusters
+        // above the best sum, so the exact-sum scan touches only a small
+        // fraction of the points and stays well under the n² sweep.
+        let n = 600;
+        let data = gaussian::generate_mixture(&SynthConfig {
+            n,
+            dim: 16,
+            seed: 3,
+            clusters: 4,
+            ..Default::default()
+        });
+        let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
+        let truth = Exact::new().run(&engine, &mut Rng::seeded(0)).best;
+        engine.reset();
+        // 8 evenly spaced anchors land in every cluster of the interleaved
+        // generator layout, so inter-cluster distances bound tightly.
+        let res = Trimed::new(8).run(&engine, &mut Rng::seeded(0));
+        assert_eq!(res.best, truth);
+        let n2 = (n as u64) * (n as u64);
+        assert!(
+            res.pulls * 2 < n2,
+            "elimination too weak: {} pulls vs n² = {n2}",
+            res.pulls
+        );
+    }
+
+    #[test]
+    fn chord_bound_is_exact_on_sparse_cosine() {
+        let data = netflix::generate(&SynthConfig {
+            n: 250,
+            dim: 512,
+            seed: 8,
+            density: 0.02,
+            ..Default::default()
+        });
+        let engine = CountingEngine::new(NativeEngine::new(data, Metric::Cosine));
+        let truth = Exact::new().run(&engine, &mut Rng::seeded(0)).best;
+        engine.reset();
+        let res = Trimed::new(6).run(&engine, &mut Rng::seeded(0));
+        assert_eq!(res.best, truth, "cosine chord bound broke exactness");
+    }
+
+    #[test]
+    fn sparse_l1_matches_exact() {
+        let data =
+            rnaseq::generate(&SynthConfig { n: 280, dim: 256, seed: 6, ..Default::default() });
+        let engine = NativeEngine::new(data, Metric::L1);
+        let truth = Exact::new().run(&engine, &mut Rng::seeded(0)).best;
+        let res = Trimed::new(4).run(&engine, &mut Rng::seeded(0));
+        assert_eq!(res.best, truth);
+    }
+
+    #[test]
+    fn degenerate_sizes_are_safe() {
+        for n in [1usize, 2, 3, 5] {
+            let data = gaussian::generate(&SynthConfig {
+                n,
+                dim: 4,
+                seed: 1,
+                ..Default::default()
+            });
+            let engine = NativeEngine::new(data, Metric::L2);
+            let truth = Exact::new().run(&engine, &mut Rng::seeded(0)).best;
+            // More anchors than points must clamp, not panic.
+            let res = Trimed::new(16).run(&engine, &mut Rng::seeded(0));
+            assert_eq!(res.best, truth, "n = {n}");
+        }
+    }
+}

@@ -52,6 +52,9 @@ pub enum AlgoConfig {
     Rand { refs_per_arm: usize },
     TopRank { phase1_refs: usize },
     Exact,
+    /// trimed (arXiv 1605.06950): triangle-inequality elimination — exact
+    /// answer, usually sub-n² pulls; the corrSH verification tier.
+    Trimed { anchors: usize },
 }
 
 impl AlgoConfig {
@@ -63,6 +66,7 @@ impl AlgoConfig {
             AlgoConfig::Rand { .. } => "rand",
             AlgoConfig::TopRank { .. } => "toprank",
             AlgoConfig::Exact => "exact",
+            AlgoConfig::Trimed { .. } => "trimed",
         }
     }
 
@@ -83,6 +87,7 @@ impl AlgoConfig {
             AlgoConfig::Rand { refs_per_arm } => Box::new(RandBaseline::new(refs_per_arm)),
             AlgoConfig::TopRank { phase1_refs } => Box::new(TopRank::new(phase1_refs)),
             AlgoConfig::Exact => Box::new(Exact::new()),
+            AlgoConfig::Trimed { anchors } => Box::new(Trimed::new(anchors)),
         }
     }
 
@@ -101,6 +106,7 @@ impl AlgoConfig {
             "rand" => AlgoConfig::Rand { refs_per_arm: f("refs_per_arm", 1000.0) as usize },
             "toprank" => AlgoConfig::TopRank { phase1_refs: f("phase1_refs", 1000.0) as usize },
             "exact" => AlgoConfig::Exact,
+            "trimed" => AlgoConfig::Trimed { anchors: f("anchors", 4.0) as usize },
             other => crate::bail!("unknown algorithm {other:?}"),
         })
     }
@@ -124,6 +130,12 @@ pub struct KMedoidsConfig {
     /// Per-cluster corrSH polish budget (pulls per member arm); 0 disables
     /// the polish pass.
     pub polish_pulls_per_arm: f64,
+    /// Cross-round pull-reuse cache (BanditPAM++-style): retain candidate
+    /// rows and winner verification rows across BUILD steps and SWAP
+    /// rounds so repeat pairs never reach the engine. Winner/loss-neutral
+    /// by the bitwise-determinism invariant; off reproduces the uncached
+    /// pull pattern exactly.
+    pub reuse_cache: bool,
 }
 
 impl Default for KMedoidsConfig {
@@ -134,6 +146,7 @@ impl Default for KMedoidsConfig {
             swap_pulls_per_arm: 3.0,
             max_swap_rounds: 3,
             polish_pulls_per_arm: 32.0,
+            reuse_cache: true,
         }
     }
 }
@@ -160,6 +173,9 @@ impl KMedoidsConfig {
         }
         if let Some(x) = v.get("polish_pulls_per_arm").as_f64() {
             cfg.polish_pulls_per_arm = x;
+        }
+        if let Some(b) = v.get("reuse_cache").as_bool() {
+            cfg.reuse_cache = b;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -524,6 +540,8 @@ mod tests {
             (r#"{"name": "rand", "refs_per_arm": 10}"#, "rand"),
             (r#"{"name": "toprank"}"#, "toprank"),
             (r#"{"name": "exact"}"#, "exact"),
+            (r#"{"name": "trimed"}"#, "trimed"),
+            (r#"{"name": "trimed", "anchors": 8}"#, "trimed"),
         ] {
             let v = json::parse(spec).unwrap();
             let algo = AlgoConfig::from_json(&v).unwrap();
@@ -542,7 +560,7 @@ mod tests {
             r#"{"dataset": {"kind": "mixture", "n": 2000, "clusters": 5},
                 "kmedoids": {"k": 5, "build_pulls_per_arm": 16,
                              "swap_pulls_per_arm": 2, "max_swap_rounds": 2,
-                             "polish_pulls_per_arm": 24}}"#,
+                             "polish_pulls_per_arm": 24, "reuse_cache": false}}"#,
         )
         .unwrap();
         let cfg = RunConfig::from_json_value(&v).unwrap();
@@ -551,6 +569,8 @@ mod tests {
         assert_eq!(cfg.kmedoids.swap_pulls_per_arm, 2.0);
         assert_eq!(cfg.kmedoids.max_swap_rounds, 2);
         assert_eq!(cfg.kmedoids.polish_pulls_per_arm, 24.0);
+        assert!(!cfg.kmedoids.reuse_cache, "reuse_cache:false must parse");
+        assert!(KMedoidsConfig::default().reuse_cache, "reuse defaults on");
         // degenerate knobs fail loudly
         for bad in [
             r#"{"k": 0}"#,

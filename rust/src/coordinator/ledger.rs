@@ -52,7 +52,7 @@ impl BudgetLedger {
             self.budget,
             self.slack
         );
-        self.spent += pulls;
+        self.spent = self.spent.saturating_add(pulls);
         self.rounds.push((round, pulls));
         Ok(())
     }

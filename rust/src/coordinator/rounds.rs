@@ -47,8 +47,12 @@ pub fn t_r(total_budget: u64, survivors: usize, n: usize) -> usize {
 /// references from the `n` data points.
 pub fn t_r_capped(total_budget: u64, survivors: usize, log_rounds: usize, max_t: usize) -> usize {
     let log = log_rounds.max(1) as u64;
-    let t = (total_budget / (survivors.max(1) as u64 * log)) as usize;
-    t.clamp(1, max_t.max(1))
+    // Clamp in the u64 domain *before* narrowing to usize: on a 32-bit
+    // target `quotient as usize` truncates high bits, and a huge budget
+    // could wrap to a tiny t instead of capping at max_t.
+    let cap = max_t.max(1) as u64;
+    let t = (total_budget / (survivors.max(1) as u64 * log)).min(cap) as usize;
+    t.max(1)
 }
 
 /// The complete (deterministic) halving schedule for (n, T).
@@ -197,5 +201,19 @@ mod tests {
         assert_eq!(t_r_capped(0, 10_000, ceil_log2(10_000), 500), 1);
         // degenerate inputs never divide by zero
         assert_eq!(t_r_capped(100, 0, 0, 0), 1);
+    }
+
+    #[test]
+    fn t_r_capped_clamps_in_u64_domain_before_cast() {
+        // Regression: quotients beyond usize::MAX must hit the max_t cap,
+        // not be narrowed first (on 32-bit, `as usize` truncation could
+        // wrap a huge quotient to a small t — e.g. 2^32 -> 0).
+        assert_eq!(t_r_capped(u64::MAX, 1, 1, 7), 7);
+        assert_eq!(t_r_capped(u64::MAX, 1, 1, 1), 1);
+        let huge = (1u64 << 32) * 3; // truncates to 0 on a 32-bit usize
+        assert_eq!(t_r_capped(huge, 1, 1, 500), 500);
+        // At the boundary itself the cap is inclusive.
+        assert_eq!(t_r_capped(500, 1, 1, 500), 500);
+        assert_eq!(t_r_capped(499, 1, 1, 500), 499);
     }
 }

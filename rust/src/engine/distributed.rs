@@ -595,7 +595,7 @@ impl DistributedEngine {
             match absorbed {
                 Some(pulls) => {
                     let worker = &mut inner.workers[w];
-                    worker.pulls += pulls;
+                    worker.pulls = worker.pulls.saturating_add(pulls);
                     if let Some(t0) = sent_at[w] {
                         worker.record_latency(t0.elapsed().as_secs_f64() * 1e3);
                     }
@@ -631,7 +631,7 @@ impl DistributedEngine {
             match absorbed {
                 Some(pulls) => {
                     let worker = &mut inner.workers[w];
-                    worker.pulls += pulls;
+                    worker.pulls = worker.pulls.saturating_add(pulls);
                     worker.record_latency(t0.elapsed().as_secs_f64() * 1e3);
                     self.remote_pulls.fetch_add(pulls, Ordering::Relaxed);
                 }
@@ -789,7 +789,7 @@ impl DistRuntime {
                 let mut p99: f64 = 0.0;
                 for e in &engines {
                     let row = &e.worker_rows()[i];
-                    pulls += row.pulls;
+                    pulls = pulls.saturating_add(row.pulls);
                     restarts += row.restarts;
                     in_flight += row.in_flight;
                     alive |= row.alive;

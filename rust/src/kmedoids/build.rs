@@ -11,10 +11,15 @@
 //!
 //! After each step the winner's full distance row (n pulls) updates
 //! `best_i` exactly and is cached in [`ClusterState::rows`] for the SWAP
-//! phase — so BUILD costs `k · (halving budget + n)` pulls total.
+//! phase — so BUILD costs `k · (halving budget + n)` pulls total. All
+//! engine traffic routes through the run's [`PullCache`]: with reuse
+//! enabled, candidate rows scored in earlier steps and previous winners'
+//! verification rows are served from the cache, and the reported pull
+//! counters reflect only the fresh engine work.
 
-use crate::bandits::corr_sh::{correlated_halving_argmin, Budget};
+use crate::bandits::corr_sh::{correlated_halving_argmin_reported, Budget};
 use crate::engine::PullEngine;
+use crate::kmedoids::cache::PullCache;
 use crate::kmedoids::{ClusterState, Trajectory};
 use crate::util::rng::Rng;
 
@@ -24,6 +29,7 @@ pub(crate) fn run(
     engine: &dyn PullEngine,
     k: usize,
     pulls_per_arm: f64,
+    cache: &mut PullCache,
     rng: &mut Rng,
     trajectory: &mut Trajectory<'_>,
 ) -> (ClusterState, u64) {
@@ -32,23 +38,27 @@ pub(crate) fn run(
     let mut best = vec![f64::INFINITY; n];
     let mut is_medoid = vec![false; n];
     let mut row = vec![0f32; n];
-    let all: Vec<usize> = (0..n).collect();
     let mut pulls = 0u64;
+    // Scorer scratch, alloc-reused across steps and rounds.
+    let mut mapped: Vec<usize> = Vec::new();
+    let mut d: Vec<f32> = Vec::new();
 
     for _step in 0..k.min(n) {
         let candidates: Vec<usize> = (0..n).filter(|&i| !is_medoid[i]).collect();
         let budget = Budget::PerArm(pulls_per_arm).total(candidates.len());
-        let outcome = correlated_halving_argmin(
+        let outcome = correlated_halving_argmin_reported(
             candidates.len(),
             n,
             budget,
             rng,
             &mut |arms, refs, out| {
                 // Arms index into `candidates`; score = Σ_j marginal loss.
-                let mapped: Vec<usize> = arms.iter().map(|&a| candidates[a]).collect();
+                mapped.clear();
+                mapped.extend(arms.iter().map(|&a| candidates[a]));
                 let m = refs.len();
-                let mut d = vec![0f32; mapped.len() * m];
-                engine.pull_matrix(&mapped, refs, &mut d);
+                d.clear();
+                d.resize(mapped.len() * m, 0.0);
+                let fresh = cache.fill_matrix(engine, &mapped, refs, &mut d);
                 for (ai, o) in out.iter_mut().enumerate() {
                     let mut acc = 0f64;
                     for (ri, &j) in refs.iter().enumerate() {
@@ -59,15 +69,18 @@ pub(crate) fn run(
                     }
                     *o = acc;
                 }
+                fresh
             },
         );
-        pulls += outcome.pulls;
+        pulls = pulls.saturating_add(outcome.reported_pulls);
         let winner = candidates[outcome.best];
 
         // Exact update: the winner's full row refreshes best_i and is the
-        // SWAP phase's cached row for this medoid.
-        engine.pull_matrix(&[winner], &all, &mut row);
-        pulls += n as u64;
+        // SWAP phase's cached row for this medoid. The halving scored the
+        // winner on at least one reference, so the cached fill saves ≥ 1
+        // pull per step with reuse on.
+        let fresh = cache.fill_row(engine, winner, &mut row);
+        pulls = pulls.saturating_add(fresh);
         for (b, &d) in best.iter_mut().zip(row.iter()) {
             let d = d as f64;
             if d < *b {
@@ -108,7 +121,9 @@ mod tests {
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         for seed in 0..3 {
             let mut trajectory = Trajectory::new();
-            let (state, pulls) = run(&engine, k, 12.0, &mut Rng::seeded(seed), &mut trajectory);
+            let mut cache = PullCache::new(engine.n(), true);
+            let (state, pulls) =
+                run(&engine, k, 12.0, &mut cache, &mut Rng::seeded(seed), &mut trajectory);
             assert_eq!(state.medoids.len(), k);
             // generator layout: point j belongs to cluster j % k
             let mut covered: Vec<bool> = vec![false; k];
@@ -143,7 +158,9 @@ mod tests {
         let mut hits = 0;
         for seed in 0..5 {
             let mut traj = Trajectory::new();
-            let (state, _) = run(&engine, 1, 48.0, &mut Rng::seeded(seed), &mut traj);
+            let mut cache = PullCache::new(engine.n(), true);
+            let (state, _) =
+                run(&engine, 1, 48.0, &mut cache, &mut Rng::seeded(seed), &mut traj);
             hits += (state.medoids == vec![0]) as usize;
         }
         assert!(hits >= 4, "BUILD step 0 found the planted medoid {hits}/5");

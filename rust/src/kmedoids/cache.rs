@@ -1,0 +1,339 @@
+//! Cross-round pull-reuse cache — the BanditPAM++ idea (arXiv 2310.18844)
+//! applied at the `correlated_halving_argmin` seam.
+//!
+//! BUILD steps and SWAP rounds repeatedly score overlapping candidate sets
+//! against fresh reference draws, and every winner additionally pays a full
+//! n-pull verification row that the next round used to re-pull from
+//! scratch. This cache sits between the k-medoids scorers and
+//! [`PullEngine::pull_matrix`], keyed by `(arm-row, reference)`: each
+//! round's deduplicated candidate rows and each winner's verification row
+//! are retained for the rest of the run, so later rounds only pull
+//! references they have never seen.
+//!
+//! Correctness rests on the crate's bitwise-determinism invariant
+//! (DESIGN.md §14): a per-pair distance is independent of the batch shape
+//! it was computed in, so serving a cached value is bitwise identical to
+//! re-pulling it and the halving winners — and therefore the clustering
+//! result — are unchanged by the cache. The property test in
+//! `rust/tests/reuse_trimed.rs` pins this: equal seeds ⇒ identical
+//! medoids/loss/trajectory with strictly fewer engine-boundary pulls.
+//!
+//! Pull accounting stays honest through the `_reported` hook of
+//! [`crate::bandits::corr_sh::correlated_halving_argmin_reported`]: both
+//! fill methods return the number of *fresh* engine pulls they executed,
+//! which the scorers report per block, so `KMedoidsResult` phase counters
+//! keep matching an external [`crate::engine::CountingEngine`] exactly.
+//!
+//! Memory is bounded: rows are cached slot-major (n values + n presence
+//! flags per slot) up to a ~256 MiB budget; once the slot table is full,
+//! additional rows bypass the cache and hit the engine directly, so a huge
+//! dataset degrades to the uncached behavior instead of OOMing.
+
+use std::collections::HashMap;
+
+use crate::engine::PullEngine;
+
+/// Soft cap on cached-row storage (values + presence flags).
+const CACHE_BYTES: usize = 256 << 20;
+
+/// Per-run reuse cache over full distance rows. `enabled = false` turns
+/// every fill into a direct engine call through the same entry points, so
+/// cache-on and cache-off runs differ only in which pulls reach the engine.
+pub struct PullCache {
+    n: usize,
+    enabled: bool,
+    max_slots: usize,
+    /// dataset row → slot (insertion-ordered, deterministic).
+    slots: HashMap<usize, usize>,
+    /// Slot-major cached values: `vals[slot * n + j] = d(row, x_j)`.
+    vals: Vec<f32>,
+    /// Slot-major presence flags for `vals`.
+    have: Vec<bool>,
+    /// The full reference universe `0..n` (kept so `fill_row` never
+    /// re-allocates it).
+    all: Vec<usize>,
+    hits: u64,
+    fresh: u64,
+    scratch: Vec<f32>,
+    missing: Vec<usize>,
+}
+
+impl PullCache {
+    pub fn new(n: usize, enabled: bool) -> Self {
+        let max_slots = if n == 0 { 0 } else { (CACHE_BYTES / (5 * n)).clamp(1, n) };
+        PullCache {
+            n,
+            enabled,
+            max_slots,
+            slots: HashMap::new(),
+            vals: Vec::new(),
+            have: Vec::new(),
+            all: (0..n).collect(),
+            hits: 0,
+            fresh: 0,
+            scratch: Vec::new(),
+            missing: Vec::new(),
+        }
+    }
+
+    /// (arm, ref) pairs served from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Fresh engine pulls executed through the cache so far.
+    pub fn fresh(&self) -> u64 {
+        self.fresh
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Slot for `x`, allocating one if the table has room. `None` ⇒ the row
+    /// bypasses the cache (table full).
+    fn slot_for(&mut self, x: usize) -> Option<usize> {
+        if let Some(&s) = self.slots.get(&x) {
+            return Some(s);
+        }
+        if self.slots.len() >= self.max_slots {
+            return None;
+        }
+        let s = self.slots.len();
+        self.slots.insert(x, s);
+        self.vals.resize((s + 1) * self.n, 0.0);
+        self.have.resize((s + 1) * self.n, false);
+        Some(s)
+    }
+
+    /// Fill `out[k * refs.len() + j] = d(xs[k], refs[j])`, pulling only the
+    /// pairs the cache has never seen. Returns the fresh engine pulls
+    /// executed (what the block should report to the budget ledger).
+    ///
+    /// Rows with no cached entry at all are batched into a single
+    /// `pull_matrix` call (the round-0 shape); partially-cached rows pull
+    /// just their missing references.
+    pub fn fill_matrix(
+        &mut self,
+        engine: &dyn PullEngine,
+        xs: &[usize],
+        refs: &[usize],
+        out: &mut [f32],
+    ) -> u64 {
+        let m = refs.len();
+        assert_eq!(xs.len() * m, out.len());
+        if !self.enabled {
+            engine.pull_matrix(xs, refs, out);
+            let f = (xs.len() * m) as u64;
+            self.fresh = self.fresh.saturating_add(f);
+            return f;
+        }
+        let mut fresh = 0u64;
+
+        // Pass 1: allocate slots; batch rows that are entirely new to the
+        // cache (slot allocated this call ⇒ nothing cached yet) into one
+        // engine call, and collect full-table overflow rows for a direct
+        // bypass pull.
+        let mut new_rows: Vec<usize> = Vec::new(); // positions in xs
+        let mut bypass: Vec<usize> = Vec::new(); // positions in xs
+        for (k, &x) in xs.iter().enumerate() {
+            if self.slots.contains_key(&x) {
+                continue;
+            }
+            match self.slot_for(x) {
+                Some(_) => new_rows.push(k),
+                None => bypass.push(k),
+            }
+        }
+        if !new_rows.is_empty() {
+            let rows: Vec<usize> = new_rows.iter().map(|&k| xs[k]).collect();
+            self.scratch.clear();
+            self.scratch.resize(rows.len() * m, 0.0);
+            engine.pull_matrix(&rows, refs, &mut self.scratch);
+            fresh += (rows.len() * m) as u64;
+            for (r, &x) in rows.iter().enumerate() {
+                let s = self.slots[&x];
+                for (j, &rf) in refs.iter().enumerate() {
+                    self.vals[s * self.n + rf] = self.scratch[r * m + j];
+                    self.have[s * self.n + rf] = true;
+                }
+            }
+        }
+        if !bypass.is_empty() {
+            let rows: Vec<usize> = bypass.iter().map(|&k| xs[k]).collect();
+            self.scratch.clear();
+            self.scratch.resize(rows.len() * m, 0.0);
+            engine.pull_matrix(&rows, refs, &mut self.scratch);
+            fresh += (rows.len() * m) as u64;
+            for (r, &k) in bypass.iter().enumerate() {
+                out[k * m..(k + 1) * m].copy_from_slice(&self.scratch[r * m..(r + 1) * m]);
+            }
+        }
+
+        // Pass 2: serve every slotted row from the cache, pulling only the
+        // references it is missing.
+        for (k, &x) in xs.iter().enumerate() {
+            let s = match self.slots.get(&x) {
+                Some(&s) => s,
+                None => continue, // bypass row, already written
+            };
+            self.missing.clear();
+            self.missing.extend(refs.iter().copied().filter(|&rf| !self.have[s * self.n + rf]));
+            if !self.missing.is_empty() {
+                self.scratch.clear();
+                self.scratch.resize(self.missing.len(), 0.0);
+                engine.pull_matrix(&[x], &self.missing, &mut self.scratch);
+                fresh += self.missing.len() as u64;
+                for (j, &rf) in self.missing.iter().enumerate() {
+                    self.vals[s * self.n + rf] = self.scratch[j];
+                    self.have[s * self.n + rf] = true;
+                }
+            }
+            for (j, &rf) in refs.iter().enumerate() {
+                out[k * m + j] = self.vals[s * self.n + rf];
+            }
+        }
+
+        let total = (xs.len() * m) as u64;
+        self.fresh = self.fresh.saturating_add(fresh);
+        self.hits = self.hits.saturating_add(total - fresh.min(total));
+        fresh
+    }
+
+    /// Fill `out` with the full distance row of `x` (`out[j] = d(x, x_j)`,
+    /// `out.len() == n`), pulling only missing references. Returns fresh
+    /// engine pulls. This is the winner-verification path: the halving
+    /// winner was always scored on at least one reference, so with the
+    /// cache enabled this saves ≥ 1 pull per verification — and the full
+    /// row is retained, so a re-verified or re-scored winner later in the
+    /// run is free.
+    pub fn fill_row(&mut self, engine: &dyn PullEngine, x: usize, out: &mut [f32]) -> u64 {
+        assert_eq!(out.len(), self.n);
+        if !self.enabled {
+            engine.pull_matrix(&[x], &self.all, out);
+            self.fresh = self.fresh.saturating_add(self.n as u64);
+            return self.n as u64;
+        }
+        let s = match self.slot_for(x) {
+            Some(s) => s,
+            None => {
+                engine.pull_matrix(&[x], &self.all, out);
+                self.fresh = self.fresh.saturating_add(self.n as u64);
+                return self.n as u64;
+            }
+        };
+        self.missing.clear();
+        self.missing.extend((0..self.n).filter(|&j| !self.have[s * self.n + j]));
+        let fresh = self.missing.len() as u64;
+        if !self.missing.is_empty() {
+            self.scratch.clear();
+            self.scratch.resize(self.missing.len(), 0.0);
+            engine.pull_matrix(&[x], &self.missing, &mut self.scratch);
+            for (j, &rf) in self.missing.iter().enumerate() {
+                self.vals[s * self.n + rf] = self.scratch[j];
+                self.have[s * self.n + rf] = true;
+            }
+        }
+        out.copy_from_slice(&self.vals[s * self.n..(s + 1) * self.n]);
+        self.fresh = self.fresh.saturating_add(fresh);
+        self.hits = self.hits.saturating_add(self.n as u64 - fresh);
+        fresh
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{gaussian, SynthConfig};
+    use crate::distance::Metric;
+    use crate::engine::{CountingEngine, NativeEngine};
+
+    fn engine(n: usize) -> CountingEngine<NativeEngine> {
+        let data = gaussian::generate(&SynthConfig { n, dim: 8, seed: 9, ..Default::default() });
+        CountingEngine::new(NativeEngine::new(data, Metric::L2))
+    }
+
+    #[test]
+    fn cached_values_are_bitwise_identical_to_direct_pulls() {
+        let n = 64;
+        let e = engine(n);
+        let mut cache = PullCache::new(n, true);
+        let xs = [3usize, 11, 3, 40];
+        let refs = [0usize, 5, 9, 13, 21];
+        let mut got = vec![0f32; xs.len() * refs.len()];
+        let fresh = cache.fill_matrix(&e, &xs, &refs, &mut got);
+        // Duplicate row 3 is pulled once; the second copy is a pure hit.
+        assert_eq!(fresh, 3 * refs.len() as u64);
+        let mut want = vec![0f32; xs.len() * refs.len()];
+        e.pull_matrix(&xs, &refs, &mut want);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&want));
+        // Re-filling the same block is now entirely free.
+        let fresh2 = cache.fill_matrix(&e, &xs, &refs, &mut got);
+        assert_eq!(fresh2, 0);
+        assert_eq!(bits(&got), bits(&want));
+    }
+
+    #[test]
+    fn fill_row_only_pulls_missing_refs_and_counts_match_engine() {
+        let n = 50;
+        let e = engine(n);
+        let mut cache = PullCache::new(n, true);
+        let refs = [1usize, 2, 3];
+        let mut block = vec![0f32; refs.len()];
+        e.reset();
+        let f1 = cache.fill_matrix(&e, &[7], &refs, &mut block);
+        assert_eq!(f1, 3);
+        let mut row = vec![0f32; n];
+        let f2 = cache.fill_row(&e, 7, &mut row);
+        assert_eq!(f2, (n - 3) as u64, "only never-seen refs are pulled");
+        assert_eq!(e.pulls(), f1 + f2, "fresh counts track the engine counter exactly");
+        let mut want = vec![0f32; n];
+        let all: Vec<usize> = (0..n).collect();
+        e.pull_matrix(&[7], &all, &mut want);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&row), bits(&want));
+        // The whole row is cached now: verification is free forever.
+        assert_eq!(cache.fill_row(&e, 7, &mut row), 0);
+        // And a matrix block over row 7 is served without the engine.
+        let before = e.pulls();
+        let f3 = cache.fill_matrix(&e, &[7], &[0, 49], &mut block[..2]);
+        assert_eq!((f3, e.pulls()), (0, before));
+    }
+
+    #[test]
+    fn disabled_cache_is_a_transparent_passthrough() {
+        let n = 32;
+        let e = engine(n);
+        let mut cache = PullCache::new(n, false);
+        let refs = [4usize, 8];
+        let mut out = vec![0f32; 2];
+        e.reset();
+        assert_eq!(cache.fill_matrix(&e, &[5], &refs, &mut out), 2);
+        assert_eq!(cache.fill_matrix(&e, &[5], &refs, &mut out), 2, "nothing is retained");
+        assert_eq!(e.pulls(), 4);
+        let mut row = vec![0f32; n];
+        assert_eq!(cache.fill_row(&e, 5, &mut row), n as u64);
+        assert_eq!(cache.hits(), 0);
+    }
+
+    #[test]
+    fn overflow_rows_bypass_without_corrupting_cached_rows() {
+        let n = 40;
+        let e = engine(n);
+        let mut cache = PullCache::new(n, true);
+        cache.max_slots = 2; // force overflow
+        let refs: Vec<usize> = (0..n).collect();
+        let mut out = vec![0f32; 4 * n];
+        let fresh = cache.fill_matrix(&e, &[0, 1, 2, 3], &refs, &mut out);
+        assert_eq!(fresh, 4 * n as u64, "first sight of every row is fresh");
+        // Rows 0/1 got slots; 2/3 bypassed. A second call re-pulls only the
+        // bypass rows.
+        let fresh2 = cache.fill_matrix(&e, &[0, 1, 2, 3], &refs, &mut out);
+        assert_eq!(fresh2, 2 * n as u64);
+        let mut want = vec![0f32; 4 * n];
+        e.pull_matrix(&[0, 1, 2, 3], &refs, &mut want);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&out), bits(&want));
+    }
+}

@@ -27,6 +27,7 @@
 //! the schedule charges).
 
 pub mod build;
+pub mod cache;
 pub mod swap;
 
 use std::time::{Duration, Instant};
@@ -34,6 +35,7 @@ use std::time::{Duration, Instant};
 use crate::bandits::corr_sh::correlated_halving_argmin;
 use crate::config::KMedoidsConfig;
 use crate::engine::PullEngine;
+use crate::kmedoids::cache::PullCache;
 use crate::util::rng::Rng;
 
 /// Outcome of one k-medoids run.
@@ -59,9 +61,11 @@ pub struct KMedoidsResult {
 }
 
 impl KMedoidsResult {
-    /// Total distance computations across all phases.
+    /// Total distance computations across all phases (saturating, like
+    /// every other pull accumulator in the tree — a near-`u64::MAX` phase
+    /// counter from a saturated ledger must not wrap the total).
     pub fn pulls(&self) -> u64 {
-        self.build_pulls + self.swap_pulls + self.polish_pulls
+        self.build_pulls.saturating_add(self.swap_pulls).saturating_add(self.polish_pulls)
     }
 
     /// Cluster sizes, index-aligned with `medoids`.
@@ -266,10 +270,13 @@ impl BanditKMedoids {
             };
         }
         let k = self.cfg.k.clamp(1, n);
+        // One reuse cache for the whole run: BUILD's candidate rows and
+        // winner verification rows carry into SWAP and polish.
+        let mut cache = PullCache::new(n, self.cfg.reuse_cache);
 
         trajectory.set_phase("build");
         let (mut state, build_pulls) =
-            build::run(engine, k, self.cfg.build_pulls_per_arm, rng, &mut trajectory);
+            build::run(engine, k, self.cfg.build_pulls_per_arm, &mut cache, rng, &mut trajectory);
 
         trajectory.set_phase("swap");
         let swap_out = if self.cfg.max_swap_rounds > 0 && k < n {
@@ -278,6 +285,7 @@ impl BanditKMedoids {
                 &mut state,
                 self.cfg.swap_pulls_per_arm,
                 self.cfg.max_swap_rounds,
+                &mut cache,
                 rng,
                 &mut trajectory,
             )
@@ -287,7 +295,14 @@ impl BanditKMedoids {
 
         trajectory.set_phase("polish");
         let polish_pulls = if self.cfg.polish_pulls_per_arm > 0.0 {
-            polish(engine, &mut state, self.cfg.polish_pulls_per_arm, rng, &mut trajectory)
+            polish(
+                engine,
+                &mut state,
+                self.cfg.polish_pulls_per_arm,
+                &mut cache,
+                rng,
+                &mut trajectory,
+            )
         } else {
             0
         };
@@ -326,6 +341,7 @@ fn polish(
     engine: &dyn PullEngine,
     state: &mut ClusterState,
     pulls_per_arm: f64,
+    cache: &mut PullCache,
     rng: &mut Rng,
     trajectory: &mut Trajectory<'_>,
 ) -> u64 {
@@ -334,7 +350,6 @@ fn polish(
     state.refresh();
     let mut pulls = 0u64;
     let mut row = vec![0f32; n];
-    let all: Vec<usize> = (0..n).collect();
     for c in 0..k {
         let members: Vec<usize> = (0..n).filter(|&j| state.nearest[j] == c).collect();
         if members.len() < 2 {
@@ -342,20 +357,23 @@ fn polish(
         }
         let m = members.len();
         let budget = crate::bandits::corr_sh::Budget::PerArm(pulls_per_arm).total(m);
+        // Scoring stays on `pull_block`'s f64 sum path (the cache holds
+        // per-pair f32 values, not block sums); only the verification row
+        // below goes through — and lands in — the reuse cache.
         let outcome = correlated_halving_argmin(m, m, budget, rng, &mut |arms, refs, out| {
             let a: Vec<usize> = arms.iter().map(|&i| members[i]).collect();
             let r: Vec<usize> = refs.iter().map(|&j| members[j]).collect();
             engine.pull_block(&a, &r, out);
         });
-        pulls += outcome.pulls;
+        pulls = pulls.saturating_add(outcome.pulls);
         let cand = members[outcome.best];
         if cand == state.medoids[c] {
             continue;
         }
         // Exact acceptance: replace row c by the candidate's and keep the
         // change only if the global loss strictly improves.
-        engine.pull_matrix(&[cand], &all, &mut row);
-        pulls += n as u64;
+        let fresh = cache.fill_row(engine, cand, &mut row);
+        pulls = pulls.saturating_add(fresh);
         if state.post_swap_loss(c, &row) < state.loss() {
             state.apply_row(c, cand, &row);
             trajectory.push(state.loss());

@@ -13,14 +13,15 @@
 //! only pulls a round needs are `d(x, J_r)` for the *distinct* candidates
 //! still alive, shared across the k slots that reference them (the same
 //! correlated-reference amortization the engine's densified sparse path
-//! exploits). The halving winner is then verified exactly: its full row
-//! (n pulls) gives the true post-swap loss, and the swap is applied only on
-//! strict improvement — otherwise the phase has converged and stops.
+//! exploits), minus whatever the run's [`PullCache`] already holds from
+//! earlier rounds and phases. The halving winner is then verified exactly:
+//! its full row (≤ n fresh pulls through the cache) gives the true
+//! post-swap loss, and the swap is applied only on strict improvement —
+//! otherwise the phase has converged and stops.
 
-use std::collections::HashMap;
-
-use crate::bandits::corr_sh::{correlated_halving_argmin, Budget};
+use crate::bandits::corr_sh::{correlated_halving_argmin_reported, Budget};
 use crate::engine::PullEngine;
+use crate::kmedoids::cache::PullCache;
 use crate::kmedoids::{ClusterState, Trajectory};
 use crate::util::rng::Rng;
 
@@ -37,14 +38,19 @@ pub(crate) fn run(
     state: &mut ClusterState,
     pulls_per_arm: f64,
     max_rounds: usize,
+    cache: &mut PullCache,
     rng: &mut Rng,
     trajectory: &mut Trajectory<'_>,
 ) -> SwapOutcome {
     let n = engine.n();
     let k = state.medoids.len();
-    let all: Vec<usize> = (0..n).collect();
     let mut row = vec![0f32; n];
     let mut out = SwapOutcome::default();
+    // Scorer scratch, alloc-reused across rounds: `xs` doubles as the
+    // sorted distinct-candidate index (binary search replaces the old
+    // per-block HashMap — no SipHash, no per-round rehash).
+    let mut xs: Vec<usize> = Vec::new();
+    let mut d: Vec<f32> = Vec::new();
 
     for _round in 0..max_rounds {
         state.refresh();
@@ -61,29 +67,29 @@ pub(crate) fn run(
         let budget = Budget::PerArm(pulls_per_arm).total(n_arms);
 
         // Engine-boundary pull accounting: rounds deduplicate the candidate
-        // rows shared by the k slots, so actual pulls ≤ the schedule's
-        // |S_r|·t_r charge.
-        let mut actual_pulls = 0u64;
+        // rows shared by the k slots and the reuse cache strips pairs seen
+        // in earlier rounds/phases, so the reported fresh pulls ≤ the
+        // schedule's |S_r|·t_r charge.
         let outcome = {
             let state = &*state; // shared borrow for the scorer
-            correlated_halving_argmin(n_arms, n, budget, rng, &mut |arms, refs, sums| {
-                let mut xs: Vec<usize> = Vec::new();
-                let mut slot_of: HashMap<usize, usize> = HashMap::new();
-                for &arm in arms {
-                    let x = cands[arm / k];
-                    slot_of.entry(x).or_insert_with(|| {
-                        xs.push(x);
-                        xs.len() - 1
-                    });
-                }
+            let xs = &mut xs;
+            let d = &mut d;
+            let cache = &mut *cache;
+            correlated_halving_argmin_reported(n_arms, n, budget, rng, &mut |arms, refs, sums| {
+                // Distinct candidate rows of this block as a sorted index.
+                xs.clear();
+                xs.extend(arms.iter().map(|&arm| cands[arm / k]));
+                xs.sort_unstable();
+                xs.dedup();
                 let m = refs.len();
-                let mut d = vec![0f32; xs.len() * m];
-                engine.pull_matrix(&xs, refs, &mut d);
-                actual_pulls += (xs.len() * m) as u64;
+                d.clear();
+                d.resize(xs.len() * m, 0.0);
+                let fresh = cache.fill_matrix(engine, xs, refs, d);
                 for (ai, &arm) in arms.iter().enumerate() {
                     let x = cands[arm / k];
                     let c = arm % k;
-                    let drow = &d[slot_of[&x] * m..(slot_of[&x] + 1) * m];
+                    let slot = xs.binary_search(&x).expect("candidate row is in the index");
+                    let drow = &d[slot * m..(slot + 1) * m];
                     let mut acc = 0f64;
                     for (ri, &j) in refs.iter().enumerate() {
                         let removed = if state.nearest[j] == c {
@@ -95,17 +101,19 @@ pub(crate) fn run(
                     }
                     sums[ai] = acc;
                 }
+                fresh
             })
         };
-        out.pulls += actual_pulls;
+        out.pulls = out.pulls.saturating_add(outcome.reported_pulls);
         out.rounds += 1;
 
         // Exact verification of the winning pair before applying it — the
         // shared `post_swap_loss`/`apply_row` criterion (also used by the
-        // polish pass).
+        // polish pass). The winner was scored on ≥ 1 reference during the
+        // halving, so the cached fill always saves pulls with reuse on.
         let (c, x) = (outcome.best % k, cands[outcome.best / k]);
-        engine.pull_matrix(&[x], &all, &mut row);
-        out.pulls += n as u64;
+        let fresh = cache.fill_row(engine, x, &mut row);
+        out.pulls = out.pulls.saturating_add(fresh);
         if state.post_swap_loss(c, &row) < cur_loss {
             state.apply_row(c, x, &row);
             trajectory.push(state.loss());
@@ -137,11 +145,12 @@ mod tests {
         let engine = CountingEngine::new(NativeEngine::new(data, Metric::L2));
         let mut rng = Rng::seeded(2);
         let mut trajectory = Trajectory::new();
+        let mut cache = PullCache::new(engine.n(), true);
         // Deliberately under-budget BUILD so SWAP has work to do.
-        let (mut state, _) = build::run(&engine, 3, 2.0, &mut rng, &mut trajectory);
+        let (mut state, _) = build::run(&engine, 3, 2.0, &mut cache, &mut rng, &mut trajectory);
         state.refresh();
         let before = state.loss();
-        let out = run(&engine, &mut state, 4.0, 6, &mut rng, &mut trajectory);
+        let out = run(&engine, &mut state, 4.0, 6, &mut cache, &mut rng, &mut trajectory);
         state.refresh();
         assert!(state.loss() <= before + 1e-9, "SWAP regressed the loss");
         assert!(out.rounds >= 1);
@@ -182,7 +191,8 @@ mod tests {
         let before = state.loss();
         let mut rng = Rng::seeded(0);
         let mut trajectory = Trajectory::new();
-        let out = run(&engine, &mut state, 6.0, 6, &mut rng, &mut trajectory);
+        let mut cache = PullCache::new(n, true);
+        let out = run(&engine, &mut state, 6.0, 6, &mut cache, &mut rng, &mut trajectory);
         assert!(out.accepted >= 1, "SWAP accepted nothing on an improvable seed");
         state.refresh();
         assert!(

@@ -26,10 +26,11 @@ use corrsh::util::rng::Rng;
 
 const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|worker|gen|shard|kernelinfo|lint> [flags]
   medoid:   --preset P | --config file.json [--scale N] [--algo A] [--budget X]
-            [--engine native|pjrt] [--seed S] [--trials T]
+            [--anchors A (trimed)] [--engine native|pjrt] [--seed S] [--trials T]
   kmedoids: --preset P | --config file.json | --kind K [--n N --dim D --clusters C]
             [--k K] [--build-budget X] [--swap-budget X] [--swap-rounds R]
-            [--polish-budget X] [--seed S] [--workers W] (native engine only)
+            [--polish-budget X] [--no-reuse] [--seed S] [--workers W]
+            (native engine only)
   repro:    --exp table1|fig1|fig2|fig3|fig4|fig5|fig6|ablation|all
             [--scale N] [--trials T] [--seed S]
   stats:    --preset P [--scale N] [--seed S]
@@ -44,7 +45,7 @@ const USAGE: &str = "corrsh <medoid|kmedoids|repro|stats|serve|worker|gen|shard|
             | --kind K --n N --dim D [--seed S] --out DIR (streams at scale)
   kernelinfo: print the dispatched distance micro-kernel (CORRSH_KERNEL)
   lint:     [--ci] [--root DIR] [--out report.json]
-            token-level invariant analyzer (rules R1-R7, DESIGN.md §16);
+            token-level invariant analyzer (rules R1-R8, DESIGN.md §16);
             exits 1 when any rule fires, --ci prints the JSON report";
 
 fn main() {
@@ -133,6 +134,7 @@ fn load_config(args: &Args) -> Result<RunConfig> {
     }
     if let Some(algo) = args.str_opt("algo") {
         let budget: f64 = args.parse_or("budget", 24.0)?;
+        let anchors: usize = args.parse_or("anchors", 4)?;
         cfg.algo = match algo {
             "corrsh" => AlgoConfig::CorrSh { pulls_per_arm: budget },
             "sh" | "seq-halving" => AlgoConfig::SeqHalving { pulls_per_arm: budget },
@@ -140,10 +142,14 @@ fn load_config(args: &Args) -> Result<RunConfig> {
             "rand" => AlgoConfig::Rand { refs_per_arm: budget as usize },
             "toprank" => AlgoConfig::TopRank { phase1_refs: budget as usize },
             "exact" => AlgoConfig::Exact,
+            // Budget does not apply to trimed: it pulls until the triangle
+            // bound proves the rest eliminated, like "exact" ignores it too.
+            "trimed" => AlgoConfig::Trimed { anchors: anchors.max(1) },
             other => corrsh::bail!("unknown algo {other:?}"),
         };
     } else {
         let _ = args.parse_or("budget", 24.0)?; // consume if present
+        let _ = args.parse_or("anchors", 4usize)?; // consume if present
     }
     cfg.trials = args.parse_or("trials", cfg.trials)?;
     Ok(cfg)
@@ -203,6 +209,9 @@ fn cmd_kmedoids(args: &Args) -> Result<()> {
     }
     if let Some(x) = args.parse_opt::<f64>("polish-budget")? {
         kcfg.polish_pulls_per_arm = x;
+    }
+    if args.switch("no-reuse") {
+        kcfg.reuse_cache = false;
     }
     kcfg.validate()?;
     let seed: u64 = args.parse_or("seed", 0)?;
@@ -518,7 +527,7 @@ fn cmd_kernelinfo(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `corrsh lint` — run the token-level invariant analyzer (rules R1–R7,
+/// `corrsh lint` — run the token-level invariant analyzer (rules R1–R8,
 /// DESIGN.md §16) over the repo tree and exit non-zero on any finding.
 /// `--ci` prints the machine-readable JSON report to stdout (CI uploads it
 /// as an artifact); `--out FILE` writes the same JSON regardless of mode;

@@ -487,7 +487,7 @@ impl State {
                 let rows: Vec<Value> = groups
                     .iter()
                     .map(|refs| {
-                        pulls += (arms.len() * refs.len()) as u64;
+                        pulls = pulls.saturating_add((arms.len() * refs.len()) as u64);
                         if matrix {
                             let mut buf = vec![0f32; arms.len() * refs.len()];
                             engine.pull_matrix(&arms, refs, &mut buf);
@@ -708,6 +708,11 @@ fn algo_config(req: &Value, n: usize, budget: Option<f64>) -> Result<AlgoConfig>
                 .min(n),
         },
         "exact" => AlgoConfig::Exact,
+        // trimed is exact: `budget` does not apply (like "exact"), but the
+        // anchor count is tunable per request.
+        "trimed" => AlgoConfig::Trimed {
+            anchors: req.get("anchors").as_usize().unwrap_or(4).max(1),
+        },
         other => crate::bail!("unknown algo {other:?}"),
     };
     Ok(cfg)
@@ -791,6 +796,22 @@ mod tests {
             r#"{"op":"medoid","dataset":"toy","algo":"rand","refs_per_arm":5000,"seed":2}"#,
         ));
         assert_eq!(r.get("pulls").as_u64(), Some(200 * 200));
+    }
+
+    #[test]
+    fn trimed_op_is_exact_and_reports_its_pulls() {
+        let state = State::new();
+        register_toy(&state, "toy");
+        let exact =
+            state.handle(&req(r#"{"op":"medoid","dataset":"toy","algo":"exact","seed":0}"#));
+        let r = state.handle(&req(
+            r#"{"op":"medoid","dataset":"toy","algo":"trimed","anchors":4,"seed":0}"#,
+        ));
+        assert_eq!(r.get("ok").as_bool(), Some(true), "{r}");
+        assert_eq!(r.get("algo").as_str(), Some("trimed"));
+        assert_eq!(r.get("medoid").as_usize(), exact.get("medoid").as_usize());
+        let pulls = r.get("pulls").as_u64().unwrap();
+        assert!(pulls > 0, "trimed reported zero pulls");
     }
 
     #[test]

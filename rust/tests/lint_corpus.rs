@@ -88,7 +88,41 @@ fn r7_process_exit_outside_main_fires() {
     assert_eq!(fired("rust/src/server/net.rs", src), vec!["R7"]);
 }
 
+#[test]
+fn r8_unchecked_pull_arithmetic_fires() {
+    // The exact shape of the ledger bug this rule exists for: a u64 pull
+    // counter accumulated with wrapping `+=` deep in an accounting loop.
+    let compound = "fn f(mut pulls: u64, t: usize) { pulls += t as u64; }";
+    assert_eq!(fired("rust/src/bandits/meddit.rs", compound), vec!["R8"]);
+    // Addend-side naming fires too (`spent += pulls`), as does a
+    // path-qualified operand on either side.
+    let addend = "fn f(mut spent: u64, pulls: u64) { spent += pulls; }";
+    assert_eq!(fired("rust/src/coordinator/ledger.rs", addend), vec!["R8"]);
+    let qualified = "fn f(w: &mut W, r: &Row) { w.pulls += r.pulls; }";
+    assert_eq!(fired("rust/src/engine/distributed.rs", qualified), vec!["R8"]);
+    let plain = "fn f(o: &Out, extra: u64) -> u64 { o.reported_pulls + extra }";
+    assert_eq!(fired("rust/src/kmedoids/mod.rs", plain), vec!["R8"]);
+}
+
 // ---------------------------------------------- look-alikes (no finding) --
+
+#[test]
+fn saturating_and_waived_pull_arithmetic_do_not_fire_r8() {
+    // The sanctioned form.
+    let ok = "fn f(mut pulls: u64, t: u64) { pulls = pulls.saturating_add(t); }";
+    assert!(fired("rust/src/bandits/meddit.rs", ok).is_empty());
+    // Non-pull counters are out of scope even in the same expression.
+    let other = "fn f(mut hits: u64, misses: u64) { hits += misses + 1; }";
+    assert!(fired("rust/src/kmedoids/cache.rs", other).is_empty());
+    // `pulls` as string/comment data, the grep-gate failure mode.
+    let data = "// pulls += t would wrap\nfn f() -> &'static str { \"pulls + 1\" }";
+    assert!(fired("rust/src/bandits/meddit.rs", data).is_empty());
+    // Waived lines (same line or line above) and test scope are exempt.
+    let waived = "// lint: pull-add-ok(bounded by n <= 2^16)\nfn f(mut pulls: u64) { pulls += 1; }";
+    assert!(fired("rust/src/bandits/meddit.rs", waived).is_empty());
+    let in_test = "#[test]\nfn t() { let mut pulls = 0u64; pulls += 9; }";
+    assert!(fired("rust/src/bandits/meddit.rs", in_test).is_empty());
+}
 
 #[test]
 fn partial_cmp_in_string_literal_does_not_fire() {

@@ -1,0 +1,201 @@
+//! Property contracts for this PR's two tiers (DESIGN.md §17):
+//!
+//! * **Reuse-cache neutrality** — k-medoids with the cross-round pull-reuse
+//!   cache on vs off at equal seeds returns bitwise-identical medoids,
+//!   assignments, loss, and loss trajectory, while consuming *strictly
+//!   fewer* engine-boundary pulls (measured by [`CountingEngine`], not the
+//!   algorithm's own ledger) — and both ledgers still match their engine
+//!   counters exactly.
+//! * **trimed exactness** — the triangle-inequality elimination tier
+//!   reports the same medoid as the exact O(n²) sweep across metrics ×
+//!   dense/sparse data × resident/sharded backends × shard widths, never
+//!   spending more than the `n² + anchors·n` worst case.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use corrsh::bandits::{Exact, MedoidAlgorithm, Trimed};
+use corrsh::config::KMedoidsConfig;
+use corrsh::data::store::{self, ShardedData, StoreOptions};
+use corrsh::data::synth::{Kind, SynthConfig};
+use corrsh::data::{loader, Data};
+use corrsh::distance::Metric;
+use corrsh::engine::{CountingEngine, NativeEngine, PreparedEngine};
+use corrsh::kmedoids::{BanditKMedoids, ClusteringAlgorithm, KMedoidsResult};
+use corrsh::util::rng::Rng;
+use corrsh::util::testing;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("corrsh-reuse-trimed-tests").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write `data` to disk and re-open it through the sharded store (the
+/// `corrsh shard` conversion path), `rows_per_shard` wide.
+fn shard(data: &Data, dir: &PathBuf, rows_per_shard: usize) -> ShardedData {
+    let input = if data.is_sparse() {
+        let Data::Sparse(s) = data else { unreachable!() };
+        let mut text = format!("csr {} {}\n", s.n, s.dim);
+        for i in 0..s.n {
+            let r = s.row(i);
+            for (&c, &v) in r.indices.iter().zip(r.values) {
+                text.push_str(&format!("{i} {c} {v}\n"));
+            }
+        }
+        let p = dir.join("input.csr");
+        std::fs::write(&p, text).unwrap();
+        p
+    } else {
+        let p = dir.join("input.npy");
+        loader::save_dense_npy(&p, &data.to_dense()).unwrap();
+        p
+    };
+    let manifest = store::shard_file(&input, dir.join("shards"), rows_per_shard).unwrap();
+    ShardedData::open_with(&manifest, &StoreOptions::default()).unwrap()
+}
+
+/// Everything about a k-medoids run the reuse cache must not change.
+fn fingerprint(r: &KMedoidsResult) -> (Vec<usize>, Vec<usize>, u64, Vec<u64>) {
+    (
+        r.medoids.clone(),
+        r.assignments.clone(),
+        r.loss.to_bits(),
+        r.loss_trajectory.iter().map(|l| l.to_bits()).collect(),
+    )
+}
+
+#[test]
+fn reuse_cache_is_result_neutral_and_strictly_cheaper() {
+    let cases = testing::cases_from_env(12);
+    testing::check(
+        "reuse-neutrality",
+        cases,
+        |rng| {
+            let n = 120 + rng.below(280);
+            let k = 2 + rng.below(4);
+            let sparse = rng.chance(0.3);
+            let seed = rng.below(1 << 20) as u64;
+            (n, k, sparse, seed)
+        },
+        |&(n, k, sparse, seed), _| {
+            let cfg = SynthConfig {
+                n,
+                dim: 12,
+                seed,
+                clusters: k,
+                density: 0.1,
+                ..Default::default()
+            };
+            let (data, metric) = if sparse {
+                (Kind::RnaSeq.generate(&cfg), Metric::L1)
+            } else {
+                (Kind::Mixture.generate(&cfg), Metric::L2)
+            };
+            let engine = CountingEngine::new(NativeEngine::new(data, metric));
+
+            let mut run = |reuse: bool| {
+                let kcfg = KMedoidsConfig { k, reuse_cache: reuse, ..Default::default() };
+                engine.reset();
+                let res = BanditKMedoids::new(kcfg).run(&engine, &mut Rng::seeded(seed ^ 0x5EED));
+                if res.pulls() != engine.pulls() {
+                    return Err(format!(
+                        "reuse={reuse}: ledger {} != engine counter {}",
+                        res.pulls(),
+                        engine.pulls()
+                    ));
+                }
+                Ok((fingerprint(&res), engine.pulls()))
+            };
+            let (fp_on, pulls_on) = run(true)?;
+            let (fp_off, pulls_off) = run(false)?;
+            if fp_on != fp_off {
+                return Err("cache-on run diverged from cache-off run".into());
+            }
+            if pulls_on >= pulls_off {
+                return Err(format!(
+                    "reuse saved nothing: {pulls_on} on vs {pulls_off} off"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn trimed_matches_exact_across_metrics_data_and_shard_widths() {
+    let cases = testing::cases_from_env(24);
+    for metric in Metric::ALL {
+        testing::check_shrink(
+            &format!("trimed-exactness-{metric}"),
+            cases,
+            |rng| {
+                let n = 2 + rng.below(140);
+                let dim = 1 + rng.below(32);
+                let rows_per_shard = 1 + rng.below(n + 4);
+                let sparse = rng.chance(0.5);
+                let anchors = 1 + rng.below(8);
+                let seed = rng.below(1 << 20) as u64;
+                (n, dim, rows_per_shard, sparse, anchors, seed)
+            },
+            |&(n, dim, rows_per_shard, sparse, anchors, seed)| {
+                let mut out = Vec::new();
+                for nn in testing::shrink_usize(n, 2) {
+                    out.push((nn, dim, rows_per_shard.min(nn + 1), sparse, anchors, seed));
+                }
+                for dd in testing::shrink_usize(dim, 1) {
+                    out.push((n, dd, rows_per_shard, sparse, anchors, seed));
+                }
+                for aa in testing::shrink_usize(anchors, 1) {
+                    out.push((n, dim, rows_per_shard, sparse, aa, seed));
+                }
+                out
+            },
+            |&(n, dim, rows_per_shard, sparse, anchors, seed), _| {
+                let cfg = SynthConfig { n, dim, seed, density: 0.2, ..Default::default() };
+                let data = if sparse {
+                    Kind::RnaSeq.generate(&cfg)
+                } else {
+                    Kind::Gaussian.generate(&cfg)
+                };
+                let dir = tmp(&format!("trimed-{metric}-{n}-{dim}-{rows_per_shard}-{sparse}"));
+                let sharded = Arc::new(Data::Sharded(shard(&data, &dir, rows_per_shard)));
+
+                let resident = CountingEngine::new(NativeEngine::new(data, metric));
+                let sh_prep = PreparedEngine::prepare(sharded, metric);
+                let sh_engine = NativeEngine::from_prepared(Arc::new(sh_prep), 2);
+
+                let truth = Exact::new().run(&resident, &mut Rng::seeded(0)).best;
+                resident.reset();
+                let algo = Trimed::new(anchors);
+                let res = algo.run(&resident, &mut Rng::seeded(0));
+                if res.best != truth {
+                    return Err(format!("resident: trimed {} != exact {truth}", res.best));
+                }
+                if res.pulls != resident.pulls() {
+                    return Err(format!(
+                        "ledger {} != engine counter {}",
+                        res.pulls,
+                        resident.pulls()
+                    ));
+                }
+                let worst = (n as u64) * (n as u64) + (anchors as u64) * (n as u64);
+                if res.pulls > worst {
+                    return Err(format!("{} pulls over the n²+a·n cap {worst}", res.pulls));
+                }
+                let sh_res = algo.run(&sh_engine, &mut Rng::seeded(0));
+                if sh_res.best != truth {
+                    return Err(format!("sharded: trimed {} != exact {truth}", sh_res.best));
+                }
+                if sh_res.pulls != res.pulls {
+                    return Err(format!(
+                        "backend-dependent pull count: resident {} vs sharded {}",
+                        res.pulls, sh_res.pulls
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
